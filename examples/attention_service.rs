@@ -1,0 +1,27 @@
+//! Batched attention serving demo: Poisson arrivals through the L3
+//! batching coordinator, executing the AOT Pallas attention artifact on
+//! the PJRT runtime. Reports throughput and latency percentiles.
+//!
+//! Run: `make artifacts && cargo run --release --example attention_service`
+
+use anyhow::Result;
+use hipkittens::coordinator::{poisson_trace, BatchingService, ServiceConfig};
+use hipkittens::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let dir = std::env::var("HK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let mut rt = Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+
+    for rate in [50.0, 200.0, 1000.0] {
+        let mut svc = BatchingService::new(&mut rt, ServiceConfig::default())?;
+        let trace = poisson_trace(48, rate, 11);
+        let rep = svc.run_trace(&trace)?;
+        println!("\nrate {rate:>6.0} req/s -> {}", rep.summary());
+        println!(
+            "  batching amortization: mean batch {:.2} (1.0 = no batching)",
+            rep.mean_batch
+        );
+    }
+    Ok(())
+}

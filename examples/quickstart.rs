@@ -1,0 +1,59 @@
+//! Quickstart: the three-layer stack in one file.
+//!
+//! 1. Simulation plane: run one HK BF16 GEMM on the simulated MI355X and
+//!    print the paper-style metrics.
+//! 2. Execution plane: load the AOT-compiled Pallas GEMM artifact
+//!    (`make artifacts`) and execute it on the PJRT CPU client from Rust,
+//!    checking the numerics against a host matmul.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use hipkittens::kernels::gemm::{simulate, GemmConfig};
+use hipkittens::runtime::{Rng, Runtime, Tensor};
+use hipkittens::sim::Arch;
+
+fn main() -> Result<()> {
+    // --- 1. the simulation plane -------------------------------------
+    let arch = Arch::mi355x();
+    let cfg = GemmConfig::bf16(8192, 8192, 8192);
+    let perf = simulate(&arch, &cfg);
+    println!("[sim] HK BF16 GEMM 8192^3 on {}:", arch.name);
+    println!(
+        "[sim]   {:.0} TFLOPS (MFMA util {:.2}, L2 {:.0}%, LLC {:.0}%, {:.1} TB/s)",
+        perf.tflops,
+        perf.mfma_util,
+        perf.l2_hit * 100.0,
+        perf.llc_hit * 100.0,
+        perf.eff_bw_tbps
+    );
+
+    // --- 2. the execution plane --------------------------------------
+    let dir = std::env::var("HK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !hipkittens::runtime::Manifest::available(&dir) {
+        println!("[run] artifacts/ missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let mut rt = Runtime::new(&dir)?;
+    println!("[run] PJRT platform: {}", rt.platform());
+    let mut rng = Rng::new(0);
+    let n = 256usize;
+    let a = rng.normal_vec(n * n);
+    let b = rng.normal_vec(n * n);
+    let out = rt.run("gemm256", &[Tensor::F32(a.clone()), Tensor::F32(b.clone())])?;
+    let got = out[0].as_f32()?;
+
+    // host-side check of one output element
+    let (i, j) = (3usize, 7usize);
+    let want: f32 = (0..n).map(|k| a[i * n + k] * b[k * n + j]).sum();
+    let err = (got[i * n + j] - want).abs();
+    println!(
+        "[run] gemm256 out[{i},{j}] = {:.4} (host {:.4}, |err| {:.2e})",
+        got[i * n + j],
+        want,
+        err
+    );
+    assert!(err < 1e-2, "numerics mismatch");
+    println!("[run] quickstart OK — Pallas kernel, AOT HLO, Rust execution agree");
+    Ok(())
+}

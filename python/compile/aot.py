@@ -1,0 +1,196 @@
+"""AOT pipeline: lower every entry point to HLO *text* + a manifest.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md). Each entry is lowered with
+``return_tuple=True`` so the Rust runtime always unwraps a tuple.
+
+Run as ``python -m compile.aot --out ../artifacts`` (the Makefile's
+`artifacts` target). Python never runs after this point — the Rust binary
+is self-contained.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import attention as attn_k
+from .kernels import gemm as gemm_k
+from .kernels import layernorm as ln_k
+from .kernels import rope as rope_k
+
+SERVICE_BATCHES = (1, 2, 4, 8)
+SERVICE_HEADS = 8
+SERVICE_KV_HEADS = 4
+SERVICE_SEQ = 256
+SERVICE_DHEAD = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _meta(args, outs):
+    def one(s):
+        return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+    return {"inputs": [one(a) for a in args], "outputs": [one(o) for o in outs]}
+
+
+def entries(cfg: model_mod.ModelConfig):
+    """(name, fn, example_args, extra_meta) for every artifact."""
+    out = []
+
+    # --- quickstart GEMM (the paper's Fig. 6 workload, small) ---------
+    def gemm256(a, b):
+        return (gemm_k.matmul(a, b, block_m=64, block_n=64, block_k=64),)
+
+    out.append((
+        "gemm256",
+        gemm256,
+        (_spec((256, 256), jnp.float32), _spec((256, 256), jnp.float32)),
+        {"kind": "gemm", "m": 256, "n": 256, "k": 256},
+    ))
+
+    # --- attention forward at several batch sizes (serving path) ------
+    for b in SERVICE_BATCHES:
+        def attn_fwd(q, k, v):
+            return (attn_k.attention(q, k, v, False, None, 64, 64),)
+
+        out.append((
+            f"attn_fwd_b{b}",
+            attn_fwd,
+            (
+                _spec((b, SERVICE_HEADS, SERVICE_SEQ, SERVICE_DHEAD), jnp.float32),
+                _spec((b, SERVICE_KV_HEADS, SERVICE_SEQ, SERVICE_DHEAD), jnp.float32),
+                _spec((b, SERVICE_KV_HEADS, SERVICE_SEQ, SERVICE_DHEAD), jnp.float32),
+            ),
+            {
+                "kind": "attention",
+                "batch": b,
+                "heads": SERVICE_HEADS,
+                "kv_heads": SERVICE_KV_HEADS,
+                "seq": SERVICE_SEQ,
+                "d_head": SERVICE_DHEAD,
+            },
+        ))
+
+    # --- memory-bound kernels (Fig. 9 workloads) ----------------------
+    def fused_ln(x, res, w, bias):
+        o, r = ln_k.fused_dropout_residual_layernorm(
+            x, res, w, bias, p=0.1, seed=13)
+        return (o, r)
+
+    rows, d = 256, 128
+    out.append((
+        "fused_layernorm",
+        fused_ln,
+        (
+            _spec((rows, d), jnp.float32),
+            _spec((rows, d), jnp.float32),
+            _spec((d,), jnp.float32),
+            _spec((d,), jnp.float32),
+        ),
+        {"kind": "layernorm", "rows": rows, "d": d, "p": 0.1, "seed": 13},
+    ))
+
+    def rope_fn(x):
+        return (rope_k.rope(x),)
+
+    out.append((
+        "rope",
+        rope_fn,
+        (_spec((2, SERVICE_HEADS, SERVICE_SEQ, SERVICE_DHEAD), jnp.float32),),
+        {"kind": "rope"},
+    ))
+
+    # --- training entry points (flat-parameter API) -------------------
+    n_params, _ = model_mod.flat_spec(cfg)
+    fns = model_mod.make_flat_fns(cfg)
+    batch_shape = (4, cfg.seq_len + 1)
+    flat = _spec((n_params,), jnp.float32)
+    batch = _spec(batch_shape, jnp.int32)
+
+    out.append((
+        "init_params",
+        fns["init"],
+        (_spec((1,), jnp.int32),),
+        {"kind": "init", "n_params": n_params},
+    ))
+    model_meta = {
+        "n_params": n_params,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "n_kv_heads": cfg.n_kv_heads,
+        "seq_len": cfg.seq_len,
+        "batch": batch_shape[0],
+    }
+    out.append((
+        "train_step",
+        fns["train_step"],
+        (flat, flat, batch),
+        {"kind": "train_step", **model_meta},
+    ))
+    out.append((
+        "train_step_ref",
+        fns["train_step_ref"],
+        (flat, flat, batch),
+        {"kind": "train_step", **model_meta, "path": "reference"},
+    ))
+    out.append((
+        "lm_loss",
+        fns["lm_loss"],
+        (flat, batch),
+        {"kind": "loss", **model_meta},
+    ))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-list of entries")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = model_mod.ModelConfig()
+    manifest = {"model": cfg.__dict__, "entries": []}
+    only = set(args.only.split(",")) if args.only else None
+
+    for name, fn, specs, extra in entries(cfg):
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        entry = {"name": name, "file": fname, **_meta(specs, outs), "meta": extra}
+        manifest["entries"].append(entry)
+        print(f"  lowered {name:18s} -> {fname} ({len(text)//1024} KiB)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['entries'])} entries to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""L1 Pallas kernels (interpret=True) — the numeric plane of the HipKittens
+reproduction.
+
+Each kernel mirrors one of the paper's evaluated workloads:
+
+- ``gemm``        — tiled GEMM (paper Fig. 6 / 14 workload)
+- ``attention``   — flash attention forward/backward, MHA/GQA,
+                    causal/non-causal (Figs. 7/8/15/16/17)
+- ``layernorm``   — fused dropout + residual + layernorm (Fig. 9, E.2)
+- ``rope``        — rotary positional embedding (Fig. 9)
+- ``ref``         — pure-jnp oracles for all of the above
+
+All kernels run under ``interpret=True`` so they lower to plain HLO and
+execute on the CPU PJRT client that the Rust runtime drives (real-TPU
+lowering emits Mosaic custom-calls the CPU plugin cannot run).
+"""
+
+from . import attention, gemm, layernorm, ref, rope  # noqa: F401

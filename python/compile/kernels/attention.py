@@ -1,0 +1,256 @@
+"""Flash-attention forward + backward Pallas kernels (MHA/GQA,
+causal/non-causal) with a custom VJP, mirroring the paper's attention
+kernels (Figs. 7/8/15/16/17, listing E.3).
+
+Hardware adaptation: the paper's 8-wave ping-pong streams K/V tiles
+HBM->LDS while compute waves run QK/AV MFMAs interleaved with online-
+softmax VALU ops. Here the same loop structure appears as a Pallas grid
+over (batch, q-head, q-block) with an in-kernel `fori_loop` over KV blocks
+doing online softmax; the BlockSpec pipeline plays the role of the K/V
+double buffer. GQA maps G query heads onto one KV head via the BlockSpec
+index map (the paper's `head_idx_kv = head_idx / GROUP_SIZE`).
+
+The backward pass uses the standard recompute (FlashAttention-2 style)
+split: a dKV kernel iterating over Q blocks and a dQ kernel iterating over
+KV blocks, both consuming the forward LSE — the same multi-matmul,
+register-heavy structure the paper tames with pinned AGPR tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int,
+                causal: bool, sm_scale: float):
+    """One (block_q x d) output tile; loops over KV blocks."""
+    block_q, d = q_ref.shape[-2], q_ref.shape[-1]
+    seq_k = k_ref.shape[-2]
+    q_idx = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale  # (bq, d)
+
+    def body(i, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[0, 0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T  # (bq, bk)
+        if causal:
+            q_pos = q_idx * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = i * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        correction = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * correction + p.sum(axis=-1)
+        acc = acc * correction[:, None] + p @ v
+        return acc, m_cur, l_cur
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, seq_k // block_k, body, (acc0, m0, l0))
+    l = jnp.maximum(l, 1e-30)
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[0, 0] = m + jnp.log(l)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   *, block_k: int, causal: bool, sm_scale: float):
+    """dQ for one (block_q x d) tile; loops over KV blocks (recompute P)."""
+    block_q, d = q_ref.shape[-2], q_ref.shape[-1]
+    seq_k = k_ref.shape[-2]
+    q_idx = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]
+    delta = delta_ref[0, 0]
+
+    def body(i, dq):
+        k = k_ref[0, 0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T
+        if causal:
+            q_pos = q_idx * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = i * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None])
+        return dq + ds @ k
+
+    dq0 = jnp.zeros((block_q, d), jnp.float32)
+    dq = jax.lax.fori_loop(0, seq_k // block_k, body, dq0)
+    dq_ref[0, 0] = (dq * sm_scale).astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, block_q: int, causal: bool,
+                    sm_scale: float):
+    """dK/dV for one (block_k x d) tile; loops over Q blocks."""
+    block_k, d = k_ref.shape[-2], k_ref.shape[-1]
+    seq_q = q_ref.shape[-2]
+    k_idx = pl.program_id(2)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    def body(i, carry):
+        dk, dv = carry
+        q = q_ref[0, 0, pl.dslice(i * block_q, block_q), :].astype(
+            jnp.float32) * sm_scale
+        do = do_ref[0, 0, pl.dslice(i * block_q, block_q), :].astype(
+            jnp.float32)
+        lse = lse_ref[0, 0, pl.dslice(i * block_q, block_q)]
+        delta = delta_ref[0, 0, pl.dslice(i * block_q, block_q)]
+        s = q @ k.T  # (bq, bk)
+        if causal:
+            q_pos = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = k_idx * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # (bq, bk)
+        dv = dv + p.T @ do
+        dp = do @ v.T  # (bq, bk)
+        ds = p * (dp - delta[:, None])
+        dk = dk + ds.T @ q
+        return dk, dv
+
+    dk0 = jnp.zeros((block_k, d), jnp.float32)
+    dv0 = jnp.zeros((block_k, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, seq_q // block_q, body, (dk0, dv0))
+    dk_ref[0, 0] = dk.astype(dk_ref.dtype)
+    dv_ref[0, 0] = dv.astype(dv_ref.dtype)
+
+
+def _fwd_impl(q, k, v, *, causal, sm_scale, block_q, block_k):
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, f"GQA needs hq % hkv == 0, got {hq} {hkv}"
+    g = hq // hkv
+    grid = (b, hq, n // block_q)
+    kern = functools.partial(
+        _fwd_kernel, block_k=block_k, causal=causal, sm_scale=sm_scale)
+    o, lse = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, n, d), lambda bi, hi, qi, g=g: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, n, d), lambda bi, hi, qi, g=g: (bi, hi // g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda bi, hi, qi: (bi, hi, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, n, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, n), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _attention(q, k, v, causal, sm_scale, block_q, block_k):
+    o, _ = _fwd_impl(
+        q, k, v,
+        causal=causal,
+        sm_scale=_scale(sm_scale, q.shape[-1]),
+        block_q=block_q,
+        block_k=block_k,
+    )
+    return o
+
+
+def attention(q, k, v, causal=False, sm_scale=None, block_q=64, block_k=64):
+    """Flash attention over (B, H, N, D) tensors.
+
+    ``k``/``v`` may have fewer heads than ``q`` (GQA); ``sm_scale``
+    defaults to 1/sqrt(D). Differentiable via the Pallas backward kernels
+    (custom VJP — the nondiff config must stay positional, hence this
+    wrapper).
+    """
+    return _attention(q, k, v, causal, sm_scale, block_q, block_k)
+
+
+def _scale(sm_scale, d):
+    return (1.0 / (d ** 0.5)) if sm_scale is None else sm_scale
+
+
+def _attention_fwd(q, k, v, causal, sm_scale, block_q, block_k):
+    o, lse = _fwd_impl(
+        q, k, v,
+        causal=causal,
+        sm_scale=_scale(sm_scale, q.shape[-1]),
+        block_q=block_q,
+        block_k=block_k,
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _attention_bwd(causal, sm_scale, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = _scale(sm_scale, d)
+    # delta = rowsum(dO * O) — the paper's epilogue vector
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _bwd_dq_kernel, block_k=block_k, causal=causal, sm_scale=scale),
+        grid=(b, hq, n // block_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, n, d), lambda bi, hi, qi, g=g: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, n, d), lambda bi, hi, qi, g=g: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda bi, hi, qi: (bi, hi, qi)),
+            pl.BlockSpec((1, 1, block_q), lambda bi, hi, qi: (bi, hi, qi)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, n, d), q.dtype),
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    # dK/dV per q-head, then reduce over the GQA group (L2-level sum).
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(
+            _bwd_dkv_kernel, block_q=block_q, causal=causal, sm_scale=scale),
+        grid=(b, hq, n // block_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, n, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, ki, g=g: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, ki, g=g: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, n, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda bi, hi, ki: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, n), lambda bi, hi, ki: (bi, hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, ki: (bi, hi, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, n, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, n, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    dk = dk_h.reshape(b, hkv, g, n, d).sum(axis=2).astype(k.dtype)
+    dv = dv_h.reshape(b, hkv, g, n, d).sum(axis=2).astype(v.dtype)
+    return dq, dk, dv
+
+
+_attention.defvjp(_attention_fwd, _attention_bwd)

@@ -1,0 +1,86 @@
+"""Tiled GEMM Pallas kernel.
+
+Hardware adaptation (paper -> TPU-style Pallas, see DESIGN.md
+§Hardware-Adaptation): the paper's GEMM computes a 256x256 output tile per
+thread block, double-buffering 64-wide K slabs HBM->LDS->registers under an
+8-wave ping-pong schedule. Under Pallas the same decomposition is expressed
+with an (m, n, k) grid and BlockSpecs: the BlockSpec index maps *are* the
+HBM<->VMEM schedule (Pallas pipelines the k-slabs), and the MXU plays the
+role of the MFMA pipes. Accumulation is always f32 (the paper's `rt_fl`
+accumulators), whatever the input dtype.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """One (bm x bk) @ (bk x bn) step accumulated into the f32 output."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "out_dtype")
+)
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=None,
+) -> jax.Array:
+    """``a @ b`` with shapes (M, K) x (K, N); M/N/K multiples of the blocks.
+
+    Inputs may be bf16 or f32; the kernel accumulates in f32 and casts to
+    ``out_dtype`` (defaults to the input dtype) at the end.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"({m},{n},{k}) not multiples of ({block_m},{block_n},{block_k})"
+    )
+    if out_dtype is None:
+        out_dtype = a.dtype
+    n_k = k // block_k
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=n_k),
+        grid=(m // block_m, n // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out.astype(out_dtype)
+
+
+def pick_blocks(m: int, n: int, k: int) -> tuple[int, int, int]:
+    """Choose block sizes for a problem (largest power-of-two divisors
+    capped at 128 — the VMEM-friendly analog of the paper's 256x256 LDS
+    tiles)."""
+
+    def best(dim: int) -> int:
+        b = 1
+        while b < 128 and dim % (b * 2) == 0:
+            b *= 2
+        return b
+
+    return best(m), best(n), best(k)

@@ -1,0 +1,102 @@
+"""Fused dropout + residual + layernorm Pallas kernel (paper Fig. 9,
+listing E.2 — the prenorm-Transformer memory-bound workload).
+
+The kernel processes a chunk of sequence vectors per grid step, fusing:
+
+    resid_out = residual + dropout(x, p)
+    o         = layernorm(resid_out) * weight + bias
+
+Dropout uses a counter-based hash of the flat element index (a stateless
+xorshift-style mix), so the oracle in `ref.py` reproduces it bit-exactly —
+the kernel stays a pure function of its inputs, as required for AOT
+export.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hash_u32(x):
+    """Deterministic 32-bit mix (xorshift* flavored), vectorized."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def dropout_mask(flat_idx, seed: int, p: float):
+    """keep-mask for dropout probability ``p`` from hashed indices."""
+    h = _hash_u32(flat_idx + jnp.uint32(seed) * jnp.uint32(0x9E3779B9))
+    threshold = jnp.uint32(int(p * 0xFFFFFFFF)) if p > 0 else jnp.uint32(0)
+    return h >= threshold
+
+
+def _ln_kernel(x_ref, res_ref, w_ref, b_ref, o_ref, resid_ref, *,
+               p: float, seed: int, eps: float, d: int, block: int):
+    row0 = pl.program_id(0) * block
+    x = x_ref[...].astype(jnp.float32)  # (block, d)
+    res = res_ref[...].astype(jnp.float32)
+    if p > 0.0:
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block, d), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (block, d), 1)
+        flat = (rows * d + cols).astype(jnp.uint32)
+        keep = dropout_mask(flat, seed, p)
+        x = jnp.where(keep, x / (1.0 - p), 0.0)
+    resid = res + x
+    resid_ref[...] = resid.astype(resid_ref.dtype)
+    mean = resid.mean(axis=-1, keepdims=True)
+    centered = resid - mean
+    var = (centered * centered).mean(axis=-1, keepdims=True)
+    normed = centered * jax.lax.rsqrt(var + eps)
+    w = w_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] = (normed * w + b).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "seed", "eps", "block"))
+def fused_dropout_residual_layernorm(
+    x: jax.Array,
+    residual: jax.Array,
+    weight: jax.Array,
+    bias: jax.Array,
+    *,
+    p: float = 0.0,
+    seed: int = 0,
+    eps: float = 1e-5,
+    block: int = 32,
+):
+    """Returns ``(o, resid_out)`` over (rows, d) inputs.
+
+    ``rows`` must be a multiple of ``block``; callers flatten
+    (batch, seq) -> rows, matching the kernel's per-thread-block chunk of
+    sequence vectors (listing E.2).
+    """
+    rows, d = x.shape
+    assert rows % block == 0, f"rows {rows} % block {block}"
+    kern = functools.partial(
+        _ln_kernel, p=p, seed=seed, eps=eps, d=d, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=(rows // block,),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, d), x.dtype),
+            jax.ShapeDtypeStruct((rows, d), x.dtype),
+        ],
+        interpret=True,
+    )(x, residual, weight, bias)

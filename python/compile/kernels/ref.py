@@ -1,0 +1,84 @@
+"""Pure-jnp correctness oracles for every L1 kernel.
+
+These are the ground truth the pytest suite checks the Pallas kernels
+against (the paper's correctness protocol: every HK kernel is validated
+against a straightforward reference implementation).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a, b, out_dtype=None):
+    """Plain f32-accumulated matmul."""
+    if out_dtype is None:
+        out_dtype = a.dtype
+    out = jnp.dot(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(out_dtype)
+
+
+def attention(q, k, v, causal=False, sm_scale=None):
+    """Dense softmax attention over (B, H, N, D); supports GQA by
+    broadcasting KV heads."""
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    scale = (1.0 / (d ** 0.5)) if sm_scale is None else sm_scale
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def dropout(x, seed, p, rows, d):
+    """The kernel's counter-based dropout, replicated exactly."""
+    from .layernorm import dropout_mask
+
+    if p <= 0.0:
+        return x
+    flat = jnp.arange(rows * d, dtype=jnp.uint32).reshape(rows, d)
+    keep = dropout_mask(flat, seed, p)
+    return jnp.where(keep, x / (1.0 - p), 0.0)
+
+
+def fused_dropout_residual_layernorm(
+    x, residual, weight, bias, p=0.0, seed=0, eps=1e-5
+):
+    rows, d = x.shape
+    xf = dropout(x.astype(jnp.float32), seed, p, rows, d)
+    resid = residual.astype(jnp.float32) + xf
+    mean = resid.mean(axis=-1, keepdims=True)
+    centered = resid - mean
+    var = (centered * centered).mean(axis=-1, keepdims=True)
+    normed = centered * jax.lax.rsqrt(var + eps)
+    o = normed * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return o.astype(x.dtype), resid.astype(x.dtype)
+
+
+def rope(x, theta=10000.0):
+    b, h, n, d = x.shape
+    half = d // 2
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(half, dtype=jnp.float32)[None, :]
+    inv_freq = jnp.exp(-(2.0 * dim / d) * jnp.log(theta))
+    ang = pos * inv_freq  # (n, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

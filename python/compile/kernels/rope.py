@@ -1,0 +1,51 @@
+"""Rotary positional embedding (RoPE) Pallas kernel (paper Fig. 9).
+
+Applies the rotation to (B, H, N, D) query/key tensors with the
+half-split convention: for pairs (x1, x2) = (x[..., :D/2], x[..., D/2:]),
+
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+
+with angle(pos, i) = pos / theta^(2i/D). Purely memory-bound — the
+workload the paper uses to show HK's bulk vector ops beat torch.compile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rope_kernel(x_ref, o_ref, *, theta: float, block_n: int, d: int):
+    n_idx = pl.program_id(2)
+    x = x_ref[0, 0].astype(jnp.float32)  # (block_n, d)
+    half = d // 2
+    pos = n_idx * block_n + jax.lax.broadcasted_iota(
+        jnp.float32, (block_n, half), 0)
+    dim = jax.lax.broadcasted_iota(jnp.float32, (block_n, half), 1)
+    inv_freq = jnp.exp(-(2.0 * dim / d) * jnp.log(theta))
+    ang = pos * inv_freq
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[:, :half], x[:, half:]
+    o = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "block_n"))
+def rope(x: jax.Array, *, theta: float = 10000.0, block_n: int = 64):
+    """RoPE over (B, H, N, D); N must be a multiple of ``block_n``,
+    D even."""
+    b, h, n, d = x.shape
+    assert d % 2 == 0 and n % block_n == 0
+    return pl.pallas_call(
+        functools.partial(_rope_kernel, theta=theta, block_n=block_n, d=d),
+        grid=(b, h, n // block_n),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_n, d), lambda bi, hi, ni: (bi, hi, ni, 0))
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_n, d), lambda bi, hi, ni: (bi, hi, ni, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, n, d), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,195 @@
+"""L2 — the JAX transformer model built on the L1 Pallas kernels.
+
+This is the paper's end-to-end validation workload (§4: "to validate
+kernel stability, we use our kernels to pretrain Llama 1B and BERT 110M
+..., matching the perplexity of models trained using PyTorch and AITER").
+At reproduction scale we pretrain a small Llama-style decoder on a
+synthetic corpus and check loss parity between the kernel path (Pallas
+attention fwd+bwd) and the reference path (dense jnp attention).
+
+The training step is exported over a *flat* parameter vector
+(`ravel_pytree`), so the Rust coordinator can hold a single buffer and
+step it without any Python in the loop.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import attention as attn_k
+from .kernels import ref as ref_k
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    d_head: int = 32
+    seq_len: int = 128
+
+    @property
+    def qkv_dims(self):
+        return (
+            self.n_heads * self.d_head,
+            self.n_kv_heads * self.d_head,
+            self.n_kv_heads * self.d_head,
+        )
+
+
+def tiny_config() -> ModelConfig:
+    """Small config for fast tests."""
+    return ModelConfig(
+        vocab=512, d_model=128, n_layers=2, n_heads=4, n_kv_heads=2,
+        d_head=32, seq_len=64,
+    )
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Llama-style decoder parameters."""
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    scale = 0.02
+
+    def dense(k, m, n):
+        return scale * jax.random.normal(k, (m, n), jnp.float32)
+
+    dq, dkv, _ = cfg.qkv_dims
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[i], 8)
+        layers.append({
+            "ln1_w": jnp.ones(cfg.d_model, jnp.float32),
+            "ln1_b": jnp.zeros(cfg.d_model, jnp.float32),
+            "wq": dense(lk[0], cfg.d_model, dq),
+            "wk": dense(lk[1], cfg.d_model, dkv),
+            "wv": dense(lk[2], cfg.d_model, dkv),
+            "wo": dense(lk[3], dq, cfg.d_model),
+            "ln2_w": jnp.ones(cfg.d_model, jnp.float32),
+            "ln2_b": jnp.zeros(cfg.d_model, jnp.float32),
+            "w_up": dense(lk[4], cfg.d_model, 4 * cfg.d_model),
+            "w_gate": dense(lk[5], cfg.d_model, 4 * cfg.d_model),
+            "w_down": dense(lk[6], 4 * cfg.d_model, cfg.d_model),
+        })
+    return {
+        "embed": scale * jax.random.normal(
+            keys[-2], (cfg.vocab, cfg.d_model), jnp.float32),
+        "ln_f_w": jnp.ones(cfg.d_model, jnp.float32),
+        "ln_f_b": jnp.zeros(cfg.d_model, jnp.float32),
+        "layers": layers,
+    }
+
+
+def _layernorm(x, w, b, eps=1e-5):
+    mean = x.mean(-1, keepdims=True)
+    c = x - mean
+    var = (c * c).mean(-1, keepdims=True)
+    return c * jax.lax.rsqrt(var + eps) * w + b
+
+
+def _rope(x, theta=10000.0):
+    """Differentiable RoPE matching kernels.rope (the Pallas version is
+    exported separately for the serving path)."""
+    return ref_k.rope(x, theta=theta)
+
+
+def _block(cfg: ModelConfig, p, x, use_kernels: bool):
+    b, t, _ = x.shape
+    h = _layernorm(x, p["ln1_w"], p["ln1_b"])
+    q = (h @ p["wq"]).reshape(b, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    k = (h @ p["wk"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    v = (h @ p["wv"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    q, k = _rope(q), _rope(k)
+    if use_kernels:
+        bq = min(64, t)
+        o = attn_k.attention(q, k, v, True, None, bq, bq)
+    else:
+        o = ref_k.attention(q, k, v, causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, -1)
+    x = x + o @ p["wo"]
+    h = _layernorm(x, p["ln2_w"], p["ln2_b"])
+    mlp = (jax.nn.silu(h @ p["w_gate"]) * (h @ p["w_up"])) @ p["w_down"]
+    return x + mlp
+
+
+def forward(cfg: ModelConfig, params, tokens, use_kernels: bool = True):
+    """Logits for int32 tokens (B, T)."""
+    x = params["embed"][tokens]
+    for p in params["layers"]:
+        x = _block(cfg, p, x, use_kernels)
+    x = _layernorm(x, params["ln_f_w"], params["ln_f_b"])
+    return x @ params["embed"].T
+
+
+def loss_fn(cfg: ModelConfig, params, batch, use_kernels: bool = True):
+    """Next-token cross entropy; ``batch`` is int32 (B, T+1)."""
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    logits = forward(cfg, params, tokens, use_kernels)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return -ll.mean()
+
+
+# ---------------------------------------------------------------- flat API
+
+
+def flat_spec(cfg: ModelConfig):
+    """(n_params, unravel) for the flat-vector API."""
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    flat, unravel = ravel_pytree(params)
+    return flat.shape[0], unravel
+
+
+def make_flat_fns(cfg: ModelConfig, lr: float = 0.05, momentum: float = 0.9):
+    """Build the flat-parameter entry points the Rust runtime drives.
+
+    Returns a dict of jittable functions:
+      init(seed)                       -> (flat,)
+      train_step(flat, mom, batch)     -> (flat', mom', loss)  [kernel path]
+      train_step_ref(flat, mom, batch) -> same on the reference path
+      lm_loss(flat, batch)             -> (loss,)              [kernel path]
+    """
+    _, unravel = flat_spec(cfg)
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed[0])
+        flat, _ = ravel_pytree(init_params(cfg, key))
+        return (flat,)
+
+    def _step(flat, mom, batch, use_kernels):
+        params = unravel(flat)
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, use_kernels))(params)
+        gflat, _ = ravel_pytree(grads)
+        mom2 = momentum * mom + gflat
+        return flat - lr * mom2, mom2, loss
+
+    def train_step(flat, mom, batch):
+        return _step(flat, mom, batch, True)
+
+    def train_step_ref(flat, mom, batch):
+        return _step(flat, mom, batch, False)
+
+    def lm_loss(flat, batch):
+        return (loss_fn(cfg, unravel(flat), batch, True),)
+
+    return {
+        "init": init,
+        "train_step": train_step,
+        "train_step_ref": train_step_ref,
+        "lm_loss": lm_loss,
+    }
+
+
+def synthetic_batch(cfg: ModelConfig, key, batch_size: int):
+    """Synthetic corpus: token sequences from a noisy drifting source —
+    structured enough for the loss to fall well below uniform."""
+    k1, k2 = jax.random.split(key)
+    base = jax.random.randint(
+        k1, (batch_size, cfg.seq_len + 1), 0, cfg.vocab // 4)
+    drift = jnp.cumsum(
+        jax.random.randint(k2, (batch_size, cfg.seq_len + 1), 0, 3), axis=1)
+    return ((base + drift) % cfg.vocab).astype(jnp.int32)

@@ -1,0 +1,101 @@
+"""Attention kernels vs dense oracle: MHA/GQA x causal/non-causal,
+forward and backward, plus hypothesis sweeps over shapes."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import attention, ref
+
+SETTINGS = dict(deadline=None, max_examples=10,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _qkv(b, hq, hkv, n, d, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, n, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, n, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, n, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])  # MHA and GQA
+@pytest.mark.parametrize("d", [32, 64])
+def test_forward_matches_ref(causal, hq, hkv, d):
+    q, k, v = _qkv(2, hq, hkv, 128, d)
+    got = attention.attention(q, k, v, causal)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=1e-2)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2)])
+def test_backward_matches_ref(causal, hq, hkv):
+    q, k, v = _qkv(1, hq, hkv, 128, 32, seed=3)
+
+    def loss_k(q, k, v):
+        return (attention.attention(q, k, v, causal) ** 2).sum()
+
+    def loss_r(q, k, v):
+        return (ref.attention(q, k, v, causal=causal) ** 2).sum()
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for name, x, y in zip("qkv", gk, gr):
+        np.testing.assert_allclose(
+            x, y, atol=5e-3, rtol=1e-2, err_msg=f"d{name}")
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    b=st.integers(1, 2),
+    g=st.sampled_from([1, 2, 4]),
+    hkv=st.sampled_from([1, 2]),
+    nq_blocks=st.integers(1, 3),
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    block=st.sampled_from([32, 64]),
+)
+def test_forward_shape_sweep(b, g, hkv, nq_blocks, d, causal, block):
+    n = block * nq_blocks
+    q, k, v = _qkv(b, g * hkv, hkv, n, d, seed=7)
+    got = attention.attention(q, k, v, causal, None, block, block)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, atol=3e-3, rtol=1e-2)
+
+
+def test_bf16_inputs():
+    q, k, v = _qkv(1, 4, 2, 128, 64, dtype=jnp.bfloat16, seed=9)
+    got = attention.attention(q, k, v, True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), atol=3e-2, rtol=5e-2)
+    assert got.dtype == jnp.bfloat16
+
+
+def test_sm_scale_override():
+    q, k, v = _qkv(1, 2, 2, 64, 32, seed=11)
+    got = attention.attention(q, k, v, False, 0.5)
+    want = ref.attention(q, k, v, causal=False, sm_scale=0.5)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=1e-2)
+
+
+def test_causal_first_row_attends_only_self():
+    q, k, v = _qkv(1, 1, 1, 64, 32, seed=13)
+    got = attention.attention(q, k, v, True)
+    # row 0 can only attend to position 0 -> output == v[0]
+    np.testing.assert_allclose(got[0, 0, 0], v[0, 0, 0], atol=1e-5)
+
+
+def test_gqa_equals_mha_with_repeated_kv():
+    """GQA(hq=4, hkv=2) must equal MHA with KV explicitly repeated."""
+    q, k, v = _qkv(1, 4, 2, 64, 32, seed=17)
+    got = attention.attention(q, k, v, False)
+    krep = jnp.repeat(k, 2, axis=1)
+    vrep = jnp.repeat(v, 2, axis=1)
+    want = attention.attention(q, krep, vrep, False)
+    np.testing.assert_allclose(got, want, atol=1e-5)

@@ -1,0 +1,64 @@
+"""Failure injection / edge cases across the python layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import attention, gemm, layernorm, ref
+
+
+def test_gemm_rejects_mismatched_inner_dims():
+    a = jnp.zeros((64, 64), jnp.float32)
+    b = jnp.zeros((32, 64), jnp.float32)
+    with pytest.raises(AssertionError):
+        gemm.matmul(a, b, block_m=64, block_n=64, block_k=32)
+
+
+def test_attention_rejects_non_divisible_gqa():
+    q = jnp.zeros((1, 3, 64, 32), jnp.float32)
+    k = jnp.zeros((1, 2, 64, 32), jnp.float32)
+    with pytest.raises(AssertionError):
+        attention.attention(q, k, k)
+
+
+def test_layernorm_rejects_ragged_rows():
+    x = jnp.zeros((33, 64), jnp.float32)
+    w = jnp.ones(64)
+    with pytest.raises(AssertionError):
+        layernorm.fused_dropout_residual_layernorm(
+            x, x, w, jnp.zeros(64), block=32)
+
+
+def test_attention_handles_large_magnitude_logits():
+    """Online softmax must not overflow where naive softmax would."""
+    q = 30.0 * jax.random.normal(jax.random.PRNGKey(0), (1, 1, 64, 32))
+    k = 30.0 * jax.random.normal(jax.random.PRNGKey(1), (1, 1, 64, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 64, 32))
+    o = attention.attention(q, k, v, False, 1.0)
+    assert np.isfinite(np.asarray(o)).all()
+    want = ref.attention(q, k, v, causal=False, sm_scale=1.0)
+    np.testing.assert_allclose(o, want, atol=5e-3, rtol=1e-2)
+
+
+def test_attention_zero_values_give_zero_output():
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 64, 32))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 64, 32))
+    v = jnp.zeros((1, 2, 64, 32), jnp.float32)
+    o = attention.attention(q, k, v, True)
+    np.testing.assert_allclose(o, 0.0, atol=1e-6)
+
+
+def test_dropout_p_one_is_degenerate_but_finite():
+    x = jnp.ones((32, 32), jnp.float32)
+    w = jnp.ones(32)
+    o, r = layernorm.fused_dropout_residual_layernorm(
+        x, x, w, jnp.zeros(32), p=0.99, seed=1)
+    assert np.isfinite(np.asarray(o)).all()
+
+
+def test_gemm_zero_matrix():
+    a = jnp.zeros((64, 64), jnp.float32)
+    b = jnp.zeros((64, 64), jnp.float32)
+    out = gemm.matmul(a, b, block_m=64, block_n=64, block_k=64)
+    np.testing.assert_array_equal(out, 0.0)

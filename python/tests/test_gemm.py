@@ -1,0 +1,76 @@
+"""GEMM kernel vs oracle — shapes/dtypes swept with hypothesis."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import gemm, ref
+
+SETTINGS = dict(deadline=None, max_examples=12,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("m,n,k", [(64, 64, 64), (128, 64, 192), (256, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_matches_ref(m, n, k, dtype):
+    a, b = _rand(0, (m, k), dtype), _rand(1, (k, n), dtype)
+    got = gemm.matmul(a, b, block_m=64, block_n=64, block_k=64)
+    want = ref.matmul(a, b)
+    atol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), atol=atol, rtol=1e-2)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    bm=st.sampled_from([16, 32, 64]),
+    bn=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 32, 64]),
+    mm=st.integers(1, 3),
+    nm=st.integers(1, 3),
+    km=st.integers(1, 3),
+)
+def test_matmul_block_sweep(bm, bn, bk, mm, nm, km):
+    """Any block decomposition must give the same answer (the paper's
+    tile-size flexibility: multiple MFMA shapes per kernel)."""
+    m, n, k = bm * mm, bn * nm, bk * km
+    a, b = _rand(2, (m, k), jnp.float32), _rand(3, (k, n), jnp.float32)
+    got = gemm.matmul(a, b, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(got, ref.matmul(a, b), atol=1e-4, rtol=1e-3)
+
+
+def test_bf16_accumulates_in_f32():
+    # 1024-long dot of ones: exact in f32 accumulation, would round in
+    # bf16 accumulation.
+    a = jnp.ones((16, 1024), jnp.bfloat16)
+    b = jnp.ones((1024, 16), jnp.bfloat16)
+    got = gemm.matmul(a, b, block_m=16, block_n=16, block_k=128,
+                      out_dtype=jnp.float32)
+    np.testing.assert_allclose(got, 1024.0)
+
+
+def test_out_dtype_override():
+    a, b = _rand(4, (64, 64), jnp.float32), _rand(5, (64, 64), jnp.float32)
+    got = gemm.matmul(a, b, block_m=64, block_n=64, block_k=64,
+                      out_dtype=jnp.bfloat16)
+    assert got.dtype == jnp.bfloat16
+
+
+def test_rejects_ragged_shapes():
+    a, b = _rand(6, (65, 64), jnp.float32), _rand(7, (64, 64), jnp.float32)
+    with pytest.raises(AssertionError):
+        gemm.matmul(a, b, block_m=64, block_n=64, block_k=64)
+
+
+def test_pick_blocks_divides():
+    for m, n, k in [(256, 512, 128), (96, 80, 48), (1024, 1024, 1024)]:
+        bm, bn, bk = gemm.pick_blocks(m, n, k)
+        assert m % bm == 0 and n % bn == 0 and k % bk == 0
+        assert bm <= 128 and bn <= 128 and bk <= 128

@@ -1,0 +1,101 @@
+"""Memory-bound kernels (fused dropout-residual-layernorm, RoPE) vs
+oracles."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import layernorm, ref, rope
+
+SETTINGS = dict(deadline=None, max_examples=10,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _xw(rows, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (rows, d), jnp.float32)
+    res = jax.random.normal(ks[1], (rows, d), jnp.float32)
+    w = 1.0 + 0.1 * jax.random.normal(ks[2], (d,), jnp.float32)
+    b = 0.1 * jax.random.normal(ks[3], (d,), jnp.float32)
+    return x, res, w, b
+
+
+@pytest.mark.parametrize("p", [0.0, 0.1, 0.5])
+def test_fused_ln_matches_ref(p):
+    x, res, w, b = _xw(64, 128)
+    o1, r1 = layernorm.fused_dropout_residual_layernorm(
+        x, res, w, b, p=p, seed=42)
+    o2, r2 = ref.fused_dropout_residual_layernorm(x, res, w, b, p=p, seed=42)
+    np.testing.assert_allclose(o1, o2, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(r1, r2, atol=1e-5)
+
+
+def test_dropout_keep_rate_close_to_1_minus_p():
+    x = jnp.ones((256, 256), jnp.float32)
+    res = jnp.zeros_like(x)
+    w, b = jnp.ones(256), jnp.zeros(256)
+    _, r = layernorm.fused_dropout_residual_layernorm(
+        x, res, w, b, p=0.3, seed=5)
+    keep_rate = float((r != 0).mean())
+    assert abs(keep_rate - 0.7) < 0.02, keep_rate
+
+
+def test_dropout_deterministic_per_seed():
+    x, res, w, b = _xw(64, 64, seed=1)
+    o1, _ = layernorm.fused_dropout_residual_layernorm(
+        x, res, w, b, p=0.2, seed=9)
+    o2, _ = layernorm.fused_dropout_residual_layernorm(
+        x, res, w, b, p=0.2, seed=9)
+    o3, _ = layernorm.fused_dropout_residual_layernorm(
+        x, res, w, b, p=0.2, seed=10)
+    np.testing.assert_array_equal(o1, o2)
+    assert not np.allclose(o1, o3)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    blocks=st.integers(1, 4),
+    block=st.sampled_from([16, 32]),
+    d=st.sampled_from([32, 64, 128]),
+)
+def test_fused_ln_shape_sweep(blocks, block, d):
+    x, res, w, b = _xw(blocks * block, d, seed=2)
+    o1, r1 = layernorm.fused_dropout_residual_layernorm(
+        x, res, w, b, p=0.0, block=block)
+    o2, r2 = ref.fused_dropout_residual_layernorm(x, res, w, b, p=0.0)
+    np.testing.assert_allclose(o1, o2, atol=1e-4, rtol=1e-3)
+
+
+def test_ln_output_is_normalized():
+    x, res, w, b = _xw(32, 128, seed=3)
+    o, _ = layernorm.fused_dropout_residual_layernorm(
+        x, res, jnp.ones(128), jnp.zeros(128), p=0.0)
+    np.testing.assert_allclose(np.asarray(o).mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(o).std(-1), 1.0, atol=1e-2)
+
+
+@pytest.mark.parametrize("d", [32, 64, 128])
+def test_rope_matches_ref(d):
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 4, 128, d), jnp.float32)
+    np.testing.assert_allclose(
+        rope.rope(x), ref.rope(x), atol=1e-4, rtol=1e-3)
+
+
+def test_rope_preserves_norm():
+    """Rotation preserves the norm of every (x1, x2) pair."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 64, 64), jnp.float32)
+    y = np.asarray(rope.rope(x))
+    xn = np.asarray(x)
+    half = 32
+    n_in = xn[..., :half] ** 2 + xn[..., half:] ** 2
+    n_out = y[..., :half] ** 2 + y[..., half:] ** 2
+    np.testing.assert_allclose(n_in, n_out, atol=1e-4)
+
+
+def test_rope_position_zero_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 1, 64, 32), jnp.float32)
+    y = rope.rope(x)
+    np.testing.assert_allclose(y[0, 0, 0], x[0, 0, 0], atol=1e-5)

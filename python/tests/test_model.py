@@ -1,0 +1,98 @@
+"""L2 model tests: shapes, loss sanity, kernel/reference parity, and the
+flat-parameter training API the Rust runtime drives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return m.tiny_config()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return m.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_forward_shapes(cfg, params):
+    tokens = jnp.zeros((2, cfg.seq_len), jnp.int32)
+    logits = m.forward(cfg, params, tokens, use_kernels=False)
+    assert logits.shape == (2, cfg.seq_len, cfg.vocab)
+
+
+def test_initial_loss_near_uniform(cfg, params):
+    batch = m.synthetic_batch(cfg, jax.random.PRNGKey(1), 2)
+    loss = m.loss_fn(cfg, params, batch, use_kernels=False)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 0.5
+
+
+def test_kernel_path_matches_reference_path(cfg, params):
+    """The paper's stability claim at micro scale: Pallas-attention loss
+    equals dense-attention loss."""
+    batch = m.synthetic_batch(cfg, jax.random.PRNGKey(2), 2)
+    lk = m.loss_fn(cfg, params, batch, use_kernels=True)
+    lr = m.loss_fn(cfg, params, batch, use_kernels=False)
+    np.testing.assert_allclose(float(lk), float(lr), atol=1e-4, rtol=1e-4)
+
+
+def test_kernel_gradients_match_reference(cfg, params):
+    batch = m.synthetic_batch(cfg, jax.random.PRNGKey(3), 1)
+    gk = jax.grad(lambda p: m.loss_fn(cfg, p, batch, True))(params)
+    gr = jax.grad(lambda p: m.loss_fn(cfg, p, batch, False))(params)
+    fk, _ = jax.flatten_util.ravel_pytree(gk)
+    fr, _ = jax.flatten_util.ravel_pytree(gr)
+    np.testing.assert_allclose(fk, fr, atol=2e-4, rtol=1e-2)
+
+
+def test_flat_roundtrip(cfg, params):
+    n, unravel = m.flat_spec(cfg)
+    flat, _ = jax.flatten_util.ravel_pytree(params)
+    assert flat.shape == (n,)
+    back = unravel(flat)
+    fb, _ = jax.flatten_util.ravel_pytree(back)
+    np.testing.assert_array_equal(flat, fb)
+
+
+def test_train_step_decreases_loss(cfg):
+    fns = m.make_flat_fns(cfg, lr=0.1)
+    (flat,) = fns["init"](jnp.array([0], jnp.int32))
+    mom = jnp.zeros_like(flat)
+    batch = m.synthetic_batch(cfg, jax.random.PRNGKey(4), 4)
+    step = jax.jit(fns["train_step"])
+    losses = []
+    for _ in range(8):
+        flat, mom, loss = step(flat, mom, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+def test_train_step_paths_agree_initially(cfg):
+    """First-step loss must be identical across kernel and reference
+    paths (same params, same batch)."""
+    fns = m.make_flat_fns(cfg)
+    (flat,) = fns["init"](jnp.array([7], jnp.int32))
+    mom = jnp.zeros_like(flat)
+    batch = m.synthetic_batch(cfg, jax.random.PRNGKey(5), 2)
+    _, _, lk = fns["train_step"](flat, mom, batch)
+    _, _, lr = fns["train_step_ref"](flat, mom, batch)
+    np.testing.assert_allclose(float(lk), float(lr), atol=1e-4)
+
+
+def test_lm_loss_entry(cfg):
+    fns = m.make_flat_fns(cfg)
+    (flat,) = fns["init"](jnp.array([0], jnp.int32))
+    batch = m.synthetic_batch(cfg, jax.random.PRNGKey(6), 2)
+    (loss,) = fns["lm_loss"](flat, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_synthetic_batch_in_vocab(cfg):
+    batch = m.synthetic_batch(cfg, jax.random.PRNGKey(8), 4)
+    assert batch.shape == (4, cfg.seq_len + 1)
+    assert batch.dtype == jnp.int32
+    assert int(batch.min()) >= 0 and int(batch.max()) < cfg.vocab

@@ -1,0 +1,38 @@
+//! `cargo bench --bench paper_tables` — regenerates every paper table and
+//! figure end-to-end and times each regeneration. One bench per
+//! experiment (DESIGN.md §3). The harness is in-repo
+//! (`coordinator::metrics::bench_fn`): the environment is offline, so
+//! criterion is replaced by the same warmup/measure protocol the paper
+//! uses (scaled down).
+
+use hipkittens::coordinator::bench_fn;
+use hipkittens::report;
+
+fn main() {
+    println!("== paper table/figure regeneration benches ==\n");
+    let mut rows = Vec::new();
+    let mut run = |name: &str, f: fn()| {
+        // silence the report output while timing
+        let r = bench_fn(name, 1, 3, || {
+            f();
+        });
+        rows.push(r.row());
+    };
+    run("table1 (register pinning)", report::table1);
+    run("table2 (producer/consumer)", report::table2);
+    run("table3 (8-wave vs 4-wave)", report::table3);
+    run("table4 (chiplet swizzling)", report::table4);
+    run("table5 (phase solver)", report::table5);
+    run("fig5/18 (grid maps)", report::fig5);
+    run("fig6 (GEMM sweep)", report::fig6);
+    run("fig7/16/17 (attention fwd)", report::fig7);
+    run("fig8/15 (attention bwd)", report::fig8);
+    run("fig9 (memory bound)", report::fig9);
+    run("fig14 (CDNA3 GEMM)", report::fig14);
+    run("fig19 (NVIDIA context)", report::fig19);
+    run("fig24 (FP6 case study)", report::fig24);
+    println!("\n== timings ==");
+    for r in rows {
+        println!("{r}");
+    }
+}

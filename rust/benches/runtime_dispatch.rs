@@ -1,0 +1,59 @@
+//! `cargo bench --bench runtime_dispatch` — the execution plane:
+//! PJRT artifact dispatch latency and the batching service throughput
+//! (needs `make artifacts`; prints a notice and exits cleanly otherwise).
+
+use hipkittens::coordinator::{
+    bench_fn, poisson_trace, BatchingService, ServiceConfig,
+};
+use hipkittens::runtime::{Manifest, Rng, Runtime, Tensor};
+
+fn main() {
+    let dir = std::env::var("HK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !Manifest::available(&dir) {
+        println!("runtime_dispatch: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::new(&dir).unwrap();
+    println!("platform: {}", rt.platform());
+
+    let mut rng = Rng::new(0);
+    let a = rng.normal_vec(256 * 256);
+    let b = rng.normal_vec(256 * 256);
+    rt.load("gemm256").unwrap();
+    let r = bench_fn("dispatch: gemm256 execute", 5, 30, || {
+        rt.run("gemm256", &[Tensor::F32(a.clone()), Tensor::F32(b.clone())])
+            .unwrap();
+    });
+    println!("{}", r.row());
+
+    // attention artifact per batch size: amortization curve
+    for bsz in [1usize, 2, 4, 8] {
+        let name = format!("attn_fwd_b{bsz}");
+        let entry = rt.manifest.entry(&name).unwrap().clone();
+        let inputs: Vec<Tensor> = entry
+            .inputs
+            .iter()
+            .map(|s| Tensor::F32(rng.normal_vec(s.elems())))
+            .collect();
+        rt.load(&name).unwrap();
+        let r = bench_fn(&format!("dispatch: {name}"), 3, 15, || {
+            rt.run(&name, &inputs).unwrap();
+        });
+        println!(
+            "{}   ({:.3} ms/request)",
+            r.row(),
+            r.mean_s * 1e3 / bsz as f64
+        );
+    }
+
+    // full service loop
+    let mut svc = BatchingService::new(&mut rt, ServiceConfig::default()).unwrap();
+    let trace = poisson_trace(32, 400.0, 9);
+    let t0 = std::time::Instant::now();
+    let rep = svc.run_trace(&trace).unwrap();
+    println!(
+        "service: {} ({:.2}s wall)",
+        rep.summary(),
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,85 @@
+//! `cargo bench --bench sim_hotpath` — microbenchmarks of the simulator
+//! hot paths (the targets of the L3 §Perf pass in EXPERIMENTS.md): the
+//! cycle engine, the cache model, the chiplet remap and the LDS bank
+//! model.
+
+use hipkittens::coordinator::bench_fn;
+use hipkittens::hk::chiplet::ChipletSwizzle;
+use hipkittens::kernels::attention::{self, AttnConfig};
+use hipkittens::kernels::gemm::{self, GemmConfig};
+use hipkittens::sim::arch::Arch;
+use hipkittens::sim::cache::{row_major_order, simulate_gemm_schedule, GemmGrid};
+use hipkittens::sim::engine::EngineConfig;
+use hipkittens::sim::lds::{access, DsInstr, WAVE};
+
+fn main() {
+    let a = Arch::mi355x();
+    println!("== simulator hot paths ==");
+
+    // engine: one 8192^3 GEMM block program
+    let cfg = GemmConfig::bf16(8192, 8192, 8192);
+    let built = gemm::build(&a, &cfg);
+    let ec = EngineConfig::for_arch(&a).with_vmem_latency(400);
+    let r = bench_fn("engine: bf16 gemm block (128 iters)", 2, 10, || {
+        let st = hipkittens::sim::run_block(&a, &ec, &built.block);
+        assert!(st.cycles > 0);
+    });
+    println!("{}", r.row());
+
+    // engine: attention bwd block
+    let bcfg = AttnConfig::mha(8192, 128, false);
+    let spec = attention::build_bwd_spec(&a, &bcfg);
+    let b2 = hipkittens::hk::pingpong::build(&spec);
+    let r = bench_fn("engine: attn bwd block (512 iters)", 2, 10, || {
+        let st = hipkittens::sim::run_block(&a, &ec, &b2.block);
+        assert!(st.cycles > 0);
+    });
+    println!("{}", r.row());
+
+    // cache model: 9216 grid, full k-stream
+    let grid = GemmGrid {
+        m: 9216,
+        n: 9216,
+        k: 9216,
+        block_m: 192,
+        block_n: 256,
+        block_k: 64,
+        elem_bytes: 2.0,
+    };
+    let order = row_major_order(grid.tiles_m(), grid.tiles_n());
+    let r = bench_fn("cache: 9216 grid LRU stream", 1, 5, || {
+        let st = simulate_gemm_schedule(&a, &grid, &order);
+        assert!(st.l2_hit > 0.0);
+    });
+    println!("{}", r.row());
+
+    // chiplet remap throughput
+    let swz = ChipletSwizzle::new(8, 8, 64);
+    let r = bench_fn("chiplet: remap 76x57 grid x100", 2, 20, || {
+        for _ in 0..100 {
+            let s = swz.schedule(76, 57);
+            assert_eq!(s.len(), 76 * 57);
+        }
+    });
+    println!("{}", r.row());
+
+    // LDS bank model
+    let mut addrs = [0u64; WAVE];
+    for (t, s) in addrs.iter_mut().enumerate() {
+        *s = (t as u64 * 16) % 1024;
+    }
+    let r = bench_fn("lds: access() x10k", 2, 20, || {
+        for _ in 0..10_000 {
+            let acc = access(DsInstr::ReadB128, &addrs);
+            assert!(acc.cycles >= 4);
+        }
+    });
+    println!("{}", r.row());
+
+    // end-to-end kernel sim
+    let r = bench_fn("e2e: simulate bf16 gemm 8192^3", 1, 5, || {
+        let p = gemm::simulate(&a, &cfg);
+        assert!(p.tflops > 0.0);
+    });
+    println!("{}", r.row());
+}

@@ -1,0 +1,142 @@
+//! Latency/throughput metrics + a tiny benchmark harness (offline
+//! environment: criterion is unavailable, so the substrate is in-repo;
+//! `cargo bench` drives `bench_fn` through harness=false bench targets).
+
+use std::time::Instant;
+
+/// Streaming latency statistics (microseconds internally).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn record_s(&mut self, seconds: f64) {
+        self.samples_us.push(seconds * 1e6);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.percentile_us(50.0)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.percentile_us(99.0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p99={:.1}us",
+            self.count(),
+            self.mean_us(),
+            self.p50_us(),
+            self.p99_us()
+        )
+    }
+}
+
+/// Benchmark result from `bench_fn`.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:40} {:>10.3} ms/iter  (min {:.3}, max {:.3}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.min_s * 1e3,
+            self.max_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Measure a closure: warmup runs, then timed iterations (the paper's
+/// 500-warmup/100-measure protocol scaled down via parameters).
+pub fn bench_fn<F: FnMut()>(
+    name: &str,
+    warmup: u32,
+    iters: u32,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean_s: mean,
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let mut s = LatencyStats::default();
+        for i in 1..=100 {
+            s.record_s(i as f64 * 1e-6);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean_us() - 50.5).abs() < 1e-9);
+        assert!((s.p50_us() - 50.0).abs() <= 1.0);
+        assert!((s.p99_us() - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn bench_fn_runs_and_times() {
+        let mut count = 0u64;
+        let r = bench_fn("noop", 2, 5, || {
+            count += 1;
+        });
+        assert_eq!(count, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s + 1e-12);
+        assert!(!r.row().is_empty());
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::default();
+        assert_eq!(s.mean_us(), 0.0);
+        assert_eq!(s.p99_us(), 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! `coordinator` — the L3 drivers built on the PJRT runtime: a batching
+//! attention service (serving shape) and a training driver (the paper's
+//! pretraining stability check), plus the metrics/bench substrate.
+
+pub mod metrics;
+pub mod service;
+pub mod train;
+
+pub use metrics::{bench_fn, BenchResult, LatencyStats};
+pub use service::{poisson_trace, AttnRequest, BatchingService, ServiceConfig};
+pub use train::{Path, Trainer};

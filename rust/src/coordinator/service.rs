@@ -1,0 +1,207 @@
+//! Batching attention service — the serving-style coordinator (L3).
+//!
+//! A single-owner event loop (the vLLM-router shape, scaled to one
+//! process): requests arrive on a trace, the batcher greedily groups them
+//! up to the largest exported batch size, pads, executes the AOT attention
+//! artifact on the PJRT runtime, and records per-request latency.
+//! Python is never on this path — the artifacts were compiled by
+//! `make artifacts`.
+
+use super::metrics::LatencyStats;
+use crate::runtime::{Rng, Runtime, Tensor};
+use anyhow::{bail, Result};
+
+/// One inference request (timestamps in seconds on the trace clock).
+#[derive(Debug, Clone, Copy)]
+pub struct AttnRequest {
+    pub id: u64,
+    pub arrival_s: f64,
+}
+
+/// Service configuration; batch sizes must match exported artifacts
+/// (`attn_fwd_b{n}`).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub batch_sizes: Vec<usize>,
+    /// Wait at most this long (trace clock) to fill a batch.
+    pub max_wait_s: f64,
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            batch_sizes: vec![1, 2, 4, 8],
+            max_wait_s: 5e-3,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of serving a trace.
+#[derive(Debug, Clone)]
+pub struct ServiceReport {
+    pub served: u64,
+    pub batches: u64,
+    pub makespan_s: f64,
+    pub latency: LatencyStats,
+    /// Mean executed batch size.
+    pub mean_batch: f64,
+    /// Requests per second over the makespan.
+    pub throughput_rps: f64,
+}
+
+impl ServiceReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "served={} batches={} mean_batch={:.2} throughput={:.1} req/s latency[{}]",
+            self.served,
+            self.batches,
+            self.mean_batch,
+            self.throughput_rps,
+            self.latency.summary()
+        )
+    }
+}
+
+/// The batching service.
+pub struct BatchingService<'rt> {
+    rt: &'rt mut Runtime,
+    cfg: ServiceConfig,
+    rng: Rng,
+}
+
+impl<'rt> BatchingService<'rt> {
+    pub fn new(rt: &'rt mut Runtime, cfg: ServiceConfig) -> Result<Self> {
+        let rng = Rng::new(cfg.seed);
+        let s = BatchingService { rt, cfg, rng };
+        // pre-compile all batch variants off the hot path
+        for &b in s.cfg.batch_sizes.clone().iter() {
+            s.rt.load(&format!("attn_fwd_b{b}"))?;
+        }
+        Ok(s)
+    }
+
+    /// Pick the batch-size artifact for `pending` queued requests: the
+    /// largest exported size <= pending, or the smallest if none fit
+    /// (padding).
+    pub fn pick_batch(&self, pending: usize) -> usize {
+        let mut best = self.cfg.batch_sizes[0];
+        for &b in &self.cfg.batch_sizes {
+            if b <= pending && b > best {
+                best = b;
+            }
+        }
+        best
+    }
+
+    fn qkv_for(&mut self, name: &str) -> Result<Vec<Tensor>> {
+        let entry = self.rt.manifest.entry(name)?.clone();
+        Ok(entry
+            .inputs
+            .iter()
+            .map(|s| Tensor::F32(self.rng.normal_vec(s.elems())))
+            .collect())
+    }
+
+    /// Serve a trace: arrivals on the trace clock, execution measured on
+    /// the wall clock and folded into the same timeline.
+    pub fn run_trace(&mut self, trace: &[AttnRequest]) -> Result<ServiceReport> {
+        if trace.is_empty() {
+            bail!("empty trace");
+        }
+        let mut latency = LatencyStats::default();
+        let mut now = 0.0f64;
+        let mut i = 0usize;
+        let mut batches = 0u64;
+        let mut batched_total = 0u64;
+        while i < trace.len() {
+            // clock can't run ahead of the next arrival
+            now = now.max(trace[i].arrival_s);
+            // admit everything that has arrived, up to max batch + wait
+            let deadline = now + self.cfg.max_wait_s;
+            let max_b = *self.cfg.batch_sizes.iter().max().unwrap();
+            let mut pending = 0usize;
+            while i + pending < trace.len()
+                && trace[i + pending].arrival_s <= deadline
+                && pending < max_b
+            {
+                pending += 1;
+            }
+            let b = self.pick_batch(pending.max(1));
+            let take = b.min(pending.max(1)).min(trace.len() - i);
+            // batch formation may wait for stragglers inside the window
+            let formed_at = now.max(trace[i + take - 1].arrival_s);
+            let name = format!("attn_fwd_b{b}");
+            let inputs = self.qkv_for(&name)?;
+            let t0 = std::time::Instant::now();
+            let _ = self.rt.run(&name, &inputs)?;
+            let exec = t0.elapsed().as_secs_f64();
+            let done = formed_at + exec;
+            for r in &trace[i..i + take] {
+                latency.record_s(done - r.arrival_s);
+            }
+            now = done;
+            i += take;
+            batches += 1;
+            batched_total += take as u64;
+        }
+        let makespan = now - trace[0].arrival_s;
+        Ok(ServiceReport {
+            served: batched_total,
+            batches,
+            makespan_s: makespan,
+            mean_batch: batched_total as f64 / batches.max(1) as f64,
+            throughput_rps: batched_total as f64 / makespan.max(1e-9),
+            latency,
+        })
+    }
+}
+
+/// Build a Poisson arrival trace with `rate` req/s.
+pub fn poisson_trace(n: u64, rate: f64, seed: u64) -> Vec<AttnRequest> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|id| {
+            t += rng.exp(rate);
+            AttnRequest { id, arrival_s: t }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_is_monotone() {
+        let tr = poisson_trace(100, 50.0, 1);
+        assert_eq!(tr.len(), 100);
+        for w in tr.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+        // mean inter-arrival ~ 1/50
+        let mean = tr.last().unwrap().arrival_s / 100.0;
+        assert!((mean - 0.02).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn pick_batch_prefers_largest_fitting() {
+        // no runtime needed: test the policy through a tiny shim
+        let cfg = ServiceConfig::default();
+        let pick = |pending: usize| {
+            let mut best = cfg.batch_sizes[0];
+            for &b in &cfg.batch_sizes {
+                if b <= pending && b > best {
+                    best = b;
+                }
+            }
+            best
+        };
+        assert_eq!(pick(1), 1);
+        assert_eq!(pick(3), 2);
+        assert_eq!(pick(8), 8);
+        assert_eq!(pick(100), 8);
+    }
+}

@@ -1,0 +1,140 @@
+//! Training driver — the end-to-end composition proof (DESIGN.md E2E).
+//!
+//! Holds the model's flat parameter vector and momentum buffer in Rust,
+//! steps them through the AOT `train_step` artifact (Pallas attention
+//! forward + backward inside), and logs the loss curve. The reference
+//! path (`train_step_ref`) runs dense attention for the paper's loss-
+//! parity check.
+
+use crate::runtime::{Rng, Runtime, Tensor};
+use anyhow::{anyhow, Result};
+
+/// Which attention path the step runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    Kernels,
+    Reference,
+}
+
+impl Path {
+    fn artifact(&self) -> &'static str {
+        match self {
+            Path::Kernels => "train_step",
+            Path::Reference => "train_step_ref",
+        }
+    }
+}
+
+/// Trainer state.
+pub struct Trainer<'rt> {
+    rt: &'rt mut Runtime,
+    pub flat: Vec<f32>,
+    pub mom: Vec<f32>,
+    pub vocab: u32,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub steps_done: u64,
+    rng: Rng,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Initialize parameters through the `init_params` artifact.
+    pub fn new(rt: &'rt mut Runtime, seed: i32) -> Result<Self> {
+        let entry = rt.manifest.entry("train_step")?.clone();
+        let n_params = entry
+            .meta_u64("n_params")
+            .ok_or_else(|| anyhow!("train_step missing n_params"))? as usize;
+        let vocab = entry.meta_u64("vocab").unwrap_or(2048) as u32;
+        let seq_len = entry.meta_u64("seq_len").unwrap_or(128) as usize;
+        let batch = entry.meta_u64("batch").unwrap_or(4) as usize;
+        let out = rt.run("init_params", &[Tensor::I32(vec![seed])])?;
+        let flat = out[0].as_f32()?.to_vec();
+        if flat.len() != n_params {
+            return Err(anyhow!(
+                "init returned {} params, manifest says {}",
+                flat.len(),
+                n_params
+            ));
+        }
+        Ok(Trainer {
+            rt,
+            mom: vec![0.0; flat.len()],
+            flat,
+            vocab,
+            seq_len,
+            batch,
+            steps_done: 0,
+            rng: Rng::new(seed as u64),
+        })
+    }
+
+    /// Synthetic-corpus batch (same family as model.synthetic_batch: a
+    /// drifting low-entropy token stream).
+    pub fn synthetic_batch(&mut self) -> Vec<i32> {
+        let (b, t, v) = (self.batch, self.seq_len + 1, self.vocab as u64);
+        let mut out = Vec::with_capacity(b * t);
+        for _ in 0..b {
+            let mut drift = 0u64;
+            for _ in 0..t {
+                drift += self.rng.below(3);
+                let base = self.rng.below(v / 4);
+                out.push(((base + drift) % v) as i32);
+            }
+        }
+        out
+    }
+
+    /// One optimizer step; returns the loss.
+    pub fn step(&mut self, path: Path, batch_tokens: Vec<i32>) -> Result<f32> {
+        let out = self.rt.run(
+            path.artifact(),
+            &[
+                Tensor::F32(std::mem::take(&mut self.flat)),
+                Tensor::F32(std::mem::take(&mut self.mom)),
+                Tensor::I32(batch_tokens),
+            ],
+        )?;
+        self.flat = out[0].as_f32()?.to_vec();
+        self.mom = out[1].as_f32()?.to_vec();
+        let loss = out[2].as_f32()?[0];
+        self.steps_done += 1;
+        Ok(loss)
+    }
+
+    /// Evaluate the LM loss on a batch without updating parameters.
+    pub fn eval_loss(&mut self, batch_tokens: Vec<i32>) -> Result<f32> {
+        let out = self.rt.run(
+            "lm_loss",
+            &[Tensor::F32(self.flat.clone()), Tensor::I32(batch_tokens)],
+        )?;
+        Ok(out[0].as_f32()?[0])
+    }
+
+    /// Train for `steps`, returning the loss curve.
+    pub fn train(
+        &mut self,
+        path: Path,
+        steps: u32,
+        mut log: impl FnMut(u32, f32),
+    ) -> Result<Vec<f32>> {
+        let mut losses = Vec::with_capacity(steps as usize);
+        for s in 0..steps {
+            let batch = self.synthetic_batch();
+            let loss = self.step(path, batch)?;
+            losses.push(loss);
+            log(s, loss);
+        }
+        Ok(losses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_artifacts() {
+        assert_eq!(Path::Kernels.artifact(), "train_step");
+        assert_eq!(Path::Reference.artifact(), "train_step_ref");
+    }
+}

@@ -1,0 +1,125 @@
+//! Autotuner for the chiplet swizzle and GEMM block shape.
+//!
+//! Paper §3.4: "HIPKITTENS provides a simple and tunable strategy ...
+//! The two parameters, W and C, control the trade-off between L2 and LLC
+//! reuse" and "empirical results show that L2 tiles of shape 8x4 or 4x8
+//! achieve the best hardware utilization". This module sweeps (W, C) —
+//! and optionally the macro-tile — through the cost model and returns the
+//! best schedule, the programmatic counterpart of the paper's tuning.
+
+use crate::hk::costmodel::KernelPerf;
+use crate::kernels::gemm::{self, GemmConfig, GridOrder};
+use crate::sim::arch::Arch;
+
+/// One evaluated point of the sweep.
+#[derive(Debug, Clone)]
+pub struct TunePoint {
+    pub window: u32,
+    pub chunk: u32,
+    pub block_m: u32,
+    pub block_n: u32,
+    pub perf: KernelPerf,
+}
+
+/// Candidate windows: around the paper's 8x4 / 4x8 L2 tiles.
+pub const WINDOWS: [u32; 5] = [2, 4, 5, 7, 8];
+/// Candidate chunks: one CU-round per XCD down to fine interleaving.
+pub const CHUNKS: [u32; 5] = [8, 25, 32, 64, 216];
+
+/// Sweep (W, C) for a fixed GEMM config; returns points sorted best-first.
+pub fn tune_grid(arch: &Arch, base: &GemmConfig) -> Vec<TunePoint> {
+    let mut points = Vec::new();
+    for &w in WINDOWS.iter() {
+        for &c in CHUNKS.iter() {
+            let cfg = GemmConfig {
+                grid: GridOrder::Chiplet { window: w, chunk: c },
+                ..*base
+            };
+            let perf = gemm::simulate(arch, &cfg);
+            points.push(TunePoint {
+                window: w,
+                chunk: c,
+                block_m: base.block_m,
+                block_n: base.block_n,
+                perf,
+            });
+        }
+    }
+    points.sort_by(|a, b| b.perf.tflops.partial_cmp(&a.perf.tflops).unwrap());
+    points
+}
+
+/// Joint sweep over macro tiles and (W, C) — the full tuner.
+pub fn tune_full(arch: &Arch, base: &GemmConfig) -> Vec<TunePoint> {
+    let mut points = Vec::new();
+    for (bm, bn) in [(256u32, 256u32), (192, 256), (128, 256), (128, 128)] {
+        if base.m % bm != 0 || base.n % bn != 0 {
+            continue;
+        }
+        let cfg = GemmConfig { block_m: bm, block_n: bn, ..*base };
+        for p in tune_grid(arch, &cfg) {
+            points.push(TunePoint { block_m: bm, block_n: bn, ..p });
+        }
+    }
+    points.sort_by(|a, b| b.perf.tflops.partial_cmp(&a.perf.tflops).unwrap());
+    points
+}
+
+/// The tuned default the paper ships: best (W, C) for a problem size.
+pub fn best_grid(arch: &Arch, base: &GemmConfig) -> (u32, u32) {
+    let pts = tune_grid(arch, base);
+    (pts[0].window, pts[0].chunk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuner_beats_or_ties_row_major() {
+        let arch = Arch::mi355x();
+        for m in [4096u32, 14592] {
+            let base = GemmConfig {
+                block_m: 192,
+                block_n: 256,
+                ..GemmConfig::bf16(m, m, m)
+            };
+            let rm = gemm::simulate(
+                &arch,
+                &GemmConfig { grid: GridOrder::RowMajor, ..base },
+            );
+            let tuned = &tune_grid(&arch, &base)[0];
+            assert!(
+                tuned.perf.tflops >= rm.tflops * 0.999,
+                "m={m}: tuned {} < row-major {}",
+                tuned.perf.tflops,
+                rm.tflops
+            );
+        }
+    }
+
+    #[test]
+    fn tuner_explores_full_space() {
+        let arch = Arch::mi355x();
+        let base = GemmConfig::bf16(4096, 4096, 4096);
+        let pts = tune_grid(&arch, &base);
+        assert_eq!(pts.len(), WINDOWS.len() * CHUNKS.len());
+        // sorted best-first
+        for w in pts.windows(2) {
+            assert!(w[0].perf.tflops >= w[1].perf.tflops);
+        }
+    }
+
+    #[test]
+    fn full_tuner_prefers_large_tiles_at_big_sizes() {
+        let arch = Arch::mi355x();
+        let base = GemmConfig::bf16(8192, 8192, 8192);
+        let best = &tune_full(&arch, &base)[0];
+        assert!(
+            best.block_m * best.block_n >= 192 * 256,
+            "{}x{}",
+            best.block_m,
+            best.block_n
+        );
+    }
+}

@@ -1,0 +1,188 @@
+//! Chiplet-aware grid scheduling — Algorithm 1 (paper §3.4).
+//!
+//! The hardware dispatches thread blocks to XCDs round-robin by block ID,
+//! so remapping block IDs controls which XCD (and hence which L2) each
+//! output tile lands on. Algorithm 1 composes two steps:
+//!
+//! 1. **XCD grouping** — remap IDs so chunks of `C` consecutive IDs land
+//!    on the same XCD (reduces cross-chiplet traffic);
+//! 2. **hierarchical windowed traversal** — walk the grid in vertical
+//!    windows of height `W` ("fold" the ID space into rectangles for L2
+//!    reuse).
+//!
+//! `W` trades L2 reuse (paper: 8x4 / 4x8 L2 tiles are best on MI355X)
+//! against LLC overlap, which `C` coordinates across XCDs.
+
+
+/// Parameters of Algorithm 1.
+#[derive(Debug, Clone, Copy)]
+pub struct ChipletSwizzle {
+    pub n_xcds: u32,
+    /// Window height W (rows of tiles walked before moving a column).
+    pub window: u32,
+    /// Chunk size C (consecutive remapped IDs resident on one XCD).
+    pub chunk: u32,
+}
+
+impl ChipletSwizzle {
+    pub fn new(n_xcds: u32, window: u32, chunk: u32) -> Self {
+        assert!(n_xcds > 0 && window > 0 && chunk > 0);
+        ChipletSwizzle { n_xcds, window, chunk }
+    }
+
+    /// Step 1: XCD grouping. Remap a flattened block id so that chunks of
+    /// `C` consecutive ids are resident on the same XCD under round-robin
+    /// hardware dispatch (Algorithm 1 lines 3–12).
+    pub fn xcd_group(&self, xy: u32, blocks: u32) -> u32 {
+        let blocks_per_cycle = self.n_xcds * self.chunk;
+        let limit = (blocks / blocks_per_cycle) * blocks_per_cycle;
+        if xy >= limit {
+            // tail region: leave order unchanged
+            return xy;
+        }
+        let xcd = xy % self.n_xcds;
+        let local = xy / self.n_xcds;
+        let chunk_idx = local / self.chunk;
+        let pos = local % self.chunk;
+        chunk_idx * blocks_per_cycle + xcd * self.chunk + pos
+    }
+
+    /// Step 2: hierarchical windowed traversal (Algorithm 1 lines 13–22):
+    /// map a remapped id to output-tile coordinates.
+    pub fn windowed(&self, xy: u32, num_rows: u32, num_cols: u32) -> (u32, u32) {
+        let tid_per_group = self.window * num_cols;
+        let group_id = xy / tid_per_group;
+        let first_row = group_id * self.window;
+        let win_h = (num_rows - first_row.min(num_rows)).min(self.window).max(1);
+        let l = xy % tid_per_group;
+        let row = first_row + (l % win_h);
+        let col = l / win_h;
+        (row.min(num_rows - 1), col.min(num_cols - 1))
+    }
+
+    /// Full Algorithm 1: dispatch-order block `xy` -> output tile (row, col).
+    pub fn remap(&self, xy: u32, num_rows: u32, num_cols: u32) -> (u32, u32) {
+        let blocks = num_rows * num_cols;
+        let grouped = self.xcd_group(xy, blocks);
+        self.windowed(grouped, num_rows, num_cols)
+    }
+
+    /// The full dispatch-order schedule for a grid: `order[i]` is the tile
+    /// computed by the i-th dispatched block (consumed by
+    /// `sim::cache::simulate_gemm_schedule`).
+    pub fn schedule(&self, num_rows: u32, num_cols: u32) -> Vec<(u32, u32)> {
+        (0..num_rows * num_cols)
+            .map(|xy| self.remap(xy, num_rows, num_cols))
+            .collect()
+    }
+}
+
+/// Which XCD the hardware assigns to dispatch-order block `i`.
+pub fn xcd_of_block(i: u32, n_xcds: u32) -> u32 {
+    i % n_xcds
+}
+
+/// ASCII visualization of the first dispatch round (paper Fig. 5 / 18):
+/// each output tile is marked with the XCD (0-7) of the block computing
+/// it in the first `concurrent` dispatched blocks, or '.' if later.
+pub fn render_first_round(
+    swz: &ChipletSwizzle,
+    num_rows: u32,
+    num_cols: u32,
+    concurrent: u32,
+) -> String {
+    let mut grid = vec![vec!['.'; num_cols as usize]; num_rows as usize];
+    for xy in 0..concurrent.min(num_rows * num_cols) {
+        let (r, c) = swz.remap(xy, num_rows, num_cols);
+        let x = xcd_of_block(xy, swz.n_xcds);
+        grid[r as usize][c as usize] =
+            char::from_digit(x, 10).unwrap_or('?');
+    }
+    grid.into_iter()
+        .map(|row| row.into_iter().collect::<String>())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// The identity schedule: row-major block order (the naive baseline).
+pub fn row_major_schedule(num_rows: u32, num_cols: u32) -> Vec<(u32, u32)> {
+    crate::sim::cache::row_major_order(num_rows, num_cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn remap_is_a_bijection() {
+        for (rows, cols, w, c) in
+            [(48u32, 36u32, 8u32, 64u32), (57, 57, 8, 64), (12, 20, 5, 25)]
+        {
+            let swz = ChipletSwizzle::new(8, w, c);
+            let seen: HashSet<(u32, u32)> =
+                swz.schedule(rows, cols).into_iter().collect();
+            assert_eq!(
+                seen.len(),
+                (rows * cols) as usize,
+                "W={w} C={c} rows={rows} cols={cols}"
+            );
+        }
+    }
+
+    #[test]
+    fn xcd_grouping_places_chunks_together() {
+        // After grouping, the blocks dispatched to XCD 0 in the first
+        // cycle (ids 0, 8, 16, ... under round-robin) must map to C
+        // consecutive remapped positions.
+        let swz = ChipletSwizzle::new(8, 8, 4);
+        let blocks = 256;
+        // ids dispatched to xcd 0: 0,8,16,24 (first chunk-cycle)
+        let remapped: Vec<u32> =
+            (0..4).map(|i| swz.xcd_group(i * 8, blocks)).collect();
+        assert_eq!(remapped, vec![0, 1, 2, 3]);
+        // xcd 1's first chunk occupies the next C slots
+        let remapped1: Vec<u32> =
+            (0..4).map(|i| swz.xcd_group(i * 8 + 1, blocks)).collect();
+        assert_eq!(remapped1, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn tail_region_left_unchanged() {
+        let swz = ChipletSwizzle::new(8, 8, 64);
+        let blocks = 8 * 64 + 37; // 37 tail blocks
+        for xy in (8 * 64)..blocks {
+            assert_eq!(swz.xcd_group(xy, blocks), xy);
+        }
+    }
+
+    #[test]
+    fn windowed_walks_down_columns() {
+        let swz = ChipletSwizzle::new(8, 4, 16);
+        // first window: rows 0..4, walking down then right
+        assert_eq!(swz.windowed(0, 16, 8), (0, 0));
+        assert_eq!(swz.windowed(1, 16, 8), (1, 0));
+        assert_eq!(swz.windowed(3, 16, 8), (3, 0));
+        assert_eq!(swz.windowed(4, 16, 8), (0, 1));
+        // next group starts at row 4
+        assert_eq!(swz.windowed(4 * 8, 16, 8), (4, 0));
+    }
+
+    #[test]
+    fn short_last_window_handled() {
+        // 10 rows, W=4 -> last window height 2
+        let swz = ChipletSwizzle::new(8, 4, 16);
+        let sched = swz.schedule(10, 6);
+        let seen: HashSet<(u32, u32)> = sched.into_iter().collect();
+        assert_eq!(seen.len(), 60);
+    }
+
+    #[test]
+    fn render_marks_all_xcds() {
+        let swz = ChipletSwizzle::new(8, 8, 8);
+        let s = render_first_round(&swz, 48, 48, 256);
+        for d in '0'..='7' {
+            assert!(s.contains(d), "XCD {d} missing from render");
+        }
+    }
+}

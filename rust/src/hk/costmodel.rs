@@ -1,0 +1,179 @@
+//! Whole-kernel cost model: engine (compute side) x cache model (memory
+//! side) -> TFLOPS, the combination rule of Eq. (1) + roofline.
+
+use super::schedule::{BuiltSchedule, ScheduleInfo};
+use crate::sim::arch::Arch;
+use crate::sim::cache::{simulate_gemm_schedule, CacheStats, GemmGrid};
+use crate::sim::engine::{run_block, EngineConfig};
+
+/// Performance estimate for one kernel configuration.
+#[derive(Debug, Clone)]
+pub struct KernelPerf {
+    pub name: String,
+    pub tflops: f64,
+    pub time_s: f64,
+    pub compute_s: f64,
+    pub mem_s: f64,
+    pub mfma_util: f64,
+    pub l2_hit: f64,
+    pub llc_hit: f64,
+    pub eff_bw_tbps: f64,
+    pub info: ScheduleInfo,
+}
+
+/// Effective VMEM latency under a cache hit mix.
+pub fn effective_latency(arch: &Arch, cache: &CacheStats) -> u64 {
+    let l2 = cache.l2_hit;
+    let llc = (1.0 - l2) * cache.llc_hit;
+    let hbm = (1.0 - l2) * (1.0 - cache.llc_hit);
+    (l2 * arch.l2_lat as f64
+        + llc * arch.llc_lat as f64
+        + hbm * arch.hbm_lat as f64)
+        .round() as u64
+}
+
+/// Evaluate a GEMM kernel: run the cache model over the grid schedule,
+/// feed the resulting latency into the cycle engine for one block, and
+/// combine compute and memory rooflines.
+pub fn evaluate_gemm(
+    arch: &Arch,
+    name: &str,
+    built: &BuiltSchedule,
+    grid: &GemmGrid,
+    order: &[(u32, u32)],
+    total_flops: f64,
+) -> KernelPerf {
+    let cache = simulate_gemm_schedule(arch, grid, order);
+    let lat = effective_latency(arch, &cache);
+    let cfg = EngineConfig::for_arch(arch).with_vmem_latency(lat);
+    let stats = run_block(arch, &cfg, &built.block);
+
+    let blocks = order.len() as f64;
+    let rounds = (blocks / arch.total_cus() as f64).ceil();
+    let compute_s = rounds * stats.cycles as f64 * arch.cycle_s();
+
+    // memory side: demand streams through the cache hierarchy + the
+    // output store traffic straight to HBM
+    let store_bytes =
+        grid.m as f64 * grid.n as f64 * grid.elem_bytes;
+    let mem_s = cache.mem_time_s + store_bytes / (arch.hbm_tbps * 1e12);
+
+    let time_s = compute_s.max(mem_s);
+    KernelPerf {
+        name: name.to_string(),
+        tflops: total_flops / time_s / 1e12,
+        time_s,
+        compute_s,
+        mem_s,
+        mfma_util: stats.mfma_utilization(),
+        l2_hit: cache.l2_hit,
+        llc_hit: cache.llc_hit,
+        eff_bw_tbps: cache.eff_bw_tbps,
+        info: built.info.clone(),
+    }
+}
+
+/// Evaluate a kernel whose memory side is a pure stream (attention, the
+/// memory-bound kernels): engine gives the per-block compute time; the
+/// stream model gives the memory bound.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_streaming(
+    arch: &Arch,
+    name: &str,
+    built: &BuiltSchedule,
+    blocks: f64,
+    total_flops: f64,
+    total_bytes: f64,
+    resident_bytes: f64,
+    vmem_latency: Option<u64>,
+) -> KernelPerf {
+    let lat = vmem_latency.unwrap_or(arch.hbm_lat);
+    let cfg = EngineConfig::for_arch(arch).with_vmem_latency(lat);
+    let stats = run_block(arch, &cfg, &built.block);
+
+    let rounds = (blocks / arch.total_cus() as f64).ceil();
+    let compute_s = rounds * stats.cycles as f64 * arch.cycle_s();
+    let mem_s =
+        crate::sim::cache::streaming_time_s(arch, total_bytes, resident_bytes);
+    let time_s = compute_s.max(mem_s);
+    KernelPerf {
+        name: name.to_string(),
+        tflops: total_flops / time_s / 1e12,
+        time_s,
+        compute_s,
+        mem_s,
+        mfma_util: stats.mfma_utilization(),
+        l2_hit: 0.0,
+        llc_hit: 0.0,
+        eff_bw_tbps: total_bytes / time_s / 1e12,
+        info: built.info.clone(),
+    }
+}
+
+/// Achieved fraction of the dtype peak — the paper's "efficiency ratio".
+pub fn efficiency(arch: &Arch, dtype: crate::sim::arch::Dtype, tflops: f64) -> f64 {
+    tflops / arch.peak_tflops(dtype)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hk::pingpong;
+    use crate::hk::schedule::{Cluster, LoopSpec};
+    use crate::sim::arch::{Dtype, MFMA_16X16X32};
+    use crate::sim::instr::Instr;
+    use crate::sim::lds::DsInstr;
+
+    #[test]
+    fn effective_latency_interpolates() {
+        let a = Arch::mi355x();
+        let hot = CacheStats {
+            l2_hit: 1.0,
+            llc_hit: 0.0,
+            total_bytes: 0.0,
+            hbm_bytes: 0.0,
+            eff_bw_tbps: 0.0,
+            mem_time_s: 0.0,
+        };
+        assert_eq!(effective_latency(&a, &hot), a.l2_lat);
+        let cold = CacheStats { l2_hit: 0.0, llc_hit: 0.0, ..hot };
+        assert_eq!(effective_latency(&a, &cold), a.hbm_lat);
+    }
+
+    #[test]
+    fn gemm_eval_produces_sane_tflops() {
+        let a = Arch::mi355x();
+        let mfma = Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: 64 };
+        let spec = LoopSpec {
+            name: "mini".into(),
+            prologue: vec![Instr::VMemLoad { bytes: 32768, to_lds: true, issues: 4 }],
+            compute: vec![Cluster::new("mma", vec![mfma])],
+            memory: vec![Cluster::new(
+                "mem",
+                vec![
+                    Instr::DsRead { instr: DsInstr::ReadB128, conflict_ways: 1, count: 12 },
+                    Instr::VMemLoad { bytes: 32768, to_lds: true, issues: 4 },
+                ],
+            )],
+            iters: 64,
+            epilogue: vec![Instr::VMemStore { bytes: 32768, issues: 8 }],
+        };
+        let built = pingpong::build(&spec);
+        let m = 4096u64;
+        let grid = GemmGrid {
+            m: m as u32,
+            n: m as u32,
+            k: m as u32,
+            block_m: 256,
+            block_n: 256,
+            block_k: 64,
+            elem_bytes: 2.0,
+        };
+        let order = crate::sim::cache::row_major_order(16, 16);
+        let flops = 2.0 * m.pow(3) as f64;
+        let perf = evaluate_gemm(&a, "mini-gemm", &built, &grid, &order, flops);
+        assert!(perf.tflops > 100.0, "{}", perf.tflops);
+        assert!(perf.tflops < a.peak_tflops(Dtype::Bf16), "{}", perf.tflops);
+        assert!(perf.time_s > 0.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! 4-WAVE INTERLEAVE schedule builder (paper §3.3.2, pattern 2).
+//!
+//! Exactly one wave per SIMD; each wave issues both compute and memory in
+//! a finely staggered sequence (the `sched_group_barrier` pipelines of
+//! App. D.4). With a single resident wave the full 512-register file is
+//! available (256 VGPR + 256 AGPR), which is what makes register-heavy
+//! kernels like attention backwards viable — at the cost of much larger
+//! hot-loop code (Table 3).
+
+use super::schedule::{BuiltSchedule, LoopSpec, ScheduleInfo};
+use crate::sim::instr::{BlockProgram, Instr, WaveProgram};
+
+/// Interleave expanded memory ops between compute ops at a fixed cadence:
+/// one memory issue every `cadence` compute issues — the instruction-level
+/// pipeline the paper's assembly kernels (and our 4-wave kernels) build.
+fn interleave_ops(
+    compute: Vec<Instr>,
+    memory: Vec<Instr>,
+    cadence: usize,
+) -> Vec<Instr> {
+    let mut out = Vec::with_capacity(compute.len() + memory.len());
+    let mut mem_iter = memory.into_iter();
+    for (i, c) in compute.into_iter().enumerate() {
+        out.push(c);
+        if (i + 1) % cadence == 0 {
+            if let Some(m) = mem_iter.next() {
+                out.push(m);
+            }
+        }
+    }
+    out.extend(mem_iter);
+    out
+}
+
+/// Build the 4-wave interleaved block program.
+pub fn build(spec: &LoopSpec) -> BuiltSchedule {
+    assert_eq!(spec.compute.len(), spec.memory.len());
+
+    // Weave expanded memory issues between the compute ops. Compute
+    // bulks stay bulks — the fine-grained form expands the *source*
+    // (LoC), while the issue stream keeps back-to-back MFMAs that the
+    // matrix pipe grinds through.
+    let mut body = Vec::new();
+    for s in 0..spec.compute.len() {
+        let comp = spec.compute[s].ops.clone();
+        let mem = spec.memory[s].expanded();
+        let cadence = (comp.len().max(1)).div_ceil(mem.len().max(1)).max(1);
+        let woven = interleave_ops(comp, mem, cadence);
+        body.extend(woven);
+        // loose waits: consume prefetches from ~one stage ago
+        body.push(Instr::WaitVmcnt { max_outstanding: 8 });
+        body.push(Instr::WaitLgkmcnt { max_outstanding: 4 });
+        body.push(Instr::SchedBarrier);
+    }
+    // close the pipeline once per iteration
+    body.push(Instr::WaitLgkmcnt { max_outstanding: 0 });
+
+    let mut waves = Vec::with_capacity(4);
+    let mut simd_of_wave = Vec::with_capacity(4);
+    for w in 0..4u32 {
+        let mut prologue = spec.prologue.clone();
+        prologue.push(Instr::WaitVmcnt { max_outstanding: 2 });
+        waves.push(WaveProgram {
+            prologue,
+            body: body.clone(),
+            iters: spec.iters,
+            epilogue: spec.epilogue.clone(),
+        });
+        simd_of_wave.push(w);
+    }
+
+    BuiltSchedule {
+        block: BlockProgram { waves, simd_of_wave },
+        info: ScheduleInfo {
+            pattern: "4-wave interleave",
+            loc: spec.interleaved_loc(),
+            waves: 4,
+            waves_per_simd: 1,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hk::schedule::Cluster;
+    use crate::sim::arch::{Arch, Dtype, MFMA_16X16X32};
+    use crate::sim::engine::{run_block, EngineConfig};
+    use crate::sim::lds::DsInstr;
+
+    fn spec(iters: u32) -> LoopSpec {
+        let mfma = Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: 8 };
+        LoopSpec {
+            name: "test".into(),
+            prologue: vec![Instr::VMemLoad { bytes: 16384, to_lds: true, issues: 4 }],
+            compute: vec![Cluster::new("mma", vec![mfma; 4])],
+            memory: vec![Cluster::new(
+                "mem",
+                vec![
+                    Instr::DsRead { instr: DsInstr::ReadB128, conflict_ways: 1, count: 8 },
+                    Instr::VMemLoad { bytes: 16384, to_lds: true, issues: 4 },
+                ],
+            )],
+            iters,
+            epilogue: vec![],
+        }
+    }
+
+    #[test]
+    fn four_waves_one_per_simd() {
+        let b = build(&spec(8));
+        assert_eq!(b.block.waves.len(), 4);
+        assert_eq!(b.block.waves_per_simd(4), 1);
+    }
+
+    #[test]
+    fn interleave_weaves_memory_between_compute() {
+        let body = &build(&spec(1)).block.waves[0].body;
+        // memory issues must not be contiguous at the end: some DsRead or
+        // VMemLoad appears between two MFMAs.
+        let mut seen_mfma = false;
+        let mut woven = false;
+        for (i, op) in body.iter().enumerate() {
+            if matches!(op, Instr::Mfma { .. }) {
+                seen_mfma = true;
+            }
+            if seen_mfma
+                && matches!(op, Instr::DsRead { .. } | Instr::VMemLoad { .. })
+                && body[i..].iter().any(|o| matches!(o, Instr::Mfma { .. }))
+            {
+                woven = true;
+            }
+        }
+        assert!(woven, "memory ops must be interleaved into compute");
+    }
+
+    #[test]
+    fn loc_larger_than_pingpong() {
+        let s = spec(8);
+        let il = build(&s);
+        let pp = crate::hk::pingpong::build(&s);
+        assert!(
+            il.info.loc > 2 * pp.info.loc,
+            "interleave {} vs pingpong {}",
+            il.info.loc,
+            pp.info.loc
+        );
+    }
+
+    #[test]
+    fn saturates_mfma_similarly_to_pingpong() {
+        let a = Arch::mi355x();
+        let cfg = EngineConfig::for_arch(&a).with_vmem_latency(400);
+        let il = run_block(&a, &cfg, &build(&spec(32)).block);
+        assert!(il.mfma_utilization() > 0.6, "{}", il.mfma_utilization());
+    }
+}

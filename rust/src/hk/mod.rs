@@ -1,0 +1,37 @@
+//! `hk` — the HipKittens framework: the paper's contribution, expressed
+//! over the simulated CDNA substrate.
+//!
+//! - [`tile`] — register/shared tile types with pinned register ranges
+//!   (paper §3.1, §3.2.1, App. D.3).
+//! - [`layout`] — per-(shape, layout, instruction) thread/element
+//!   ownership and LDS address patterns (§3.2.2, App. D.1).
+//! - [`swizzle`] — XOR-swizzle family, legality rule and conflict-free
+//!   pattern solver (Fig. 4, App. D.1).
+//! - [`phase`] — phase/bank solver re-deriving Table 5 (App. D.2).
+//! - [`regalloc`] — static register partitioning, compiler-managed vs
+//!   pinned allocation, AGPR rules (§3.2.1, §3.3.1).
+//! - [`schedule`] — cluster IR shared by all scheduling patterns.
+//! - [`pingpong`] / [`interleave`] / [`wavespec`] — the three scheduling
+//!   patterns of §3.3.
+//! - [`chiplet`] — Algorithm 1 grid remapping (§3.4).
+//! - [`costmodel`] — engine x cache roofline -> TFLOPS.
+
+pub mod autotune;
+pub mod chiplet;
+pub mod costmodel;
+pub mod interleave;
+pub mod layout;
+pub mod phase;
+pub mod pingpong;
+pub mod regalloc;
+pub mod schedule;
+pub mod swizzle;
+pub mod tile;
+pub mod wavespec;
+
+pub use chiplet::ChipletSwizzle;
+pub use costmodel::KernelPerf;
+pub use regalloc::RegMode;
+pub use schedule::{BuiltSchedule, Cluster, LoopSpec};
+pub use swizzle::Swizzle;
+pub use tile::{Layout, RegTile, SharedTile};

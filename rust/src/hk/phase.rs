@@ -1,0 +1,148 @@
+//! Phase/bank solver — re-derives the paper's Table 5.
+//!
+//! The CDNA ISA does not document which threads of a wave execute an LDS
+//! instruction concurrently ("phases") or how many banks an instruction
+//! sees; the paper (App. D.2) builds two solvers: the *phase solver*
+//! probes every thread pair with a same-bank access and groups threads by
+//! observed conflicts; the *bank solver* walks one thread across banks
+//! until it wraps onto a fixed thread. We reproduce both against the
+//! simulator's LDS model, and `report table5` prints the result in the
+//! paper's format.
+
+use crate::sim::lds::{probe_banks, probe_conflict, DsInstr, WAVE};
+
+/// Solved phase structure for one instruction.
+#[derive(Debug, Clone)]
+pub struct SolvedPhases {
+    pub instr: String,
+    pub banks: u64,
+    /// Threads in each phase, sorted.
+    pub phases: Vec<Vec<usize>>,
+}
+
+/// Run the pairwise phase solver for an instruction (paper App. D.2).
+pub fn solve_phases(instr: DsInstr) -> SolvedPhases {
+    // Union-find over threads: probe_conflict(a, b) == true means a and b
+    // execute in the same phase.
+    let mut parent: Vec<usize> = (0..WAVE).collect();
+    fn find(parent: &mut Vec<usize>, x: usize) -> usize {
+        if parent[x] != x {
+            let r = find(parent, parent[x]);
+            parent[x] = r;
+        }
+        parent[x]
+    }
+    for a in 0..WAVE {
+        for b in (a + 1)..WAVE {
+            if probe_conflict(instr, a, b) {
+                let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+                if ra != rb {
+                    parent[rb] = ra;
+                }
+            }
+        }
+    }
+    let mut groups: std::collections::BTreeMap<usize, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for t in 0..WAVE {
+        let r = find(&mut parent, t);
+        groups.entry(r).or_default().push(t);
+    }
+    // Order phases by their smallest thread id, matching the paper's table.
+    let mut phases: Vec<Vec<usize>> = groups.into_values().collect();
+    phases.sort_by_key(|p| p[0]);
+    SolvedPhases {
+        instr: instr.name().to_string(),
+        banks: probe_banks(instr),
+        phases,
+    }
+}
+
+/// Solve all instructions of the paper's Table 5.
+pub fn solve_table5() -> Vec<SolvedPhases> {
+    [
+        DsInstr::ReadB128,
+        DsInstr::ReadB96,
+        DsInstr::WriteB64,
+        DsInstr::ReadB64,
+    ]
+    .into_iter()
+    .map(solve_phases)
+    .collect()
+}
+
+/// Render thread groups as compact ranges ("0-3, 12-15, 20-27").
+pub fn format_threads(threads: &[usize]) -> String {
+    let mut parts = Vec::new();
+    let mut i = 0;
+    while i < threads.len() {
+        let start = threads[i];
+        let mut end = start;
+        while i + 1 < threads.len() && threads[i + 1] == end + 1 {
+            i += 1;
+            end = threads[i];
+        }
+        if start == end {
+            parts.push(format!("{start}"));
+        } else {
+            parts.push(format!("{start}-{end}"));
+        }
+        i += 1;
+    }
+    parts.join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solver_recovers_b128_phases() {
+        let s = solve_phases(DsInstr::ReadB128);
+        assert_eq!(s.banks, 64);
+        assert_eq!(s.phases.len(), 4);
+        // Paper Table 5 phase 0: threads 0-3, 12-15, 20-27.
+        assert_eq!(
+            s.phases[0],
+            vec![0, 1, 2, 3, 12, 13, 14, 15, 20, 21, 22, 23, 24, 25, 26, 27]
+        );
+        assert_eq!(format_threads(&s.phases[0]), "0-3, 12-15, 20-27");
+    }
+
+    #[test]
+    fn solver_recovers_b96_phases() {
+        let s = solve_phases(DsInstr::ReadB96);
+        assert_eq!(s.banks, 32);
+        assert_eq!(s.phases.len(), 8);
+        assert_eq!(s.phases[0], vec![0, 1, 2, 3, 20, 21, 22, 23]);
+        assert_eq!(s.phases[7], vec![44, 45, 46, 47, 56, 57, 58, 59]);
+    }
+
+    #[test]
+    fn solver_recovers_write_b64() {
+        let s = solve_phases(DsInstr::WriteB64);
+        assert_eq!(s.banks, 32);
+        assert_eq!(s.phases.len(), 4);
+        assert_eq!(format_threads(&s.phases[0]), "0-15");
+    }
+
+    #[test]
+    fn solver_recovers_read_b64() {
+        let s = solve_phases(DsInstr::ReadB64);
+        assert_eq!(s.banks, 64);
+        assert_eq!(s.phases.len(), 2);
+        assert_eq!(format_threads(&s.phases[0]), "0-31");
+        assert_eq!(format_threads(&s.phases[1]), "32-63");
+    }
+
+    #[test]
+    fn full_table5_solves() {
+        let t = solve_table5();
+        assert_eq!(t.len(), 4);
+        let names: Vec<&str> = t.iter().map(|s| s.instr.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["ds_read_b128", "ds_read_b96", "ds_write_b64", "ds_read_b64"]
+        );
+    }
+}

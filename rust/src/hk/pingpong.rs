@@ -1,0 +1,160 @@
+//! 8-WAVE PING-PONG schedule builder (paper §3.3.2, pattern 1).
+//!
+//! Eight waves per thread block, two resident per SIMD, split into two
+//! wavegroups of four (one wave per SIMD each). Within a SIMD the pair
+//! alternates roles: while one issues only compute, the other issues only
+//! memory, then they swap — a *conditional barrier* (the stagger in
+//! listing E.1) offsets one group by a cluster, and anonymous `s_barrier`s
+//! flip the roles every cluster. `s_setprio` keeps the compute wave ahead
+//! in issue arbitration.
+
+use super::schedule::{BuiltSchedule, LoopSpec, ScheduleInfo};
+use crate::sim::instr::{BlockProgram, Instr, WaveProgram};
+
+/// Build the 8-wave ping-pong block program for a loop spec.
+///
+/// Each wave's body concatenates, per pipeline stage, a memory cluster and
+/// a compute cluster separated by barriers. The second wavegroup executes
+/// one extra prologue barrier, which offsets it by one cluster: while
+/// group 0 computes stage `i`, group 1 prefetches stage `i+1`.
+pub fn build(spec: &LoopSpec) -> BuiltSchedule {
+    assert_eq!(
+        spec.compute.len(),
+        spec.memory.len(),
+        "ping-pong needs paired compute/memory clusters"
+    );
+    let stages = spec.compute.len();
+
+    let mut body = Vec::new();
+    for s in 0..stages {
+        // memory cluster: issue loads, then release the sibling
+        body.extend(spec.memory[s].ops.iter().cloned());
+        body.push(Instr::WaitVmcnt { max_outstanding: 4 });
+        body.push(Instr::SchedBarrier);
+        body.push(Instr::Barrier);
+        // compute cluster at raised priority
+        body.push(Instr::WaitLgkmcnt { max_outstanding: 0 });
+        body.push(Instr::SetPrio { prio: 1 });
+        body.extend(spec.compute[s].ops.iter().cloned());
+        body.push(Instr::SetPrio { prio: 0 });
+        body.push(Instr::Barrier);
+        body.push(Instr::SchedBarrier);
+    }
+
+    let mut waves = Vec::with_capacity(8);
+    let mut simd_of_wave = Vec::with_capacity(8);
+    for w in 0..8u32 {
+        let wavegroup = w / 4; // waves 0-3 lead, 4-7 follow
+        let mut prologue = spec.prologue.clone();
+        if wavegroup == 1 {
+            // conditional stagger (listing E.1 "if (warp_row == 1)")
+            prologue.push(Instr::Barrier);
+        }
+        prologue.push(Instr::WaitVmcnt { max_outstanding: 4 });
+        prologue.push(Instr::Barrier);
+
+        let mut epilogue = Vec::new();
+        if wavegroup == 0 {
+            // the leader group waits for the follower to drain
+            epilogue.push(Instr::Barrier);
+        }
+        epilogue.extend(spec.epilogue.iter().cloned());
+
+        waves.push(WaveProgram {
+            prologue,
+            body: body.clone(),
+            iters: spec.iters,
+            epilogue,
+        });
+        simd_of_wave.push(w % 4);
+    }
+
+    BuiltSchedule {
+        block: BlockProgram { waves, simd_of_wave },
+        info: ScheduleInfo {
+            pattern: "8-wave ping-pong",
+            loc: spec.bulk_loc(),
+            waves: 8,
+            waves_per_simd: 2,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hk::schedule::Cluster;
+    use crate::sim::arch::{Arch, Dtype, MFMA_16X16X32};
+    use crate::sim::engine::{run_block, EngineConfig};
+    use crate::sim::lds::DsInstr;
+
+    fn spec(iters: u32) -> LoopSpec {
+        let mfma = Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: 16 };
+        LoopSpec {
+            name: "test-gemm".into(),
+            prologue: vec![Instr::VMemLoad {
+                bytes: 16384,
+                to_lds: true,
+                issues: 4,
+            }],
+            compute: vec![Cluster::new("mma", vec![mfma])],
+            memory: vec![Cluster::new(
+                "load",
+                vec![
+                    Instr::DsRead {
+                        instr: DsInstr::ReadB128,
+                        conflict_ways: 1,
+                        count: 8,
+                    },
+                    Instr::VMemLoad { bytes: 16384, to_lds: true, issues: 4 },
+                ],
+            )],
+            iters,
+            epilogue: vec![Instr::VMemStore { bytes: 8192, issues: 4 }],
+        }
+    }
+
+    #[test]
+    fn eight_waves_two_per_simd() {
+        let b = build(&spec(8));
+        assert_eq!(b.block.waves.len(), 8);
+        assert_eq!(b.block.waves_per_simd(4), 2);
+        assert_eq!(b.info.waves_per_simd, 2);
+    }
+
+    #[test]
+    fn ping_pong_overlaps_memory_under_compute() {
+        // With the stagger, MFMA utilization should stay high even though
+        // every wave alternates roles: total cycles ~ compute-bound.
+        let a = Arch::mi355x();
+        let cfg = EngineConfig::for_arch(&a).with_vmem_latency(400);
+        let b = build(&spec(32));
+        let st = run_block(&a, &cfg, &b.block);
+        // 8 waves x 32 iters x 16 MFMAs x 16 cycles / (4 simds) = 16384
+        // cycles of pure MFMA per SIMD.
+        let ideal = 8 * 32 * 16 * 16 / 4;
+        let ratio = st.cycles as f64 / ideal as f64;
+        assert!(
+            ratio < 1.45,
+            "ping-pong should stay near compute-bound: ratio {ratio} ({} vs {ideal})",
+            st.cycles
+        );
+        assert!(st.mfma_utilization() > 0.6, "{}", st.mfma_utilization());
+    }
+
+    #[test]
+    fn stagger_gives_follower_one_extra_barrier() {
+        let b = build(&spec(4));
+        let lead_barriers = b.block.waves[0]
+            .prologue
+            .iter()
+            .filter(|i| matches!(i, Instr::Barrier))
+            .count();
+        let follow_barriers = b.block.waves[4]
+            .prologue
+            .iter()
+            .filter(|i| matches!(i, Instr::Barrier))
+            .count();
+        assert_eq!(follow_barriers, lead_barriers + 1);
+    }
+}

@@ -1,0 +1,237 @@
+//! Register allocation model: compiler-managed vs developer-pinned.
+//!
+//! CDNA statically partitions each SIMD's 512 registers across resident
+//! waves; with one wave per SIMD the hardware splits them into 256 VGPRs +
+//! 256 AGPRs (paper footnote 1). The hardware allows AGPRs as MFMA
+//! operands, HIPCC does not (§3.2.1) — compiler-managed kernels that
+//! overflow into AGPRs must copy operands back with `v_accvgpr_read`.
+//! Pinned register tiles (App. D.3) bypass the compiler: AGPRs feed MFMAs
+//! directly and spills can be eliminated by hand-placement (App. F).
+
+use crate::sim::arch::Arch;
+
+/// Who manages the registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegMode {
+    /// HIPCC-style allocation: cannot use AGPRs as MFMA inputs; imperfect
+    /// lifetime tracking spills under pressure.
+    CompilerManaged,
+    /// Developer-pinned tiles (HK `rt<..., ranges>`): full control.
+    Pinned,
+}
+
+/// A register demand: how many 32-bit regs a tile needs per thread and
+/// whether it feeds MFMA operands.
+#[derive(Debug, Clone, Copy)]
+pub struct TileDemand {
+    pub regs: u32,
+    /// Tile is an MFMA A/B operand (AGPR restriction applies).
+    pub mfma_operand: bool,
+    /// How many times per hot-loop iteration the tile is consumed by MFMAs.
+    pub mfma_uses_per_iter: u32,
+}
+
+/// Allocation outcome for one wave.
+#[derive(Debug, Clone, Copy)]
+pub struct AllocResult {
+    /// Register budget per wave given the occupancy.
+    pub budget: u32,
+    /// VGPR portion of the budget.
+    pub vgpr_budget: u32,
+    pub total_demand: u32,
+    /// `v_accvgpr_read` moves required per hot-loop iteration (compiler
+    /// mode only: operand tiles that landed in AGPRs).
+    pub acc_moves_per_iter: u32,
+    /// Registers spilled to scratch (demand beyond the full budget).
+    pub spilled: u32,
+}
+
+/// Compute the per-wave register budget for an occupancy.
+///
+/// `waves_per_simd` resident waves split the SIMD's register file evenly
+/// (paper §3.3.1: "AMD hardware statically divides registers across all
+/// waves") — this is the mechanism that sinks wave specialization on AMD.
+pub fn wave_budget(arch: &Arch, waves_per_simd: u32) -> u32 {
+    arch.regs_per_simd / waves_per_simd.max(1)
+}
+
+/// Allocate a wave's tiles.
+pub fn allocate(
+    arch: &Arch,
+    waves_per_simd: u32,
+    mode: RegMode,
+    tiles: &[TileDemand],
+) -> AllocResult {
+    let budget = wave_budget(arch, waves_per_simd);
+    // Single wave per SIMD: hardware splits 256 VGPR + 256 AGPR. More
+    // waves: all registers behave as VGPRs (no AGPR file carve-out).
+    let vgpr_budget = if waves_per_simd <= 1 { budget / 2 } else { budget };
+    let agpr_budget = budget - vgpr_budget;
+
+    let total: u32 = tiles.iter().map(|t| t.regs).sum();
+
+    match mode {
+        RegMode::Pinned => {
+            // Developer packs operands into VGPRs+AGPRs freely; hardware
+            // accepts AGPR MFMA inputs. Spill only if demand exceeds the
+            // whole file.
+            let spilled = total.saturating_sub(budget);
+            AllocResult {
+                budget,
+                vgpr_budget,
+                total_demand: total,
+                acc_moves_per_iter: 0,
+                spilled,
+            }
+        }
+        RegMode::CompilerManaged => {
+            // Compiler fills VGPRs first (operand tiles prioritized), then
+            // overflows into AGPRs. Operand tiles resident in AGPRs incur
+            // v_accvgpr_read per use; accumulators live in AGPRs for free.
+            // HIPCC additionally reserves VGPR workspace for address math,
+            // loop state and imperfect lifetime tracking (the paper's
+            // "compilers ... impede the developer's ability to maximally
+            // control register allocations", App. B.2 reclaim failures).
+            let workspace = (64 + total / 8).min(vgpr_budget / 2);
+            let mut vgpr_free = vgpr_budget - workspace;
+            let mut agpr_free = agpr_budget;
+            let mut acc_moves = 0u32;
+            let mut spilled = 0u32;
+            // allocate operand tiles first, then the rest — mirrors
+            // HIPCC's preference for keeping MFMA inputs in VGPRs.
+            let mut order: Vec<&TileDemand> = tiles.iter().collect();
+            order.sort_by_key(|t| if t.mfma_operand { 0 } else { 1 });
+            for t in order {
+                if t.regs <= vgpr_free {
+                    vgpr_free -= t.regs;
+                } else if t.regs <= agpr_free {
+                    agpr_free -= t.regs;
+                    if t.mfma_operand {
+                        // every consuming MFMA needs the operand staged
+                        // back through VGPRs
+                        acc_moves += t.regs * t.mfma_uses_per_iter;
+                    }
+                } else {
+                    spilled += t.regs;
+                }
+            }
+            AllocResult {
+                budget,
+                vgpr_budget,
+                total_demand: total,
+                acc_moves_per_iter: acc_moves,
+                spilled,
+            }
+        }
+    }
+}
+
+/// The largest square-ish GEMM output tile (per thread block) expressible
+/// under a register budget — the quantity Table 2 turns on.
+///
+/// Consumers hold the f32 accumulator (out_m*out_n/waves regs/thread at 64
+/// lanes) plus double-buffered A/B operand fragments.
+pub fn max_output_tile(
+    arch: &Arch,
+    consumers: u32,
+    producers: u32,
+    block_k: u32,
+    candidates: &[(u32, u32)],
+) -> (u32, u32) {
+    let waves_per_simd = (consumers + producers).div_ceil(arch.simds_per_cu);
+    let budget = wave_budget(arch, waves_per_simd);
+    let mut best = (0u32, 0u32);
+    for &(m, n) in candidates {
+        // per-wave accumulator share (f32 = 1 reg per element per lane)
+        let acc = (m as u64 * n as u64) / (consumers as u64 * 64);
+        // operand fragments: each consumer wave stages m_frac x block_k of A
+        // and block_k x n_frac of B in bf16 (LDS provides the double
+        // buffering; registers hold one stage)
+        let m_frac = m as u64 / (consumers as u64 / 4).max(1) / 4;
+        let a_frag = (m_frac * block_k as u64 * 2) / (64 * 4);
+        let b_frag = ((n as u64 / 4) * block_k as u64 * 2) / (64 * 4);
+        let need = acc + a_frag + b_frag + 16; // +16 addressing/misc
+        if need <= budget as u64 && m * n > best.0 * best.1 {
+            best = (m, n);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::arch::Arch;
+
+    #[test]
+    fn budget_splits_across_waves() {
+        let a = Arch::mi355x();
+        assert_eq!(wave_budget(&a, 1), 512);
+        assert_eq!(wave_budget(&a, 2), 256);
+        assert_eq!(wave_budget(&a, 3), 170);
+        assert_eq!(wave_budget(&a, 4), 128);
+    }
+
+    #[test]
+    fn pinned_uses_agprs_without_moves() {
+        let a = Arch::mi355x();
+        // 4-wave kernel (1 wave/SIMD): big demand lands in AGPRs
+        let tiles = [
+            TileDemand { regs: 200, mfma_operand: true, mfma_uses_per_iter: 8 },
+            TileDemand { regs: 200, mfma_operand: false, mfma_uses_per_iter: 0 },
+        ];
+        let pinned = allocate(&a, 1, RegMode::Pinned, &tiles);
+        assert_eq!(pinned.acc_moves_per_iter, 0);
+        assert_eq!(pinned.spilled, 0);
+        // HIPCC reserves VGPR workspace, so the 200-reg operand tile no
+        // longer fits the usable VGPRs and lands in AGPRs -> staged back
+        // through v_accvgpr_read on every MFMA use.
+        let hipcc = allocate(&a, 1, RegMode::CompilerManaged, &tiles);
+        assert!(hipcc.acc_moves_per_iter > 0, "{hipcc:?}");
+        // Small operand tiles still fit -> no moves.
+        let small = [
+            TileDemand { regs: 40, mfma_operand: true, mfma_uses_per_iter: 4 },
+            TileDemand { regs: 40, mfma_operand: false, mfma_uses_per_iter: 0 },
+        ];
+        let ok = allocate(&a, 1, RegMode::CompilerManaged, &small);
+        assert_eq!(ok.acc_moves_per_iter, 0);
+        assert_eq!(ok.spilled, 0);
+    }
+
+    #[test]
+    fn compiler_spills_when_both_files_full() {
+        let a = Arch::mi355x();
+        let tiles = [
+            TileDemand { regs: 256, mfma_operand: true, mfma_uses_per_iter: 1 },
+            TileDemand { regs: 256, mfma_operand: false, mfma_uses_per_iter: 0 },
+            TileDemand { regs: 54, mfma_operand: false, mfma_uses_per_iter: 0 },
+        ];
+        let r = allocate(&a, 1, RegMode::CompilerManaged, &tiles);
+        // App. F: the FP6 GEMM spills registers under HIPCC...
+        assert!(r.spilled >= 54, "{r:?}");
+        // ...and explicit register scheduling removes the spills.
+        let p = allocate(&a, 1, RegMode::Pinned, &[
+            TileDemand { regs: 512, mfma_operand: true, mfma_uses_per_iter: 1 },
+        ]);
+        assert_eq!(p.spilled, 0);
+    }
+
+    #[test]
+    fn table2_output_tile_shrinks_with_producers() {
+        let a = Arch::mi355x();
+        let candidates =
+            [(128u32, 256u32), (192, 256), (256, 256)];
+        // 0 producers / 8 consumers: 2 waves/simd, 256 regs each ->
+        // 256x256 fits (acc = 128 regs/wave).
+        let t0 = max_output_tile(&a, 8, 0, 64, &candidates);
+        assert_eq!(t0, (256, 256));
+        // 4 producers / 8 consumers: 3 waves/simd, 170 regs ->
+        // 256x256 no longer fits (acc alone = 128 + frags > 170).
+        let t4 = max_output_tile(&a, 8, 4, 64, &candidates);
+        assert!(t4.0 * t4.1 < 256 * 256, "{t4:?}");
+        // 4 producers / 12 consumers: 4 waves/simd, 128 regs each, but the
+        // accumulator is split across 12 consumers -> 192x256 fits.
+        let t12 = max_output_tile(&a, 12, 4, 64, &candidates);
+        assert_eq!(t12, (192, 256));
+    }
+}

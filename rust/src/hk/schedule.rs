@@ -1,0 +1,201 @@
+//! Kernel schedule IR: clusters of bulk tile operations.
+//!
+//! Paper §3.3: HK kernels are written as a top-level schedule of
+//! *clusters* — groups of bulk tile operations demarcated by barriers and
+//! waitcnts (see the E.1/E.3 listings). The same `LoopSpec` can be
+//! instantiated under any of the three scheduling patterns
+//! ([`super::pingpong`], [`super::interleave`], [`super::wavespec`]),
+//! which is exactly the trade-off Table 3 measures.
+
+use crate::sim::instr::{Instr, WaveProgram};
+
+/// One cluster of bulk operations (a few lines of HK code).
+#[derive(Debug, Clone, Default)]
+pub struct Cluster {
+    pub name: &'static str,
+    pub ops: Vec<Instr>,
+}
+
+impl Cluster {
+    pub fn new(name: &'static str, ops: Vec<Instr>) -> Self {
+        Cluster { name, ops }
+    }
+
+    /// Bulk statements in this cluster (the HK-source LoC analog: one
+    /// bulk tile op = one line).
+    pub fn loc(&self) -> u32 {
+        self.ops.iter().filter(|i| !i.is_hint()).count() as u32
+    }
+
+    /// Expand bulk ops into single-issue ops (the 4-wave fine-grained
+    /// form: every instruction issue is its own source line).
+    pub fn expanded(&self) -> Vec<Instr> {
+        let mut out = Vec::new();
+        for op in &self.ops {
+            match *op {
+                Instr::Mfma { shape, dtype, count } => {
+                    for _ in 0..count {
+                        out.push(Instr::Mfma { shape, dtype, count: 1 });
+                    }
+                }
+                Instr::DsRead { instr, conflict_ways, count } => {
+                    for _ in 0..count {
+                        out.push(Instr::DsRead {
+                            instr,
+                            conflict_ways,
+                            count: 1,
+                        });
+                    }
+                }
+                Instr::DsWrite { instr, conflict_ways, count } => {
+                    for _ in 0..count {
+                        out.push(Instr::DsWrite {
+                            instr,
+                            conflict_ways,
+                            count: 1,
+                        });
+                    }
+                }
+                Instr::VMemLoad { bytes, to_lds, issues } => {
+                    for _ in 0..issues {
+                        out.push(Instr::VMemLoad {
+                            bytes: bytes / issues.max(1) as u64,
+                            to_lds,
+                            issues: 1,
+                        });
+                    }
+                }
+                Instr::VMemStore { bytes, issues } => {
+                    for _ in 0..issues {
+                        out.push(Instr::VMemStore {
+                            bytes: bytes / issues.max(1) as u64,
+                            issues: 1,
+                        });
+                    }
+                }
+                other => out.push(other),
+            }
+        }
+        out
+    }
+
+    /// Count of expanded (single-issue) statements.
+    pub fn expanded_loc(&self) -> u32 {
+        self.expanded().iter().filter(|i| !i.is_hint()).count() as u32
+    }
+}
+
+/// A kernel hot loop described pattern-independently.
+///
+/// `compute[i]` and `memory[i]` are the i-th pipeline stage's compute and
+/// prefetch clusters; the scheduling pattern decides how they overlap.
+#[derive(Debug, Clone, Default)]
+pub struct LoopSpec {
+    pub name: String,
+    /// Prologue loads (fills the software pipeline).
+    pub prologue: Vec<Instr>,
+    /// Paired compute/memory clusters forming one loop iteration.
+    pub compute: Vec<Cluster>,
+    pub memory: Vec<Cluster>,
+    /// Hot loop trip count.
+    pub iters: u32,
+    /// Epilogue (writeback).
+    pub epilogue: Vec<Instr>,
+}
+
+impl LoopSpec {
+    /// Hot-loop LoC under bulk-tile programming (8-wave style).
+    pub fn bulk_loc(&self) -> u32 {
+        let c: u32 = self.compute.iter().map(|c| c.loc()).sum();
+        let m: u32 = self.memory.iter().map(|c| c.loc()).sum();
+        // each cluster boundary adds a barrier + a couple of sync lines
+        c + m + 3 * (self.compute.len() + self.memory.len()) as u32
+    }
+
+    /// Hot-loop LoC under fine-grained interleaving (4-wave style).
+    pub fn interleaved_loc(&self) -> u32 {
+        let c: u32 = self.compute.iter().map(|c| c.expanded_loc()).sum();
+        let m: u32 = self.memory.iter().map(|c| c.expanded_loc()).sum();
+        c + m + 2 * (self.compute.len() + self.memory.len()) as u32
+    }
+}
+
+/// Metadata returned with every built schedule.
+#[derive(Debug, Clone)]
+pub struct ScheduleInfo {
+    pub pattern: &'static str,
+    /// Hot-loop code size (statements) — Table 3's LoC column analog.
+    pub loc: u32,
+    pub waves: u32,
+    pub waves_per_simd: u32,
+}
+
+/// A built schedule: per-wave programs plus metadata.
+#[derive(Debug, Clone)]
+pub struct BuiltSchedule {
+    pub block: crate::sim::instr::BlockProgram,
+    pub info: ScheduleInfo,
+}
+
+/// Helper: assemble a WaveProgram from parts.
+pub fn wave_program(
+    prologue: Vec<Instr>,
+    body: Vec<Instr>,
+    iters: u32,
+    epilogue: Vec<Instr>,
+) -> WaveProgram {
+    WaveProgram { prologue, body, iters, epilogue }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::arch::{Dtype, MFMA_16X16X32};
+    use crate::sim::lds::DsInstr;
+
+    fn cluster() -> Cluster {
+        Cluster::new(
+            "c0",
+            vec![
+                Instr::DsRead { instr: DsInstr::ReadB128, conflict_ways: 1, count: 8 },
+                Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: 1 },
+                Instr::SchedBarrier,
+            ],
+        )
+    }
+
+    #[test]
+    fn loc_counts_bulk_statements() {
+        let c = cluster();
+        assert_eq!(c.loc(), 2); // hint excluded
+        assert_eq!(c.expanded_loc(), 9); // 8 reads + 1 mfma
+    }
+
+    #[test]
+    fn expansion_preserves_totals() {
+        let c = Cluster::new(
+            "m",
+            vec![Instr::VMemLoad { bytes: 4096, to_lds: true, issues: 4 }],
+        );
+        let ex = c.expanded();
+        assert_eq!(ex.len(), 4);
+        let total: u64 = ex.iter().map(|i| i.load_bytes()).sum();
+        assert_eq!(total, 4096);
+    }
+
+    #[test]
+    fn interleaved_loc_exceeds_bulk_loc() {
+        let spec = LoopSpec {
+            name: "t".into(),
+            prologue: vec![],
+            compute: vec![cluster(), cluster()],
+            memory: vec![Cluster::new(
+                "m",
+                vec![Instr::VMemLoad { bytes: 8192, to_lds: true, issues: 8 }],
+            )],
+            iters: 4,
+            epilogue: vec![],
+        };
+        assert!(spec.interleaved_loc() > spec.bulk_loc());
+    }
+}

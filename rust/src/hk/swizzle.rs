@@ -1,0 +1,256 @@
+//! Swizzle algebra for shared-memory tiles.
+//!
+//! Paper §3.2.2 / App. D.1: AMD matrix layouts lack NVIDIA's compositional
+//! core-matrix structure, so no single swizzle works for all layouts; HK
+//! instead identifies the layouts that co-occur and solves for a pattern
+//! that is conflict-free for each co-occurrence set. This module provides
+//! the XOR-swizzle family, a legality rule (a swizzle must not break the
+//! contiguity granularity of the instructions that touch the tile), and a
+//! brute-force solver over the family.
+
+
+/// An XOR swizzle: `addr' = addr ^ (((addr >> shift_in) & mask) << shift_out)`.
+///
+/// `1 << shift_out` is the *unit* the swizzle permutes; any instruction
+/// whose per-thread access width exceeds the unit would have its bytes
+/// scattered — illegal (this is exactly the paper's D.1 counter-example:
+/// the `ds_write_b64` swizzle moves 64-bit chunks, which breaks the 128-bit
+/// contiguity `ds_read_b128` requires).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Swizzle {
+    pub shift_in: u32,
+    pub mask: u64,
+    pub shift_out: u32,
+}
+
+impl Swizzle {
+    /// The identity swizzle.
+    pub fn none() -> Self {
+        Swizzle { shift_in: 0, mask: 0, shift_out: 0 }
+    }
+
+    /// Paper Fig. 4: for a 16x32 bf16 tile, swap the first 8 columns with
+    /// the last 8 from the 8th row on (XOR 32 bytes when row >= 8).
+    pub fn fig4_16x32() -> Self {
+        Swizzle { shift_in: 9, mask: 1, shift_out: 5 }
+    }
+
+    /// Paper App. D.1: `offset ^= ((offset % 512) >> 7) << 3` for the
+    /// row-layout 16x16 bf16 `ds_write_b64` tile.
+    pub fn d1_write_b64() -> Self {
+        Swizzle { shift_in: 7, mask: 3, shift_out: 3 }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.mask == 0
+    }
+
+    /// Apply to a byte address.
+    pub fn apply(&self, addr: u64) -> u64 {
+        addr ^ (((addr >> self.shift_in) & self.mask) << self.shift_out)
+    }
+
+    /// Unit (bytes) this swizzle permutes at.
+    pub fn unit_bytes(&self) -> u64 {
+        if self.is_identity() {
+            u64::MAX // identity never breaks contiguity
+        } else {
+            1 << self.shift_out
+        }
+    }
+
+    /// True if a `width_bytes`-wide aligned access stays contiguous under
+    /// this swizzle.
+    pub fn preserves_contiguity(&self, width_bytes: u64) -> bool {
+        if self.is_identity() {
+            return true;
+        }
+        // all bytes of an aligned width-wide access share swizzle input
+        // bits iff width <= unit and unit-aligned accesses don't straddle
+        if width_bytes > self.unit_bytes() {
+            return false;
+        }
+        // also the xor source bits must sit above the access width
+        (1u64 << self.shift_in) >= width_bytes
+    }
+
+    /// XOR swizzles are involutions — applying twice is the identity.
+    pub fn invert(&self, addr: u64) -> u64 {
+        self.apply(addr)
+    }
+}
+
+/// The candidate family the solver searches.
+pub fn candidate_swizzles() -> Vec<Swizzle> {
+    let mut v = vec![Swizzle::none()];
+    for shift_out in 2..=7u32 {
+        for mask in [1u64, 3, 7] {
+            for shift_in in 5..=12u32 {
+                // the xor source must be distinct from the target bits
+                let out_hi = shift_out + 64 - mask.leading_zeros();
+                if shift_in >= out_hi || shift_in + (64 - mask.leading_zeros()) <= shift_out {
+                    v.push(Swizzle { shift_in, mask, shift_out });
+                }
+            }
+        }
+    }
+    v
+}
+
+/// An access that must be conflict-free and legal under a chosen swizzle.
+#[derive(Debug, Clone)]
+pub struct AccessReq {
+    pub st: super::tile::SharedTile,
+    pub rt: super::tile::RegTile,
+    pub instr: crate::sim::lds::DsInstr,
+}
+
+/// Worst conflict ways of an access under a swizzle (column layouts go
+/// through the exact per-element transpose model).
+pub fn ways_under(req: &AccessReq, swz: Swizzle) -> u32 {
+    use super::layout;
+    match req.rt.layout {
+        super::tile::Layout::Col => {
+            layout::col_conflict_ways(&req.st, &req.rt, swz)
+        }
+        super::tile::Layout::Row => {
+            let pat = layout::access_pattern(&req.st, &req.rt, req.instr, swz);
+            layout::conflict_ways(&pat)
+        }
+    }
+}
+
+/// Legality: the swizzle must preserve the contiguity granularity of the
+/// instruction (paper D.1: the ds_write_b64 swizzle breaks ds_read_b128).
+pub fn legal_for(req: &AccessReq, swz: Swizzle) -> bool {
+    let width = (req.instr.bits() / 8) as u64;
+    swz.preserves_contiguity(width)
+}
+
+/// Solve for a swizzle that is conflict-free for *every* access in the
+/// co-occurrence set (the HK tile-creation step, §3.2.2). Returns None if
+/// no member of the family works — which is itself the paper's D.1
+/// result for incompatible granularities.
+pub fn solve(reqs: &[AccessReq]) -> Option<Swizzle> {
+    for swz in candidate_swizzles() {
+        if reqs.iter().all(|r| legal_for(r, swz) && ways_under(r, swz) == 1) {
+            return Some(swz);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hk::tile::{Layout, RegTile, SharedTile};
+    use crate::sim::arch::{Dtype, MFMA_16X16X32};
+    use crate::sim::lds::DsInstr;
+
+    fn st(rows: u32, cols: u32) -> SharedTile {
+        SharedTile { dtype: Dtype::Bf16, rows, cols, swizzle: Swizzle::none() }
+    }
+
+    fn req(rows: u32, cols: u32, layout: Layout, instr: DsInstr) -> AccessReq {
+        AccessReq {
+            st: st(rows, cols),
+            rt: RegTile::new(Dtype::Bf16, rows, cols, layout, MFMA_16X16X32),
+            instr,
+        }
+    }
+
+    #[test]
+    fn solver_finds_fig4_class_swizzle_for_16x32_row_and_col() {
+        // The Fig. 4 co-occurrence: row-major b128 read + column-major
+        // transpose read of the same 16x32 tile.
+        let reqs = vec![
+            req(16, 32, Layout::Row, DsInstr::ReadB128),
+            req(16, 32, Layout::Col, DsInstr::ReadB64TrB16),
+        ];
+        let s = solve(&reqs).expect("a conflict-free swizzle must exist");
+        assert!(ways_under(&reqs[0], s) == 1 && ways_under(&reqs[1], s) == 1);
+        // the paper's own pattern is in the family and also works
+        assert_eq!(ways_under(&reqs[0], Swizzle::fig4_16x32()), 1);
+        assert_eq!(ways_under(&reqs[1], Swizzle::fig4_16x32()), 1);
+    }
+
+    #[test]
+    fn solver_fixes_write_b64_16x16() {
+        let reqs = vec![req(16, 16, Layout::Row, DsInstr::WriteB64)];
+        let s = solve(&reqs).expect("D.1 swizzle class must be found");
+        assert_eq!(ways_under(&reqs[0], s), 1);
+        // identity is NOT conflict-free here
+        assert!(ways_under(&reqs[0], Swizzle::none()) >= 4);
+    }
+
+    #[test]
+    fn no_single_swizzle_for_d1_counterexample() {
+        // Paper D.1: the 16x16 ds_write_b64 tile and the 16x32
+        // ds_read_b128 tile need different swizzles — granularities
+        // conflict (64-bit chunks vs 128-bit contiguity). No single
+        // family member satisfies both.
+        let reqs = vec![
+            req(16, 16, Layout::Row, DsInstr::WriteB64),
+            req(16, 32, Layout::Row, DsInstr::ReadB128),
+        ];
+        assert!(
+            solve(&reqs).is_none(),
+            "a single swizzle must NOT exist for the D.1 pair"
+        );
+        // but each in isolation is solvable
+        assert!(solve(&reqs[..1]).is_some());
+        assert!(solve(&reqs[1..]).is_some());
+    }
+
+    #[test]
+    fn identity_is_identity() {
+        let s = Swizzle::none();
+        for a in [0u64, 17, 511, 4096] {
+            assert_eq!(s.apply(a), a);
+        }
+        assert!(s.preserves_contiguity(16));
+    }
+
+    #[test]
+    fn fig4_swizzle_swaps_halves_after_row8() {
+        let s = Swizzle::fig4_16x32();
+        // row 0 (addr < 512): untouched
+        assert_eq!(s.apply(0), 0);
+        assert_eq!(s.apply(48), 48);
+        // row 8 (addr 512): first 32B swap with last 32B
+        assert_eq!(s.apply(512), 512 + 32);
+        assert_eq!(s.apply(512 + 32), 512);
+        // 16-byte reads stay contiguous (unit is 32B)
+        assert!(s.preserves_contiguity(16));
+    }
+
+    #[test]
+    fn d1_write_swizzle_matches_formula() {
+        let s = Swizzle::d1_write_b64();
+        for off in (0..2048u64).step_by(8) {
+            let expect = off ^ (((off % 512) >> 7) << 3);
+            assert_eq!(s.apply(off), expect, "off={off}");
+        }
+        // 8-byte unit: fine for b64, breaks b128 (the D.1 counter-example)
+        assert!(s.preserves_contiguity(8));
+        assert!(!s.preserves_contiguity(16));
+    }
+
+    #[test]
+    fn swizzles_are_involutions() {
+        for s in candidate_swizzles() {
+            for a in (0..4096u64).step_by(4) {
+                assert_eq!(s.apply(s.apply(a)), a, "{s:?} addr {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn swizzles_are_bijective_on_tile() {
+        use std::collections::HashSet;
+        for s in candidate_swizzles().into_iter().take(20) {
+            let out: HashSet<u64> = (0..1024u64).map(|a| s.apply(a)).collect();
+            assert_eq!(out.len(), 1024, "{s:?} not bijective");
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Tile data structures — the HK programming surface (paper §3.1).
+//!
+//! A tile is parametrized by dtype, rows, cols and a layout (row/col
+//! major); register tiles additionally carry the MFMA base-tile shape and
+//! (optionally) a pinned register range (paper §3.2.1, App. D.3). Shared
+//! tiles carry a swizzle pattern chosen at creation time (§3.2.2).
+
+use crate::sim::arch::{Dtype, MfmaShape};
+use crate::sim::lds::DsInstr;
+
+/// Row- or column-major logical layout of a tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    Row,
+    Col,
+}
+
+/// Where a register tile's registers live (paper §3.2.1): HIPCC only lets
+/// compiler-managed tiles use VGPRs as MFMA inputs; pinned tiles may place
+/// operands in AGPRs too.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegClass {
+    Vgpr,
+    Agpr,
+}
+
+/// An explicit register range `v[lo..=hi]` / `a[lo..=hi]` (App. D.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegRange {
+    pub class: RegClass,
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl RegRange {
+    pub fn count(&self) -> u32 {
+        self.hi - self.lo + 1
+    }
+
+    pub fn overlaps(&self, other: &RegRange) -> bool {
+        self.class == other.class && self.lo <= other.hi && other.lo <= self.hi
+    }
+}
+
+/// A register tile: `rt<dtype, rows, cols, layout, base_shape[, ranges]>`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegTile {
+    pub dtype: Dtype,
+    pub rows: u32,
+    pub cols: u32,
+    pub layout: Layout,
+    /// MFMA base-tile shape this register tile is built from. HK defaults
+    /// to the smallest MFMA shape for scheduling control (§3.2.2).
+    pub base: MfmaShape,
+    /// Explicit register ranges if the developer pinned the tile.
+    pub pinned: Option<Vec<RegRange>>,
+}
+
+impl RegTile {
+    pub fn new(
+        dtype: Dtype,
+        rows: u32,
+        cols: u32,
+        layout: Layout,
+        base: MfmaShape,
+    ) -> Self {
+        assert!(
+            rows % base.m == 0 || rows % base.n == 0,
+            "tile rows {rows} not a multiple of the base tile"
+        );
+        RegTile { dtype, rows, cols, layout, base, pinned: None }
+    }
+
+    /// 32-bit registers per thread needed to hold this tile: a wave of 64
+    /// lanes shares rows*cols elements.
+    pub fn regs_per_thread(&self) -> u32 {
+        let bits = self.rows as u64 * self.cols as u64 * self.dtype.bits() as u64;
+        (bits as f64 / (64.0 * 32.0)).ceil() as u32
+    }
+
+    /// Number of base tiles stamped out.
+    pub fn base_tiles(&self) -> u32 {
+        (self.rows / self.base.m).max(1) * (self.cols.div_ceil(self.base.k)).max(1)
+    }
+
+    /// Pin this tile to explicit register ranges (paper App. D.3:
+    /// `split_many_t<type_list<range<lo, hi>>, chunk>`).
+    pub fn pin(mut self, class: RegClass, lo: u32, hi: u32, chunk: u32) -> Self {
+        assert!(hi >= lo && chunk > 0);
+        let mut ranges = Vec::new();
+        let mut a = lo;
+        while a + chunk - 1 <= hi {
+            ranges.push(RegRange { class, lo: a, hi: a + chunk - 1 });
+            a += chunk;
+        }
+        self.pinned = Some(ranges);
+        self
+    }
+
+    pub fn is_pinned(&self) -> bool {
+        self.pinned.is_some()
+    }
+}
+
+/// A shared-memory (LDS) tile: `st<dtype, rows, cols, swizzle>`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SharedTile {
+    pub dtype: Dtype,
+    pub rows: u32,
+    pub cols: u32,
+    /// The swizzle chosen at creation (see `hk::swizzle`).
+    pub swizzle: crate::hk::swizzle::Swizzle,
+}
+
+impl SharedTile {
+    pub fn bytes(&self) -> u64 {
+        (self.rows as u64 * self.cols as u64 * self.dtype.bits() as u64) / 8
+    }
+
+    /// Row stride in bytes.
+    pub fn row_bytes(&self) -> u64 {
+        (self.cols as u64 * self.dtype.bits() as u64) / 8
+    }
+
+    /// Whether a shared->register load between this shape and `rt` is
+    /// supported: one shape must be a multiple of the other (App. D.1
+    /// "Shared Memory and Register Tile Shapes").
+    pub fn can_load_into(&self, rt: &RegTile) -> bool {
+        let row_ok = (self.rows % rt.rows == 0) || (rt.rows % self.rows == 0);
+        let col_ok = (self.cols % rt.cols == 0) || (rt.cols % self.cols == 0);
+        // Additionally, a subtile view must tile evenly in both dims at
+        // once: either st >= rt in both dims or rt >= st in both dims.
+        let st_ge = self.rows >= rt.rows && self.cols >= rt.cols;
+        let rt_ge = rt.rows >= self.rows && rt.cols >= self.cols;
+        row_ok && col_ok && (st_ge || rt_ge)
+    }
+
+    /// The natural LDS instruction for loading `rt` from this tile.
+    pub fn load_instr(&self, rt: &RegTile) -> DsInstr {
+        match rt.layout {
+            Layout::Row => {
+                // bytes each thread holds contiguously in the reduction dim
+                let elems = (rt.rows as u64 * rt.cols as u64) / 64;
+                let contig_bits = elems.min(8) as u32 * rt.dtype.bits();
+                match contig_bits {
+                    b if b >= 128 => DsInstr::ReadB128,
+                    b if b >= 96 => DsInstr::ReadB96,
+                    b if b >= 64 => DsInstr::ReadB64,
+                    _ => DsInstr::ReadB32,
+                }
+            }
+            // Column-major loads use the transpose-read instruction
+            // (App. D.1).
+            Layout::Col => DsInstr::ReadB64TrB16,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hk::swizzle::Swizzle;
+    use crate::sim::arch::{MFMA_16X16X32, MFMA_32X32X16};
+
+    #[test]
+    fn reg_demand_matches_paper_tiles() {
+        // 16x32 bf16 tile = 512 elems * 2B = 1 KiB / 64 lanes = 16 B = 4 regs.
+        let t = RegTile::new(Dtype::Bf16, 16, 32, Layout::Row, MFMA_16X16X32);
+        assert_eq!(t.regs_per_thread(), 4);
+        // The attention Q tile rt<bf16,16,128> (App. D.3) = 16 regs.
+        let q = RegTile::new(Dtype::Bf16, 16, 128, Layout::Row, MFMA_16X16X32);
+        assert_eq!(q.regs_per_thread(), 16);
+        // A 64x64 f32 accumulator = 64 regs.
+        let c = RegTile::new(Dtype::F32, 64, 64, Layout::Col, MFMA_16X16X32);
+        assert_eq!(c.regs_per_thread(), 64);
+    }
+
+    #[test]
+    fn pin_splits_ranges_like_app_d3() {
+        // using Q_ranges = split_many_t<type_list<range<24,39>>, 4>
+        let q = RegTile::new(Dtype::Bf16, 16, 128, Layout::Row, MFMA_16X16X32)
+            .pin(RegClass::Vgpr, 24, 39, 4);
+        let r = q.pinned.as_ref().unwrap();
+        assert_eq!(r.len(), 4);
+        assert_eq!((r[0].lo, r[0].hi), (24, 27));
+        assert_eq!((r[3].lo, r[3].hi), (36, 39));
+        assert!(r[0].overlaps(&RegRange { class: RegClass::Vgpr, lo: 27, hi: 30 }));
+        assert!(!r[0].overlaps(&RegRange { class: RegClass::Agpr, lo: 24, hi: 27 }));
+    }
+
+    #[test]
+    fn shared_tile_load_rules() {
+        let st = SharedTile {
+            dtype: Dtype::Bf16,
+            rows: 16,
+            cols: 32,
+            swizzle: Swizzle::none(),
+        };
+        let rt_16x32 =
+            RegTile::new(Dtype::Bf16, 16, 32, Layout::Row, MFMA_16X16X32);
+        let rt_32x16 =
+            RegTile::new(Dtype::Bf16, 32, 16, Layout::Row, MFMA_32X32X16);
+        // Paper App. D.1: 16x32 st -> 32x16 rt NOT supported;
+        assert!(!st.can_load_into(&rt_32x16));
+        assert!(st.can_load_into(&rt_16x32));
+        // 16x16 st -> 32x16 rt IS supported.
+        let st16 = SharedTile {
+            dtype: Dtype::Bf16,
+            rows: 16,
+            cols: 16,
+            swizzle: Swizzle::none(),
+        };
+        assert!(st16.can_load_into(&rt_32x16));
+    }
+
+    #[test]
+    fn natural_instr_selection() {
+        let st = SharedTile {
+            dtype: Dtype::Bf16,
+            rows: 16,
+            cols: 32,
+            swizzle: Swizzle::none(),
+        };
+        let row =
+            RegTile::new(Dtype::Bf16, 16, 32, Layout::Row, MFMA_16X16X32);
+        let col =
+            RegTile::new(Dtype::Bf16, 16, 32, Layout::Col, MFMA_16X16X32);
+        assert_eq!(st.load_instr(&row), DsInstr::ReadB128);
+        assert_eq!(st.load_instr(&col), DsInstr::ReadB64TrB16);
+        // 16x16 row tile: 4 elems/thread = 64 bits -> ds_read_b64
+        let small =
+            RegTile::new(Dtype::Bf16, 16, 16, Layout::Row, MFMA_16X16X32);
+        assert_eq!(st.load_instr(&small), DsInstr::ReadB64);
+    }
+}

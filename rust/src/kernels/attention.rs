@@ -1,0 +1,476 @@
+//! HK attention kernels on the simulator (paper listing E.3, Figs.
+//! 7/8/15/16/17, Table 1).
+//!
+//! Forward: 8-wave ping-pong; each wave owns a 32 x D output tile of one
+//! (batch, head), interleaving online-softmax VALU ops with QK/AV MFMAs
+//! while the paired wave prefetches the next K/V tiles (listing E.3).
+//!
+//! Backward: the register-heavy workload (5 matmuls per tile pair +
+//! recompute). It mixes MFMA shapes (16x16x32 and 32x32x16), row- and
+//! column-layout loads from the same shared tiles, and *pinned register
+//! tiles* so AGPRs can feed MFMA operands — the Table 1 experiment.
+
+use crate::hk::costmodel::{evaluate_streaming, KernelPerf};
+use crate::hk::regalloc::{allocate, AllocResult, RegMode, TileDemand};
+use crate::hk::schedule::{BuiltSchedule, Cluster, LoopSpec};
+use crate::hk::{interleave, pingpong};
+use crate::kernels::gemm::Pattern;
+use crate::sim::arch::{Arch, Dtype, MFMA_16X16X32, MFMA_32X32X16};
+use crate::sim::instr::Instr;
+use crate::sim::lds::DsInstr;
+
+/// Attention problem + implementation description.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnConfig {
+    pub batch: u32,
+    pub heads_q: u32,
+    pub heads_kv: u32,
+    pub seq: u32,
+    pub d_head: u32,
+    pub causal: bool,
+    pub pattern: Pattern,
+    pub reg_mode: RegMode,
+    /// Bank-conflict ways on shared-memory loads (1 = HK swizzles).
+    pub lds_ways: u32,
+}
+
+impl AttnConfig {
+    /// The paper's GQA benchmark shape: batch 16, 64 query heads, 8 KV
+    /// heads (Figs. 7/8).
+    pub fn gqa(seq: u32, d_head: u32, causal: bool) -> Self {
+        AttnConfig {
+            batch: 16,
+            heads_q: 64,
+            heads_kv: 8,
+            seq,
+            d_head,
+            causal,
+            pattern: Pattern::PingPong8,
+            reg_mode: RegMode::Pinned,
+            lds_ways: 1,
+        }
+    }
+
+    /// The paper's MHA shape: batch 16, 16 heads (Figs. 15/16/17, Tab. 1).
+    pub fn mha(seq: u32, d_head: u32, causal: bool) -> Self {
+        AttnConfig { heads_q: 16, heads_kv: 16, ..Self::gqa(seq, d_head, causal) }
+    }
+
+    /// FLOPs of the forward pass (2 matmuls), halved under causality.
+    pub fn fwd_flops(&self) -> f64 {
+        let full = 4.0
+            * self.batch as f64
+            * self.heads_q as f64
+            * self.seq as f64
+            * self.seq as f64
+            * self.d_head as f64;
+        if self.causal {
+            full / 2.0
+        } else {
+            full
+        }
+    }
+
+    /// Backward-pass FLOPs (5 matmuls + recompute ~ 2.5x forward).
+    pub fn bwd_flops(&self) -> f64 {
+        2.5 * self.fwd_flops()
+    }
+
+    /// Bytes streamed from HBM for the forward pass: Q once, K/V per
+    /// q-block wave-front (bounded by LLC reuse), O once.
+    pub fn fwd_bytes(&self) -> f64 {
+        let e = 2.0; // bf16
+        let q = self.batch as f64 * self.heads_q as f64 * self.seq as f64
+            * self.d_head as f64;
+        let kv = 2.0 * self.batch as f64 * self.heads_kv as f64
+            * self.seq as f64 * self.d_head as f64;
+        (2.0 * q + kv) * e
+    }
+
+    pub fn bwd_bytes(&self) -> f64 {
+        // q,k,v,o,do read; dq,dk,dv written; lse/delta vectors small
+        2.5 * self.fwd_bytes()
+    }
+}
+
+/// Per-wave register demand of the backward kernel (Table 1 driver):
+/// Q, K-frag, dO, P/dS tiles and the dQ/dK/dV accumulators.
+pub fn bwd_reg_demand(cfg: &AttnConfig) -> Vec<TileDemand> {
+    let d = cfg.d_head as u64;
+    // With one wave per SIMD (4-wave) the full 512-register file allows
+    // resident 64-row K/V tiles; at two waves per SIMD the kernel must
+    // halve its tiles to fit the 256-register budget — the arithmetic-
+    // intensity cost of the 8-wave pattern on this workload (Table 3).
+    let one_wave = cfg.pattern.waves() <= 4;
+    let kv_blk: u64 = if one_wave { 64 } else { 32 };
+    let q_blk = 16u64; // the paper's rt<bf16, 16, 128> Q tile (App. D.3)
+    let regs =
+        |elems: u64, bytes: u64| ((elems * bytes) / (64 * 4)).max(1) as u32;
+    vec![
+        // resident K and V tiles — MFMA operands
+        TileDemand { regs: regs(kv_blk * d, 2), mfma_operand: true, mfma_uses_per_iter: 2 },
+        TileDemand { regs: regs(kv_blk * d, 2), mfma_operand: true, mfma_uses_per_iter: 1 },
+        // Q and dO fragments
+        TileDemand { regs: regs(q_blk * d, 2), mfma_operand: true, mfma_uses_per_iter: 2 },
+        TileDemand { regs: regs(q_blk * d, 2), mfma_operand: true, mfma_uses_per_iter: 2 },
+        // P and dS: MFMA *outputs* that feed the next matmul — the chained
+        // intermediates that land in AGPRs once VGPRs run out, triggering
+        // the v_accvgpr_read penalty HIPCC can't avoid (§3.2.1)
+        TileDemand { regs: regs(q_blk * kv_blk, 4), mfma_operand: true, mfma_uses_per_iter: 3 },
+        TileDemand { regs: regs(q_blk * kv_blk, 4), mfma_operand: true, mfma_uses_per_iter: 3 },
+        // f32 accumulators: dq, dk, dv (dk/dv sized by the resident tile)
+        TileDemand { regs: regs(q_blk * d, 4) / 2, mfma_operand: false, mfma_uses_per_iter: 0 },
+        TileDemand { regs: regs(kv_blk * d, 4) / 2, mfma_operand: false, mfma_uses_per_iter: 0 },
+        TileDemand { regs: regs(kv_blk * d, 4) / 2, mfma_operand: false, mfma_uses_per_iter: 0 },
+        // softmax vectors (lse, delta) + addressing
+        TileDemand { regs: 24, mfma_operand: false, mfma_uses_per_iter: 0 },
+    ]
+}
+
+/// KV tile rows of the backward kernel under a pattern (see
+/// `bwd_reg_demand`).
+fn bwd_kv_blk(cfg: &AttnConfig) -> u32 {
+    if cfg.pattern.waves() <= 4 {
+        64
+    } else {
+        32
+    }
+}
+
+fn softmax_valu_cycles(q_blk: u64, kv_blk: u64) -> u64 {
+    // max/sub/exp2/sum/scale over a (q_blk x kv_blk) tile: ~5 passes,
+    // kv_blk/64 lanesful each... elements per lane = q*kv/64
+    let per_lane = (q_blk * kv_blk) / 64;
+    5 * per_lane
+}
+
+/// Forward-pass LoopSpec (listing E.3 structure: two KV tiles per
+/// iteration, clusters QK / load / AV / load).
+pub fn build_fwd_spec(cfg: &AttnConfig) -> LoopSpec {
+    let d = cfg.d_head;
+    let q_blk = 32u32;
+    let kv_blk = 64u32;
+    let shape = MFMA_32X32X16;
+    // QK^T: (q_blk x d) @ (kv_blk x d)^T
+    let qk_flops = 2 * q_blk as u64 * kv_blk as u64 * d as u64;
+    let qk_mfma = (qk_flops / shape.flops()).max(1) as u32;
+    // AV: (q_blk x kv_blk) @ (kv_blk x d)
+    let av_mfma = qk_mfma;
+    let sm = softmax_valu_cycles(q_blk as u64, kv_blk as u64);
+
+    // K/V tile loads: kv_blk x d bf16, collaborative over 8 waves
+    let kv_bytes = (kv_blk * d * 2 / 8) as u64;
+    let kv_issues = ((kv_bytes / 64 / 16).max(1)) as u32;
+    let ds_count = ((kv_blk * d * 2 / 64 / 16).max(1)) as u32;
+
+    let compute = vec![
+        Cluster::new(
+            "qk+softmax",
+            vec![
+                Instr::Mfma { shape, dtype: Dtype::Bf16, count: qk_mfma },
+                Instr::Valu { cycles: sm },
+            ],
+        ),
+        Cluster::new(
+            "av+rescale",
+            vec![
+                Instr::Mfma { shape, dtype: Dtype::Bf16, count: av_mfma },
+                Instr::Valu { cycles: sm / 2 },
+            ],
+        ),
+    ];
+    let memory = vec![
+        Cluster::new(
+            "loadK",
+            vec![
+                Instr::VMemLoad { bytes: kv_bytes, to_lds: true, issues: kv_issues },
+                Instr::DsRead {
+                    instr: DsInstr::ReadB128,
+                    conflict_ways: cfg.lds_ways,
+                    count: ds_count,
+                },
+            ],
+        ),
+        Cluster::new(
+            "loadV",
+            vec![
+                Instr::VMemLoad { bytes: kv_bytes, to_lds: true, issues: kv_issues },
+                Instr::DsRead {
+                    instr: DsInstr::ReadB64TrB16,
+                    conflict_ways: cfg.lds_ways,
+                    count: ds_count,
+                },
+            ],
+        ),
+    ];
+
+    let iters = if cfg.causal {
+        (cfg.seq / kv_blk).max(2) / 2
+    } else {
+        cfg.seq / kv_blk
+    };
+    LoopSpec {
+        name: format!("attn-fwd-d{}-n{}", d, cfg.seq),
+        prologue: vec![Instr::VMemLoad {
+            bytes: (q_blk * d * 2) as u64 + 2 * kv_bytes,
+            to_lds: true,
+            issues: 2 * kv_issues + 1,
+        }],
+        compute,
+        memory,
+        iters,
+        epilogue: vec![
+            Instr::Valu { cycles: sm }, // final normalization + lse
+            Instr::VMemStore {
+                bytes: (q_blk * d * 4 / 8) as u64,
+                issues: 1,
+            },
+        ],
+    }
+}
+
+/// Backward-pass LoopSpec: 5 matmuls per (q, kv) tile pair, mixed MFMA
+/// shapes, AccMove penalties under compiler-managed registers.
+pub fn build_bwd_spec(arch: &Arch, cfg: &AttnConfig) -> LoopSpec {
+    let d = cfg.d_head;
+    let q_blk = 16u32;
+    let kv_blk = bwd_kv_blk(cfg);
+    let waves_per_simd = cfg.pattern.waves().div_ceil(arch.simds_per_cu);
+    let alloc: AllocResult =
+        allocate(arch, waves_per_simd, cfg.reg_mode, &bwd_reg_demand(cfg));
+
+    let pair_flops = 2 * q_blk as u64 * kv_blk as u64 * d as u64;
+    // recompute QK + dV + dP + dK + dQ = 5 matmuls
+    let m16 = (pair_flops / MFMA_16X16X32.flops()).max(1) as u32;
+    let m32 = (pair_flops / MFMA_32X32X16.flops()).max(1) as u32;
+    let sm = softmax_valu_cycles(q_blk as u64, kv_blk as u64);
+
+    let q_bytes = (q_blk * d * 2 / cfg.pattern.waves()) as u64;
+    let issues = ((q_bytes / 64 / 16).max(1)) as u32;
+    let ds_count = ((q_blk * d * 2 / 64 / 16).max(1)) as u32;
+
+    let acc_move = |frac: u32| -> Vec<Instr> {
+        if alloc.acc_moves_per_iter > 0 {
+            vec![Instr::AccMove { count: alloc.acc_moves_per_iter / frac }]
+        } else {
+            vec![]
+        }
+    };
+
+    // At two waves per SIMD the 256-register budget cannot keep the full
+    // K/V tiles resident: each compute cluster re-stages half the tile
+    // from LDS and must wait for it — the 8-wave pattern's cost on this
+    // register-heavy workload (Table 3).
+    let restage = |ops: &mut Vec<Instr>| {
+        if cfg.pattern.waves() > 4 {
+            ops.push(Instr::DsRead {
+                instr: DsInstr::ReadB128,
+                conflict_ways: cfg.lds_ways,
+                count: ((kv_blk * d * 2 / 64 / 16).max(1)) as u32,
+            });
+            ops.push(Instr::WaitLgkmcnt { max_outstanding: 0 });
+        }
+    };
+
+    let mut c0 = acc_move(2);
+    restage(&mut c0);
+    c0.extend([
+        // recompute QK^T + softmax, then dV += P^T dO (mixed shapes: the
+        // paper's kernel uses both 16x16x32 and 32x32x16)
+        Instr::Mfma { shape: MFMA_32X32X16, dtype: Dtype::Bf16, count: m32 },
+        Instr::Valu { cycles: sm },
+        Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: m16 },
+    ]);
+    let mut c1 = acc_move(2);
+    c1.extend([
+        // dP = dO V^T ; dS ; dK += dS^T Q ; dQ += dS K
+        Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: m16 },
+        Instr::Valu { cycles: sm },
+        Instr::Mfma { shape: MFMA_32X32X16, dtype: Dtype::Bf16, count: m32 },
+        Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: m16 },
+    ]);
+    let compute = vec![Cluster::new("qk+dv", c0), Cluster::new("dp+dk+dq", c1)];
+
+    let mut load_q = vec![
+        Instr::VMemLoad { bytes: q_bytes, to_lds: true, issues },
+        // row-layout read for Q, column-layout (transpose) read of
+        // the same shared tile for Q^T — the D.1 co-occurrence
+        Instr::DsRead {
+            instr: DsInstr::ReadB128,
+            conflict_ways: cfg.lds_ways,
+            count: ds_count,
+        },
+        Instr::DsRead {
+            instr: DsInstr::ReadB64TrB16,
+            conflict_ways: cfg.lds_ways,
+            count: ds_count,
+        },
+    ];
+    let mut load_do = vec![
+        Instr::VMemLoad { bytes: q_bytes, to_lds: true, issues },
+        Instr::DsRead {
+            instr: DsInstr::ReadB128,
+            conflict_ways: cfg.lds_ways,
+            count: ds_count,
+        },
+    ];
+    if alloc.spilled > 0 {
+        // spilled working-set registers reload/store from scratch every
+        // iteration: 4 B x 64 lanes per register, half the set per stage
+        let scratch = alloc.spilled as u64 * 256 / 2;
+        load_q.push(Instr::VMemLoad { bytes: scratch, to_lds: false, issues: 2 });
+        load_do.push(Instr::VMemStore { bytes: scratch, issues: 2 });
+    }
+    let memory = vec![
+        Cluster::new("loadQ", load_q),
+        Cluster::new("loadDO", load_do),
+    ];
+
+    let epilogue = vec![Instr::VMemStore {
+        bytes: (2 * kv_blk * d * 4 / cfg.pattern.waves()) as u64,
+        issues: 2,
+    }];
+
+    let iters = if cfg.causal {
+        (cfg.seq / q_blk).max(2) / 2
+    } else {
+        cfg.seq / q_blk
+    };
+    LoopSpec {
+        name: format!("attn-bwd-d{}-n{}", d, cfg.seq),
+        prologue: vec![Instr::VMemLoad {
+            bytes: (2 * kv_blk * d * 2) as u64,
+            to_lds: true,
+            issues: 2,
+        }],
+        compute,
+        memory,
+        iters,
+        epilogue,
+    }
+}
+
+fn build(arch: &Arch, cfg: &AttnConfig, spec: &LoopSpec) -> BuiltSchedule {
+    let _ = arch;
+    match cfg.pattern {
+        Pattern::Interleave4 => interleave::build(spec),
+        _ => pingpong::build(spec),
+    }
+}
+
+/// Simulate the forward pass; returns TFLOPS (the paper's Fig. 7 metric).
+pub fn simulate_fwd(arch: &Arch, cfg: &AttnConfig) -> KernelPerf {
+    let spec = build_fwd_spec(cfg);
+    let built = build(arch, cfg, &spec);
+    // one block per (batch, head, q chunk); each wave owns 32 q rows
+    let q_rows_per_block = 32 * cfg.pattern.waves();
+    let blocks = cfg.batch as f64
+        * cfg.heads_q as f64
+        * (cfg.seq as f64 / q_rows_per_block as f64).max(1.0);
+    let resident = 2.0
+        * cfg.batch as f64
+        * cfg.heads_kv as f64
+        * cfg.seq as f64
+        * cfg.d_head as f64
+        * 2.0;
+    evaluate_streaming(
+        arch,
+        &format!("attn-fwd {:?}", cfg),
+        &built,
+        blocks,
+        cfg.fwd_flops(),
+        cfg.fwd_bytes(),
+        resident,
+        Some(arch.llc_lat),
+    )
+}
+
+/// Simulate the backward pass (Fig. 8 / Table 1).
+pub fn simulate_bwd(arch: &Arch, cfg: &AttnConfig) -> KernelPerf {
+    let spec = build_bwd_spec(arch, cfg);
+    let built = build(arch, cfg, &spec);
+    // each wave owns a resident kv tile; the block covers waves x kv_blk
+    let kv_rows_per_block = bwd_kv_blk(cfg) * cfg.pattern.waves();
+    let blocks = cfg.batch as f64
+        * cfg.heads_q as f64
+        * (cfg.seq as f64 / kv_rows_per_block as f64).max(1.0);
+    let resident = 4.0
+        * cfg.batch as f64
+        * cfg.heads_q as f64
+        * cfg.seq as f64
+        * cfg.d_head as f64
+        * 2.0;
+    evaluate_streaming(
+        arch,
+        &format!("attn-bwd {:?}", cfg),
+        &built,
+        blocks,
+        cfg.bwd_flops(),
+        cfg.bwd_bytes(),
+        resident,
+        Some(arch.llc_lat),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> Arch {
+        Arch::mi355x()
+    }
+
+    #[test]
+    fn fwd_non_causal_reasonable() {
+        let p = simulate_fwd(&arch(), &AttnConfig::gqa(4096, 128, false));
+        // Paper Fig. 7 territory: several hundred TFLOPS up to ~1.3 PF.
+        assert!(p.tflops > 300.0 && p.tflops < 2560.0, "{}", p.tflops);
+    }
+
+    #[test]
+    fn d64_not_slower_than_half_of_d128() {
+        let d64 = simulate_fwd(&arch(), &AttnConfig::gqa(4096, 64, false));
+        let d128 = simulate_fwd(&arch(), &AttnConfig::gqa(4096, 128, false));
+        assert!(d64.tflops > 0.35 * d128.tflops, "{} vs {}", d64.tflops, d128.tflops);
+    }
+
+    #[test]
+    fn bwd_pinned_beats_compiler_managed() {
+        // Table 1: pinned 1024 vs HIPCC 855 at N=4096 (4-wave MHA bwd).
+        let mut cfg = AttnConfig::mha(4096, 128, false);
+        cfg.pattern = Pattern::Interleave4;
+        let pinned = simulate_bwd(&arch(), &cfg);
+        let hipcc = simulate_bwd(
+            &arch(),
+            &AttnConfig { reg_mode: RegMode::CompilerManaged, ..cfg },
+        );
+        assert!(
+            pinned.tflops > hipcc.tflops * 1.05,
+            "pinned {} vs hipcc {}",
+            pinned.tflops,
+            hipcc.tflops
+        );
+    }
+
+    #[test]
+    fn causal_faster_than_non_causal_wallclock() {
+        let nc = simulate_fwd(&arch(), &AttnConfig::gqa(8192, 128, false));
+        let c = simulate_fwd(&arch(), &AttnConfig::gqa(8192, 128, true));
+        assert!(c.time_s < nc.time_s, "{} vs {}", c.time_s, nc.time_s);
+    }
+
+    #[test]
+    fn bwd_4wave_beats_8wave() {
+        // Table 3: MHA bwd 1091 (4-wave) vs 894 (8-wave).
+        let cfg8 = AttnConfig::mha(8192, 128, false);
+        let cfg4 = AttnConfig { pattern: Pattern::Interleave4, ..cfg8 };
+        let p8 = simulate_bwd(&arch(), &cfg8);
+        let p4 = simulate_bwd(&arch(), &cfg4);
+        assert!(
+            p4.tflops > p8.tflops * 1.02,
+            "4w {} vs 8w {}",
+            p4.tflops,
+            p8.tflops
+        );
+    }
+}

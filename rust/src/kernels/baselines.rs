@@ -1,0 +1,349 @@
+//! Behavioural baseline models (paper §4 "Baselines").
+//!
+//! Each baseline is modeled *mechanistically* where the paper documents
+//! the mechanism, by feeding a degraded configuration through the same
+//! simulation pipeline as the HK kernels:
+//!
+//! - **AITER (assembly)** — a perfectly interleaved 4-wave kernel with
+//!   pinned registers; but coverage is thin: shapes the library has no
+//!   tuned kernel for (d=64 attention, GQA backwards) fall back to an
+//!   unspecialized variant (paper §4: AITER reaches 30% of SoTA on GQA
+//!   bwd; App. B.2).
+//! - **Composable Kernel (CK)** — template kernels: good schedules but
+//!   row-major grids and occasional bank conflicts.
+//! - **hipBLASLt** — tuned GEMM library: near-HK, chiplet-aware.
+//! - **Triton** — compiler-managed registers (no AGPR MFMA inputs, spills
+//!   under pressure), no buffer-load-to-lds (register staging), naive
+//!   swizzles (2-way conflicts), row-major grid (App. B.2 code snippets).
+//! - **PyTorch SDPA / torch.compile** — unfused or generically compiled;
+//!   SDPA's GQA-bwd path is the paper's 259-TFLOPS pathology.
+//! - **Mojo** — attention with LDS bank conflicts (§2.2 footnote 5:
+//!   ~50% of peak kernels, measured bank conflicts).
+
+use crate::hk::costmodel::KernelPerf;
+use crate::hk::regalloc::RegMode;
+use crate::kernels::attention::{self, AttnConfig};
+use crate::kernels::gemm::{self, GemmConfig, GridOrder, Pattern};
+use crate::kernels::membound::{self, FusedLnConfig, RopeConfig};
+use crate::sim::arch::Arch;
+
+/// Baseline identities, matching the paper's legend names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    HK,
+    Aiter,
+    CompokableCk,
+    HipBlasLt,
+    Triton,
+    PyTorch,
+    TorchCompile,
+    Mojo,
+}
+
+impl Baseline {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Baseline::HK => "HK",
+            Baseline::Aiter => "AITER (asm)",
+            Baseline::CompokableCk => "CK",
+            Baseline::HipBlasLt => "hipBLASLt",
+            Baseline::Triton => "Triton",
+            Baseline::PyTorch => "PyTorch",
+            Baseline::TorchCompile => "torch.compile",
+            Baseline::Mojo => "Mojo",
+        }
+    }
+}
+
+fn scaled(mut p: KernelPerf, factor: f64, name: &str) -> KernelPerf {
+    p.tflops *= factor;
+    p.time_s /= factor;
+    p.eff_bw_tbps *= factor;
+    p.name = name.to_string();
+    p
+}
+
+/// GEMM baselines (Figs. 6/14).
+pub fn gemm(arch: &Arch, base: &GemmConfig, who: Baseline) -> KernelPerf {
+    match who {
+        Baseline::HK => gemm::simulate(arch, base),
+        Baseline::Aiter => {
+            // hand-scheduled 4-wave assembly, pinned registers, chiplet
+            // aware — the peak reference for well-covered shapes
+            let cfg = GemmConfig {
+                pattern: Pattern::Interleave4,
+                reg_mode: RegMode::Pinned,
+                ..*base
+            };
+            gemm::simulate(arch, &cfg)
+        }
+        Baseline::HipBlasLt => {
+            // tuned library: HK-like but occasionally misses the best
+            // macro-tile for odd shapes
+            let perfect = gemm::simulate(arch, base);
+            let penalty = if base.m % 1024 == 0 { 0.97 } else { 0.90 };
+            scaled(perfect, penalty, "hipBLASLt")
+        }
+        Baseline::CompokableCk => {
+            let cfg = GemmConfig {
+                grid: GridOrder::RowMajor,
+                lds_ways: base.lds_ways.max(1),
+                ..*base
+            };
+            scaled(gemm::simulate(arch, &cfg), 0.93, "CK")
+        }
+        Baseline::Triton => {
+            // compiler: smaller tiles (register lifetime tracking), 2-way
+            // conflicts, row-major grid, compiler-managed registers
+            let cfg = GemmConfig {
+                block_m: 128,
+                block_n: 128,
+                block_k: base.block_k,
+                pattern: Pattern::PingPong8,
+                reg_mode: RegMode::CompilerManaged,
+                grid: GridOrder::RowMajor,
+                lds_ways: 2,
+                ..*base
+            };
+            scaled(gemm::simulate(arch, &cfg), 0.82, "Triton")
+        }
+        Baseline::PyTorch | Baseline::TorchCompile => {
+            // dispatches to hipBLASLt under the hood
+            let p = gemm(arch, base, Baseline::HipBlasLt);
+            scaled(p, 0.97, who.name())
+        }
+        Baseline::Mojo => {
+            let cfg = GemmConfig {
+                grid: GridOrder::RowMajor,
+                lds_ways: 2,
+                ..*base
+            };
+            scaled(gemm::simulate(arch, &cfg), 0.88, "Mojo")
+        }
+    }
+}
+
+/// Whether AITER ships a tuned kernel for this attention shape
+/// (paper §4: d=64 and GQA-backwards are the coverage gaps).
+pub fn aiter_covers(cfg: &AttnConfig, backward: bool) -> bool {
+    let gqa = cfg.heads_q != cfg.heads_kv;
+    if backward && gqa {
+        return false;
+    }
+    cfg.d_head == 128
+}
+
+/// Attention forward baselines (Figs. 7/16/17).
+pub fn attn_fwd(arch: &Arch, base: &AttnConfig, who: Baseline) -> KernelPerf {
+    match who {
+        Baseline::HK => attention::simulate_fwd(arch, base),
+        Baseline::Aiter => {
+            if aiter_covers(base, false) {
+                let cfg = AttnConfig {
+                    pattern: Pattern::Interleave4,
+                    reg_mode: RegMode::Pinned,
+                    ..*base
+                };
+                scaled(attention::simulate_fwd(arch, &cfg), 1.0, "AITER (asm)")
+            } else {
+                // no tuned kernel: generic fallback
+                let cfg = AttnConfig { lds_ways: 2, ..*base };
+                scaled(attention::simulate_fwd(arch, &cfg), 0.55, "AITER (asm)")
+            }
+        }
+        Baseline::CompokableCk => {
+            let cfg = AttnConfig { lds_ways: 1, ..*base };
+            scaled(attention::simulate_fwd(arch, &cfg), 0.85, "CK")
+        }
+        Baseline::Triton => {
+            let cfg = AttnConfig {
+                reg_mode: RegMode::CompilerManaged,
+                lds_ways: 2,
+                ..*base
+            };
+            scaled(attention::simulate_fwd(arch, &cfg), 0.65, "Triton")
+        }
+        Baseline::PyTorch => {
+            // SDPA backend
+            let cfg = AttnConfig { lds_ways: 2, ..*base };
+            let f = if base.d_head == 64 { 0.45 } else { 0.62 };
+            scaled(attention::simulate_fwd(arch, &cfg), f, "PyTorch (SDPA)")
+        }
+        Baseline::Mojo => {
+            // measured bank conflicts (paper footnote 5): ~50% of peak
+            let cfg = AttnConfig { lds_ways: 3, ..*base };
+            scaled(attention::simulate_fwd(arch, &cfg), 0.75, "Mojo")
+        }
+        Baseline::HipBlasLt | Baseline::TorchCompile => {
+            let cfg = AttnConfig { lds_ways: 2, ..*base };
+            scaled(attention::simulate_fwd(arch, &cfg), 0.6, who.name())
+        }
+    }
+}
+
+/// Attention backward baselines (Figs. 8/15, the 1.8-2.5x HK gap on GQA).
+pub fn attn_bwd(arch: &Arch, base: &AttnConfig, who: Baseline) -> KernelPerf {
+    match who {
+        Baseline::HK => attention::simulate_bwd(arch, base),
+        Baseline::Aiter => {
+            if aiter_covers(base, true) {
+                let cfg = AttnConfig {
+                    pattern: Pattern::Interleave4,
+                    reg_mode: RegMode::Pinned,
+                    ..*base
+                };
+                attention::simulate_bwd(arch, &cfg)
+            } else {
+                // GQA bwd: falls back to an MHA-style kernel that repeats
+                // KV per query head — (hq/hkv)x the KV traffic and a
+                // generic schedule (paper: 272-384 TF at seq 8192)
+                let cfg = AttnConfig {
+                    heads_kv: base.heads_q, // repeated-KV traffic
+                    reg_mode: RegMode::CompilerManaged,
+                    lds_ways: 2,
+                    ..*base
+                };
+                scaled(attention::simulate_bwd(arch, &cfg), 0.42, "AITER (asm)")
+            }
+        }
+        Baseline::CompokableCk => {
+            let cfg = AttnConfig {
+                heads_kv: base.heads_q,
+                reg_mode: RegMode::CompilerManaged,
+                ..*base
+            };
+            scaled(attention::simulate_bwd(arch, &cfg), 0.5, "CK")
+        }
+        Baseline::PyTorch => {
+            // the 259-TFLOPS Llama-GQA-bwd pathology (App. B.2)
+            let cfg = AttnConfig {
+                heads_kv: base.heads_q,
+                reg_mode: RegMode::CompilerManaged,
+                lds_ways: 2,
+                ..*base
+            };
+            scaled(attention::simulate_bwd(arch, &cfg), 0.35, "PyTorch (SDPA)")
+        }
+        Baseline::Triton => {
+            let cfg = AttnConfig {
+                reg_mode: RegMode::CompilerManaged,
+                lds_ways: 2,
+                ..*base
+            };
+            scaled(attention::simulate_bwd(arch, &cfg), 0.55, "Triton")
+        }
+        _ => {
+            let cfg = AttnConfig { lds_ways: 2, ..*base };
+            scaled(attention::simulate_bwd(arch, &cfg), 0.5, who.name())
+        }
+    }
+}
+
+/// Memory-bound baselines (Fig. 9).
+pub fn fused_ln(arch: &Arch, base: &FusedLnConfig, who: Baseline) -> KernelPerf {
+    match who {
+        Baseline::HK => membound::simulate_fused_ln(arch, base),
+        Baseline::Aiter => {
+            // AITER's fused kernel is good but not chunked per-CU as well
+            scaled(membound::simulate_fused_ln(arch, base), 0.85, "AITER")
+        }
+        Baseline::TorchCompile | Baseline::PyTorch => {
+            // torch.compile fuses but misses vectorized intrinsics and has
+            // a lower L2 hit rate (App. B.2: 23% lower than HK)
+            let cfg = FusedLnConfig { vectorized: false, ..*base };
+            scaled(
+                membound::simulate_fused_ln(arch, &cfg),
+                0.75,
+                "torch.compile",
+            )
+        }
+        _ => scaled(membound::simulate_fused_ln(arch, base), 0.7, who.name()),
+    }
+}
+
+pub fn rope(arch: &Arch, base: &RopeConfig, who: Baseline) -> KernelPerf {
+    match who {
+        Baseline::HK => membound::simulate_rope(arch, base),
+        Baseline::Aiter => scaled(membound::simulate_rope(arch, base), 0.9, "AITER"),
+        Baseline::TorchCompile | Baseline::PyTorch => {
+            scaled(membound::simulate_rope(arch, base), 0.55, "torch.compile")
+        }
+        _ => scaled(membound::simulate_rope(arch, base), 0.6, who.name()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> Arch {
+        Arch::mi355x()
+    }
+
+    #[test]
+    fn hk_beats_triton_gemm_by_1_3x_plus() {
+        // Paper: HK outperforms Triton BF16 GEMM by 1.3-3.0x.
+        let base = GemmConfig::bf16(8192, 8192, 8192);
+        let hk = gemm(&arch(), &base, Baseline::HK);
+        let tr = gemm(&arch(), &base, Baseline::Triton);
+        let ratio = hk.tflops / tr.tflops;
+        assert!(ratio > 1.25 && ratio < 3.5, "HK/Triton = {ratio}");
+    }
+
+    #[test]
+    fn hk_competitive_with_aiter_gemm() {
+        let base = GemmConfig::bf16(8192, 8192, 8192);
+        let hk = gemm(&arch(), &base, Baseline::HK);
+        let ai = gemm(&arch(), &base, Baseline::Aiter);
+        let ratio = hk.tflops / ai.tflops;
+        assert!(ratio > 0.9 && ratio < 1.25, "HK/AITER = {ratio}");
+    }
+
+    #[test]
+    fn gqa_bwd_gap_is_large() {
+        // Paper: HK outperforms baselines by 1.8-2.5x on GQA backwards.
+        let base = AttnConfig::gqa(8192, 128, false);
+        let hk = attn_bwd(&arch(), &base, Baseline::HK);
+        let ai = attn_bwd(&arch(), &base, Baseline::Aiter);
+        let pt = attn_bwd(&arch(), &base, Baseline::PyTorch);
+        assert!(
+            hk.tflops / ai.tflops > 1.5,
+            "HK/AITER gqa-bwd = {}",
+            hk.tflops / ai.tflops
+        );
+        assert!(
+            hk.tflops / pt.tflops > 2.0,
+            "HK/PyTorch gqa-bwd = {}",
+            hk.tflops / pt.tflops
+        );
+    }
+
+    #[test]
+    fn mha_bwd_competitive_with_aiter() {
+        let base = AttnConfig::mha(8192, 128, false);
+        let mut cfg4 = base;
+        cfg4.pattern = Pattern::Interleave4;
+        let hk = attn_bwd(&arch(), &cfg4, Baseline::HK);
+        let ai = attn_bwd(&arch(), &base, Baseline::Aiter);
+        let ratio = hk.tflops / ai.tflops;
+        assert!(ratio > 0.8 && ratio < 1.3, "HK/AITER mha-bwd = {ratio}");
+    }
+
+    #[test]
+    fn mojo_attention_at_half_of_hk() {
+        let base = AttnConfig::mha(8192, 128, false);
+        let hk = attn_fwd(&arch(), &base, Baseline::HK);
+        let mj = attn_fwd(&arch(), &base, Baseline::Mojo);
+        let ratio = mj.tflops / hk.tflops;
+        assert!(ratio > 0.3 && ratio < 0.8, "Mojo/HK = {ratio}");
+    }
+
+    #[test]
+    fn torch_compile_ln_slower_than_hk() {
+        let base = FusedLnConfig::paper(4096);
+        let hk = fused_ln(&arch(), &base, Baseline::HK);
+        let tc = fused_ln(&arch(), &base, Baseline::TorchCompile);
+        let ratio = hk.eff_bw_tbps / tc.eff_bw_tbps;
+        assert!(ratio > 1.1 && ratio < 2.5, "HK/torch.compile = {ratio}");
+    }
+}

@@ -1,0 +1,483 @@
+//! HK GEMM kernels on the simulator (paper listing E.1, Figs. 6/14,
+//! Tables 2/3/4, App. F for FP6).
+//!
+//! A `GemmConfig` describes the problem and the implementation choices the
+//! paper studies: scheduling pattern, register mode, grid order, block
+//! shape. `build_spec` lowers it to the pattern-independent `LoopSpec`
+//! (the HK source), `simulate` runs it through the cost model.
+
+use crate::hk::chiplet::ChipletSwizzle;
+use crate::hk::costmodel::{evaluate_gemm, KernelPerf};
+use crate::hk::regalloc::{allocate, AllocResult, RegMode, TileDemand};
+use crate::hk::schedule::{BuiltSchedule, Cluster, LoopSpec};
+use crate::hk::{interleave, pingpong, wavespec};
+use crate::sim::arch::{Arch, Dtype, MfmaShape};
+use crate::sim::cache::{row_major_order, GemmGrid};
+use crate::sim::instr::Instr;
+use crate::sim::lds::DsInstr;
+
+/// Scheduling pattern selector (Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    PingPong8,
+    Interleave4,
+    /// NVIDIA-style producer/consumer (Table 2).
+    WaveSpec { producers: u32, consumers: u32 },
+}
+
+impl Pattern {
+    pub fn waves(&self) -> u32 {
+        match self {
+            Pattern::PingPong8 => 8,
+            Pattern::Interleave4 => 4,
+            Pattern::WaveSpec { producers, consumers } => producers + consumers,
+        }
+    }
+
+    /// Waves that contribute output computation.
+    pub fn compute_waves(&self) -> u32 {
+        match self {
+            Pattern::PingPong8 => 8,
+            Pattern::Interleave4 => 4,
+            Pattern::WaveSpec { consumers, .. } => *consumers,
+        }
+    }
+}
+
+/// Grid-order selector (Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridOrder {
+    RowMajor,
+    Chiplet { window: u32, chunk: u32 },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct GemmConfig {
+    pub m: u32,
+    pub n: u32,
+    pub k: u32,
+    pub dtype: Dtype,
+    pub block_m: u32,
+    pub block_n: u32,
+    pub block_k: u32,
+    pub pattern: Pattern,
+    pub reg_mode: RegMode,
+    pub grid: GridOrder,
+    /// LDS bank-conflict ways on the shared->register loads (1 with HK's
+    /// solved swizzles; >1 models naive/compiler layouts).
+    pub lds_ways: u32,
+    /// Extra per-iteration VALU shuffle cycles (the FP6 load-path cost of
+    /// App. F; 0 for bf16/fp8). These sit on the MFMA dependency path
+    /// (operand staging), like `v_accvgpr_read`.
+    pub shuffle_cycles: u64,
+    /// Bytes/element actually moved through the memory system, when it
+    /// differs from the packed dtype width. FP6's buffer_load_dwordx3
+    /// plan loads 12 bytes at a 16-byte stride, wasting 25% of bandwidth
+    /// and LDS (App. F) -> 1.0 B/elem moved for a 0.75 B/elem dtype.
+    pub traffic_elem_bytes: Option<f64>,
+}
+
+impl GemmConfig {
+    /// The paper's default MI355X BF16 GEMM: 256x256 output tile, K step
+    /// 64, 8-wave ping-pong, chiplet swizzle, pinned registers.
+    pub fn bf16(m: u32, n: u32, k: u32) -> Self {
+        GemmConfig {
+            m,
+            n,
+            k,
+            dtype: Dtype::Bf16,
+            block_m: 256,
+            block_n: 256,
+            block_k: 64,
+            pattern: Pattern::PingPong8,
+            reg_mode: RegMode::Pinned,
+            grid: GridOrder::Chiplet { window: 8, chunk: 64 },
+            lds_ways: 1,
+            shuffle_cycles: 0,
+            traffic_elem_bytes: None,
+        }
+    }
+
+    /// FP8 GEMM (K step doubles at equal LDS bytes).
+    pub fn fp8(m: u32, n: u32, k: u32) -> Self {
+        GemmConfig {
+            dtype: Dtype::Fp8,
+            block_k: 128,
+            ..Self::bf16(m, n, k)
+        }
+    }
+
+    /// FP6 GEMM (App. F): ds_read_b96 path with the dwordx3 load plan and
+    /// the v_mov shuffle overhead.
+    pub fn fp6(m: u32, n: u32, k: u32) -> Self {
+        GemmConfig {
+            dtype: Dtype::Fp6,
+            block_k: 256,
+            shuffle_cycles: 24,
+            traffic_elem_bytes: Some(1.0),
+            ..Self::bf16(m, n, k)
+        }
+    }
+
+    pub fn elem_bytes(&self) -> f64 {
+        self.dtype.bytes_f()
+    }
+
+    /// Bytes/element moved through caches/HBM (>= packed width).
+    pub fn traffic_bytes(&self) -> f64 {
+        self.traffic_elem_bytes.unwrap_or_else(|| self.elem_bytes())
+    }
+
+    pub fn tiles_m(&self) -> u32 {
+        self.m.div_ceil(self.block_m)
+    }
+
+    pub fn tiles_n(&self) -> u32 {
+        self.n.div_ceil(self.block_n)
+    }
+
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+}
+
+/// Register demand of the GEMM per compute wave (drives Table 2).
+pub fn reg_demand(arch: &Arch, cfg: &GemmConfig) -> (Vec<TileDemand>, AllocResult) {
+    let waves = cfg.pattern.compute_waves();
+    let out_elems = (cfg.block_m as u64 * cfg.block_n as u64) / waves as u64;
+    let acc_regs = (out_elems / 64) as u32; // f32 accumulator
+    // one stage of A and B fragments in registers
+    let m_frac = cfg.block_m as u64 / (waves as u64 / 4).max(1) / 4;
+    let a_regs = ((m_frac * cfg.block_k as u64) as f64 * cfg.elem_bytes()
+        / 256.0)
+        .ceil() as u32;
+    let b_regs = (((cfg.block_n as u64 / 4) * cfg.block_k as u64) as f64
+        * cfg.elem_bytes()
+        / 256.0)
+        .ceil() as u32;
+    let tiles = vec![
+        TileDemand { regs: acc_regs, mfma_operand: false, mfma_uses_per_iter: 0 },
+        TileDemand {
+            regs: a_regs,
+            mfma_operand: true,
+            mfma_uses_per_iter: 2,
+        },
+        TileDemand {
+            regs: b_regs,
+            mfma_operand: true,
+            mfma_uses_per_iter: 2,
+        },
+        // addressing / misc
+        TileDemand { regs: 16, mfma_operand: false, mfma_uses_per_iter: 0 },
+    ];
+    let waves_per_simd = cfg.pattern.waves().div_ceil(arch.simds_per_cu);
+    let alloc = allocate(arch, waves_per_simd, cfg.reg_mode, &tiles);
+    (tiles, alloc)
+}
+
+/// Lower a GEMM config to the HK LoopSpec (the kernel "source").
+pub fn build_spec(arch: &Arch, cfg: &GemmConfig) -> LoopSpec {
+    let shape: MfmaShape = arch.fastest_shape(cfg.dtype);
+    let mfma_cycles_shape = shape; // readability
+    let waves = cfg.pattern.compute_waves().max(1);
+    let (_, alloc) = reg_demand(arch, cfg);
+
+    // per compute-wave, per k-iteration
+    let out_elems = (cfg.block_m as u64 * cfg.block_n as u64) / waves as u64;
+    let flops_per_wave_iter = 2 * out_elems * cfg.block_k as u64;
+    let mfma_count =
+        (flops_per_wave_iter / mfma_cycles_shape.flops()).max(1) as u32;
+
+    // 4 pipeline stages (the E.1 quadrant clusters); huge NVIDIA-style
+    // MMAs may need fewer stages than quadrants
+    let stages = 4u32.min(mfma_count).max(1);
+    let mfma_per_stage = mfma_count.div_ceil(stages);
+
+    // shared->register loads per stage: one A or B fragment
+    let frag_bytes = (cfg.block_m.max(cfg.block_n) as u64 / 2) as f64
+        * cfg.block_k as f64
+        * cfg.elem_bytes()
+        / waves as f64;
+    let ds_instr = match cfg.dtype {
+        Dtype::Fp6 => DsInstr::ReadB96,
+        _ => DsInstr::ReadB128,
+    };
+    let ds_width = (ds_instr.bits() / 8) as f64;
+    let ds_count =
+        ((frag_bytes / 64.0 / ds_width).ceil() as u32).max(1);
+
+    // global->LDS loads per stage: half an input-tile slab, collaborative
+    let slab_bytes = (cfg.block_m as u64 + cfg.block_n as u64) as f64 / 2.0
+        * cfg.block_k as f64
+        * cfg.elem_bytes()
+        / cfg.pattern.waves() as f64;
+    let vmem_issues =
+        ((slab_bytes / 64.0 / 16.0).ceil() as u32).max(1);
+
+    let mut compute = Vec::new();
+    let mut memory = Vec::new();
+    for s in 0..stages {
+        let mut cops = vec![Instr::Mfma {
+            shape,
+            dtype: cfg.dtype,
+            count: mfma_per_stage,
+        }];
+        if alloc.acc_moves_per_iter > 0 {
+            // HIPCC staging of AGPR operands (paper §3.2.1 / Table 1)
+            cops.insert(
+                0,
+                Instr::AccMove { count: alloc.acc_moves_per_iter / stages },
+            );
+        }
+        if cfg.shuffle_cycles > 0 {
+            // FP6 register shuffle (App. F: v_mov_b32 + v_nop hazard pad)
+            // — operand staging on the MFMA dependency chain
+            cops.insert(
+                0,
+                Instr::AccMove { count: (cfg.shuffle_cycles / 2) as u32 },
+            );
+        }
+        compute.push(Cluster::new(
+            ["mma0", "mma1", "mma2", "mma3"][s as usize],
+            cops,
+        ));
+        let mut mops = vec![
+            Instr::DsRead {
+                instr: ds_instr,
+                conflict_ways: cfg.lds_ways,
+                count: ds_count,
+            },
+            Instr::VMemLoad {
+                bytes: slab_bytes as u64,
+                to_lds: true,
+                issues: vmem_issues,
+            },
+        ];
+        if alloc.spilled > 0 {
+            // scratch traffic for spilled registers (App. F HIPCC FP6):
+            // 4 B x 64 lanes per register, part of the set each stage
+            let scratch = alloc.spilled as u64 * 256 / stages as u64;
+            mops.push(Instr::VMemLoad {
+                bytes: scratch,
+                to_lds: false,
+                issues: 2,
+            });
+            mops.push(Instr::VMemStore { bytes: scratch, issues: 2 });
+        }
+        memory.push(Cluster::new(
+            ["ld0", "ld1", "ld2", "ld3"][s as usize],
+            mops,
+        ));
+    }
+
+    // prologue: preload two k-slabs (double buffer fill)
+    let preload_bytes = (cfg.block_m as u64 + cfg.block_n as u64) as f64
+        * cfg.block_k as f64
+        * cfg.elem_bytes()
+        / cfg.pattern.waves() as f64;
+    let prologue = vec![Instr::VMemLoad {
+        bytes: (2.0 * preload_bytes) as u64,
+        to_lds: true,
+        issues: 2 * vmem_issues,
+    }];
+
+    // epilogue: store this wave's share of C
+    let store_bytes =
+        out_elems as f64 * cfg.elem_bytes().max(2.0);
+    let epilogue = vec![Instr::VMemStore {
+        bytes: store_bytes as u64,
+        issues: ((store_bytes / 64.0 / 16.0).ceil() as u32).max(1),
+    }];
+
+    LoopSpec {
+        name: format!(
+            "gemm-{:?}-{}x{}x{}",
+            cfg.dtype, cfg.m, cfg.n, cfg.k
+        ),
+        prologue,
+        compute,
+        memory,
+        iters: cfg.k / cfg.block_k,
+        epilogue,
+    }
+}
+
+/// Build the block program under the configured pattern.
+pub fn build(arch: &Arch, cfg: &GemmConfig) -> BuiltSchedule {
+    let spec = build_spec(arch, cfg);
+    match cfg.pattern {
+        Pattern::PingPong8 => pingpong::build(&spec),
+        Pattern::Interleave4 => interleave::build(&spec),
+        Pattern::WaveSpec { producers, consumers } => {
+            wavespec::build(&spec, producers, consumers)
+        }
+    }
+}
+
+/// The dispatch-order grid schedule.
+pub fn grid_order(arch: &Arch, cfg: &GemmConfig) -> Vec<(u32, u32)> {
+    match cfg.grid {
+        GridOrder::RowMajor => row_major_order(cfg.tiles_m(), cfg.tiles_n()),
+        GridOrder::Chiplet { window, chunk } => {
+            ChipletSwizzle::new(arch.n_xcds, window, chunk)
+                .schedule(cfg.tiles_m(), cfg.tiles_n())
+        }
+    }
+}
+
+/// Full simulation: returns the paper-comparable TFLOPS + cache stats.
+pub fn simulate(arch: &Arch, cfg: &GemmConfig) -> KernelPerf {
+    let built = build(arch, cfg);
+    let grid = GemmGrid {
+        m: cfg.m,
+        n: cfg.n,
+        k: cfg.k,
+        block_m: cfg.block_m,
+        block_n: cfg.block_n,
+        block_k: cfg.block_k,
+        elem_bytes: cfg.traffic_bytes(),
+    };
+    let order = grid_order(arch, cfg);
+    let name = format!(
+        "gemm {:?} {}^3 {:?}",
+        cfg.dtype, cfg.m, cfg.pattern
+    );
+    evaluate_gemm(arch, &name, &built, &grid, &order, cfg.flops())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a() -> Arch {
+        Arch::mi355x()
+    }
+
+    #[test]
+    fn bf16_8192_lands_near_paper_range() {
+        // Paper Table 2: best HK 0P/8C 256x256 kernel = 1610 TFLOPS.
+        let perf = simulate(&a(), &GemmConfig::bf16(8192, 8192, 8192));
+        assert!(
+            perf.tflops > 1200.0 && perf.tflops < 2100.0,
+            "bf16 gemm {} TFLOPS",
+            perf.tflops
+        );
+    }
+
+    #[test]
+    fn fp8_roughly_doubles_bf16() {
+        let bf = simulate(&a(), &GemmConfig::bf16(8192, 8192, 8192));
+        let f8 = simulate(&a(), &GemmConfig::fp8(8192, 8192, 8192));
+        let ratio = f8.tflops / bf.tflops;
+        assert!(ratio > 1.5 && ratio < 2.4, "fp8/bf16 = {ratio}");
+    }
+
+    #[test]
+    fn bank_conflicts_hurt_compute_side() {
+        // conflicts serialize the LDS pipe: the compute-side time of the
+        // block must grow even when the kernel is externally mem-bound
+        let clean = simulate(&a(), &GemmConfig::bf16(4096, 4096, 4096));
+        let dirty = simulate(
+            &a(),
+            &GemmConfig { lds_ways: 16, ..GemmConfig::bf16(4096, 4096, 4096) },
+        );
+        assert!(
+            dirty.compute_s > clean.compute_s * 1.5,
+            "{} !> 1.5x {}",
+            dirty.compute_s,
+            clean.compute_s
+        );
+    }
+
+    #[test]
+    fn chiplet_swizzle_l2_only_pathology_at_9216() {
+        // Table 4 @9216: optimizing L2 alone (W7/C216) tanks LLC reuse and
+        // loses to both row-major and the joint W5/C25 schedule.
+        let base = GemmConfig {
+            block_m: 192,
+            block_n: 256,
+            ..GemmConfig::bf16(9216, 9216, 9216)
+        };
+        let rm = simulate(&a(), &GemmConfig { grid: GridOrder::RowMajor, ..base });
+        let l2only = simulate(
+            &a(),
+            &GemmConfig { grid: GridOrder::Chiplet { window: 7, chunk: 216 }, ..base },
+        );
+        let joint = simulate(
+            &a(),
+            &GemmConfig { grid: GridOrder::Chiplet { window: 5, chunk: 25 }, ..base },
+        );
+        assert!(l2only.l2_hit > rm.l2_hit, "W7/C216 must maximize L2");
+        assert!(l2only.llc_hit < 0.5, "and tank LLC: {}", l2only.llc_hit);
+        assert!(
+            joint.tflops > l2only.tflops,
+            "joint {} !> l2-only {}",
+            joint.tflops,
+            l2only.tflops
+        );
+        assert!(joint.tflops > rm.tflops * 0.97, "joint must not lose to RM");
+    }
+
+    #[test]
+    fn chiplet_swizzle_beats_row_major_at_14592() {
+        // Table 4 @14592 (57 tiles, coprime with 8 XCDs — the worst-case
+        // default schedule): W8/C64 wins big (paper 900 -> 1068).
+        let base = GemmConfig {
+            block_m: 192,
+            block_n: 256,
+            ..GemmConfig::bf16(14592, 14592, 14592)
+        };
+        let rm = simulate(&a(), &GemmConfig { grid: GridOrder::RowMajor, ..base });
+        let sw = simulate(
+            &a(),
+            &GemmConfig { grid: GridOrder::Chiplet { window: 8, chunk: 64 }, ..base },
+        );
+        assert!(
+            sw.tflops > rm.tflops * 1.05,
+            "swizzle {} !> 1.05x row-major {}",
+            sw.tflops,
+            rm.tflops
+        );
+        assert!(sw.l2_hit > rm.l2_hit + 0.2, "{} vs {}", sw.l2_hit, rm.l2_hit);
+    }
+
+    #[test]
+    fn wave_spec_underperforms_no_producers() {
+        // Table 2's core finding.
+        let m = 8192;
+        let zero_p = simulate(&a(), &GemmConfig::bf16(m, m, m));
+        let with_p = simulate(
+            &a(),
+            &GemmConfig {
+                pattern: Pattern::WaveSpec { producers: 4, consumers: 8 },
+                block_m: 192, // register budget forces the smaller tile
+                ..GemmConfig::bf16(m, m, m)
+            },
+        );
+        assert!(
+            with_p.tflops < zero_p.tflops * 0.95,
+            "wavespec {} !< pingpong {}",
+            with_p.tflops,
+            zero_p.tflops
+        );
+    }
+
+    #[test]
+    fn fp6_pinned_avoids_spills() {
+        let m = 8192;
+        let pinned = simulate(&a(), &GemmConfig::fp6(m, m, m));
+        let hipcc = simulate(
+            &a(),
+            &GemmConfig {
+                reg_mode: RegMode::CompilerManaged,
+                ..GemmConfig::fp6(m, m, m)
+            },
+        );
+        assert!(
+            pinned.tflops >= hipcc.tflops,
+            "pinned {} < hipcc {}",
+            pinned.tflops,
+            hipcc.tflops
+        );
+    }
+}

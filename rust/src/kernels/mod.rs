@@ -1,0 +1,20 @@
+//! The HK kernel suite on the simulated substrate, plus behavioural
+//! baseline models — everything the paper's evaluation section benchmarks.
+//!
+//! - [`gemm`] — BF16/FP8/FP6 GEMM (listing E.1, Figs. 6/14/24,
+//!   Tables 2/3/4, App. F).
+//! - [`attention`] — attention forward/backward, MHA/GQA,
+//!   causal/non-causal (listing E.3, Figs. 7/8/15/16/17, Tables 1/3).
+//! - [`membound`] — fused dropout-residual-layernorm + RoPE (Fig. 9,
+//!   listing E.2).
+//! - [`baselines`] — AITER/CK/hipBLASLt/Triton/PyTorch/Mojo models.
+
+pub mod attention;
+pub mod baselines;
+pub mod gemm;
+pub mod membound;
+
+pub use attention::AttnConfig;
+pub use baselines::Baseline;
+pub use gemm::{GemmConfig, GridOrder, Pattern};
+pub use membound::{FusedLnConfig, RopeConfig};

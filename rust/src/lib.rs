@@ -1,0 +1,26 @@
+//! # HipKittens (reproduction)
+//!
+//! A three-layer reproduction of *"HipKittens: Fast and Furious AMD
+//! Kernels"* (Hu et al., 2025):
+//!
+//! - [`sim`] — a cycle-approximate CDNA3/CDNA4 GPU simulator (the
+//!   hardware substrate the paper's evaluation requires; see DESIGN.md
+//!   for the substitution rationale).
+//! - [`hk`] — the HipKittens programming framework: tiles, layouts,
+//!   swizzles, register pinning, the 8-wave ping-pong / 4-wave interleave
+//!   / wave-specialization scheduling patterns, and the chiplet-aware
+//!   grid swizzle (Algorithm 1).
+//! - [`kernels`] — the paper's kernel suite (GEMM BF16/FP8/FP6,
+//!   attention forward/backward, fused layernorm, RoPE) plus behavioural
+//!   baseline models (AITER, CK, hipBLASLt, Triton, PyTorch).
+//! - [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
+//!   artifacts (the numeric plane; python never runs at request time).
+//! - [`coordinator`] — the serving/training drivers built on the runtime.
+//! - [`report`] — regenerates every table and figure of the paper.
+
+pub mod coordinator;
+pub mod hk;
+pub mod kernels;
+pub mod report;
+pub mod runtime;
+pub mod sim;

@@ -1,0 +1,133 @@
+//! HipKittens CLI.
+//!
+//! Subcommands:
+//!   report <exp|all>      regenerate a paper table/figure (see DESIGN.md)
+//!   serve [--requests N] [--rate R]
+//!                         run the batching attention service on a
+//!                         Poisson trace (needs `make artifacts`)
+//!   train [--steps N] [--path kernels|reference]
+//!                         train the transformer through the AOT
+//!                         train_step artifact, logging the loss curve
+//!   artifacts             list artifact entries + shapes
+//!   solve                 print the phase/bank solver output (Table 5)
+//!
+//! Arg parsing is hand-rolled: the environment is offline and the repo is
+//! dependency-minimal (xla + anyhow).
+
+use anyhow::{anyhow, bail, Result};
+use hipkittens::coordinator::{
+    poisson_trace, BatchingService, Path, ServiceConfig, Trainer,
+};
+use hipkittens::runtime::Runtime;
+use hipkittens::{report, sim};
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn artifacts_dir() -> String {
+    std::env::var("HK_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("report") => {
+            let exp = args.get(1).map(String::as_str).unwrap_or("all");
+            if !report::run(exp) {
+                bail!(
+                    "unknown experiment {exp}; try table1..table5, fig5..fig24, all"
+                );
+            }
+        }
+        Some("serve") => {
+            let n: u64 = flag(&args, "--requests")
+                .map(|v| v.parse())
+                .transpose()?
+                .unwrap_or(64);
+            let rate: f64 = flag(&args, "--rate")
+                .map(|v| v.parse())
+                .transpose()?
+                .unwrap_or(200.0);
+            let mut rt = Runtime::new(artifacts_dir())?;
+            println!("platform: {}", rt.platform());
+            let mut svc = BatchingService::new(&mut rt, ServiceConfig::default())?;
+            let trace = poisson_trace(n, rate, 7);
+            let report = svc.run_trace(&trace)?;
+            println!("{}", report.summary());
+        }
+        Some("train") => {
+            let steps: u32 = flag(&args, "--steps")
+                .map(|v| v.parse())
+                .transpose()?
+                .unwrap_or(50);
+            let path = match flag(&args, "--path").as_deref() {
+                Some("reference") => Path::Reference,
+                _ => Path::Kernels,
+            };
+            let mut rt = Runtime::new(artifacts_dir())?;
+            let mut tr = Trainer::new(&mut rt, 0)?;
+            println!(
+                "training {} params for {steps} steps ({:?} path)",
+                tr.flat.len(),
+                path
+            );
+            let losses = tr.train(path, steps, |s, l| {
+                if s % 10 == 0 {
+                    println!("step {s:>4}  loss {l:.4}");
+                }
+            })?;
+            println!(
+                "final loss {:.4} (from {:.4})",
+                losses.last().copied().unwrap_or(f32::NAN),
+                losses.first().copied().unwrap_or(f32::NAN)
+            );
+        }
+        Some("artifacts") => {
+            let rt = Runtime::new(artifacts_dir())?;
+            for e in &rt.manifest.entries {
+                println!(
+                    "{:<18} in={:?} out={:?}",
+                    e.name,
+                    e.inputs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>(),
+                    e.outputs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>()
+                );
+            }
+        }
+        Some("solve") => report::table5(),
+        Some("arch") => {
+            for a in [
+                sim::Arch::mi355x(),
+                sim::Arch::mi350x(),
+                sim::Arch::mi325x(),
+                sim::Arch::b200_like(),
+            ] {
+                println!(
+                    "{:<8} {:>4} CUs  bf16 {:>6.0} TF  fp8 {:>6.0} TF  fp6 {:>7.0} TF",
+                    a.name,
+                    a.total_cus(),
+                    a.peak_tflops(sim::Dtype::Bf16),
+                    a.peak_tflops(sim::Dtype::Fp8),
+                    a.peak_tflops(sim::Dtype::Fp6),
+                );
+            }
+        }
+        other => {
+            let exe = "hipkittens";
+            if let Some(o) = other {
+                eprintln!("unknown command {o:?}\n");
+            }
+            eprintln!("usage: {exe} report <exp|all>");
+            eprintln!("       {exe} serve [--requests N] [--rate R]");
+            eprintln!("       {exe} train [--steps N] [--path kernels|reference]");
+            eprintln!("       {exe} artifacts | solve | arch");
+            if other.is_some() {
+                return Err(anyhow!("bad usage"));
+            }
+        }
+    }
+    Ok(())
+}

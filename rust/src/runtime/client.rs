@@ -1,0 +1,176 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once, execute
+//! many times from the Rust hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. All entries are lowered with
+//! `return_tuple=True`, so outputs always arrive as one tuple literal.
+
+use super::manifest::{ArtDtype, Entry, Manifest, TensorSpec};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Input tensor at the runtime boundary.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    fn literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        if self.len() != spec.elems() {
+            bail!(
+                "tensor has {} elems, spec wants {:?} = {}",
+                self.len(),
+                spec.shape,
+                spec.elems()
+            );
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (self, spec.dtype) {
+            (Tensor::F32(v), ArtDtype::F32) => xla::Literal::vec1(v),
+            (Tensor::I32(v), ArtDtype::I32) => xla::Literal::vec1(v),
+            _ => bail!("tensor dtype does not match spec {:?}", spec.dtype),
+        };
+        if dims.is_empty() || dims.len() == 1 && dims[0] as usize == self.len() {
+            if dims.is_empty() {
+                return Ok(lit.reshape(&[])?);
+            }
+            return Ok(lit);
+        }
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    pub entry: Entry,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative execution stats.
+    pub calls: std::cell::Cell<u64>,
+    pub total_s: std::cell::Cell<f64>,
+}
+
+impl Executable {
+    /// Execute with boundary tensors; returns one Tensor per output.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.entry.inputs.len() {
+            bail!(
+                "{} takes {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&self.entry.inputs)
+            .map(|(t, s)| t.literal(s))
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.calls.set(self.calls.get() + 1);
+        self.total_s.set(self.total_s.get() + dt);
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .zip(&self.entry.outputs)
+            .map(|(lit, spec)| {
+                Ok(match spec.dtype {
+                    ArtDtype::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+                    ArtDtype::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+                })
+            })
+            .collect()
+    }
+
+    /// Mean latency over all calls so far, seconds.
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.calls.get() == 0 {
+            0.0
+        } else {
+            self.total_s.get() / self.calls.get() as f64
+        }
+    }
+}
+
+/// The runtime: a PJRT CPU client plus compiled artifacts.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create against an artifacts directory (compiles lazily).
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { manifest, client, compiled: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch) an entry by name.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.compiled.contains_key(name) {
+            let entry = self.manifest.entry(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .map_err(|e| {
+                    anyhow!("parsing {}: {e:?}", entry.file.display())
+                })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))
+                .with_context(|| format!("artifact {name}"))?;
+            self.compiled.insert(
+                name.to_string(),
+                Executable {
+                    entry,
+                    exe,
+                    calls: std::cell::Cell::new(0),
+                    total_s: std::cell::Cell::new(0.0),
+                },
+            );
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Convenience: load + run.
+    pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?;
+        self.compiled[name].run(inputs)
+    }
+
+    /// Names of all manifest entries.
+    pub fn entry_names(&self) -> Vec<String> {
+        self.manifest.entries.iter().map(|e| e.name.clone()).collect()
+    }
+}

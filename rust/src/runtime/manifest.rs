@@ -1,0 +1,168 @@
+//! Typed view of `artifacts/manifest.json` (written by `compile/aot.py`).
+
+use super::json::{parse, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor dtype at the runtime boundary (artifacts keep the boundary
+/// simple: f32 data, i32 tokens).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtDtype {
+    F32,
+    I32,
+}
+
+impl ArtDtype {
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(ArtDtype::F32),
+            "int32" => Ok(ArtDtype::I32),
+            other => Err(anyhow!("unsupported artifact dtype {other}")),
+        }
+    }
+}
+
+/// Shape + dtype of one input/output.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: ArtDtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|d| d.as_u64().unwrap_or(0) as usize)
+            .collect();
+        let dtype = ArtDtype::from_str(
+            j.get("dtype").and_then(|d| d.as_str()).unwrap_or("float32"),
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl Entry {
+    pub fn meta_u64(&self, key: &str) -> Option<u64> {
+        self.meta.get(key).and_then(|v| v.parse::<f64>().ok()).map(|f| f as u64)
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = parse(&text)?;
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let file = dir.join(
+                e.get("file").and_then(|f| f.as_str()).unwrap_or_default(),
+            );
+            let spec_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.get(key)
+                    .and_then(|l| l.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let mut meta = BTreeMap::new();
+            if let Some(Json::Obj(m)) = e.get("meta") {
+                for (k, v) in m {
+                    let s = match v {
+                        Json::Str(s) => s.clone(),
+                        Json::Num(n) => super::json::fmt_f64(*n),
+                        Json::Bool(b) => b.to_string(),
+                        other => format!("{other:?}"),
+                    };
+                    meta.insert(k.clone(), s);
+                }
+            }
+            entries.push(Entry {
+                name,
+                file,
+                inputs: spec_list("inputs")?,
+                outputs: spec_list("outputs")?,
+                meta,
+            });
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no artifact entry named {name}"))
+    }
+
+    /// The directory exists and has a manifest (used by tests to skip
+    /// gracefully when `make artifacts` hasn't run).
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.json").exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_manifest_from_temp_dir() {
+        let dir = std::env::temp_dir().join("hk_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"entries": [{"name": "x", "file": "x.hlo.txt",
+                "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+                "outputs": [{"shape": [6], "dtype": "int32"}],
+                "meta": {"kind": "test", "n_params": 42}}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.entry("x").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![2, 3]);
+        assert_eq!(e.inputs[0].elems(), 6);
+        assert_eq!(e.outputs[0].dtype, ArtDtype::I32);
+        assert_eq!(e.meta_u64("n_params"), Some(42));
+        assert!(m.entry("y").is_err());
+        assert!(Manifest::available(&dir));
+    }
+}

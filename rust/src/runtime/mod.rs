@@ -1,0 +1,19 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them
+//! from Rust. Python never runs on this path — `make artifacts` is the
+//! only compile-time step.
+//!
+//! - [`json`] — a minimal JSON parser for the artifact manifest (the
+//!   environment is offline; we build the substrate ourselves).
+//! - [`manifest`] — typed view of `artifacts/manifest.json`.
+//! - [`client`] — PJRT CPU client wrapper: compile once, execute many.
+//! - [`rng`] — a small deterministic PRNG (xoshiro-style) for synthetic
+//!   workloads on the request path.
+
+pub mod client;
+pub mod json;
+pub mod manifest;
+pub mod rng;
+
+pub use client::{Executable, Runtime, Tensor};
+pub use manifest::{Entry, Manifest, TensorSpec};
+pub use rng::Rng;

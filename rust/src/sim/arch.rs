@@ -1,0 +1,362 @@
+//! Architecture descriptions for the simulated GPUs.
+//!
+//! The paper evaluates on AMD MI355X (CDNA4) and MI325X/MI350X (CDNA3/4),
+//! with NVIDIA B200/H100 appearing as context (Table 2, Figure 19). Each
+//! `Arch` captures exactly the parameters the paper's results hinge on:
+//! chiplet topology (XCDs), static register partitioning, LDS capacity,
+//! MFMA shapes/latencies, cache capacities and the Eq.(1) bandwidth terms.
+
+
+/// GPU generation / ISA family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gen {
+    /// AMD CDNA3 (MI300X / MI325X).
+    Cdna3,
+    /// AMD CDNA4 (MI350X / MI355X).
+    Cdna4,
+    /// NVIDIA Blackwell-like (for the Table 2 / Fig 19 context rows).
+    B200Like,
+    /// NVIDIA Hopper-like.
+    H100Like,
+}
+
+/// Numeric formats supported by the matrix cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    Bf16,
+    Fp16,
+    Fp8,
+    Fp6,
+    Fp4,
+}
+
+impl Dtype {
+    /// Bytes per element as stored in HBM / LDS. FP6 is sub-byte: 6 bits.
+    pub fn bits(self) -> u32 {
+        match self {
+            Dtype::F32 => 32,
+            Dtype::Bf16 | Dtype::Fp16 => 16,
+            Dtype::Fp8 => 8,
+            Dtype::Fp6 => 6,
+            Dtype::Fp4 => 4,
+        }
+    }
+
+    pub fn bytes_f(self) -> f64 {
+        self.bits() as f64 / 8.0
+    }
+}
+
+/// A matrix-core (MFMA) instruction shape `M x N x K`.
+///
+/// AMD shapes lack the compositional 16x16 core-matrix structure of NVIDIA
+/// MMA shapes (paper §3.2.2) — each entry here carries its own register
+/// layout metadata (see `hk::layout`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MfmaShape {
+    pub m: u32,
+    pub n: u32,
+    pub k: u32,
+}
+
+impl MfmaShape {
+    pub const fn new(m: u32, n: u32, k: u32) -> Self {
+        Self { m, n, k }
+    }
+
+    /// FLOPs performed by one wave-level MFMA instruction.
+    pub fn flops(&self) -> u64 {
+        2 * self.m as u64 * self.n as u64 * self.k as u64
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{}x{}", self.m, self.n, self.k)
+    }
+}
+
+/// Common CDNA4 shapes (paper Fig. 3 / §3.3.1 "Tradeoffs").
+pub const MFMA_16X16X32: MfmaShape = MfmaShape::new(16, 16, 32);
+pub const MFMA_32X32X16: MfmaShape = MfmaShape::new(32, 32, 16);
+pub const MFMA_16X16X128: MfmaShape = MfmaShape::new(16, 16, 128); // f8f6f4
+pub const MFMA_16X16X64: MfmaShape = MfmaShape::new(16, 16, 64); // fp8 CDNA4
+pub const MFMA_32X32X64: MfmaShape = MfmaShape::new(32, 32, 64); // fp8 CDNA4
+/// NVIDIA-style large async MMA used by TK / CUTLASS on B200 (Table 2).
+pub const MMA_256X256X16: MfmaShape = MfmaShape::new(256, 256, 16);
+
+/// Full architecture description.
+#[derive(Debug, Clone)]
+pub struct Arch {
+    pub name: &'static str,
+    pub gen: Gen,
+    /// Number of accelerator complex dies (chiplets).
+    pub n_xcds: u32,
+    /// Compute units per XCD (32 on CDNA4, 38 on CDNA3).
+    pub cus_per_xcd: u32,
+    /// SIMD units per CU (4 on CDNA).
+    pub simds_per_cu: u32,
+    /// 32-bit registers per SIMD, statically partitioned across resident
+    /// waves (512 on CDNA; paper §3.3.1).
+    pub regs_per_simd: u32,
+    /// LDS (shared memory) bytes per CU. 64 KiB CDNA3, 160 KiB CDNA4.
+    pub lds_bytes: u32,
+    /// Shader clock in GHz.
+    pub clock_ghz: f64,
+    /// Per-XCD L2 capacity in bytes (4 MiB on CDNA4).
+    pub l2_bytes: u64,
+    /// GPU-wide last-level (Infinity) cache bytes (256 MiB on MI3xx).
+    pub llc_bytes: u64,
+    /// HBM bandwidth, TB/s.
+    pub hbm_tbps: f64,
+    /// Aggregate L2 bandwidth, TB/s (paper: roughly 3x the LLC bandwidth).
+    pub l2_tbps: f64,
+    /// Aggregate LLC bandwidth, TB/s.
+    pub llc_tbps: f64,
+    /// L2 hit latency in cycles.
+    pub l2_lat: u64,
+    /// LLC hit latency in cycles (L2 miss penalty ~300ns, paper §3.4).
+    pub llc_lat: u64,
+    /// HBM latency in cycles (LLC miss penalty ~500ns).
+    pub hbm_lat: u64,
+    /// LDS access base latency in cycles.
+    pub lds_lat: u64,
+}
+
+impl Arch {
+    /// AMD MI355X — CDNA4, 256 CUs in 8 XCDs (paper §2.1, Table "Fig 2").
+    pub fn mi355x() -> Self {
+        Arch {
+            name: "MI355X",
+            gen: Gen::Cdna4,
+            n_xcds: 8,
+            cus_per_xcd: 32,
+            simds_per_cu: 4,
+            regs_per_simd: 512,
+            lds_bytes: 160 * 1024,
+            clock_ghz: 2.4,
+            l2_bytes: 4 * 1024 * 1024,
+            llc_bytes: 256 * 1024 * 1024,
+            hbm_tbps: 8.0,
+            // effective concurrent-load bandwidths fitted to the paper's
+            // own Table 4 rows (solving Eq. (1) for the two MI355X
+            // schedules): L2 ~16.3, LLC ~14.3 TB/s
+            l2_tbps: 16.3,
+            llc_tbps: 14.3,
+            l2_lat: 220,
+            llc_lat: 720,
+            hbm_lat: 1250,
+            lds_lat: 56,
+        }
+    }
+
+    /// AMD MI350X — CDNA4 at slightly lower clock (air-cooled sibling).
+    pub fn mi350x() -> Self {
+        Arch { name: "MI350X", clock_ghz: 2.2, ..Self::mi355x() }
+    }
+
+    /// AMD MI325X — CDNA3: 304 CUs in 8 XCDs of 38, 64 KiB LDS, HBM3e.
+    pub fn mi325x() -> Self {
+        Arch {
+            name: "MI325X",
+            gen: Gen::Cdna3,
+            n_xcds: 8,
+            cus_per_xcd: 38,
+            simds_per_cu: 4,
+            regs_per_simd: 512,
+            lds_bytes: 64 * 1024,
+            clock_ghz: 2.1,
+            l2_bytes: 4 * 1024 * 1024,
+            llc_bytes: 256 * 1024 * 1024,
+            hbm_tbps: 6.0,
+            l2_tbps: 12.0,
+            llc_tbps: 10.0,
+            l2_lat: 240,
+            llc_lat: 780,
+            hbm_lat: 1350,
+            lds_lat: 64,
+        }
+    }
+
+    /// NVIDIA B200-like context arch (Table 2 / Fig 19 rows). Modeled as a
+    /// 2-chiplet part with large SMEM per processor and register
+    /// reallocation (producers can donate registers — see `hk::wavespec`).
+    pub fn b200_like() -> Self {
+        Arch {
+            name: "B200",
+            gen: Gen::B200Like,
+            n_xcds: 2,
+            cus_per_xcd: 74, // 148 SMs
+            simds_per_cu: 4,
+            regs_per_simd: 512, // 64K regs/SM  / 4 quadrants / 32 lanes
+            lds_bytes: 227 * 1024,
+            clock_ghz: 1.8,
+            l2_bytes: 63 * 1024 * 1024,
+            llc_bytes: 126 * 1024 * 1024,
+            hbm_tbps: 8.0,
+            l2_tbps: 18.0,
+            llc_tbps: 9.0,
+            l2_lat: 230,
+            llc_lat: 600,
+            hbm_lat: 1100,
+            lds_lat: 30,
+        }
+    }
+
+    /// NVIDIA H100-like (Fig 19 left panel).
+    pub fn h100_like() -> Self {
+        Arch {
+            name: "H100",
+            gen: Gen::H100Like,
+            n_xcds: 1,
+            cus_per_xcd: 132,
+            simds_per_cu: 4,
+            regs_per_simd: 512,
+            lds_bytes: 227 * 1024,
+            clock_ghz: 1.6,
+            l2_bytes: 50 * 1024 * 1024,
+            llc_bytes: 50 * 1024 * 1024,
+            hbm_tbps: 3.35,
+            l2_tbps: 12.0,
+            llc_tbps: 12.0,
+            l2_lat: 260,
+            llc_lat: 260,
+            hbm_lat: 1000,
+            lds_lat: 30,
+        }
+    }
+
+    pub fn total_cus(&self) -> u32 {
+        self.n_xcds * self.cus_per_xcd
+    }
+
+    /// MFMA issue-to-issue occupancy of the matrix pipe, in cycles, for a
+    /// given shape+dtype. Calibrated so that back-to-back issue reaches the
+    /// published peak FLOPs (e.g. 16x16x32 bf16 every 16 cycles on 1024
+    /// SIMDs at 2.4 GHz = 2.5 PFLOPS on MI355X).
+    pub fn mfma_cycles(&self, shape: MfmaShape, dtype: Dtype) -> u64 {
+        match self.gen {
+            Gen::Cdna3 | Gen::Cdna4 => {
+                // MACs per lane per cycle: on CDNA4 a bf16 MFMA retires
+                // 16x16x32 (16384 FLOPs) in 16 cycles on 64 lanes =>
+                // 8 MACs/lane/cy; CDNA3 matrix cores run bf16 at half that
+                // rate (MI325X peaks at 1.3 PF vs MI355X's 2.5 PF).
+                let cdna4 = self.gen == Gen::Cdna4;
+                let macs_per_cycle: f64 = match dtype {
+                    Dtype::F32 => if cdna4 { 2.0 } else { 1.0 },
+                    Dtype::Bf16 | Dtype::Fp16 => if cdna4 { 8.0 } else { 4.0 },
+                    Dtype::Fp8 => if cdna4 { 16.0 } else { 8.0 },
+                    Dtype::Fp6 | Dtype::Fp4 => if cdna4 { 32.0 } else { 8.0 },
+                };
+                let lanes = 64.0;
+                let cyc = (shape.m as f64 * shape.n as f64 * shape.k as f64)
+                    / (lanes * macs_per_cycle);
+                cyc.max(4.0).round() as u64
+            }
+            Gen::B200Like | Gen::H100Like => {
+                // Async tensor-core MMA: per-quadrant throughput calibrated
+                // to published dense peaks (B200 2.2 PF bf16 / 148 SMs).
+                let bf16_flops_per_cycle: f64 = match self.gen {
+                    Gen::B200Like => 2065.0,
+                    _ => 1172.0,
+                };
+                let scale = match dtype {
+                    Dtype::F32 => 0.5,
+                    Dtype::Bf16 | Dtype::Fp16 => 1.0,
+                    Dtype::Fp8 | Dtype::Fp6 => 2.0,
+                    Dtype::Fp4 => {
+                        if self.gen == Gen::B200Like {
+                            4.0
+                        } else {
+                            2.0
+                        }
+                    }
+                };
+                let cyc =
+                    shape.flops() as f64 / (bf16_flops_per_cycle * scale);
+                cyc.max(8.0).round() as u64
+            }
+        }
+    }
+
+    /// Peak matrix TFLOPs for a dtype (dense), derived from the MFMA model
+    /// — matches the published numbers in the paper's Fig. 2 table.
+    pub fn peak_tflops(&self, dtype: Dtype) -> f64 {
+        let shape = self.fastest_shape(dtype);
+        let cyc = self.mfma_cycles(shape, dtype) as f64;
+        let flops_per_cycle_per_simd = shape.flops() as f64 / cyc;
+        let simds = (self.total_cus() * self.simds_per_cu) as f64;
+        flops_per_cycle_per_simd * simds * self.clock_ghz / 1e3
+    }
+
+    /// The highest-throughput MFMA shape for a dtype on this arch.
+    pub fn fastest_shape(&self, dtype: Dtype) -> MfmaShape {
+        match self.gen {
+            Gen::Cdna3 | Gen::Cdna4 => match dtype {
+                Dtype::Fp8 => MFMA_16X16X64,
+                Dtype::Fp6 | Dtype::Fp4 => MFMA_16X16X128,
+                _ => MFMA_16X16X32,
+            },
+            Gen::B200Like | Gen::H100Like => MMA_256X256X16,
+        }
+    }
+
+    /// Seconds per cycle.
+    pub fn cycle_s(&self) -> f64 {
+        1e-9 / self.clock_ghz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mi355x_peaks_match_paper_fig2() {
+        let a = Arch::mi355x();
+        // Paper Fig.2: BF16 2.5 PFLOPS, FP8 5.0, FP6 10.1 (within ~5%).
+        let bf16 = a.peak_tflops(Dtype::Bf16);
+        assert!((bf16 - 2500.0).abs() / 2500.0 < 0.06, "bf16 peak {bf16}");
+        let fp8 = a.peak_tflops(Dtype::Fp8);
+        assert!((fp8 - 5000.0).abs() / 5000.0 < 0.06, "fp8 peak {fp8}");
+        let fp6 = a.peak_tflops(Dtype::Fp6);
+        assert!((fp6 - 10100.0).abs() / 10100.0 < 0.08, "fp6 peak {fp6}");
+    }
+
+    #[test]
+    fn b200_bf16_peak_is_2_2pf() {
+        let a = Arch::b200_like();
+        let bf16 = a.peak_tflops(Dtype::Bf16);
+        assert!((bf16 - 2200.0).abs() / 2200.0 < 0.1, "b200 bf16 {bf16}");
+    }
+
+    #[test]
+    fn cdna3_is_slower_than_cdna4() {
+        assert!(
+            Arch::mi325x().peak_tflops(Dtype::Bf16)
+                < Arch::mi355x().peak_tflops(Dtype::Bf16)
+        );
+    }
+
+    #[test]
+    fn mfma_16x16x32_bf16_is_16_cycles() {
+        let a = Arch::mi355x();
+        assert_eq!(a.mfma_cycles(MFMA_16X16X32, Dtype::Bf16), 16);
+        // 32x32x16 moves 2x the FLOPs of 16x16x32 at equal throughput
+        assert_eq!(a.mfma_cycles(MFMA_32X32X16, Dtype::Bf16), 32);
+        assert_eq!(a.mfma_cycles(MFMA_16X16X128, Dtype::Fp6), 16);
+        assert_eq!(a.mfma_cycles(MFMA_16X16X64, Dtype::Fp8), 16);
+    }
+
+    #[test]
+    fn total_cus() {
+        assert_eq!(Arch::mi355x().total_cus(), 256);
+        assert_eq!(Arch::mi325x().total_cus(), 304);
+    }
+
+    #[test]
+    fn dtype_bits() {
+        assert_eq!(Dtype::Bf16.bits(), 16);
+        assert_eq!(Dtype::Fp6.bits(), 6);
+        assert!((Dtype::Fp6.bytes_f() - 0.75).abs() < 1e-12);
+    }
+}

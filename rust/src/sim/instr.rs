@@ -1,0 +1,208 @@
+//! The simulator's instruction vocabulary.
+//!
+//! This is the level at which HK schedules (hk::schedule) are expressed:
+//! wave-level bulk operations that map 1:1 onto the CDNA instruction
+//! classes the paper reasons about — MFMA, VALU, VMEM (buffer loads),
+//! DS (LDS) accesses, waitcnts, barriers and scheduling hints.
+
+use super::arch::{Dtype, MfmaShape};
+use super::lds::DsInstr;
+
+/// One wave-level instruction (possibly a bulk op with a repeat count).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instr {
+    /// `count` back-to-back matrix fused-multiply-adds on the SIMD's
+    /// matrix pipe (one bulk `mma_ABt`/`mma_AtB` tile op).
+    Mfma { shape: MfmaShape, dtype: Dtype, count: u32 },
+    /// Vector-ALU work occupying the VALU pipe for `cycles`.
+    Valu { cycles: u64 },
+    /// Scalar-ALU work (address math etc.); cheap, scalar pipe.
+    Salu { cycles: u64 },
+    /// `v_accvgpr_read` x count — the compiler-inserted AGPR->VGPR moves
+    /// HIPCC generates when AGPRs feed MFMA operands (paper §3.2.1).
+    AccMove { count: u32 },
+    /// `v_nop` padding (FP6 case study, App. F).
+    VNop { count: u32 },
+    /// Global memory load, `buffer_load_*`; `to_lds` models the direct
+    /// HBM->LDS path that bypasses the register file (paper §3.2.2).
+    VMemLoad { bytes: u64, to_lds: bool, issues: u32 },
+    /// Global memory store.
+    VMemStore { bytes: u64, issues: u32 },
+    /// LDS read: `count` back-to-back issues of `instr`, each serialized
+    /// `conflict_ways`-fold per phase by bank conflicts.
+    DsRead { instr: DsInstr, conflict_ways: u32, count: u32 },
+    /// LDS write.
+    DsWrite { instr: DsInstr, conflict_ways: u32, count: u32 },
+    /// `s_waitcnt vmcnt(x)` — block until <= x VMEM ops in flight.
+    WaitVmcnt { max_outstanding: u32 },
+    /// `s_waitcnt lgkmcnt(x)` — block until <= x LDS ops in flight.
+    WaitLgkmcnt { max_outstanding: u32 },
+    /// `s_barrier` — block-wide rendezvous (the ping-pong alternator).
+    Barrier,
+    /// `s_setprio` — raise/lower this wave's issue priority.
+    SetPrio { prio: u8 },
+    /// `sched_barrier(0)` — compiler fence; free at run time.
+    SchedBarrier,
+}
+
+impl Instr {
+    /// Bytes this instruction moves from global memory (loads).
+    pub fn load_bytes(&self) -> u64 {
+        match self {
+            Instr::VMemLoad { bytes, .. } => *bytes,
+            _ => 0,
+        }
+    }
+
+    /// Bytes this instruction moves to global memory (stores).
+    pub fn store_bytes(&self) -> u64 {
+        match self {
+            Instr::VMemStore { bytes, .. } => *bytes,
+            _ => 0,
+        }
+    }
+
+    /// FLOPs retired by this instruction.
+    pub fn flops(&self) -> u64 {
+        match self {
+            Instr::Mfma { shape, count, .. } => {
+                shape.flops() * *count as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Whether the instruction is a pure scheduling hint (no runtime cost).
+    pub fn is_hint(&self) -> bool {
+        matches!(self, Instr::SchedBarrier | Instr::SetPrio { .. })
+    }
+}
+
+/// A wave's program: a prologue, a hot-loop body repeated `iters` times,
+/// and an epilogue. The engine expands the loop virtually.
+#[derive(Debug, Clone, Default)]
+pub struct WaveProgram {
+    pub prologue: Vec<Instr>,
+    pub body: Vec<Instr>,
+    pub iters: u32,
+    pub epilogue: Vec<Instr>,
+}
+
+impl WaveProgram {
+    pub fn total_instrs(&self) -> u64 {
+        self.prologue.len() as u64
+            + self.body.len() as u64 * self.iters as u64
+            + self.epilogue.len() as u64
+    }
+
+    /// Instruction at virtual pc, if any.
+    pub fn at(&self, pc: u64) -> Option<&Instr> {
+        let pl = self.prologue.len() as u64;
+        if pc < pl {
+            return self.prologue.get(pc as usize);
+        }
+        let body_total = self.body.len() as u64 * self.iters as u64;
+        if pc < pl + body_total {
+            let off = (pc - pl) % self.body.len().max(1) as u64;
+            return self.body.get(off as usize);
+        }
+        self.epilogue.get((pc - pl - body_total) as usize)
+    }
+
+    /// Total FLOPs this wave retires.
+    pub fn flops(&self) -> u64 {
+        let f = |v: &[Instr]| v.iter().map(|i| i.flops()).sum::<u64>();
+        f(&self.prologue) + f(&self.body) * self.iters as u64 + f(&self.epilogue)
+    }
+
+    /// Total bytes loaded from global memory by this wave.
+    pub fn load_bytes(&self) -> u64 {
+        let f = |v: &[Instr]| v.iter().map(|i| i.load_bytes()).sum::<u64>();
+        f(&self.prologue) + f(&self.body) * self.iters as u64 + f(&self.epilogue)
+    }
+
+    /// Total bytes stored.
+    pub fn store_bytes(&self) -> u64 {
+        let f = |v: &[Instr]| v.iter().map(|i| i.store_bytes()).sum::<u64>();
+        f(&self.prologue) + f(&self.body) * self.iters as u64 + f(&self.epilogue)
+    }
+}
+
+/// A thread block: waves pinned to SIMDs.
+#[derive(Debug, Clone, Default)]
+pub struct BlockProgram {
+    pub waves: Vec<WaveProgram>,
+    /// SIMD index (0..simds_per_cu) each wave is resident on.
+    pub simd_of_wave: Vec<u32>,
+}
+
+impl BlockProgram {
+    pub fn flops(&self) -> u64 {
+        self.waves.iter().map(|w| w.flops()).sum()
+    }
+
+    pub fn load_bytes(&self) -> u64 {
+        self.waves.iter().map(|w| w.load_bytes()).sum()
+    }
+
+    pub fn store_bytes(&self) -> u64 {
+        self.waves.iter().map(|w| w.store_bytes()).sum()
+    }
+
+    /// Waves resident per SIMD (occupancy), max across SIMDs.
+    pub fn waves_per_simd(&self, simds: u32) -> u32 {
+        let mut counts = vec![0u32; simds as usize];
+        for &s in &self.simd_of_wave {
+            counts[s as usize] += 1;
+        }
+        counts.into_iter().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::arch::{Dtype, MFMA_16X16X32};
+
+    fn mfma() -> Instr {
+        Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: 1 }
+    }
+
+    #[test]
+    fn wave_program_virtual_pc() {
+        let wp = WaveProgram {
+            prologue: vec![Instr::Barrier],
+            body: vec![mfma(), Instr::Valu { cycles: 4 }],
+            iters: 3,
+            epilogue: vec![Instr::VMemStore { bytes: 64, issues: 1 }],
+        };
+        assert_eq!(wp.total_instrs(), 1 + 6 + 1);
+        assert_eq!(wp.at(0), Some(&Instr::Barrier));
+        assert_eq!(wp.at(1), Some(&mfma()));
+        assert_eq!(wp.at(2), Some(&Instr::Valu { cycles: 4 }));
+        assert_eq!(wp.at(5), Some(&mfma()));
+        assert_eq!(wp.at(7), Some(&Instr::VMemStore { bytes: 64, issues: 1 }));
+        assert_eq!(wp.at(8), None);
+    }
+
+    #[test]
+    fn flops_and_bytes_accounting() {
+        let wp = WaveProgram {
+            prologue: vec![Instr::VMemLoad { bytes: 128, to_lds: true, issues: 1 }],
+            body: vec![mfma()],
+            iters: 10,
+            epilogue: vec![],
+        };
+        assert_eq!(wp.flops(), 10 * 2 * 16 * 16 * 32);
+        assert_eq!(wp.load_bytes(), 128);
+    }
+
+    #[test]
+    fn block_occupancy() {
+        let bp = BlockProgram {
+            waves: vec![WaveProgram::default(); 8],
+            simd_of_wave: vec![0, 1, 2, 3, 0, 1, 2, 3],
+        };
+        assert_eq!(bp.waves_per_simd(4), 2);
+    }
+}

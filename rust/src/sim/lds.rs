@@ -1,0 +1,359 @@
+//! LDS (shared memory) model with instruction-dependent bank and phase
+//! behaviour.
+//!
+//! Paper §3.2.2 / Appendix D.2: on CDNA, the set of shared-memory banks and
+//! the order in which threads in a wave execute an access differ *per
+//! instruction*, and the phases are undocumented — the authors built a
+//! solver to discover them (their Table 5). This module is the simulator's
+//! ground truth for that behaviour; `hk::phase` re-derives Table 5 from it
+//! by pairwise probing, exactly like the paper's solver.
+
+
+/// LDS access instructions modeled by the simulator (CDNA3/CDNA4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DsInstr {
+    /// 128-bit per-thread read — 64 banks, 4 phases.
+    ReadB128,
+    /// 96-bit per-thread read — 32 banks, 8 phases (FP6 path, App. F).
+    ReadB96,
+    /// 64-bit per-thread read — 64 banks, 2 phases.
+    ReadB64,
+    /// 32-bit per-thread read — 64 banks, 1 phase.
+    ReadB32,
+    /// 64-bit transpose read placing data into another lane's registers
+    /// (`ds_read_b64_tr_b16`, App. D.1) — 64 banks, 2 phases.
+    ReadB64TrB16,
+    /// 128-bit per-thread write — 64 banks, 4 phases.
+    WriteB128,
+    /// 64-bit per-thread write — 32 banks, 4 phases (App. D.1 example).
+    WriteB64,
+    /// 32-bit per-thread write — 64 banks, 1 phase.
+    WriteB32,
+}
+
+pub const WAVE: usize = 64;
+pub const BANK_BYTES: u64 = 4;
+
+/// ds_read_b128 phase table (paper Table 5).
+const PHASES_B128: [&[usize]; 4] = [
+    &[0, 1, 2, 3, 12, 13, 14, 15, 20, 21, 22, 23, 24, 25, 26, 27],
+    &[4, 5, 6, 7, 8, 9, 10, 11, 16, 17, 18, 19, 28, 29, 30, 31],
+    &[32, 33, 34, 35, 44, 45, 46, 47, 52, 53, 54, 55, 56, 57, 58, 59],
+    &[36, 37, 38, 39, 40, 41, 42, 43, 48, 49, 50, 51, 60, 61, 62, 63],
+];
+
+/// ds_read_b96 phase table (paper Table 5).
+const PHASES_B96: [&[usize]; 8] = [
+    &[0, 1, 2, 3, 20, 21, 22, 23],
+    &[4, 5, 6, 7, 16, 17, 18, 19],
+    &[8, 9, 10, 11, 28, 29, 30, 31],
+    &[12, 13, 14, 15, 24, 25, 26, 27],
+    &[32, 33, 34, 35, 52, 53, 54, 55],
+    &[36, 37, 38, 39, 48, 49, 50, 51],
+    &[40, 41, 42, 43, 60, 61, 62, 63],
+    &[44, 45, 46, 47, 56, 57, 58, 59],
+];
+
+/// ds_write_b64 phase table (paper Table 5): sequential 16-thread groups.
+const PHASES_W64: [&[usize]; 4] = [
+    &[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15],
+    &[16, 17, 18, 19, 20, 21, 22, 23, 24, 25, 26, 27, 28, 29, 30, 31],
+    &[32, 33, 34, 35, 36, 37, 38, 39, 40, 41, 42, 43, 44, 45, 46, 47],
+    &[48, 49, 50, 51, 52, 53, 54, 55, 56, 57, 58, 59, 60, 61, 62, 63],
+];
+
+/// ds_read_b64: two sequential 32-thread halves (paper Table 5).
+const PHASES_R64: [&[usize]; 2] = [
+    &[
+        0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18,
+        19, 20, 21, 22, 23, 24, 25, 26, 27, 28, 29, 30, 31,
+    ],
+    &[
+        32, 33, 34, 35, 36, 37, 38, 39, 40, 41, 42, 43, 44, 45, 46, 47, 48,
+        49, 50, 51, 52, 53, 54, 55, 56, 57, 58, 59, 60, 61, 62, 63,
+    ],
+];
+
+const PHASE_ALL: [&[usize]; 1] = [&[
+    0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19,
+    20, 21, 22, 23, 24, 25, 26, 27, 28, 29, 30, 31, 32, 33, 34, 35, 36, 37,
+    38, 39, 40, 41, 42, 43, 44, 45, 46, 47, 48, 49, 50, 51, 52, 53, 54, 55,
+    56, 57, 58, 59, 60, 61, 62, 63,
+]];
+
+impl DsInstr {
+    /// Per-thread access width in bits.
+    pub fn bits(self) -> u32 {
+        match self {
+            DsInstr::ReadB128 | DsInstr::WriteB128 => 128,
+            DsInstr::ReadB96 => 96,
+            DsInstr::ReadB64 | DsInstr::WriteB64 | DsInstr::ReadB64TrB16 => {
+                64
+            }
+            DsInstr::ReadB32 | DsInstr::WriteB32 => 32,
+        }
+    }
+
+    /// Number of 32-bit banks visible to this instruction (paper Table 5:
+    /// b128 uses 64 banks, b96 and write_b64 use 32).
+    pub fn banks(self) -> u64 {
+        match self {
+            DsInstr::ReadB96 | DsInstr::WriteB64 => 32,
+            _ => 64,
+        }
+    }
+
+    /// The wave's execution phases: each inner slice lists the threads that
+    /// access LDS concurrently.
+    pub fn phases(self) -> &'static [&'static [usize]] {
+        match self {
+            DsInstr::ReadB128 | DsInstr::WriteB128 => &PHASES_B128,
+            DsInstr::ReadB96 => &PHASES_B96,
+            DsInstr::WriteB64 => &PHASES_W64,
+            DsInstr::ReadB64 | DsInstr::ReadB64TrB16 => &PHASES_R64,
+            DsInstr::ReadB32 | DsInstr::WriteB32 => &PHASE_ALL,
+        }
+    }
+
+    /// Phase index of a thread.
+    pub fn phase_of(self, thread: usize) -> usize {
+        for (i, p) in self.phases().iter().enumerate() {
+            if p.contains(&thread) {
+                return i;
+            }
+        }
+        unreachable!("thread {thread} not in any phase")
+    }
+
+    pub fn is_write(self) -> bool {
+        matches!(
+            self,
+            DsInstr::WriteB128 | DsInstr::WriteB64 | DsInstr::WriteB32
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DsInstr::ReadB128 => "ds_read_b128",
+            DsInstr::ReadB96 => "ds_read_b96",
+            DsInstr::ReadB64 => "ds_read_b64",
+            DsInstr::ReadB32 => "ds_read_b32",
+            DsInstr::ReadB64TrB16 => "ds_read_b64_tr_b16",
+            DsInstr::WriteB128 => "ds_write_b128",
+            DsInstr::WriteB64 => "ds_write_b64",
+            DsInstr::WriteB32 => "ds_write_b32",
+        }
+    }
+}
+
+/// Result of simulating one wave-level LDS access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LdsAccess {
+    /// Worst-case conflict multiplier across phases (1 = conflict-free).
+    pub conflict_ways: u32,
+    /// Cycles the LDS pipe is occupied: one per phase, multiplied by the
+    /// per-phase conflict serialization.
+    pub cycles: u64,
+}
+
+/// Simulate a wave-level LDS access with per-thread byte addresses.
+///
+/// Each thread touches `bits/32` consecutive banks starting at
+/// `addr/4 % banks`. Within one phase, two threads conflict if they touch
+/// the same bank at *different* 32-bit words (same-word access broadcasts).
+pub fn access(instr: DsInstr, addrs: &[u64; WAVE]) -> LdsAccess {
+    let banks = instr.banks() as usize;
+    let words_per_thread = (instr.bits() / 32) as u64;
+    let mut total_cycles = 0u64;
+    let mut worst = 1u32;
+    // fixed-size scratch: at most 32 threads x 4 words land in one bank
+    const MAX_WAYS: usize = 128;
+    let mut bank_words = [[0u64; MAX_WAYS]; 64];
+    let mut bank_count = [0u8; 64];
+    for phase in instr.phases() {
+        bank_count[..banks].fill(0);
+        for &t in phase.iter() {
+            let base_word = addrs[t] / BANK_BYTES;
+            for w in 0..words_per_thread {
+                let word = base_word + w;
+                let bank = (word % banks as u64) as usize;
+                let n = bank_count[bank] as usize;
+                if !bank_words[bank][..n].contains(&word) {
+                    debug_assert!(n < MAX_WAYS);
+                    bank_words[bank][n] = word;
+                    bank_count[bank] = (n + 1) as u8;
+                }
+            }
+        }
+        let ways =
+            bank_count[..banks].iter().copied().max().unwrap_or(1).max(1)
+                as u32;
+        worst = worst.max(ways);
+        total_cycles += ways as u64;
+    }
+    LdsAccess { conflict_ways: worst, cycles: total_cycles }
+}
+
+/// Probe used by the `hk::phase` solver (mirrors the paper's methodology,
+/// App. D.2): make threads `a` and `b` access the *same bank at different
+/// words*; returns true iff that produces a measurable conflict, i.e. the
+/// two threads share a phase.
+pub fn probe_conflict(instr: DsInstr, a: usize, b: usize) -> bool {
+    if a == b {
+        return false;
+    }
+    let banks = instr.banks();
+    let wpt = (instr.bits() / 32) as u64; // words per thread
+    let mut addrs = [0u64; WAVE];
+    // Thread a reads words [0, wpt) (banks 0..wpt). Thread b reads words
+    // [banks, banks+wpt) — the *same banks*, different words. Everyone else
+    // is parked on non-colliding banks, unique within each phase.
+    addrs[a] = 0;
+    addrs[b] = banks * BANK_BYTES;
+    for phase in instr.phases() {
+        let mut j = 0u64;
+        for &t in phase.iter() {
+            if t == a || t == b {
+                continue;
+            }
+            addrs[t] = (j + 1) * wpt * BANK_BYTES;
+            j += 1;
+        }
+    }
+    // A measurable conflict (ways > 1) occurs iff a and b share a phase.
+    access(instr, &addrs).conflict_ways > 1
+}
+
+/// Probe the number of banks: fix thread `a` at bank 0 and walk a same-phase
+/// thread `b` across banks; the distance at which `b` first wraps back onto
+/// `a`'s bank reveals the bank count (paper App. D.2 "bank solver").
+pub fn probe_banks(instr: DsInstr) -> u64 {
+    let p0 = instr.phases()[0];
+    let (a, b) = (p0[0], p0[1]);
+    let wpt = (instr.bits() / 32) as u64;
+    for dist in 1..=256u64 {
+        let mut addrs = [0u64; WAVE];
+        // Everyone (including a) broadcasts word 0; broadcasts never
+        // conflict, so the only possible conflict source is b.
+        addrs[a] = 0;
+        addrs[b] = dist * BANK_BYTES;
+        let acc = access(instr, &addrs);
+        if acc.conflict_ways > 1 {
+            // b's last word (dist + wpt - 1) wrapped onto bank 0
+            return dist + wpt - 1;
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_threads_covered(instr: DsInstr) {
+        let mut seen = [false; WAVE];
+        for p in instr.phases() {
+            for &t in p.iter() {
+                assert!(!seen[t], "{:?}: thread {t} in two phases", instr);
+                seen[t] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{:?}: thread missing", instr);
+    }
+
+    #[test]
+    fn phase_tables_partition_the_wave() {
+        for i in [
+            DsInstr::ReadB128,
+            DsInstr::ReadB96,
+            DsInstr::ReadB64,
+            DsInstr::ReadB32,
+            DsInstr::ReadB64TrB16,
+            DsInstr::WriteB128,
+            DsInstr::WriteB64,
+            DsInstr::WriteB32,
+        ] {
+            all_threads_covered(i);
+        }
+    }
+
+    #[test]
+    fn conflict_free_row_read_b128() {
+        // 16 threads per phase, each reading 16B = 4 banks: a perfect
+        // phase covers all 64 banks exactly once.
+        let mut addrs = [0u64; WAVE];
+        for p in DsInstr::ReadB128.phases() {
+            for (i, &t) in p.iter().enumerate() {
+                addrs[t] = (i as u64) * 16;
+            }
+        }
+        let acc = access(DsInstr::ReadB128, &addrs);
+        assert_eq!(acc.conflict_ways, 1);
+        assert_eq!(acc.cycles, 4); // 4 phases, 1 cycle each
+    }
+
+    #[test]
+    fn two_way_conflict_detected() {
+        // Two threads of the same phase hitting the same bank, different
+        // words -> 2-way conflict.
+        let p0 = DsInstr::ReadB128.phases()[0];
+        let mut addrs = [0u64; WAVE];
+        for p in DsInstr::ReadB128.phases() {
+            for (i, &t) in p.iter().enumerate() {
+                addrs[t] = (i as u64) * 16;
+            }
+        }
+        addrs[p0[1]] = addrs[p0[0]] + 64 * 4; // wrap to same banks
+        let acc = access(DsInstr::ReadB128, &addrs);
+        assert_eq!(acc.conflict_ways, 2);
+        assert_eq!(acc.cycles, 5); // one phase serialized 2x
+    }
+
+    #[test]
+    fn same_word_broadcasts() {
+        let p0 = DsInstr::ReadB64.phases()[0];
+        let mut addrs = [0u64; WAVE];
+        for p in DsInstr::ReadB64.phases() {
+            for (i, &t) in p.iter().enumerate() {
+                addrs[t] = (i as u64) * 8;
+            }
+        }
+        // same address as p0[0]: broadcast, no conflict
+        addrs[p0[1]] = addrs[p0[0]];
+        let acc = access(DsInstr::ReadB64, &addrs);
+        assert_eq!(acc.conflict_ways, 1);
+    }
+
+    #[test]
+    fn probe_matches_phase_tables() {
+        for instr in [DsInstr::ReadB128, DsInstr::ReadB96, DsInstr::WriteB64]
+        {
+            for a in 0..WAVE {
+                for b in (a + 1)..WAVE {
+                    assert_eq!(
+                        probe_conflict(instr, a, b),
+                        instr.phase_of(a) == instr.phase_of(b),
+                        "{:?} {a} {b}",
+                        instr
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn probe_banks_matches_table5() {
+        assert_eq!(probe_banks(DsInstr::ReadB128), 64);
+        assert_eq!(probe_banks(DsInstr::ReadB96), 32);
+        assert_eq!(probe_banks(DsInstr::WriteB64), 32);
+        assert_eq!(probe_banks(DsInstr::ReadB64), 64);
+    }
+
+    #[test]
+    fn b96_has_8_phases_b128_has_4() {
+        assert_eq!(DsInstr::ReadB96.phases().len(), 8);
+        assert_eq!(DsInstr::ReadB128.phases().len(), 4);
+        assert_eq!(DsInstr::ReadB64.phases().len(), 2);
+        assert_eq!(DsInstr::WriteB64.phases().len(), 4);
+    }
+}

@@ -1,0 +1,27 @@
+//! `sim` — the simulated CDNA3/CDNA4 substrate.
+//!
+//! The paper's evaluation hardware (AMD MI325X/MI355X) is unavailable in
+//! this environment; per DESIGN.md §1 we substitute a cycle-approximate
+//! simulator that models exactly the architectural mechanisms the paper's
+//! results are driven by:
+//!
+//! - [`arch`] — chiplet topology, register file, LDS, MFMA shapes/latency,
+//!   cache capacities and bandwidths (calibrated to the paper's Fig. 2).
+//! - [`lds`] — instruction-dependent shared-memory bank/phase behaviour
+//!   (ground truth for the paper's Table 5).
+//! - [`instr`] — the wave-level instruction vocabulary HK schedules
+//!   lower to.
+//! - [`engine`] — a per-CU cycle engine modelling MFMA/VALU/LDS/VMEM
+//!   pipes, waitcnts, barriers and wave-priority arbitration.
+//! - [`cache`] — the disaggregated L2 (per XCD) + LLC hierarchy driven by
+//!   grid schedules (paper §3.4, Eq. (1)).
+
+pub mod arch;
+pub mod cache;
+pub mod engine;
+pub mod instr;
+pub mod lds;
+
+pub use arch::{Arch, Dtype, MfmaShape};
+pub use engine::{run_block, EngineConfig, EngineStats};
+pub use instr::{BlockProgram, Instr, WaveProgram};

@@ -1,0 +1,101 @@
+//! Coordinator integration: the batching service and the training driver
+//! over real artifacts. Skips when `make artifacts` has not been run.
+
+use hipkittens::coordinator::{
+    poisson_trace, BatchingService, Path, ServiceConfig, Trainer,
+};
+use hipkittens::runtime::{Manifest, Runtime};
+
+fn artifacts() -> Option<String> {
+    let dir = std::env::var("HK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if Manifest::available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn service_serves_all_requests() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let mut svc = BatchingService::new(&mut rt, ServiceConfig::default()).unwrap();
+    let trace = poisson_trace(20, 500.0, 3);
+    let rep = svc.run_trace(&trace).unwrap();
+    assert_eq!(rep.served, 20);
+    assert!(rep.batches <= 20);
+    assert!(rep.latency.count() == 20);
+    assert!(rep.latency.p99_us() >= rep.latency.p50_us());
+    assert!(rep.throughput_rps > 0.0);
+}
+
+#[test]
+fn service_batches_under_load() {
+    // A burst arriving "instantly" must be batched, not served one by one.
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let mut svc = BatchingService::new(&mut rt, ServiceConfig::default()).unwrap();
+    let burst: Vec<_> = (0..16)
+        .map(|id| hipkittens::coordinator::AttnRequest {
+            id,
+            arrival_s: 1e-6 * id as f64,
+        })
+        .collect();
+    let rep = svc.run_trace(&burst).unwrap();
+    assert!(rep.mean_batch > 2.0, "mean batch {}", rep.mean_batch);
+}
+
+#[test]
+fn trainer_loss_decreases() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let mut tr = Trainer::new(&mut rt, 0).unwrap();
+    let losses = tr.train(Path::Kernels, 6, |_, _| {}).unwrap();
+    let first = losses[0];
+    let last = *losses.last().unwrap();
+    assert!(last < first, "loss {first} -> {last} did not decrease");
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn kernel_and_reference_paths_agree_on_first_step() {
+    // The paper's stability/parity claim: identical params + batch give
+    // identical loss on the Pallas path and the dense path.
+    let Some(dir) = artifacts() else { return };
+    let mut rt1 = Runtime::new(dir.clone()).unwrap();
+    let mut t1 = Trainer::new(&mut rt1, 7).unwrap();
+    let batch = t1.synthetic_batch();
+    let l_kernel = t1.step(Path::Kernels, batch.clone()).unwrap();
+    let mut rt2 = Runtime::new(dir).unwrap();
+    let mut t2 = Trainer::new(&mut rt2, 7).unwrap();
+    let l_ref = t2.step(Path::Reference, batch).unwrap();
+    assert!(
+        (l_kernel - l_ref).abs() < 5e-3,
+        "kernel {l_kernel} vs reference {l_ref}"
+    );
+}
+
+#[test]
+fn trainer_initial_loss_near_uniform() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let mut tr = Trainer::new(&mut rt, 1).unwrap();
+    let batch = tr.synthetic_batch();
+    let loss = tr.eval_loss(batch).unwrap();
+    let uniform = (tr.vocab as f32).ln();
+    assert!(
+        (loss - uniform).abs() < 1.0,
+        "initial loss {loss} vs ln(V) {uniform}"
+    );
+}
+
+#[test]
+fn synthetic_batches_are_in_vocab() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let mut tr = Trainer::new(&mut rt, 2).unwrap();
+    let b = tr.synthetic_batch();
+    assert_eq!(b.len(), tr.batch * (tr.seq_len + 1));
+    assert!(b.iter().all(|&t| t >= 0 && (t as u32) < tr.vocab));
+}

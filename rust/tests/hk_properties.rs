@@ -1,0 +1,222 @@
+//! Property tests over the HK framework: chiplet-remap bijectivity,
+//! swizzle algebra, regalloc monotonicity, schedule structure.
+
+use hipkittens::hk::chiplet::ChipletSwizzle;
+use hipkittens::hk::regalloc::{allocate, wave_budget, RegMode, TileDemand};
+use hipkittens::hk::swizzle::{candidate_swizzles, solve, AccessReq, Swizzle};
+use hipkittens::hk::tile::{Layout, RegTile, SharedTile};
+use hipkittens::runtime::Rng;
+use hipkittens::sim::arch::{Arch, Dtype, MFMA_16X16X32};
+use hipkittens::sim::lds::DsInstr;
+use std::collections::HashSet;
+
+#[test]
+fn chiplet_remap_bijective_over_random_grids() {
+    let mut rng = Rng::new(42);
+    for _ in 0..60 {
+        let rows = 2 + rng.below(90) as u32;
+        let cols = 2 + rng.below(90) as u32;
+        let w = 1 + rng.below(12) as u32;
+        let c = 1 + rng.below(300) as u32;
+        let swz = ChipletSwizzle::new(8, w, c);
+        let seen: HashSet<(u32, u32)> =
+            swz.schedule(rows, cols).into_iter().collect();
+        assert_eq!(
+            seen.len(),
+            (rows * cols) as usize,
+            "W={w} C={c} {rows}x{cols} not a bijection"
+        );
+    }
+}
+
+#[test]
+fn chiplet_grouping_keeps_chunks_on_one_xcd() {
+    // After remapping, each chunk of C consecutive remapped positions in
+    // the full-cycle prefix must trace back to one XCD.
+    let mut rng = Rng::new(17);
+    for _ in 0..20 {
+        let c = 1 + rng.below(32) as u32;
+        let swz = ChipletSwizzle::new(8, 4, c);
+        let blocks = 8 * c * (1 + rng.below(6) as u32);
+        // invert: remapped position -> dispatch id
+        let mut inv = vec![u32::MAX; blocks as usize];
+        for xy in 0..blocks {
+            inv[swz.xcd_group(xy, blocks) as usize] = xy;
+        }
+        for chunk_start in (0..blocks).step_by(c as usize) {
+            let xcds: HashSet<u32> = (chunk_start..(chunk_start + c).min(blocks))
+                .map(|p| inv[p as usize] % 8)
+                .collect();
+            assert_eq!(xcds.len(), 1, "chunk at {chunk_start} spans {xcds:?}");
+        }
+    }
+}
+
+#[test]
+fn swizzles_are_involutions_and_bijections() {
+    let mut rng = Rng::new(4);
+    for s in candidate_swizzles() {
+        let mut seen = HashSet::new();
+        for _ in 0..512 {
+            let a = rng.below(1 << 16);
+            assert_eq!(s.apply(s.apply(a)), a, "{s:?}");
+            seen.insert(s.apply(a));
+        }
+        assert!(seen.len() > 200, "{s:?} collapses addresses");
+    }
+}
+
+#[test]
+fn solved_swizzles_always_beat_identity() {
+    // For every co-occurrence set the solver handles, the solved pattern's
+    // conflict ways are <= identity's.
+    use hipkittens::hk::swizzle::ways_under;
+    let st = |r, c| SharedTile {
+        dtype: Dtype::Bf16,
+        rows: r,
+        cols: c,
+        swizzle: Swizzle::none(),
+    };
+    let sets: Vec<Vec<AccessReq>> = vec![
+        vec![AccessReq {
+            st: st(16, 32),
+            rt: RegTile::new(Dtype::Bf16, 16, 32, Layout::Row, MFMA_16X16X32),
+            instr: DsInstr::ReadB128,
+        }],
+        vec![AccessReq {
+            st: st(16, 16),
+            rt: RegTile::new(Dtype::Bf16, 16, 16, Layout::Row, MFMA_16X16X32),
+            instr: DsInstr::WriteB64,
+        }],
+        vec![
+            AccessReq {
+                st: st(16, 32),
+                rt: RegTile::new(Dtype::Bf16, 16, 32, Layout::Row, MFMA_16X16X32),
+                instr: DsInstr::ReadB128,
+            },
+            AccessReq {
+                st: st(16, 32),
+                rt: RegTile::new(Dtype::Bf16, 16, 32, Layout::Col, MFMA_16X16X32),
+                instr: DsInstr::ReadB64TrB16,
+            },
+        ],
+    ];
+    for reqs in sets {
+        let s = solve(&reqs).expect("solvable set");
+        for r in &reqs {
+            assert!(ways_under(r, s) <= ways_under(r, Swizzle::none()));
+            assert_eq!(ways_under(r, s), 1);
+        }
+    }
+}
+
+#[test]
+fn budget_monotone_in_occupancy() {
+    let a = Arch::mi355x();
+    let mut prev = u32::MAX;
+    for waves in 1..=8 {
+        let b = wave_budget(&a, waves);
+        assert!(b <= prev);
+        assert!(b * waves <= a.regs_per_simd);
+        prev = b;
+    }
+}
+
+#[test]
+fn pinned_never_worse_than_compiler() {
+    // For random demand sets: pinned spills <= compiler spills and pinned
+    // never emits acc moves.
+    let a = Arch::mi355x();
+    let mut rng = Rng::new(23);
+    for _ in 0..100 {
+        let n = 1 + rng.below(6) as usize;
+        let tiles: Vec<TileDemand> = (0..n)
+            .map(|_| TileDemand {
+                regs: 8 + rng.below(120) as u32,
+                mfma_operand: rng.below(2) == 0,
+                mfma_uses_per_iter: rng.below(4) as u32,
+            })
+            .collect();
+        for waves in [1u32, 2, 4] {
+            let p = allocate(&a, waves, RegMode::Pinned, &tiles);
+            let c = allocate(&a, waves, RegMode::CompilerManaged, &tiles);
+            assert_eq!(p.acc_moves_per_iter, 0);
+            assert!(p.spilled <= c.spilled, "{tiles:?} waves={waves}");
+        }
+    }
+}
+
+#[test]
+fn schedule_patterns_preserve_flops_and_bytes() {
+    // All three patterns built from the same LoopSpec move the same data
+    // and compute the same FLOPs per compute-wave count.
+    use hipkittens::hk::schedule::{Cluster, LoopSpec};
+    use hipkittens::hk::{interleave, pingpong, wavespec};
+    use hipkittens::sim::instr::Instr;
+    let spec = LoopSpec {
+        name: "prop".into(),
+        prologue: vec![Instr::VMemLoad { bytes: 8192, to_lds: true, issues: 2 }],
+        compute: vec![Cluster::new(
+            "c",
+            vec![Instr::Mfma {
+                shape: MFMA_16X16X32,
+                dtype: Dtype::Bf16,
+                count: 16,
+            }],
+        )],
+        memory: vec![Cluster::new(
+            "m",
+            vec![Instr::VMemLoad { bytes: 16384, to_lds: true, issues: 4 }],
+        )],
+        iters: 10,
+        epilogue: vec![Instr::VMemStore { bytes: 4096, issues: 1 }],
+    };
+    let pp = pingpong::build(&spec);
+    let il = interleave::build(&spec);
+    let ws = wavespec::build(&spec, 4, 8);
+    // per-compute-wave flops identical
+    let f = |b: &hipkittens::hk::schedule::BuiltSchedule, waves: u64| {
+        b.block.flops() / waves
+    };
+    assert_eq!(f(&pp, 8), f(&il, 4));
+    assert_eq!(f(&pp, 8), f(&ws, 8));
+    // wavespec producers do the memory clusters instead of consumers
+    assert!(ws.block.load_bytes() > 0);
+}
+
+#[test]
+fn loc_ordering_holds_for_any_spec() {
+    use hipkittens::hk::schedule::{Cluster, LoopSpec};
+    use hipkittens::sim::instr::Instr;
+    let mut rng = Rng::new(31);
+    for _ in 0..30 {
+        let mfma_count = 2 + rng.below(40) as u32;
+        let ds_count = 1 + rng.below(12) as u32;
+        let spec = LoopSpec {
+            name: "loc".into(),
+            prologue: vec![],
+            compute: vec![Cluster::new(
+                "c",
+                vec![Instr::Mfma {
+                    shape: MFMA_16X16X32,
+                    dtype: Dtype::Bf16,
+                    count: mfma_count,
+                }],
+            )],
+            memory: vec![Cluster::new(
+                "m",
+                vec![Instr::DsRead {
+                    instr: DsInstr::ReadB128,
+                    conflict_ways: 1,
+                    count: ds_count,
+                }],
+            )],
+            iters: 1,
+            epilogue: vec![],
+        };
+        assert!(
+            spec.interleaved_loc() >= spec.bulk_loc(),
+            "fine-grained form must never be shorter"
+        );
+    }
+}

@@ -1,0 +1,358 @@
+//! The reproduction contract: for every table/figure, the *shape* of the
+//! paper's result (orderings, factor-level gaps, crossovers) must hold on
+//! the simulator. DESIGN.md §3 maps each test to its experiment.
+
+use hipkittens::hk::phase::solve_table5;
+use hipkittens::hk::regalloc::RegMode;
+use hipkittens::kernels::attention::{self, AttnConfig};
+use hipkittens::kernels::baselines::{self, Baseline};
+use hipkittens::kernels::gemm::{self, GemmConfig, GridOrder, Pattern};
+use hipkittens::kernels::membound::{self, FusedLnConfig, RopeConfig};
+use hipkittens::sim::arch::{Arch, Dtype};
+
+fn arch() -> Arch {
+    Arch::mi355x()
+}
+
+// ---------------------------------------------------------------- Table 1
+
+#[test]
+fn table1_pinning_gain_matches_paper_factor() {
+    // Paper: 1024/855 = 1.20x at seq 4096; 1091/909 = 1.20x at 8192.
+    for seq in [4096u32, 8192] {
+        let mut cfg = AttnConfig::mha(seq, 128, false);
+        cfg.pattern = Pattern::Interleave4;
+        let pinned = attention::simulate_bwd(&arch(), &cfg);
+        let hipcc = attention::simulate_bwd(
+            &arch(),
+            &AttnConfig { reg_mode: RegMode::CompilerManaged, ..cfg },
+        );
+        let gain = pinned.tflops / hipcc.tflops;
+        assert!(
+            (1.08..=1.40).contains(&gain),
+            "seq {seq}: pinning gain {gain} out of the paper's band"
+        );
+    }
+}
+
+// ---------------------------------------------------------------- Table 2
+
+#[test]
+fn table2_ordering_and_producer_penalty() {
+    // Paper: 893 (4P/8C 128x256) < 1278 (4P/12C 192x256) ~= 1281
+    // (0P/8C 192x256) < 1610 (0P/8C 256x256).
+    let m = 8192;
+    let run = |pattern, bm, bn| {
+        gemm::simulate(
+            &arch(),
+            &GemmConfig {
+                pattern,
+                block_m: bm,
+                block_n: bn,
+                ..GemmConfig::bf16(m, m, m)
+            },
+        )
+        .tflops
+    };
+    let t_4p8c = run(Pattern::WaveSpec { producers: 4, consumers: 8 }, 128, 256);
+    let t_4p12c = run(Pattern::WaveSpec { producers: 4, consumers: 12 }, 192, 256);
+    let t_0p8c_192 = run(Pattern::PingPong8, 192, 256);
+    let t_0p8c_256 = run(Pattern::PingPong8, 256, 256);
+    assert!(t_4p8c < t_4p12c, "{t_4p8c} !< {t_4p12c}");
+    assert!(
+        (t_4p12c / t_0p8c_192 - 1.0).abs() < 0.15,
+        "4P/12C ({t_4p12c}) must be near 0P/8C-192 ({t_0p8c_192})"
+    );
+    assert!(t_0p8c_256 > t_0p8c_192 * 1.1, "{t_0p8c_256} vs {t_0p8c_192}");
+    assert!(t_0p8c_256 > t_4p8c * 1.3, "best/worst gap too small");
+    // wave specialization achieves ~80% of peak-pattern perf (paper abs.)
+    let ratio = t_4p12c / t_0p8c_256;
+    assert!((0.6..=0.95).contains(&ratio), "{ratio}");
+}
+
+// ---------------------------------------------------------------- Table 3
+
+#[test]
+fn table3_loc_vs_performance_tradeoff() {
+    let m = 8192;
+    // FP8 GEMM: 4-wave slightly faster, much longer code.
+    let pp_cfg = GemmConfig::fp8(m, m, m);
+    let il_cfg = GemmConfig { pattern: Pattern::Interleave4, ..pp_cfg };
+    let pp = gemm::build(&arch(), &pp_cfg);
+    let il = gemm::build(&arch(), &il_cfg);
+    assert!(
+        il.info.loc as f64 > pp.info.loc as f64 * 2.0,
+        "4-wave LoC {} must dwarf 8-wave {}",
+        il.info.loc,
+        pp.info.loc
+    );
+    let pp_t = gemm::simulate(&arch(), &pp_cfg).tflops;
+    let il_t = gemm::simulate(&arch(), &il_cfg).tflops;
+    assert!(
+        il_t >= pp_t * 0.97,
+        "4-wave fp8 {il_t} must be >= ~8-wave {pp_t}"
+    );
+    // MHA bwd: 4-wave meaningfully faster (paper 1091 vs 894).
+    let b8 = AttnConfig::mha(8192, 128, false);
+    let b4 = AttnConfig { pattern: Pattern::Interleave4, ..b8 };
+    let t8 = attention::simulate_bwd(&arch(), &b8).tflops;
+    let t4 = attention::simulate_bwd(&arch(), &b4).tflops;
+    let ratio = t4 / t8;
+    assert!((1.05..=1.6).contains(&ratio), "bwd 4w/8w = {ratio}");
+}
+
+// ---------------------------------------------------------------- Table 4
+
+#[test]
+fn table4_l2_only_pathology_and_joint_win() {
+    let base = |size| GemmConfig {
+        block_m: 192,
+        block_n: 256,
+        ..GemmConfig::bf16(size, size, size)
+    };
+    // 9216: W7/C216 maximizes L2 but tanks LLC and loses overall.
+    let rm = gemm::simulate(&arch(), &GemmConfig { grid: GridOrder::RowMajor, ..base(9216) });
+    let l2only = gemm::simulate(
+        &arch(),
+        &GemmConfig { grid: GridOrder::Chiplet { window: 7, chunk: 216 }, ..base(9216) },
+    );
+    let joint = gemm::simulate(
+        &arch(),
+        &GemmConfig { grid: GridOrder::Chiplet { window: 5, chunk: 25 }, ..base(9216) },
+    );
+    assert!(l2only.l2_hit >= rm.l2_hit);
+    assert!(l2only.llc_hit < 0.5);
+    assert!(joint.llc_hit > 0.75);
+    assert!(joint.tflops >= l2only.tflops);
+    // 14592 (57 tiles: coprime with 8 XCDs, the paper's worst case):
+    // the joint swizzle wins decisively.
+    let rm2 = gemm::simulate(&arch(), &GemmConfig { grid: GridOrder::RowMajor, ..base(14592) });
+    let sw2 = gemm::simulate(
+        &arch(),
+        &GemmConfig { grid: GridOrder::Chiplet { window: 8, chunk: 64 }, ..base(14592) },
+    );
+    assert!(sw2.l2_hit > rm2.l2_hit + 0.2);
+    assert!(sw2.tflops > rm2.tflops * 1.05);
+    assert!(sw2.eff_bw_tbps > rm2.eff_bw_tbps * 1.05);
+}
+
+// ---------------------------------------------------------------- Table 5
+
+#[test]
+fn table5_solver_reproduces_paper_rows() {
+    let t = solve_table5();
+    let by_name = |n: &str| t.iter().find(|s| s.instr == n).unwrap();
+    let b128 = by_name("ds_read_b128");
+    assert_eq!((b128.banks, b128.phases.len()), (64, 4));
+    let b96 = by_name("ds_read_b96");
+    assert_eq!((b96.banks, b96.phases.len()), (32, 8));
+    let w64 = by_name("ds_write_b64");
+    assert_eq!((w64.banks, w64.phases.len()), (32, 4));
+    let r64 = by_name("ds_read_b64");
+    assert_eq!((r64.banks, r64.phases.len()), (64, 2));
+    // non-sequential phases on reads (paper: unlike NVIDIA), sequential
+    // on ds_write_b64
+    assert_ne!(b128.phases[0], (0..16).collect::<Vec<_>>());
+    assert_eq!(w64.phases[0], (0..16).collect::<Vec<_>>());
+}
+
+// ------------------------------------------------------------- Figure 6
+
+#[test]
+fn fig6_gemm_baseline_ordering() {
+    for m in [4096u32, 8192] {
+        let cfg = GemmConfig::bf16(m, m, m);
+        let hk = baselines::gemm(&arch(), &cfg, Baseline::HK).tflops;
+        let aiter = baselines::gemm(&arch(), &cfg, Baseline::Aiter).tflops;
+        let blas = baselines::gemm(&arch(), &cfg, Baseline::HipBlasLt).tflops;
+        let triton = baselines::gemm(&arch(), &cfg, Baseline::Triton).tflops;
+        // HK competes with assembly/library, beats Triton 1.3-3x
+        assert!(hk / aiter > 0.9 && hk / aiter < 1.25, "m={m} hk/aiter");
+        assert!(hk / blas > 0.95, "m={m} hk/hipblaslt");
+        let tr = hk / triton;
+        assert!((1.25..=3.2).contains(&tr), "m={m} hk/triton = {tr}");
+    }
+}
+
+#[test]
+fn fig6_fp8_doubles_bf16() {
+    let m = 8192;
+    let bf = baselines::gemm(&arch(), &GemmConfig::bf16(m, m, m), Baseline::HK);
+    let f8 = baselines::gemm(&arch(), &GemmConfig::fp8(m, m, m), Baseline::HK);
+    let r = f8.tflops / bf.tflops;
+    assert!((1.5..=2.3).contains(&r), "fp8/bf16 = {r}");
+}
+
+// ------------------------------------------------------------- Figure 7
+
+#[test]
+fn fig7_attention_fwd_hk_wins_or_ties() {
+    for (d, causal) in [(64u32, false), (128, false), (128, true)] {
+        let cfg = AttnConfig::gqa(8192, d, causal);
+        let hk = baselines::attn_fwd(&arch(), &cfg, Baseline::HK).tflops;
+        for who in [
+            Baseline::Aiter,
+            Baseline::CompokableCk,
+            Baseline::PyTorch,
+            Baseline::Triton,
+        ] {
+            let b = baselines::attn_fwd(&arch(), &cfg, who).tflops;
+            assert!(
+                hk >= b * 0.95,
+                "d={d} causal={causal}: HK {hk} < {} {b}",
+                who.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn fig7_d64_aiter_coverage_gap() {
+    // Paper: HK up to 2.1x AITER exactly where assembly coverage is thin
+    // (d=64).
+    let cfg = AttnConfig::gqa(8192, 64, false);
+    let hk = baselines::attn_fwd(&arch(), &cfg, Baseline::HK).tflops;
+    let ai = baselines::attn_fwd(&arch(), &cfg, Baseline::Aiter).tflops;
+    let r = hk / ai;
+    assert!((1.2..=2.6).contains(&r), "HK/AITER d64 = {r}");
+}
+
+// ------------------------------------------------------------- Figure 8
+
+#[test]
+fn fig8_gqa_bwd_hk_dominates() {
+    for causal in [false, true] {
+        let mut cfg = AttnConfig::gqa(8192, 128, causal);
+        cfg.pattern = Pattern::Interleave4;
+        let hk = baselines::attn_bwd(&arch(), &cfg, Baseline::HK).tflops;
+        for who in [Baseline::Aiter, Baseline::CompokableCk, Baseline::PyTorch] {
+            let b = baselines::attn_bwd(&arch(), &cfg, who).tflops;
+            let r = hk / b;
+            assert!(
+                r > 1.5,
+                "causal={causal} HK/{} = {r} (paper: 1.8-2.5x)",
+                who.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn fig15_mha_bwd_competitive_with_assembly() {
+    let mut cfg = AttnConfig::mha(8192, 128, false);
+    cfg.pattern = Pattern::Interleave4;
+    let hk = baselines::attn_bwd(&arch(), &cfg, Baseline::HK).tflops;
+    let ai = baselines::attn_bwd(&arch(), &cfg, Baseline::Aiter).tflops;
+    let r = hk / ai;
+    assert!((0.85..=1.3).contains(&r), "HK/AITER mha-bwd = {r}");
+}
+
+// ------------------------------------------------------------- Figure 9
+
+#[test]
+fn fig9_membound_hk_beats_torch_compile() {
+    for seq in [4096u32, 8192] {
+        let ln = FusedLnConfig::paper(seq);
+        let hk = baselines::fused_ln(&arch(), &ln, Baseline::HK);
+        let tc = baselines::fused_ln(&arch(), &ln, Baseline::TorchCompile);
+        let r = hk.eff_bw_tbps / tc.eff_bw_tbps;
+        assert!((1.1..=2.5).contains(&r), "seq {seq}: ln HK/tc = {r}");
+        let rp = RopeConfig::paper(seq);
+        let hkr = baselines::rope(&arch(), &rp, Baseline::HK);
+        let tcr = baselines::rope(&arch(), &rp, Baseline::TorchCompile);
+        let rr = hkr.eff_bw_tbps / tcr.eff_bw_tbps;
+        assert!((1.1..=2.5).contains(&rr), "seq {seq}: rope HK/tc = {rr}");
+    }
+}
+
+#[test]
+fn fig9_membound_near_hbm_roofline() {
+    let a = arch();
+    let p = membound::simulate_fused_ln(&a, &FusedLnConfig::paper(8192));
+    assert!(p.eff_bw_tbps > 0.5 * a.hbm_tbps);
+}
+
+// ------------------------------------------------------------ Figure 14
+
+#[test]
+fn fig14_cdna3_scales_down() {
+    let m = 8192;
+    let c4 = gemm::simulate(&Arch::mi355x(), &GemmConfig::bf16(m, m, m));
+    let c3 = gemm::simulate(&Arch::mi325x(), &GemmConfig::bf16(m, m, m));
+    let r = c4.tflops / c3.tflops;
+    // peak ratio is 2517/1307 ~ 1.9; achieved ratio should be in range
+    assert!((1.3..=2.6).contains(&r), "CDNA4/CDNA3 = {r}");
+}
+
+// ------------------------------------------------------------ Figure 19
+
+#[test]
+fn fig19_wave_spec_works_on_nvidia_like_arch() {
+    // On the B200-like arch, wave specialization reaches a healthy
+    // fraction of bf16 peak (TK vs cuBLASLt context figure).
+    let b = Arch::b200_like();
+    let cfg = GemmConfig {
+        pattern: Pattern::WaveSpec { producers: 4, consumers: 8 },
+        block_k: 256,
+        ..GemmConfig::bf16(8192, 8192, 8192)
+    };
+    let p = gemm::simulate(&b, &cfg);
+    let eff = p.tflops / b.peak_tflops(Dtype::Bf16);
+    assert!(eff > 0.45, "B200 wave-spec efficiency {eff}");
+}
+
+// ------------------------------------------------------------ Figure 24
+
+#[test]
+fn fig24_fp6_story() {
+    let m = 8192;
+    let a = arch();
+    let hk6 = gemm::simulate(&a, &GemmConfig::fp6(m, m, m));
+    let hk8 = gemm::simulate(&a, &GemmConfig::fp8(m, m, m));
+    // paper: HK FP6 ~ comparable to FP8
+    let r = hk6.tflops / hk8.tflops;
+    assert!((0.7..=1.3).contains(&r), "fp6/fp8 = {r}");
+    // the dwordx4 wave-break shuffle path burns hot-loop cycles (paper:
+    // 49% of cycles -> 2430 TFLOPS); on the compute side it must cost
+    // real time even where the kernel is externally memory-bound
+    let shuffled = gemm::simulate(
+        &a,
+        &GemmConfig { shuffle_cycles: 600, ..GemmConfig::fp6(m, m, m) },
+    );
+    assert!(
+        shuffled.compute_s > hk6.compute_s * 1.1,
+        "shuffle {} vs clean {}",
+        shuffled.compute_s,
+        hk6.compute_s
+    );
+    // CK FP6 is unoptimized
+    let ck = baselines::gemm(&a, &GemmConfig::fp6(m, m, m), Baseline::CompokableCk);
+    assert!(ck.tflops < hk6.tflops);
+}
+
+// ------------------------------------------- cross-cutting sanity
+
+#[test]
+fn all_headline_kernels_below_peak() {
+    let a = arch();
+    let bf = gemm::simulate(&a, &GemmConfig::bf16(8192, 8192, 8192));
+    assert!(bf.tflops < a.peak_tflops(Dtype::Bf16));
+    let f8 = gemm::simulate(&a, &GemmConfig::fp8(8192, 8192, 8192));
+    assert!(f8.tflops < a.peak_tflops(Dtype::Fp8));
+    let at = attention::simulate_fwd(&a, &AttnConfig::gqa(8192, 128, false));
+    assert!(at.tflops < a.peak_tflops(Dtype::Bf16));
+}
+
+// ----------------------------------------------------- report harness
+
+#[test]
+fn report_dispatch_knows_every_experiment() {
+    // `run` returns false only for unknown names; every documented
+    // experiment id must dispatch (smoke-checks the harness wiring
+    // without printing megabytes: table5/fig5 are cheap and cover the
+    // solver + visualizer paths end to end).
+    for exp in ["table5", "fig5"] {
+        assert!(hipkittens::report::run(exp), "{exp} missing");
+    }
+    assert!(!hipkittens::report::run("fig999"));
+}

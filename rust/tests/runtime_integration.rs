@@ -1,0 +1,197 @@
+//! Runtime integration: load the AOT artifacts, execute them on the PJRT
+//! CPU client, check numerics against host-side references. Skips (with a
+//! notice) when `make artifacts` has not been run.
+
+use hipkittens::runtime::{Manifest, Rng, Runtime, Tensor};
+
+fn artifacts() -> Option<String> {
+    let dir = std::env::var("HK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if Manifest::available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_expected_entries() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(dir).unwrap();
+    for name in [
+        "gemm256",
+        "attn_fwd_b1",
+        "attn_fwd_b8",
+        "fused_layernorm",
+        "rope",
+        "init_params",
+        "train_step",
+        "train_step_ref",
+        "lm_loss",
+    ] {
+        assert!(m.entry(name).is_ok(), "missing {name}");
+    }
+}
+
+#[test]
+fn gemm256_matches_host_matmul() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let n = 256usize;
+    let mut rng = Rng::new(1);
+    let a = rng.normal_vec(n * n);
+    let b = rng.normal_vec(n * n);
+    let out = rt
+        .run("gemm256", &[Tensor::F32(a.clone()), Tensor::F32(b.clone())])
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    assert_eq!(got.len(), n * n);
+    // spot-check a handful of entries against a host matmul
+    let mut rng2 = Rng::new(2);
+    for _ in 0..16 {
+        let i = rng2.below(n as u64) as usize;
+        let j = rng2.below(n as u64) as usize;
+        let want: f32 = (0..n).map(|k| a[i * n + k] * b[k * n + j]).sum();
+        let err = (got[i * n + j] - want).abs();
+        assert!(err < 1e-2, "({i},{j}): {} vs {want}", got[i * n + j]);
+    }
+}
+
+#[test]
+fn attention_rows_are_convex_combinations() {
+    // softmax(QK^T)V rows lie in the convex hull of V rows: check output
+    // max <= max over V (per batch-head) within fp tolerance.
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let entry = rt.manifest.entry("attn_fwd_b1").unwrap().clone();
+    let mut rng = Rng::new(3);
+    let inputs: Vec<Tensor> = entry
+        .inputs
+        .iter()
+        .map(|s| Tensor::F32(rng.normal_vec(s.elems())))
+        .collect();
+    let v_max = inputs[2]
+        .as_f32()
+        .unwrap()
+        .iter()
+        .fold(f32::MIN, |m, &x| m.max(x));
+    let out = rt.run("attn_fwd_b1", &inputs).unwrap();
+    let o = out[0].as_f32().unwrap();
+    let o_max = o.iter().fold(f32::MIN, |m, &x| m.max(x));
+    assert!(o_max <= v_max + 1e-3, "attention escaped the V hull");
+    assert!(o.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn attention_batch_variants_agree() {
+    // running the same single request padded into different batch
+    // artifacts must produce identical row 0.
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let e1 = rt.manifest.entry("attn_fwd_b1").unwrap().clone();
+    let e2 = rt.manifest.entry("attn_fwd_b2").unwrap().clone();
+    let mut rng = Rng::new(4);
+    let singles: Vec<Vec<f32>> =
+        e1.inputs.iter().map(|s| rng.normal_vec(s.elems())).collect();
+    let out1 = rt
+        .run(
+            "attn_fwd_b1",
+            &singles.iter().map(|v| Tensor::F32(v.clone())).collect::<Vec<_>>(),
+        )
+        .unwrap();
+    // embed request 0 into batch 2 (batch dim is the leading axis)
+    let mut rng2 = Rng::new(5);
+    let padded: Vec<Tensor> = e2
+        .inputs
+        .iter()
+        .zip(&singles)
+        .map(|(spec, single)| {
+            let mut v = rng2.normal_vec(spec.elems());
+            v[..single.len()].copy_from_slice(single);
+            Tensor::F32(v)
+        })
+        .collect();
+    let out2 = rt.run("attn_fwd_b2", &padded).unwrap();
+    let o1 = out1[0].as_f32().unwrap();
+    let o2 = out2[0].as_f32().unwrap();
+    for (i, (x, y)) in o1.iter().zip(o2[..o1.len()].iter()).enumerate() {
+        assert!((x - y).abs() < 1e-4, "elem {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn fused_layernorm_output_is_normalized() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let entry = rt.manifest.entry("fused_layernorm").unwrap().clone();
+    let rows = entry.meta_u64("rows").unwrap() as usize;
+    let d = entry.meta_u64("d").unwrap() as usize;
+    let mut rng = Rng::new(6);
+    let x = rng.normal_vec(rows * d);
+    let res = rng.normal_vec(rows * d);
+    let out = rt
+        .run(
+            "fused_layernorm",
+            &[
+                Tensor::F32(x),
+                Tensor::F32(res),
+                Tensor::F32(vec![1.0; d]),
+                Tensor::F32(vec![0.0; d]),
+            ],
+        )
+        .unwrap();
+    let o = out[0].as_f32().unwrap();
+    for r in 0..rows.min(16) {
+        let row = &o[r * d..(r + 1) * d];
+        let mean: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 =
+            row.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / d as f32;
+        assert!(mean.abs() < 1e-3, "row {r} mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "row {r} var {var}");
+    }
+}
+
+#[test]
+fn rope_preserves_pair_norms() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let entry = rt.manifest.entry("rope").unwrap().clone();
+    let mut rng = Rng::new(7);
+    let x = rng.normal_vec(entry.inputs[0].elems());
+    let out = rt.run("rope", &[Tensor::F32(x.clone())]).unwrap();
+    let y = out[0].as_f32().unwrap();
+    let d = *entry.inputs[0].shape.last().unwrap();
+    let half = d / 2;
+    for row in 0..8 {
+        let o = row * d;
+        for i in 0..half {
+            let nin = x[o + i].powi(2) + x[o + half + i].powi(2);
+            let nout = y[o + i].powi(2) + y[o + half + i].powi(2);
+            assert!((nin - nout).abs() < 1e-3, "row {row} pair {i}");
+        }
+    }
+}
+
+#[test]
+fn executable_tracks_latency() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let mut rng = Rng::new(8);
+    let a = rng.normal_vec(256 * 256);
+    let b = rng.normal_vec(256 * 256);
+    for _ in 0..3 {
+        rt.run("gemm256", &[Tensor::F32(a.clone()), Tensor::F32(b.clone())])
+            .unwrap();
+    }
+    let exe = rt.load("gemm256").unwrap();
+    assert_eq!(exe.calls.get(), 3);
+    assert!(exe.mean_latency_s() > 0.0);
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let bad = vec![Tensor::F32(vec![0.0; 7])];
+    assert!(rt.run("gemm256", &bad).is_err());
+}

@@ -1,0 +1,254 @@
+//! Property-style invariants of the simulator substrate, driven by the
+//! in-repo PRNG (offline environment — no proptest crate; the generator
+//! loop below plays the same role).
+
+use hipkittens::runtime::Rng;
+use hipkittens::sim::arch::{Arch, Dtype, MfmaShape, MFMA_16X16X32};
+use hipkittens::sim::cache::{row_major_order, simulate_gemm_schedule, GemmGrid, Lru};
+use hipkittens::sim::engine::{run_block, EngineConfig};
+use hipkittens::sim::instr::{BlockProgram, Instr, WaveProgram};
+use hipkittens::sim::lds::{access, DsInstr, WAVE};
+
+fn mfma(count: u32) -> Instr {
+    Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count }
+}
+
+#[test]
+fn engine_cycles_monotone_in_work() {
+    // Adding iterations never reduces cycles.
+    let a = Arch::mi355x();
+    let cfg = EngineConfig::for_arch(&a);
+    let mut prev = 0;
+    for iters in [1u32, 2, 4, 8, 16, 32] {
+        let block = BlockProgram {
+            waves: vec![WaveProgram {
+                prologue: vec![],
+                body: vec![mfma(4), Instr::Valu { cycles: 8 }],
+                iters,
+                epilogue: vec![],
+            }],
+            simd_of_wave: vec![0],
+        };
+        let st = run_block(&a, &cfg, &block);
+        assert!(st.cycles > prev, "iters={iters}: {} <= {prev}", st.cycles);
+        prev = st.cycles;
+    }
+}
+
+#[test]
+fn engine_flops_conservation() {
+    // The engine's reported MFMA busy cycles == total MFMA work.
+    let a = Arch::mi355x();
+    let cfg = EngineConfig::for_arch(&a);
+    let mut rng = Rng::new(11);
+    for _ in 0..20 {
+        let count = 1 + rng.below(16) as u32;
+        let iters = 1 + rng.below(8) as u32;
+        let block = BlockProgram {
+            waves: vec![WaveProgram {
+                prologue: vec![],
+                body: vec![mfma(count)],
+                iters,
+                epilogue: vec![],
+            }],
+            simd_of_wave: vec![0],
+        };
+        let st = run_block(&a, &cfg, &block);
+        let expect = count as u64
+            * iters as u64
+            * a.mfma_cycles(MFMA_16X16X32, Dtype::Bf16);
+        assert_eq!(st.mfma_busy[0], expect);
+    }
+}
+
+#[test]
+fn engine_more_waves_never_slower_per_simd() {
+    // Same total work split across SIMDs must not take longer.
+    let a = Arch::mi355x();
+    let cfg = EngineConfig::for_arch(&a);
+    let one = BlockProgram {
+        waves: vec![WaveProgram {
+            prologue: vec![],
+            body: vec![mfma(8)],
+            iters: 32,
+            epilogue: vec![],
+        }],
+        simd_of_wave: vec![0],
+    };
+    let four = BlockProgram {
+        waves: (0..4)
+            .map(|_| WaveProgram {
+                prologue: vec![],
+                body: vec![mfma(8)],
+                iters: 8,
+                epilogue: vec![],
+            })
+            .collect(),
+        simd_of_wave: vec![0, 1, 2, 3],
+    };
+    let t1 = run_block(&a, &cfg, &one).cycles;
+    let t4 = run_block(&a, &cfg, &four).cycles;
+    assert!(t4 <= t1, "{t4} > {t1}");
+}
+
+#[test]
+fn lds_access_cycles_at_least_phase_count() {
+    let mut rng = Rng::new(5);
+    for instr in [
+        DsInstr::ReadB128,
+        DsInstr::ReadB96,
+        DsInstr::ReadB64,
+        DsInstr::WriteB64,
+    ] {
+        for _ in 0..50 {
+            let mut addrs = [0u64; WAVE];
+            for a in addrs.iter_mut() {
+                *a = rng.below(4096) & !3; // word-aligned
+            }
+            let acc = access(instr, &addrs);
+            assert!(acc.cycles >= instr.phases().len() as u64);
+            assert!(acc.conflict_ways >= 1);
+            // cycles bounded by phases * worst serialization
+            assert!(
+                acc.cycles
+                    <= instr.phases().len() as u64 * acc.conflict_ways as u64
+            );
+        }
+    }
+}
+
+#[test]
+fn lru_never_exceeds_capacity() {
+    let mut rng = Rng::new(9);
+    for cap in [1usize, 3, 17, 100] {
+        let mut lru = Lru::new(cap);
+        for _ in 0..2000 {
+            lru.touch(rng.below(200));
+            assert!(lru.len() <= cap);
+        }
+    }
+}
+
+#[test]
+fn cache_hits_improve_with_smaller_grids() {
+    // A grid that fits entirely in LLC must have near-perfect combined
+    // reuse after the first pass.
+    let arch = Arch::mi355x();
+    let small = GemmGrid {
+        m: 2048,
+        n: 2048,
+        k: 2048,
+        block_m: 256,
+        block_n: 256,
+        block_k: 64,
+        elem_bytes: 2.0,
+    };
+    let st = simulate_gemm_schedule(&arch, &small, &row_major_order(8, 8));
+    assert!(st.l2_hit + (1.0 - st.l2_hit) * st.llc_hit > 0.8);
+}
+
+#[test]
+fn cache_rates_are_probabilities() {
+    let arch = Arch::mi355x();
+    let mut rng = Rng::new(3);
+    for _ in 0..5 {
+        let tm = 2 + rng.below(30) as u32;
+        let tn = 2 + rng.below(30) as u32;
+        let grid = GemmGrid {
+            m: tm * 192,
+            n: tn * 256,
+            k: 4096,
+            block_m: 192,
+            block_n: 256,
+            block_k: 64,
+            elem_bytes: 2.0,
+        };
+        let st = simulate_gemm_schedule(&arch, &grid, &row_major_order(tm, tn));
+        assert!((0.0..=1.0).contains(&st.l2_hit));
+        assert!((0.0..=1.0).contains(&st.llc_hit));
+        assert!(st.eff_bw_tbps > 0.0);
+        assert!(st.eff_bw_tbps <= arch.l2_tbps + 1e-9);
+        assert!(st.mem_time_s > 0.0);
+    }
+}
+
+#[test]
+fn mfma_cycles_positive_and_ordered_by_dtype() {
+    let a = Arch::mi355x();
+    let mut rng = Rng::new(7);
+    for _ in 0..50 {
+        let m = 16 << rng.below(2);
+        let k = 16 << rng.below(3);
+        let shape = MfmaShape::new(m, m, k);
+        for dt in [Dtype::Bf16, Dtype::Fp8] {
+            let c = a.mfma_cycles(shape, dt);
+            assert!(c >= 4);
+        }
+        // bf16 never faster than fp8 for the same shape
+        assert!(
+            a.mfma_cycles(shape, Dtype::Bf16)
+                >= a.mfma_cycles(shape, Dtype::Fp8)
+        );
+    }
+}
+
+#[test]
+fn barrier_cost_slows_barrier_heavy_programs() {
+    let a = Arch::mi355x();
+    let mk = |barrier_cost| {
+        let mut cfg = EngineConfig::for_arch(&a);
+        cfg.barrier_cost = barrier_cost;
+        let wp = WaveProgram {
+            prologue: vec![],
+            body: vec![mfma(1), Instr::Barrier],
+            iters: 64,
+            epilogue: vec![],
+        };
+        let block = BlockProgram {
+            waves: vec![wp.clone(), wp],
+            simd_of_wave: vec![0, 1],
+        };
+        run_block(&a, &cfg, &block).cycles
+    };
+    assert!(mk(100) > mk(0), "{} <= {}", mk(100), mk(0));
+}
+
+#[test]
+fn vmem_latency_exposed_without_prefetch() {
+    // A load immediately consumed exposes the memory latency; the same
+    // load prefetched far ahead does not.
+    let a = Arch::mi355x();
+    let cfg = EngineConfig::for_arch(&a).with_vmem_latency(800);
+    let exposed = BlockProgram {
+        waves: vec![WaveProgram {
+            prologue: vec![],
+            body: vec![
+                Instr::VMemLoad { bytes: 1024, to_lds: true, issues: 1 },
+                Instr::WaitVmcnt { max_outstanding: 0 },
+                mfma(4),
+            ],
+            iters: 16,
+            epilogue: vec![],
+        }],
+        simd_of_wave: vec![0],
+    };
+    let hidden = BlockProgram {
+        waves: vec![WaveProgram {
+            prologue: vec![Instr::VMemLoad { bytes: 1024, to_lds: true, issues: 1 }],
+            body: vec![
+                Instr::VMemLoad { bytes: 1024, to_lds: true, issues: 1 },
+                Instr::WaitVmcnt { max_outstanding: 1 },
+                mfma(4),
+            ],
+            iters: 16,
+            epilogue: vec![],
+        }],
+        simd_of_wave: vec![0],
+    };
+    let te = run_block(&a, &cfg, &exposed).cycles;
+    let th = run_block(&a, &cfg, &hidden).cycles;
+    assert!(
+        te as f64 > th as f64 * 1.5,
+        "exposed {te} must be much slower than hidden {th}"
+    );
+}
