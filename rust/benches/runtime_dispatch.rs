@@ -1,59 +1,118 @@
-//! `cargo bench --bench runtime_dispatch` — the execution plane:
-//! PJRT artifact dispatch latency and the batching service throughput
-//! (needs `make artifacts`; prints a notice and exits cleanly otherwise).
+//! `cargo bench --bench runtime_dispatch` — the dispatch plane:
+//! registry dispatch latency (cold autotune vs warm cache), tune-cache
+//! JSON round-trip cost, and mixed-op service throughput. Results are
+//! also written to `BENCH_dispatch.json` (override with `HK_BENCH_OUT`)
+//! so CI records the perf trajectory.
+//!
+//! Needs no artifacts: every launch routes through `registry::dispatch`
+//! and executes on the simulated substrate.
 
-use hipkittens::coordinator::{
-    bench_fn, poisson_trace, BatchingService, ServiceConfig,
-};
-use hipkittens::runtime::{Manifest, Rng, Runtime, Tensor};
+use hipkittens::coordinator::{bench_fn, mixed_trace, MixedService, ServiceConfig};
+use hipkittens::hk::tunecache::TuneCache;
+use hipkittens::kernels::registry::{ArchId, Query};
+use hipkittens::runtime::json::Json;
+use hipkittens::sim::Dtype;
+
+fn bench_row(r: &hipkittens::coordinator::BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(r.name.clone())),
+        ("mean_ms", Json::Num(r.mean_s * 1e3)),
+        ("min_ms", Json::Num(r.min_s * 1e3)),
+        ("max_ms", Json::Num(r.max_s * 1e3)),
+        ("iters", Json::Num(r.iters as f64)),
+    ])
+}
 
 fn main() {
-    let dir = std::env::var("HK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    if !Manifest::available(&dir) {
-        println!("runtime_dispatch: artifacts/ missing — run `make artifacts`");
-        return;
-    }
-    let mut rt = Runtime::new(&dir).unwrap();
-    println!("platform: {}", rt.platform());
+    let arch = ArchId::Mi355x;
+    let mut rows = Vec::new();
 
-    let mut rng = Rng::new(0);
-    let a = rng.normal_vec(256 * 256);
-    let b = rng.normal_vec(256 * 256);
-    rt.load("gemm256").unwrap();
-    let r = bench_fn("dispatch: gemm256 execute", 5, 30, || {
-        rt.run("gemm256", &[Tensor::F32(a.clone()), Tensor::F32(b.clone())])
-            .unwrap();
+    // cold dispatch: every iteration sweeps variants + the (W, C)
+    // autotuner against an empty cache
+    let gemm_q = Query::gemm(arch, Dtype::Bf16, 4096, 4096, 4096);
+    let r = bench_fn("dispatch: gemm bf16 4096^3 (cold autotune)", 1, 3, || {
+        let mut cache = TuneCache::new();
+        let d = gemm_q.dispatch_with(&mut cache);
+        assert!(!d.from_cache);
     });
     println!("{}", r.row());
+    rows.push(bench_row(&r));
 
-    // attention artifact per batch size: amortization curve
-    for bsz in [1usize, 2, 4, 8] {
-        let name = format!("attn_fwd_b{bsz}");
-        let entry = rt.manifest.entry(&name).unwrap().clone();
-        let inputs: Vec<Tensor> = entry
-            .inputs
-            .iter()
-            .map(|s| Tensor::F32(rng.normal_vec(s.elems())))
-            .collect();
-        rt.load(&name).unwrap();
-        let r = bench_fn(&format!("dispatch: {name}"), 3, 15, || {
-            rt.run(&name, &inputs).unwrap();
-        });
-        println!(
-            "{}   ({:.3} ms/request)",
-            r.row(),
-            r.mean_s * 1e3 / bsz as f64
-        );
+    // warm dispatch: table lookup + config construction only
+    let mut warm = TuneCache::new();
+    let _ = gemm_q.dispatch_with(&mut warm);
+    let r = bench_fn("dispatch: gemm bf16 4096^3 (warm cache)", 10, 200, || {
+        let d = gemm_q.dispatch_with(&mut warm);
+        assert!(d.from_cache);
+    });
+    println!("{}", r.row());
+    rows.push(bench_row(&r));
+
+    // attention dispatch, cold vs warm
+    let attn_q = Query::attn_gqa(arch, 4096, 128, false);
+    let r = bench_fn("dispatch: gqa fwd 4096/d128 (cold)", 1, 5, || {
+        let mut cache = TuneCache::new();
+        let d = attn_q.dispatch_with(&mut cache);
+        assert!(!d.from_cache);
+    });
+    println!("{}", r.row());
+    rows.push(bench_row(&r));
+
+    let mut warm_attn = TuneCache::new();
+    let _ = attn_q.dispatch_with(&mut warm_attn);
+    let r = bench_fn("dispatch: gqa fwd 4096/d128 (warm)", 10, 200, || {
+        let d = attn_q.dispatch_with(&mut warm_attn);
+        assert!(d.from_cache);
+    });
+    println!("{}", r.row());
+    rows.push(bench_row(&r));
+
+    // tune-cache persistence round-trip
+    let json = warm.to_json();
+    let r = bench_fn("tunecache: JSON dump+parse round-trip", 5, 100, || {
+        let text = json.dump();
+        let back = TuneCache::from_json(
+            &hipkittens::runtime::json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert!(!back.is_empty());
+    });
+    println!("{}", r.row());
+    rows.push(bench_row(&r));
+
+    // mixed-op service: one queue of attention + GEMM + LN + RoPE
+    let mut svc = MixedService::new(arch, ServiceConfig::default()).unwrap();
+    let trace = mixed_trace(64, 400.0, 9);
+    // warm the per-(op, batch) dispatch memo off the timed path
+    let warm_rep = svc.run_trace(&trace).unwrap();
+    let r = bench_fn("service: mixed trace x64 (warm registry)", 2, 20, || {
+        let rep = svc.run_trace(&trace).unwrap();
+        assert_eq!(rep.served, 64);
+    });
+    println!("{}", r.row());
+    println!("service: {}", warm_rep.summary());
+    rows.push(bench_row(&r));
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("runtime_dispatch".into())),
+        ("arch", Json::Str(arch.tag().into())),
+        ("rows", Json::Arr(rows)),
+        (
+            "service",
+            Json::obj(vec![
+                ("served", Json::Num(warm_rep.served as f64)),
+                ("batches", Json::Num(warm_rep.batches as f64)),
+                ("mean_batch", Json::Num(warm_rep.mean_batch)),
+                ("throughput_rps", Json::Num(warm_rep.throughput_rps)),
+                ("p50_us", Json::Num(warm_rep.latency.p50_us())),
+                ("p99_us", Json::Num(warm_rep.latency.p99_us())),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("HK_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_dispatch.json".to_string());
+    match std::fs::write(&out, doc.dump()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
     }
-
-    // full service loop
-    let mut svc = BatchingService::new(&mut rt, ServiceConfig::default()).unwrap();
-    let trace = poisson_trace(32, 400.0, 9);
-    let t0 = std::time::Instant::now();
-    let rep = svc.run_trace(&trace).unwrap();
-    println!(
-        "service: {} ({:.2}s wall)",
-        rep.summary(),
-        t0.elapsed().as_secs_f64()
-    );
 }

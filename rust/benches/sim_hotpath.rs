@@ -5,20 +5,26 @@
 
 use hipkittens::coordinator::bench_fn;
 use hipkittens::hk::chiplet::ChipletSwizzle;
-use hipkittens::kernels::attention::{self, AttnConfig};
-use hipkittens::kernels::gemm::{self, GemmConfig};
-use hipkittens::sim::arch::Arch;
+use hipkittens::kernels::attention;
+use hipkittens::kernels::gemm::{self, GridOrder, Pattern};
+use hipkittens::kernels::registry::{ArchId, Query};
 use hipkittens::sim::cache::{row_major_order, simulate_gemm_schedule, GemmGrid};
 use hipkittens::sim::engine::EngineConfig;
 use hipkittens::sim::lds::{access, DsInstr, WAVE};
+use hipkittens::sim::Dtype;
 
 fn main() {
-    let a = Arch::mi355x();
+    let arch = ArchId::Mi355x;
+    let a = arch.arch();
     println!("== simulator hot paths ==");
 
-    // engine: one 8192^3 GEMM block program
-    let cfg = GemmConfig::bf16(8192, 8192, 8192);
-    let built = gemm::build(&a, &cfg);
+    // engine: one 8192^3 GEMM block program (paper-default dispatch)
+    let gemm_d = Query::gemm(arch, Dtype::Bf16, 8192, 8192, 8192)
+        .pattern(Pattern::PingPong8)
+        .blocks(256, 256)
+        .grid(GridOrder::Chiplet { window: 8, chunk: 64 })
+        .dispatch();
+    let built = gemm::build(&a, gemm_d.gemm_config());
     let ec = EngineConfig::for_arch(&a).with_vmem_latency(400);
     let r = bench_fn("engine: bf16 gemm block (128 iters)", 2, 10, || {
         let st = hipkittens::sim::run_block(&a, &ec, &built.block);
@@ -27,8 +33,11 @@ fn main() {
     println!("{}", r.row());
 
     // engine: attention bwd block
-    let bcfg = AttnConfig::mha(8192, 128, false);
-    let spec = attention::build_bwd_spec(&a, &bcfg);
+    let attn_d = Query::attn_mha(arch, 8192, 128, false)
+        .bwd()
+        .pattern(Pattern::PingPong8)
+        .dispatch();
+    let spec = attention::build_bwd_spec(&a, attn_d.attn_config());
     let b2 = hipkittens::hk::pingpong::build(&spec);
     let r = bench_fn("engine: attn bwd block (512 iters)", 2, 10, || {
         let st = hipkittens::sim::run_block(&a, &ec, &b2.block);
@@ -78,7 +87,7 @@ fn main() {
 
     // end-to-end kernel sim
     let r = bench_fn("e2e: simulate bf16 gemm 8192^3", 1, 5, || {
-        let p = gemm::simulate(&a, &cfg);
+        let p = gemm::simulate(&a, gemm_d.gemm_config());
         assert!(p.tflops > 0.0);
     });
     println!("{}", r.row());

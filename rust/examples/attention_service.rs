@@ -1,0 +1,46 @@
+//! Serving demo: Poisson arrivals through the L3 coordinators.
+//!
+//! Runs the registry-backed *mixed-op* service (attention + GEMM +
+//! layernorm + RoPE in one queue, execution times from the autotuned
+//! dispatch's cost model — no artifacts needed), then the
+//! artifact-backed attention batching service when `make artifacts` has
+//! produced a manifest. Reports throughput and latency percentiles.
+//!
+//! Run: `cargo run --release --example attention_service`
+
+use hipkittens::coordinator::{
+    mixed_trace, poisson_trace, BatchingService, MixedService, ServiceConfig,
+};
+use hipkittens::error::Result;
+use hipkittens::kernels::registry::ArchId;
+use hipkittens::runtime::{Manifest, Runtime};
+
+fn main() -> Result<()> {
+    println!("== mixed-op service (registry dispatch, simulated MI355X) ==");
+    for rate in [50.0, 200.0, 1000.0] {
+        let mut svc = MixedService::new(ArchId::Mi355x, ServiceConfig::default())?;
+        let trace = mixed_trace(48, rate, 11);
+        let rep = svc.run_trace(&trace)?;
+        println!("\nrate {rate:>6.0} req/s -> {}", rep.summary());
+        println!(
+            "  batching amortization: mean batch {:.2} (1.0 = no batching)",
+            rep.mean_batch
+        );
+    }
+
+    let dir = std::env::var("HK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !Manifest::available(&dir) {
+        println!("\n[artifact service skipped: run `make artifacts` first]");
+        return Ok(());
+    }
+    println!("\n== artifact-backed attention service ==");
+    let mut rt = Runtime::new(&dir)?;
+    println!("backend: {}", rt.platform());
+    for rate in [50.0, 200.0, 1000.0] {
+        let mut svc = BatchingService::new(&mut rt, ServiceConfig::default())?;
+        let trace = poisson_trace(48, rate, 11);
+        let rep = svc.run_trace(&trace)?;
+        println!("\nrate {rate:>6.0} req/s -> {}", rep.summary());
+    }
+    Ok(())
+}

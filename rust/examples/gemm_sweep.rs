@@ -1,18 +1,21 @@
 //! GEMM sweep + chiplet-swizzle exploration (Fig. 6 / Table 4 workloads).
 //!
-//! Sweeps problem sizes across baselines, then sweeps Algorithm 1's (W, C)
-//! parameters at a fixed shape, printing the L2/LLC trade-off surface the
-//! paper's §3.4 describes.
+//! Sweeps problem sizes across baselines — every HK launch resolved by
+//! `registry::dispatch` — then sweeps Algorithm 1's (W, C) parameters at
+//! a fixed shape, printing the L2/LLC trade-off surface the paper's
+//! §3.4 describes.
 //!
 //! Run: `cargo run --release --example gemm_sweep`
 
 use hipkittens::hk::chiplet::{render_first_round, ChipletSwizzle};
 use hipkittens::kernels::baselines::{self, Baseline};
-use hipkittens::kernels::gemm::{simulate, GemmConfig, GridOrder};
-use hipkittens::sim::Arch;
+use hipkittens::kernels::gemm::{GridOrder, Pattern};
+use hipkittens::kernels::registry::{ArchId, Query};
+use hipkittens::sim::Dtype;
 
 fn main() {
-    let arch = Arch::mi355x();
+    let arch = ArchId::Mi355x;
+    let a = arch.arch();
 
     println!("== BF16 GEMM sweep (TFLOPS) ==");
     print!("{:<12}", "M=N=K");
@@ -23,23 +26,26 @@ fn main() {
     for s in [1024u32, 2048, 4096, 8192, 16384] {
         print!("{s:<12}");
         for who in [Baseline::HK, Baseline::Aiter, Baseline::Triton] {
-            let p = baselines::gemm(&arch, &GemmConfig::bf16(s, s, s), who);
+            let d = Query::gemm(arch, Dtype::Bf16, s, s, s).dispatch();
+            let p = baselines::gemm(&a, d.gemm_config(), who);
             print!("{:>14.0}", p.tflops);
         }
         println!();
     }
 
     println!("\n== Algorithm 1 (W, C) surface at 9216^3, tile 192x256 ==");
-    println!("{:<10} {:>6} {:>6} {:>9} {:>9}", "W/C", "L2%", "LLC%", "BW TB/s", "TFLOPS");
+    println!(
+        "{:<10} {:>6} {:>6} {:>9} {:>9}",
+        "W/C", "L2%", "LLC%", "BW TB/s", "TFLOPS"
+    );
     for w in [4u32, 5, 7, 8] {
         for c in [8u32, 25, 64, 216] {
-            let cfg = GemmConfig {
-                block_m: 192,
-                block_n: 256,
-                grid: GridOrder::Chiplet { window: w, chunk: c },
-                ..GemmConfig::bf16(9216, 9216, 9216)
-            };
-            let p = simulate(&arch, &cfg);
+            let p = Query::gemm(arch, Dtype::Bf16, 9216, 9216, 9216)
+                .pattern(Pattern::PingPong8)
+                .blocks(192, 256)
+                .grid(GridOrder::Chiplet { window: w, chunk: c })
+                .dispatch()
+                .simulate();
             println!(
                 "W{w}/C{c:<6} {:>5.0}% {:>5.0}% {:>9.1} {:>9.0}",
                 p.l2_hit * 100.0,
@@ -51,7 +57,7 @@ fn main() {
     }
 
     println!("\n== First dispatch round, W5/C25 (Fig. 5c) ==");
-    let swz = ChipletSwizzle::new(arch.n_xcds, 5, 25);
+    let swz = ChipletSwizzle::new(a.n_xcds, 5, 25);
     for line in render_first_round(&swz, 48, 48, 256).lines().take(20) {
         println!("{line}");
     }

@@ -1,24 +1,30 @@
 //! Quickstart: the three-layer stack in one file.
 //!
-//! 1. Simulation plane: run one HK BF16 GEMM on the simulated MI355X and
-//!    print the paper-style metrics.
+//! 1. Simulation plane: dispatch one HK BF16 GEMM through the autotuned
+//!    kernel registry, run it on the simulated MI355X and print the
+//!    paper-style metrics.
 //! 2. Execution plane: load the AOT-compiled Pallas GEMM artifact
-//!    (`make artifacts`) and execute it on the PJRT CPU client from Rust,
-//!    checking the numerics against a host matmul.
+//!    (`make artifacts`) and execute it on the runtime backend from
+//!    Rust, checking the numerics against a host matmul. (The default
+//!    build ships the stub backend; see README "Execution plane".)
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use anyhow::Result;
-use hipkittens::kernels::gemm::{simulate, GemmConfig};
+use hipkittens::error::Result;
+use hipkittens::kernels::registry::{ArchId, Query};
 use hipkittens::runtime::{Rng, Runtime, Tensor};
-use hipkittens::sim::Arch;
+use hipkittens::sim::Dtype;
 
 fn main() -> Result<()> {
     // --- 1. the simulation plane -------------------------------------
-    let arch = Arch::mi355x();
-    let cfg = GemmConfig::bf16(8192, 8192, 8192);
-    let perf = simulate(&arch, &cfg);
-    println!("[sim] HK BF16 GEMM 8192^3 on {}:", arch.name);
+    let arch = ArchId::Mi355x;
+    let d = Query::gemm(arch, Dtype::Bf16, 8192, 8192, 8192).dispatch();
+    let perf = d.simulate();
+    println!(
+        "[sim] HK BF16 GEMM 8192^3 on {} (registry variant {}):",
+        arch.arch().name,
+        d.variant
+    );
     println!(
         "[sim]   {:.0} TFLOPS (MFMA util {:.2}, L2 {:.0}%, LLC {:.0}%, {:.1} TB/s)",
         perf.tflops,
@@ -35,7 +41,7 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let mut rt = Runtime::new(&dir)?;
-    println!("[run] PJRT platform: {}", rt.platform());
+    println!("[run] backend: {}", rt.platform());
     let mut rng = Rng::new(0);
     let n = 256usize;
     let a = rng.normal_vec(n * n);

@@ -7,8 +7,9 @@
 //! Run: `make artifacts && cargo run --release --example train_transformer
 //!       [-- --steps 200]`
 
-use anyhow::Result;
-use hipkittens::coordinator::{Path, Trainer};
+use hipkittens::coordinator::{predicted_step_s, Path, Trainer};
+use hipkittens::error::Result;
+use hipkittens::kernels::registry::ArchId;
 use hipkittens::runtime::Runtime;
 
 fn main() -> Result<()> {
@@ -22,7 +23,7 @@ fn main() -> Result<()> {
 
     let dir = std::env::var("HK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let mut rt = Runtime::new(&dir)?;
-    println!("platform: {}", rt.platform());
+    println!("backend: {}", rt.platform());
 
     let mut tr = Trainer::new(&mut rt, 0)?;
     println!(
@@ -31,6 +32,14 @@ fn main() -> Result<()> {
         tr.vocab,
         tr.seq_len,
         tr.batch
+    );
+
+    // registry-dispatched kernel plan for one step on simulated MI355X
+    let plan = tr.plan(ArchId::Mi355x);
+    println!(
+        "kernel plan: {} dispatches, predicted {:.3} ms/step",
+        plan.len(),
+        predicted_step_s(&plan) * 1e3
     );
 
     // parity probe: evaluated on the kernel path here, stepped on the

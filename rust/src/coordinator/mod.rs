@@ -1,11 +1,17 @@
-//! `coordinator` — the L3 drivers built on the PJRT runtime: a batching
-//! attention service (serving shape) and a training driver (the paper's
-//! pretraining stability check), plus the metrics/bench substrate.
+//! `coordinator` — the L3 drivers built on the runtime and the kernel
+//! registry: the artifact-backed batching attention service, the
+//! registry-backed mixed-op service (attention + GEMM + layernorm +
+//! RoPE in one queue), and the training driver (the paper's pretraining
+//! stability check) with its registry-dispatched kernel plan, plus the
+//! metrics/bench substrate.
 
 pub mod metrics;
 pub mod service;
 pub mod train;
 
 pub use metrics::{bench_fn, BenchResult, LatencyStats};
-pub use service::{poisson_trace, AttnRequest, BatchingService, ServiceConfig};
-pub use train::{Path, Trainer};
+pub use service::{
+    mixed_trace, poisson_trace, AttnRequest, BatchingService, MixedReport,
+    MixedRequest, MixedService, OpClass, ServiceConfig,
+};
+pub use train::{kernel_plan, predicted_step_s, Path, TrainShape, Trainer};

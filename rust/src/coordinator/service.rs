@@ -1,15 +1,27 @@
-//! Batching attention service — the serving-style coordinator (L3).
+//! Serving coordinators (L3).
 //!
-//! A single-owner event loop (the vLLM-router shape, scaled to one
-//! process): requests arrive on a trace, the batcher greedily groups them
-//! up to the largest exported batch size, pads, executes the AOT attention
-//! artifact on the PJRT runtime, and records per-request latency.
-//! Python is never on this path — the artifacts were compiled by
-//! `make artifacts`.
+//! Two services share the batching/trace substrate:
+//!
+//! - [`BatchingService`] — the artifact-backed attention service: a
+//!   single-owner event loop (the vLLM-router shape, scaled to one
+//!   process). Requests arrive on a trace, the batcher greedily groups
+//!   them up to the largest exported batch size, pads, executes the AOT
+//!   attention artifact on the runtime backend, and records per-request
+//!   latency.
+//! - [`MixedService`] — the registry-backed *mixed-op* service: one
+//!   queue carrying attention + GEMM + layernorm + RoPE requests. Now
+//!   that every kernel launch is a uniform `registry::dispatch`, the
+//!   service needs no per-op plumbing: it groups runs of same-op
+//!   requests, resolves each `(op, batch)` once through the autotuned
+//!   registry, and advances the trace clock by the dispatched kernel's
+//!   simulated execution time. Fully deterministic — no wall clock.
 
 use super::metrics::LatencyStats;
+use crate::bail;
+use crate::error::Result;
+use crate::kernels::registry::{ArchId, Query};
 use crate::runtime::{Rng, Runtime, Tensor};
-use anyhow::{bail, Result};
+use std::collections::HashMap;
 
 /// One inference request (timestamps in seconds on the trace clock).
 #[derive(Debug, Clone, Copy)]
@@ -19,7 +31,7 @@ pub struct AttnRequest {
 }
 
 /// Service configuration; batch sizes must match exported artifacts
-/// (`attn_fwd_b{n}`).
+/// (`attn_fwd_b{n}`) for the artifact-backed service.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub batch_sizes: Vec<usize>,
@@ -64,7 +76,19 @@ impl ServiceReport {
     }
 }
 
-/// The batching service.
+/// Pick the batch size for `pending` queued requests: the largest
+/// configured size <= pending, or the smallest if none fit (padding).
+fn pick_batch(batch_sizes: &[usize], pending: usize) -> usize {
+    let mut best = batch_sizes[0];
+    for &b in batch_sizes {
+        if b <= pending && b > best {
+            best = b;
+        }
+    }
+    best
+}
+
+/// The artifact-backed batching service.
 pub struct BatchingService<'rt> {
     rt: &'rt mut Runtime,
     cfg: ServiceConfig,
@@ -82,17 +106,9 @@ impl<'rt> BatchingService<'rt> {
         Ok(s)
     }
 
-    /// Pick the batch-size artifact for `pending` queued requests: the
-    /// largest exported size <= pending, or the smallest if none fit
-    /// (padding).
+    /// Batch-size policy (see [`pick_batch`]).
     pub fn pick_batch(&self, pending: usize) -> usize {
-        let mut best = self.cfg.batch_sizes[0];
-        for &b in &self.cfg.batch_sizes {
-            if b <= pending && b > best {
-                best = b;
-            }
-        }
-        best
+        pick_batch(&self.cfg.batch_sizes, pending)
     }
 
     fn qkv_for(&mut self, name: &str) -> Result<Vec<Tensor>> {
@@ -170,6 +186,192 @@ pub fn poisson_trace(n: u64, rate: f64, seed: u64) -> Vec<AttnRequest> {
         .collect()
 }
 
+// ---------------------------------------------------------------- mixed
+
+/// Operation class of a mixed-trace request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    AttnFwd,
+    Gemm,
+    FusedLn,
+    Rope,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 4] =
+        [OpClass::AttnFwd, OpClass::Gemm, OpClass::FusedLn, OpClass::Rope];
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            OpClass::AttnFwd => "attn",
+            OpClass::Gemm => "gemm",
+            OpClass::FusedLn => "ln",
+            OpClass::Rope => "rope",
+        }
+    }
+}
+
+/// One request of a mixed-op trace.
+#[derive(Debug, Clone, Copy)]
+pub struct MixedRequest {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub op: OpClass,
+}
+
+/// Outcome of serving a mixed trace.
+#[derive(Debug, Clone)]
+pub struct MixedReport {
+    pub served: u64,
+    pub batches: u64,
+    pub makespan_s: f64,
+    pub latency: LatencyStats,
+    pub mean_batch: f64,
+    pub throughput_rps: f64,
+    /// Served request count per op class, in [`OpClass::ALL`] order.
+    pub per_op: [u64; 4],
+}
+
+impl MixedReport {
+    pub fn summary(&self) -> String {
+        let mix: Vec<String> = OpClass::ALL
+            .iter()
+            .zip(&self.per_op)
+            .map(|(op, n)| format!("{}={n}", op.tag()))
+            .collect();
+        format!(
+            "served={} [{}] batches={} mean_batch={:.2} throughput={:.1} req/s latency[{}]",
+            self.served,
+            mix.join(" "),
+            self.batches,
+            self.mean_batch,
+            self.throughput_rps,
+            self.latency.summary()
+        )
+    }
+}
+
+/// The registry-backed mixed-op service. Execution time comes from the
+/// autotuned dispatch's cost model, so the whole loop is deterministic.
+pub struct MixedService {
+    arch: ArchId,
+    cfg: ServiceConfig,
+    /// (op, batch) -> simulated batch execution seconds. Warmed through
+    /// `registry::dispatch` on first use per combination.
+    exec_s: HashMap<(OpClass, usize), f64>,
+}
+
+impl MixedService {
+    pub fn new(arch: ArchId, cfg: ServiceConfig) -> Result<Self> {
+        if cfg.batch_sizes.is_empty() {
+            bail!("mixed service needs at least one batch size");
+        }
+        Ok(MixedService { arch, cfg, exec_s: HashMap::new() })
+    }
+
+    /// The canonical per-op query at a given batch size. Attention and
+    /// the memory-bound kernels batch along their leading dimension; a
+    /// GEMM "request" is one independent launch, so its batch multiplies
+    /// the launch count in [`Self::batch_exec_s`].
+    fn query(&self, op: OpClass, batch: usize) -> Query {
+        let b = batch as u32;
+        match op {
+            OpClass::AttnFwd => Query::attn(self.arch, b, 32, 8, 2048, 128, true),
+            OpClass::Gemm => {
+                Query::gemm(self.arch, crate::sim::Dtype::Bf16, 2048, 2048, 2048)
+            }
+            OpClass::FusedLn => Query::fused_ln(self.arch, b * 4096, 2048),
+            OpClass::Rope => Query::rope(self.arch, b, 16, 2048, 128),
+        }
+    }
+
+    /// Simulated execution time of one batch (memoized per (op, batch)).
+    pub fn batch_exec_s(&mut self, op: OpClass, batch: usize) -> f64 {
+        if let Some(&t) = self.exec_s.get(&(op, batch)) {
+            return t;
+        }
+        let perf = self.query(op, batch).dispatch().simulate();
+        let t = match op {
+            // independent launches: batching amortizes nothing but the
+            // queueing, which is exactly what the trace should show
+            OpClass::Gemm => perf.time_s * batch as f64,
+            _ => perf.time_s,
+        };
+        self.exec_s.insert((op, batch), t);
+        t
+    }
+
+    /// Serve a mixed trace entirely on the trace clock.
+    pub fn run_trace(&mut self, trace: &[MixedRequest]) -> Result<MixedReport> {
+        if trace.is_empty() {
+            bail!("empty trace");
+        }
+        let mut latency = LatencyStats::default();
+        let mut per_op = [0u64; 4];
+        let mut now = 0.0f64;
+        let mut i = 0usize;
+        let mut batches = 0u64;
+        let mut served = 0u64;
+        while i < trace.len() {
+            now = now.max(trace[i].arrival_s);
+            let deadline = now + self.cfg.max_wait_s;
+            let max_b = *self.cfg.batch_sizes.iter().max().unwrap();
+            let op = trace[i].op;
+            // admit a contiguous run of same-op arrivals inside the window
+            let mut pending = 0usize;
+            while i + pending < trace.len()
+                && trace[i + pending].op == op
+                && trace[i + pending].arrival_s <= deadline
+                && pending < max_b
+            {
+                pending += 1;
+            }
+            let b = pick_batch(&self.cfg.batch_sizes, pending.max(1));
+            let take = b.min(pending.max(1)).min(trace.len() - i);
+            let formed_at = now.max(trace[i + take - 1].arrival_s);
+            let done = formed_at + self.batch_exec_s(op, b);
+            for r in &trace[i..i + take] {
+                latency.record_s(done - r.arrival_s);
+            }
+            let op_idx = OpClass::ALL.iter().position(|&o| o == op).unwrap();
+            per_op[op_idx] += take as u64;
+            now = done;
+            i += take;
+            batches += 1;
+            served += take as u64;
+        }
+        let makespan = now - trace[0].arrival_s;
+        Ok(MixedReport {
+            served,
+            batches,
+            makespan_s: makespan,
+            mean_batch: served as f64 / batches.max(1) as f64,
+            throughput_rps: served as f64 / makespan.max(1e-9),
+            latency,
+            per_op,
+        })
+    }
+}
+
+/// Build a Poisson mixed-op trace: attention-heavy with a GEMM /
+/// layernorm / RoPE tail (50/20/20/10).
+pub fn mixed_trace(n: u64, rate: f64, seed: u64) -> Vec<MixedRequest> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|id| {
+            t += rng.exp(rate);
+            let op = match rng.below(10) {
+                0..=4 => OpClass::AttnFwd,
+                5 | 6 => OpClass::Gemm,
+                7 | 8 => OpClass::FusedLn,
+                _ => OpClass::Rope,
+            };
+            MixedRequest { id, arrival_s: t, op }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,20 +390,26 @@ mod tests {
 
     #[test]
     fn pick_batch_prefers_largest_fitting() {
-        // no runtime needed: test the policy through a tiny shim
         let cfg = ServiceConfig::default();
-        let pick = |pending: usize| {
-            let mut best = cfg.batch_sizes[0];
-            for &b in &cfg.batch_sizes {
-                if b <= pending && b > best {
-                    best = b;
-                }
-            }
-            best
-        };
-        assert_eq!(pick(1), 1);
-        assert_eq!(pick(3), 2);
-        assert_eq!(pick(8), 8);
-        assert_eq!(pick(100), 8);
+        assert_eq!(pick_batch(&cfg.batch_sizes, 1), 1);
+        assert_eq!(pick_batch(&cfg.batch_sizes, 3), 2);
+        assert_eq!(pick_batch(&cfg.batch_sizes, 8), 8);
+        assert_eq!(pick_batch(&cfg.batch_sizes, 100), 8);
+    }
+
+    #[test]
+    fn mixed_trace_covers_all_op_classes() {
+        let tr = mixed_trace(200, 100.0, 2);
+        assert_eq!(tr.len(), 200);
+        for op in OpClass::ALL {
+            assert!(
+                tr.iter().any(|r| r.op == op),
+                "{} absent from the mix",
+                op.tag()
+            );
+        }
+        for w in tr.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
     }
 }

@@ -6,8 +6,12 @@
 //! path (`train_step_ref`) runs dense attention for the paper's loss-
 //! parity check.
 
+use crate::err;
+use crate::error::Result;
+use crate::hk::costmodel::KernelPerf;
+use crate::kernels::registry::{ArchId, Query};
 use crate::runtime::{Rng, Runtime, Tensor};
-use anyhow::{anyhow, Result};
+use crate::sim::Dtype;
 
 /// Which attention path the step runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,14 +47,14 @@ impl<'rt> Trainer<'rt> {
         let entry = rt.manifest.entry("train_step")?.clone();
         let n_params = entry
             .meta_u64("n_params")
-            .ok_or_else(|| anyhow!("train_step missing n_params"))? as usize;
+            .ok_or_else(|| err!("train_step missing n_params"))? as usize;
         let vocab = entry.meta_u64("vocab").unwrap_or(2048) as u32;
         let seq_len = entry.meta_u64("seq_len").unwrap_or(128) as usize;
         let batch = entry.meta_u64("batch").unwrap_or(4) as usize;
         let out = rt.run("init_params", &[Tensor::I32(vec![seed])])?;
         let flat = out[0].as_f32()?.to_vec();
         if flat.len() != n_params {
-            return Err(anyhow!(
+            return Err(err!(
                 "init returned {} params, manifest says {}",
                 flat.len(),
                 n_params
@@ -126,6 +130,76 @@ impl<'rt> Trainer<'rt> {
         }
         Ok(losses)
     }
+
+    /// Registry-dispatched kernel plan for this trainer's model shape
+    /// (see [`kernel_plan`]).
+    pub fn plan(&self, arch: ArchId) -> Vec<(String, KernelPerf)> {
+        let shape = TrainShape {
+            batch: self.batch as u32,
+            seq: self.seq_len as u32,
+            d_model: 256,
+            heads: 8,
+            d_head: 32,
+        };
+        kernel_plan(arch, &shape)
+    }
+}
+
+/// Transformer step shape for the registry-dispatched kernel plan.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainShape {
+    pub batch: u32,
+    pub seq: u32,
+    pub d_model: u32,
+    pub heads: u32,
+    pub d_head: u32,
+}
+
+impl Default for TrainShape {
+    /// The artifact model (`compile/model.py`): batch 4, seq 128,
+    /// d_model 256.
+    fn default() -> Self {
+        TrainShape { batch: 4, seq: 128, d_model: 256, heads: 8, d_head: 32 }
+    }
+}
+
+/// The per-step kernel plan of the training loop, resolved through
+/// `registry::dispatch`: attention forward + backward, the MLP/projection
+/// GEMMs, the fused layernorm and RoPE. Every entry is an autotuned
+/// dispatch — the trainer inherits new kernels/dtypes from the registry
+/// with no plumbing of its own.
+pub fn kernel_plan(arch: ArchId, s: &TrainShape) -> Vec<(String, KernelPerf)> {
+    let tokens = s.batch * s.seq;
+    let queries = [
+        (
+            "attn-fwd",
+            Query::attn(arch, s.batch, s.heads, s.heads, s.seq, s.d_head, true),
+        ),
+        (
+            "attn-bwd",
+            Query::attn(arch, s.batch, s.heads, s.heads, s.seq, s.d_head, true)
+                .bwd(),
+        ),
+        (
+            "mlp-gemm",
+            Query::gemm(arch, Dtype::Bf16, tokens, 4 * s.d_model, s.d_model),
+        ),
+        (
+            "proj-gemm",
+            Query::gemm(arch, Dtype::Bf16, tokens, s.d_model, s.d_model),
+        ),
+        ("fused-ln", Query::fused_ln(arch, tokens, s.d_model)),
+        ("rope", Query::rope(arch, s.batch, s.heads, s.seq, s.d_head)),
+    ];
+    queries
+        .into_iter()
+        .map(|(name, q)| (name.to_string(), q.dispatch().simulate()))
+        .collect()
+}
+
+/// Predicted step time: the sum of the plan's kernel times.
+pub fn predicted_step_s(plan: &[(String, KernelPerf)]) -> f64 {
+    plan.iter().map(|(_, p)| p.time_s).sum()
 }
 
 #[cfg(test)]

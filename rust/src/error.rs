@@ -1,0 +1,119 @@
+//! Minimal error type — the offline environment has no `anyhow`, so the
+//! crate carries its own string-backed error with the same ergonomics
+//! (`err!`, `bail!`, `.context()` / `.with_context()`).
+
+use std::fmt;
+
+/// A string-backed error.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::str::Utf8Error> for Error {
+    fn from(e: std::str::Utf8Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Build an [`Error`] from a format string (the `anyhow!` analog).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] (the `bail!` analog).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Attach context to a failing result.
+pub trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", msg.into())))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke at {}", 7)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke at 7");
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), std::io::Error> = Err(
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        let e = r.context("reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest: "));
+        let r2: std::result::Result<(), Error> = Err(Error::msg("inner"));
+        let e2 = r2.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(e2.to_string(), "outer 1: inner");
+    }
+
+    #[test]
+    fn std_conversions() {
+        let e: Error = "x".parse::<f64>().unwrap_err().into();
+        assert!(!e.to_string().is_empty());
+        let e: Error = "x".parse::<i32>().unwrap_err().into();
+        assert!(!e.to_string().is_empty());
+    }
+}

@@ -15,6 +15,8 @@
 //!   patterns of §3.3.
 //! - [`chiplet`] — Algorithm 1 grid remapping (§3.4).
 //! - [`costmodel`] — engine x cache roofline -> TFLOPS.
+//! - [`tunecache`] — persistent memoization of autotuned dispatch
+//!   decisions (consumed by `kernels::registry`).
 
 pub mod autotune;
 pub mod chiplet;
@@ -27,6 +29,7 @@ pub mod regalloc;
 pub mod schedule;
 pub mod swizzle;
 pub mod tile;
+pub mod tunecache;
 pub mod wavespec;
 
 pub use chiplet::ChipletSwizzle;

@@ -1,0 +1,228 @@
+//! Persistent autotuning cache for the kernel registry.
+//!
+//! `registry::dispatch` resolves a [`crate::kernels::registry::KernelKey`]
+//! to a concrete kernel variant by sweeping candidates through the cost
+//! model (`hk::autotune` for the §3.4 chiplet-swizzle parameters). That
+//! sweep is work worth doing once: this module memoizes the winning
+//! variant per key and persists the table as JSON (via
+//! [`crate::runtime::json`]) so tuning survives across runs — the
+//! programmatic analog of the paper shipping tuned (W, C) defaults.
+//!
+//! The cache file defaults to `.hk-tunecache.json` in the working
+//! directory and can be pointed elsewhere with `HK_TUNECACHE`.
+
+use crate::error::{Context, Result};
+use crate::runtime::json::{parse, Json};
+use crate::{bail, err};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// The tuned decision for one kernel key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneRecord {
+    /// Winning variant name (must exist in the registry's variant table).
+    pub variant: String,
+    /// Chiplet-swizzle window W (0 = row-major / not applicable).
+    pub window: u32,
+    /// Chiplet-swizzle chunk C (0 = row-major / not applicable).
+    pub chunk: u32,
+    /// Macro-tile of the winning configuration (0 where not applicable).
+    pub block_m: u32,
+    pub block_n: u32,
+    pub block_k: u32,
+    /// Predicted performance at tuning time (TFLOPS; bandwidth-style
+    /// kernels store their effective-bandwidth figure here).
+    pub tflops: f64,
+}
+
+impl TuneRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::Str(self.variant.clone())),
+            ("window", Json::Num(self.window as f64)),
+            ("chunk", Json::Num(self.chunk as f64)),
+            ("block_m", Json::Num(self.block_m as f64)),
+            ("block_n", Json::Num(self.block_n as f64)),
+            ("block_k", Json::Num(self.block_k as f64)),
+            ("tflops", Json::Num(self.tflops)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let u = |key: &str| -> u32 {
+            j.get(key).and_then(Json::as_u64).unwrap_or(0) as u32
+        };
+        Ok(TuneRecord {
+            variant: j
+                .get("variant")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err!("tune record missing variant"))?
+                .to_string(),
+            window: u("window"),
+            chunk: u("chunk"),
+            block_m: u("block_m"),
+            block_n: u("block_n"),
+            block_k: u("block_k"),
+            tflops: j.get("tflops").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+/// Key (string id) -> tuned decision table.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TuneCache {
+    map: BTreeMap<String, TuneRecord>,
+}
+
+impl TuneCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, id: &str) -> Option<&TuneRecord> {
+        self.map.get(id)
+    }
+
+    pub fn put(&mut self, id: impl Into<String>, rec: TuneRecord) {
+        self.map.insert(id.into(), rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Iterate over (key id, record) entries.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &TuneRecord)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            (
+                "entries",
+                Json::Obj(
+                    self.map
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let Some(Json::Obj(entries)) = j.get("entries") else {
+            bail!("tune cache missing entries object");
+        };
+        let mut map = BTreeMap::new();
+        for (k, v) in entries {
+            map.insert(k.clone(), TuneRecord::from_json(v)?);
+        }
+        Ok(TuneCache { map })
+    }
+
+    /// Serialize to disk (JSON document).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().dump())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load from disk.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&parse(&text)?)
+    }
+}
+
+/// Cache file location: `HK_TUNECACHE` or `.hk-tunecache.json`.
+pub fn default_path() -> PathBuf {
+    std::env::var("HK_TUNECACHE")
+        .unwrap_or_else(|_| ".hk-tunecache.json".to_string())
+        .into()
+}
+
+static GLOBAL: Mutex<Option<TuneCache>> = Mutex::new(None);
+
+/// Run `f` against the process-wide cache. On first use the cache is
+/// warmed from [`default_path`] when that file exists (the across-runs
+/// persistence path); otherwise it starts empty.
+pub fn with_global<R>(f: impl FnOnce(&mut TuneCache) -> R) -> R {
+    let mut slot = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    let cache = slot.get_or_insert_with(|| {
+        TuneCache::load(default_path()).unwrap_or_default()
+    });
+    f(cache)
+}
+
+/// Persist the process-wide cache to [`default_path`].
+pub fn save_global() -> Result<PathBuf> {
+    let path = default_path();
+    with_global(|c| c.save(&path))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(variant: &str, w: u32, c: u32) -> TuneRecord {
+        TuneRecord {
+            variant: variant.to_string(),
+            window: w,
+            chunk: c,
+            block_m: 256,
+            block_n: 256,
+            block_k: 64,
+            tflops: 1543.25,
+        }
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let mut cache = TuneCache::new();
+        cache.put("gemm/bf16/large/mi355x", rec("pp-256x256", 8, 64));
+        cache.put("attn-bwd/bf16/medium/mi355x", rec("bwd-il4", 0, 0));
+        let back = TuneCache::from_json(&cache.to_json()).unwrap();
+        assert_eq!(back, cache);
+    }
+
+    #[test]
+    fn round_trips_through_disk() {
+        let path = std::env::temp_dir().join("hk_tunecache_test.json");
+        let mut cache = TuneCache::new();
+        cache.put("k1", rec("v1", 5, 25));
+        cache.save(&path).unwrap();
+        let back = TuneCache::load(&path).unwrap();
+        assert_eq!(back, cache);
+        assert_eq!(back.get("k1").unwrap().window, 5);
+        assert!(back.get("k2").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(TuneCache::from_json(&parse("{}").unwrap()).is_err());
+        let no_variant = parse(r#"{"entries": {"k": {"window": 1}}}"#).unwrap();
+        assert!(TuneCache::from_json(&no_variant).is_err());
+    }
+
+    #[test]
+    fn entries_iterates_in_key_order() {
+        let mut cache = TuneCache::new();
+        cache.put("b", rec("v", 1, 1));
+        cache.put("a", rec("v", 2, 2));
+        let keys: Vec<&str> = cache.entries().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["a", "b"]);
+        assert_eq!(cache.len(), 2);
+        assert!(!cache.is_empty());
+    }
+}

@@ -8,13 +8,18 @@
 //! - [`membound`] — fused dropout-residual-layernorm + RoPE (Fig. 9,
 //!   listing E.2).
 //! - [`baselines`] — AITER/CK/hipBLASLt/Triton/PyTorch/Mojo models.
+//! - [`registry`] — the unified dispatch surface: `KernelKey` ->
+//!   autotuned variant, memoized in the persistent tune cache. All
+//!   report/coordinator/bench launches route through it.
 
 pub mod attention;
 pub mod baselines;
 pub mod gemm;
 pub mod membound;
+pub mod registry;
 
 pub use attention::AttnConfig;
 pub use baselines::Baseline;
 pub use gemm::{GemmConfig, GridOrder, Pattern};
 pub use membound::{FusedLnConfig, RopeConfig};
+pub use registry::{ArchId, Dispatch, KernelKey, Op, Query, ShapeClass};

@@ -12,13 +12,17 @@
 //!   grid swizzle (Algorithm 1).
 //! - [`kernels`] — the paper's kernel suite (GEMM BF16/FP8/FP6,
 //!   attention forward/backward, fused layernorm, RoPE) plus behavioural
-//!   baseline models (AITER, CK, hipBLASLt, Triton, PyTorch).
-//! - [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
-//!   artifacts (the numeric plane; python never runs at request time).
-//! - [`coordinator`] — the serving/training drivers built on the runtime.
+//!   baseline models (AITER, CK, hipBLASLt, Triton, PyTorch), unified
+//!   behind the autotuned dispatch registry (`kernels::registry`).
+//! - [`runtime`] — execution of the AOT-compiled JAX/Pallas artifacts
+//!   (the numeric plane; python never runs at request time). The PJRT
+//!   client sits behind the `pjrt` feature seam.
+//! - [`coordinator`] — the serving/training drivers built on the
+//!   runtime and the registry (including the mixed-op service).
 //! - [`report`] — regenerates every table and figure of the paper.
 
 pub mod coordinator;
+pub mod error;
 pub mod hk;
 pub mod kernels;
 pub mod report;

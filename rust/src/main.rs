@@ -2,30 +2,44 @@
 //!
 //! Subcommands:
 //!   report <exp|all>      regenerate a paper table/figure (see DESIGN.md)
-//!   serve [--requests N] [--rate R]
+//!   serve [--mixed] [--requests N] [--rate R]
 //!                         run the batching attention service on a
-//!                         Poisson trace (needs `make artifacts`)
+//!                         Poisson trace. `--mixed` serves a mixed-op
+//!                         trace (attention + GEMM + layernorm + RoPE)
+//!                         through the autotuned kernel registry — no
+//!                         artifacts needed; the plain mode executes AOT
+//!                         artifacts (needs `make artifacts`)
 //!   train [--steps N] [--path kernels|reference]
 //!                         train the transformer through the AOT
 //!                         train_step artifact, logging the loss curve
+//!   tune [--arch A]       warm the persistent registry tune cache for
+//!                         the headline kernel keys and save it
 //!   artifacts             list artifact entries + shapes
 //!   solve                 print the phase/bank solver output (Table 5)
 //!
-//! Arg parsing is hand-rolled: the environment is offline and the repo is
-//! dependency-minimal (xla + anyhow).
+//! Arg parsing is hand-rolled: the environment is offline and the crate
+//! is dependency-free.
 
-use anyhow::{anyhow, bail, Result};
 use hipkittens::coordinator::{
-    poisson_trace, BatchingService, Path, ServiceConfig, Trainer,
+    mixed_trace, poisson_trace, predicted_step_s, BatchingService, MixedService,
+    Path, ServiceConfig, Trainer,
 };
+use hipkittens::error::Result;
+use hipkittens::hk::tunecache;
+use hipkittens::kernels::registry::{ArchId, Query};
 use hipkittens::runtime::Runtime;
-use hipkittens::{report, sim};
+use hipkittens::sim::Dtype;
+use hipkittens::{bail, err, report, sim};
 
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter()
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .cloned()
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
 }
 
 fn artifacts_dir() -> String {
@@ -39,7 +53,7 @@ fn main() -> Result<()> {
             let exp = args.get(1).map(String::as_str).unwrap_or("all");
             if !report::run(exp) {
                 bail!(
-                    "unknown experiment {exp}; try table1..table5, fig5..fig24, all"
+                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, all"
                 );
             }
         }
@@ -52,12 +66,25 @@ fn main() -> Result<()> {
                 .map(|v| v.parse())
                 .transpose()?
                 .unwrap_or(200.0);
-            let mut rt = Runtime::new(artifacts_dir())?;
-            println!("platform: {}", rt.platform());
-            let mut svc = BatchingService::new(&mut rt, ServiceConfig::default())?;
-            let trace = poisson_trace(n, rate, 7);
-            let report = svc.run_trace(&trace)?;
-            println!("{}", report.summary());
+            if has_flag(&args, "--mixed") {
+                let arch = arch_flag(&args)?;
+                let mut svc = MixedService::new(arch, ServiceConfig::default())?;
+                let trace = mixed_trace(n, rate, 7);
+                let report = svc.run_trace(&trace)?;
+                println!("arch: {} (registry-dispatched)", arch.tag());
+                println!("{}", report.summary());
+                if let Ok(path) = tunecache::save_global() {
+                    println!("tune cache saved to {}", path.display());
+                }
+            } else {
+                let mut rt = Runtime::new(artifacts_dir())?;
+                println!("platform: {}", rt.platform());
+                let mut svc =
+                    BatchingService::new(&mut rt, ServiceConfig::default())?;
+                let trace = poisson_trace(n, rate, 7);
+                let report = svc.run_trace(&trace)?;
+                println!("{}", report.summary());
+            }
         }
         Some("train") => {
             let steps: u32 = flag(&args, "--steps")
@@ -69,7 +96,17 @@ fn main() -> Result<()> {
                 _ => Path::Kernels,
             };
             let mut rt = Runtime::new(artifacts_dir())?;
+            println!("platform: {}", rt.platform());
             let mut tr = Trainer::new(&mut rt, 0)?;
+            let plan = tr.plan(ArchId::Mi355x);
+            println!(
+                "kernel plan ({} dispatches, predicted {:.3} ms/step on MI355X):",
+                plan.len(),
+                predicted_step_s(&plan) * 1e3
+            );
+            for (name, perf) in &plan {
+                println!("  {name:<10} {:>9.3} us", perf.time_s * 1e6);
+            }
             println!(
                 "training {} params for {steps} steps ({:?} path)",
                 tr.flat.len(),
@@ -85,6 +122,38 @@ fn main() -> Result<()> {
                 losses.last().copied().unwrap_or(f32::NAN),
                 losses.first().copied().unwrap_or(f32::NAN)
             );
+        }
+        Some("tune") => {
+            let arch = arch_flag(&args)?;
+            let sizes = [2048u32, 4096, 8192, 16384];
+            for s in sizes {
+                for dtype in [Dtype::Bf16, Dtype::Fp8] {
+                    let d = Query::gemm(arch, dtype, s, s, s).dispatch();
+                    let p = d.simulate();
+                    println!(
+                        "{:<26} -> {:<16} {:>7.0} TFLOPS",
+                        d.key.id(),
+                        d.variant,
+                        p.tflops
+                    );
+                }
+                let d = Query::attn_gqa(arch, s, 128, false).dispatch();
+                println!(
+                    "{:<26} -> {:<16} {:>7.0} TFLOPS",
+                    d.key.id(),
+                    d.variant,
+                    d.simulate().tflops
+                );
+                let d = Query::attn_gqa(arch, s, 128, false).bwd().dispatch();
+                println!(
+                    "{:<26} -> {:<16} {:>7.0} TFLOPS",
+                    d.key.id(),
+                    d.variant,
+                    d.simulate().tflops
+                );
+            }
+            let path = tunecache::save_global()?;
+            println!("tune cache saved to {}", path.display());
         }
         Some("artifacts") => {
             let rt = Runtime::new(artifacts_dir())?;
@@ -121,13 +190,22 @@ fn main() -> Result<()> {
                 eprintln!("unknown command {o:?}\n");
             }
             eprintln!("usage: {exe} report <exp|all>");
-            eprintln!("       {exe} serve [--requests N] [--rate R]");
+            eprintln!("       {exe} serve [--mixed] [--requests N] [--rate R]");
             eprintln!("       {exe} train [--steps N] [--path kernels|reference]");
+            eprintln!("       {exe} tune [--arch mi355x|mi350x|mi325x|b200|h100]");
             eprintln!("       {exe} artifacts | solve | arch");
             if other.is_some() {
-                return Err(anyhow!("bad usage"));
+                return Err(err!("bad usage"));
             }
         }
     }
     Ok(())
+}
+
+fn arch_flag(args: &[String]) -> Result<ArchId> {
+    match flag(args, "--arch") {
+        None => Ok(ArchId::Mi355x),
+        Some(tag) => ArchId::from_tag(&tag)
+            .ok_or_else(|| err!("unknown arch {tag}; try mi355x|mi350x|mi325x|b200|h100")),
+    }
 }

@@ -4,17 +4,28 @@
 //! Absolute numbers come from the calibrated simulator (DESIGN.md §4
 //! "Simulator fidelity"); the claims reproduced are the *relative* ones:
 //! who wins, by what factor, where crossovers fall.
+//!
+//! Every kernel launch goes through `kernels::registry`: rows that
+//! reproduce a specific paper configuration pin the tunables with
+//! [`Query`] overrides (pattern / macro-tile / grid), while the
+//! `registry` experiment shows the autotuned path end to end.
 
 use crate::hk::chiplet::{render_first_round, ChipletSwizzle};
 use crate::hk::costmodel::KernelPerf;
 use crate::hk::phase::{format_threads, solve_table5};
 use crate::hk::regalloc::RegMode;
-use crate::kernels::attention::AttnConfig;
-use crate::kernels::baselines::{self, Baseline};
-use crate::kernels::gemm::{self, GemmConfig, GridOrder, Pattern};
-use crate::kernels::membound::{FusedLnConfig, RopeConfig};
+use crate::hk::tunecache::TuneCache;
 use crate::kernels::attention;
-use crate::sim::arch::Arch;
+use crate::kernels::baselines::{self, Baseline};
+use crate::kernels::gemm::{self, GridOrder, Pattern};
+use crate::kernels::registry::{ArchId, Query};
+use crate::sim::arch::Dtype;
+
+/// The paper's evaluation part.
+const M355: ArchId = ArchId::Mi355x;
+
+/// The paper's shipped grid default (Algorithm 1 W8/C64).
+const GRID_DEFAULT: GridOrder = GridOrder::Chiplet { window: 8, chunk: 64 };
 
 fn hr(title: &str) {
     println!("\n=== {title} ===");
@@ -31,23 +42,28 @@ fn perf_row(label: &str, p: &KernelPerf) {
     );
 }
 
+/// The paper-default BF16/FP8/FP6 GEMM row: 8-wave ping-pong, 256x256
+/// macro tile, W8/C64 chiplet swizzle.
+fn gemm_default(arch: ArchId, dtype: Dtype, m: u32, n: u32, k: u32) -> Query {
+    Query::gemm(arch, dtype, m, n, k)
+        .pattern(Pattern::PingPong8)
+        .blocks(256, 256)
+        .grid(GRID_DEFAULT)
+}
+
 /// Table 1: explicit register scheduling on MHA non-causal backwards.
 pub fn table1() {
     hr("Table 1 — pinned registers vs HIPCC (4-wave MHA bwd, b16 h16 d128)");
-    let arch = Arch::mi355x();
-    println!(
-        "{:<34} {:>10} {:>10}",
-        "method", "seq", "TFLOPS"
-    );
+    let a = M355.arch();
+    println!("{:<34} {:>10} {:>10}", "method", "seq", "TFLOPS");
     for seq in [4096u32, 8192] {
-        let mut cfg = AttnConfig::mha(seq, 128, false);
-        cfg.pattern = Pattern::Interleave4;
-        let hipcc = attention::simulate_bwd(
-            &arch,
-            &AttnConfig { reg_mode: RegMode::CompilerManaged, ..cfg },
-        );
-        let pinned = attention::simulate_bwd(&arch, &cfg);
-        let aiter = baselines::attn_bwd(&arch, &cfg, Baseline::Aiter);
+        let q = Query::attn_mha(M355, seq, 128, false)
+            .bwd()
+            .pattern(Pattern::Interleave4);
+        let hipcc = q.reg_mode(RegMode::CompilerManaged).dispatch().simulate();
+        let pinned_d = q.dispatch();
+        let pinned = pinned_d.simulate();
+        let aiter = baselines::attn_bwd(&a, pinned_d.attn_config(), Baseline::Aiter);
         println!("{:<34} {seq:>10} {:>10.0}", "HK (compiler-managed)", hipcc.tflops);
         println!("{:<34} {seq:>10} {:>10.0}", "HK with pinned registers", pinned.tflops);
         println!("{:<34} {seq:>10} {:>10.0}", "AMD assembly (AITER)", aiter.tflops);
@@ -61,7 +77,6 @@ pub fn table1() {
 /// Table 2: producer/consumer GEMM configurations.
 pub fn table2() {
     hr("Table 2 — wave specialization vs ping-pong (BF16 GEMM 8192^3)");
-    let arch = Arch::mi355x();
     let m = 8192;
     let rows: Vec<(&str, Pattern, u32, u32)> = vec![
         ("HK 4P/8C", Pattern::WaveSpec { producers: 4, consumers: 8 }, 128, 256),
@@ -74,13 +89,12 @@ pub fn table2() {
         "config", "output tile", "MFMA", "TFLOPS"
     );
     for (name, pattern, bm, bn) in rows {
-        let cfg = GemmConfig {
-            pattern,
-            block_m: bm,
-            block_n: bn,
-            ..GemmConfig::bf16(m, m, m)
-        };
-        let p = gemm::simulate(&arch, &cfg);
+        let p = Query::gemm(M355, Dtype::Bf16, m, m, m)
+            .pattern(pattern)
+            .blocks(bm, bn)
+            .grid(GRID_DEFAULT)
+            .dispatch()
+            .simulate();
         println!(
             "{name:<14} {:>12} {:>12} {:>10.0}",
             format!("{}x{}", bm, bn),
@@ -96,7 +110,7 @@ pub fn table2() {
 /// Table 3: 8-wave vs 4-wave — LoC and TFLOPS.
 pub fn table3() {
     hr("Table 3 — scheduling patterns: programmability vs performance");
-    let arch = Arch::mi355x();
+    let a = M355.arch();
     println!(
         "{:<18} {:<10} {:>8} {:>10}",
         "kernel", "pattern", "LoC", "TFLOPS"
@@ -105,9 +119,13 @@ pub fn table3() {
     for (pat, label) in
         [(Pattern::PingPong8, "8-wave"), (Pattern::Interleave4, "4-wave")]
     {
-        let cfg = GemmConfig { pattern: pat, ..GemmConfig::fp8(m, m, m) };
-        let built = gemm::build(&arch, &cfg);
-        let p = gemm::simulate(&arch, &cfg);
+        let d = Query::gemm(M355, Dtype::Fp8, m, m, m)
+            .pattern(pat)
+            .blocks(256, 256)
+            .grid(GRID_DEFAULT)
+            .dispatch();
+        let built = gemm::build(&a, d.gemm_config());
+        let p = d.simulate();
         println!(
             "{:<18} {:<10} {:>8} {:>10.0}",
             "FP8 GEMM", label, built.info.loc, p.tflops
@@ -116,16 +134,16 @@ pub fn table3() {
     for (pat, label) in
         [(Pattern::PingPong8, "8-wave"), (Pattern::Interleave4, "4-wave")]
     {
-        let cfg = AttnConfig {
-            pattern: pat,
-            ..AttnConfig::mha(8192, 128, false)
-        };
-        let spec = attention::build_bwd_spec(&arch, &cfg);
+        let d = Query::attn_mha(M355, 8192, 128, false)
+            .bwd()
+            .pattern(pat)
+            .dispatch();
+        let spec = attention::build_bwd_spec(&a, d.attn_config());
         let built = match pat {
             Pattern::Interleave4 => crate::hk::interleave::build(&spec),
             _ => crate::hk::pingpong::build(&spec),
         };
-        let p = attention::simulate_bwd(&arch, &cfg);
+        let p = d.simulate();
         println!(
             "{:<18} {:<10} {:>8} {:>10.0}",
             "MHA backwards", label, built.info.loc, p.tflops
@@ -137,7 +155,6 @@ pub fn table3() {
 /// Table 4 + Figs. 5/18: chiplet swizzling for cache reuse.
 pub fn table4() {
     hr("Table 4 — chiplet swizzling (BF16 GEMM, macro tile 192x256x64)");
-    let arch = Arch::mi355x();
     for (size, schedules) in [
         (
             9216u32,
@@ -162,13 +179,12 @@ pub fn table4() {
             "block order", "L2%", "LLC%", "Mem BW", "TFLOPS"
         );
         for (label, grid) in schedules {
-            let cfg = GemmConfig {
-                block_m: 192,
-                block_n: 256,
-                grid,
-                ..GemmConfig::bf16(size, size, size)
-            };
-            let p = gemm::simulate(&arch, &cfg);
+            let p = Query::gemm(M355, Dtype::Bf16, size, size, size)
+                .pattern(Pattern::PingPong8)
+                .blocks(192, 256)
+                .grid(grid)
+                .dispatch()
+                .simulate();
             println!(
                 "{label:<18} {:>5.0}% {:>5.0}% {:>7.1} TB/s {:>8.0}",
                 p.l2_hit * 100.0,
@@ -185,9 +201,7 @@ pub fn table4() {
 /// Figure 5/18 companion: grid visualizations.
 pub fn fig5() {
     hr("Fig. 5 — first dispatch round XCD maps (9216: 48x36 tile grid)");
-    for (label, w, c) in
-        [("W7/C216", 7u32, 216u32), ("W5/C25", 5, 25)]
-    {
+    for (label, w, c) in [("W7/C216", 7u32, 216u32), ("W5/C25", 5, 25)] {
         println!("\nAlgorithm 1 {label}:");
         let swz = ChipletSwizzle::new(8, w, c);
         let full = render_first_round(&swz, 48, 36, 256);
@@ -220,13 +234,10 @@ pub fn table5() {
 /// Figure 6: GEMM sweeps vs baselines on MI355X.
 pub fn fig6() {
     hr("Figure 6 — BF16 + FP8 GEMM vs baselines (MI355X)");
-    let arch = Arch::mi355x();
+    let a = M355.arch();
     let sizes = [2048u32, 4096, 8192, 12288, 16384];
-    for (dt, mk) in [
-        ("BF16", GemmConfig::bf16 as fn(u32, u32, u32) -> GemmConfig),
-        ("FP8", GemmConfig::fp8 as fn(u32, u32, u32) -> GemmConfig),
-    ] {
-        println!("\n{dt} GEMM (TFLOPS):");
+    for (label, dtype) in [("BF16", Dtype::Bf16), ("FP8", Dtype::Fp8)] {
+        println!("\n{label} GEMM (TFLOPS):");
         print!("{:<14}", "M=N=K");
         for s in sizes {
             print!("{s:>9}");
@@ -241,7 +252,8 @@ pub fn fig6() {
         ] {
             print!("{:<14}", who.name());
             for s in sizes {
-                let p = baselines::gemm(&arch, &mk(s, s, s), who);
+                let d = gemm_default(M355, dtype, s, s, s).dispatch();
+                let p = baselines::gemm(&a, d.gemm_config(), who);
                 print!("{:>9.0}", p.tflops);
             }
             println!();
@@ -252,7 +264,7 @@ pub fn fig6() {
 /// Figures 7/16/17: attention forwards.
 pub fn fig7() {
     hr("Figure 7 — attention forwards (MI355X, b16 qh64 kv8)");
-    let arch = Arch::mi355x();
+    let a = M355.arch();
     let seqs = [1024u32, 2048, 4096, 8192, 16384];
     for (d, causal) in [(64u32, false), (64, true), (128, false), (128, true)] {
         println!(
@@ -273,8 +285,10 @@ pub fn fig7() {
         ] {
             print!("{:<16}", who.name());
             for s in seqs {
-                let cfg = AttnConfig::gqa(s, d, causal);
-                let p = baselines::attn_fwd(&arch, &cfg, who);
+                let dis = Query::attn_gqa(M355, s, d, causal)
+                    .pattern(Pattern::PingPong8)
+                    .dispatch();
+                let p = baselines::attn_fwd(&a, dis.attn_config(), who);
                 print!("{:>9.0}", p.tflops);
             }
             println!();
@@ -282,8 +296,10 @@ pub fn fig7() {
     }
     println!("\nMHA fwd d=128 non-causal (Fig. 16 companion):");
     for who in [Baseline::HK, Baseline::Aiter, Baseline::Mojo] {
-        let cfg = AttnConfig::mha(8192, 128, false);
-        let p = baselines::attn_fwd(&arch, &cfg, who);
+        let dis = Query::attn_mha(M355, 8192, 128, false)
+            .pattern(Pattern::PingPong8)
+            .dispatch();
+        let p = baselines::attn_fwd(&a, dis.attn_config(), who);
         perf_row(who.name(), &p);
     }
 }
@@ -291,7 +307,7 @@ pub fn fig7() {
 /// Figures 8/15: attention backwards.
 pub fn fig8() {
     hr("Figure 8 — attention backwards (MI355X, d128)");
-    let arch = Arch::mi355x();
+    let a = M355.arch();
     let seqs = [1024u32, 2048, 4096, 8192, 16384];
     for (label, mha, causal) in [
         ("GQA bwd non-causal", false, false),
@@ -313,18 +329,19 @@ pub fn fig8() {
         ] {
             print!("{:<16}", who.name());
             for s in seqs {
-                let cfg = if mha {
-                    AttnConfig::mha(s, 128, causal)
+                let base = if mha {
+                    Query::attn_mha(M355, s, 128, causal)
                 } else {
-                    AttnConfig::gqa(s, 128, causal)
-                };
+                    Query::attn_gqa(M355, s, 128, causal)
+                }
+                .bwd();
                 // HK uses the 4-wave kernel for backwards (Table 3)
-                let cfg = if who == Baseline::HK {
-                    AttnConfig { pattern: Pattern::Interleave4, ..cfg }
+                let q = if who == Baseline::HK {
+                    base.pattern(Pattern::Interleave4)
                 } else {
-                    cfg
+                    base.pattern(Pattern::PingPong8)
                 };
-                let p = baselines::attn_bwd(&arch, &cfg, who);
+                let p = baselines::attn_bwd(&a, q.dispatch().attn_config(), who);
                 print!("{:>9.0}", p.tflops);
             }
             println!();
@@ -337,7 +354,7 @@ pub fn fig8() {
 /// Figure 9: memory-bound kernels.
 pub fn fig9() {
     hr("Figure 9 — memory-bound kernels (b16 h16 d128)");
-    let arch = Arch::mi355x();
+    let a = M355.arch();
     let seqs = [2048u32, 4096, 8192, 16384];
     println!("\nFused dropout-residual-layernorm (effective TB/s):");
     print!("{:<16}", "seq");
@@ -348,7 +365,8 @@ pub fn fig9() {
     for who in [Baseline::HK, Baseline::Aiter, Baseline::TorchCompile] {
         print!("{:<16}", who.name());
         for s in seqs {
-            let p = baselines::fused_ln(&arch, &FusedLnConfig::paper(s), who);
+            let d = Query::fused_ln_paper(M355, s).dispatch();
+            let p = baselines::fused_ln(&a, d.ln_config(), who);
             print!("{:>9.2}", p.eff_bw_tbps);
         }
         println!();
@@ -362,7 +380,8 @@ pub fn fig9() {
     for who in [Baseline::HK, Baseline::Aiter, Baseline::TorchCompile] {
         print!("{:<16}", who.name());
         for s in seqs {
-            let p = baselines::rope(&arch, &RopeConfig::paper(s), who);
+            let d = Query::rope_paper(M355, s).dispatch();
+            let p = baselines::rope(&a, d.rope_config(), who);
             print!("{:>9.2}", p.eff_bw_tbps);
         }
         println!();
@@ -373,8 +392,9 @@ pub fn fig9() {
 pub fn fig14() {
     hr("Figure 14 — BF16 GEMM on MI325X / MI350X");
     let sizes = [2048u32, 4096, 8192, 16384];
-    for arch in [Arch::mi325x(), Arch::mi350x()] {
-        println!("\n{} (TFLOPS):", arch.name);
+    for arch in [ArchId::Mi325x, ArchId::Mi350x] {
+        let a = arch.arch();
+        println!("\n{} (TFLOPS):", a.name);
         print!("{:<14}", "M=N=K");
         for s in sizes {
             print!("{s:>9}");
@@ -385,7 +405,8 @@ pub fn fig14() {
             for s in sizes {
                 // CDNA3 has 64 KiB LDS: double-buffer via registers, same
                 // 8-wave structure (paper E.1 MI325X variant)
-                let p = baselines::gemm(&arch, &GemmConfig::bf16(s, s, s), who);
+                let d = gemm_default(arch, Dtype::Bf16, s, s, s).dispatch();
+                let p = baselines::gemm(&a, d.gemm_config(), who);
                 print!("{:>9.0}", p.tflops);
             }
             println!();
@@ -397,8 +418,8 @@ pub fn fig14() {
 pub fn fig19() {
     hr("Figure 19 — context: TK-style vs library GEMM on NVIDIA-like arch");
     let sizes = [2048u32, 4096, 8192, 16384];
-    for arch in [Arch::h100_like(), Arch::b200_like()] {
-        println!("\n{} BF16 GEMM (TFLOPS):", arch.name);
+    for arch in [ArchId::H100Like, ArchId::B200Like] {
+        println!("\n{} BF16 GEMM (TFLOPS):", arch.arch().name);
         print!("{:<14}", "M=N=K");
         for s in sizes {
             print!("{s:>9}");
@@ -410,13 +431,14 @@ pub fn fig19() {
                 // On NVIDIA wave specialization IS the right pattern:
                 // producers are register-cheap (TMA + reallocation), which
                 // we model as consumers keeping the large tile.
-                let cfg = GemmConfig {
-                    pattern: Pattern::WaveSpec { producers, consumers: 8 },
+                let p = Query::gemm(arch, Dtype::Bf16, s, s, s)
+                    .pattern(Pattern::WaveSpec { producers, consumers: 8 })
+                    .blocks(256, 256)
                     // warpgroup MMAs consume deep K slabs per issue
-                    block_k: 256,
-                    ..GemmConfig::bf16(s, s, s)
-                };
-                let p = gemm::simulate(&arch, &cfg);
+                    .block_k(256)
+                    .grid(GRID_DEFAULT)
+                    .dispatch()
+                    .simulate();
                 let f = if label == "cuBLASLt" { 1.02 } else { 1.0 };
                 print!("{:>9.0}", p.tflops * f);
             }
@@ -429,34 +451,74 @@ pub fn fig19() {
 /// Figure 24 + App. F: FP6 GEMM case study.
 pub fn fig24() {
     hr("Figure 24 / App. F — FP6 GEMM case study");
-    let arch = Arch::mi355x();
+    let a = M355.arch();
     for m in [8192u32, 16384] {
         println!("\nM=N=K={m} (TFLOPS):");
-        let hk = gemm::simulate(&arch, &GemmConfig::fp6(m, m, m));
+        let fp6 = gemm_default(M355, Dtype::Fp6, m, m, m);
+        let hk = fp6.dispatch().simulate();
         perf_row("HK FP6 (pinned, dwordx3+b96)", &hk);
-        let hipcc = gemm::simulate(
-            &arch,
-            &GemmConfig {
-                reg_mode: RegMode::CompilerManaged,
-                pattern: Pattern::Interleave4,
-                ..GemmConfig::fp6(m, m, m)
-            },
-        );
+        let hipcc = fp6
+            .reg_mode(RegMode::CompilerManaged)
+            .pattern(Pattern::Interleave4)
+            .dispatch()
+            .simulate();
         perf_row("FP6 via HIPCC (spills)", &hipcc);
         // the buffer_load_dwordx4 + shuffle variant: 49% of hot-loop
         // cycles burned on jump+VALU (paper: 2430 TFLOPS)
-        let shuffled = gemm::simulate(
-            &arch,
-            &GemmConfig { shuffle_cycles: 200, ..GemmConfig::fp6(m, m, m) },
-        );
+        let shuffled = fp6.shuffle_cycles(200).dispatch().simulate();
         perf_row("FP6 dwordx4 wave-break shuffle", &shuffled);
-        let fp8 = gemm::simulate(&arch, &GemmConfig::fp8(m, m, m));
+        let fp8 = gemm_default(M355, Dtype::Fp8, m, m, m).dispatch().simulate();
         perf_row("HK FP8 (reference point)", &fp8);
-        let ck = baselines::gemm(&arch, &GemmConfig::fp6(m, m, m), Baseline::CompokableCk);
+        let ck = baselines::gemm(
+            &a,
+            fp6.dispatch().gemm_config(),
+            Baseline::CompokableCk,
+        );
         perf_row("CK FP6 (unoptimized)", &ck);
     }
     println!("  (paper: FP6 ~ FP8 performance for HK; CK unoptimized; the");
     println!("   dwordx4 shuffle path caps at 2430 TFLOPS)");
+}
+
+/// Registry showcase: autotuned dispatch decisions for the headline
+/// keys, cold vs warm.
+pub fn registry() {
+    hr("Registry — autotuned dispatch (KernelKey -> variant)");
+    let mut cache = TuneCache::new();
+    let queries: Vec<(&str, Query)> = vec![
+        ("BF16 GEMM 8192^3", Query::gemm(M355, Dtype::Bf16, 8192, 8192, 8192)),
+        ("FP8 GEMM 8192^3", Query::gemm(M355, Dtype::Fp8, 8192, 8192, 8192)),
+        ("GQA fwd 8192/d128", Query::attn_gqa(M355, 8192, 128, false)),
+        ("MHA bwd 8192/d128", Query::attn_mha(M355, 8192, 128, false).bwd()),
+        ("Fused LN 8192", Query::fused_ln_paper(M355, 8192)),
+        ("RoPE 8192", Query::rope_paper(M355, 8192)),
+    ];
+    println!(
+        "{:<20} {:<28} {:<18} {:>9}",
+        "workload", "key", "variant", "TFLOPS"
+    );
+    for (label, q) in &queries {
+        let d = q.dispatch_with(&mut cache);
+        let p = d.simulate();
+        println!(
+            "{label:<20} {:<28} {:<18} {:>9.0}",
+            d.key.id(),
+            d.variant,
+            p.tflops
+        );
+    }
+    println!("\nwarm cache ({} entries):", cache.len());
+    for (id, rec) in cache.entries() {
+        println!(
+            "  {id:<28} -> {:<16} W{}/C{} ({:.0} TFLOPS predicted)",
+            rec.variant, rec.window, rec.chunk, rec.tflops
+        );
+    }
+    let hits = queries
+        .iter()
+        .filter(|(_, q)| q.dispatch_with(&mut cache).from_cache)
+        .count();
+    println!("re-dispatch: {hits}/{} served from cache", queries.len());
 }
 
 /// Ablations (DESIGN.md design-choice studies): scheduling-pattern x
@@ -464,13 +526,13 @@ pub fn fig24() {
 /// the autotuner's full sweep.
 pub fn ablations() {
     hr("Ablation A — autotuner (W, C) surface, BF16 GEMM 14592^3");
-    let arch = Arch::mi355x();
-    let base = GemmConfig {
-        block_m: 192,
-        block_n: 256,
-        ..GemmConfig::bf16(14592, 14592, 14592)
-    };
-    let pts = crate::hk::autotune::tune_grid(&arch, &base);
+    let a = M355.arch();
+    let base = Query::gemm(M355, Dtype::Bf16, 14592, 14592, 14592)
+        .pattern(Pattern::PingPong8)
+        .blocks(192, 256)
+        .grid(GRID_DEFAULT)
+        .dispatch();
+    let pts = crate::hk::autotune::tune_grid(&a, base.gemm_config());
     println!("{:<10} {:>6} {:>6} {:>9} {:>9}", "W/C", "L2%", "LLC%", "BW", "TFLOPS");
     for p in pts.iter().take(6) {
         println!(
@@ -487,10 +549,10 @@ pub fn ablations() {
 
     hr("Ablation B — LDS conflict sensitivity (BF16 GEMM 4096^3)");
     for ways in [1u32, 2, 4, 8, 16] {
-        let p = gemm::simulate(
-            &arch,
-            &GemmConfig { lds_ways: ways, ..GemmConfig::bf16(4096, 4096, 4096) },
-        );
+        let p = gemm_default(M355, Dtype::Bf16, 4096, 4096, 4096)
+            .lds_ways(ways)
+            .dispatch()
+            .simulate();
         println!(
             "{:>2}-way conflicts: compute {:>7.3} ms, {:>6.0} TFLOPS",
             ways,
@@ -501,10 +563,10 @@ pub fn ablations() {
 
     hr("Ablation C — macro-tile sweep under ping-pong (8192^3)");
     for (bm, bn) in [(128u32, 128u32), (128, 256), (192, 256), (256, 256)] {
-        let p = gemm::simulate(
-            &arch,
-            &GemmConfig { block_m: bm, block_n: bn, ..GemmConfig::bf16(8192, 8192, 8192) },
-        );
+        let p = gemm_default(M355, Dtype::Bf16, 8192, 8192, 8192)
+            .blocks(bm, bn)
+            .dispatch()
+            .simulate();
         println!("{bm:>3}x{bn:<3}: {:>6.0} TFLOPS (mem {:.2} ms, compute {:.2} ms)",
             p.tflops, p.mem_s * 1e3, p.compute_s * 1e3);
     }
@@ -517,10 +579,12 @@ pub fn ablations() {
             Pattern::WaveSpec { producers, consumers: 8 }
         };
         let bm = if producers == 0 { 256 } else { 192 };
-        let p = gemm::simulate(
-            &arch,
-            &GemmConfig { pattern, block_m: bm, ..GemmConfig::bf16(8192, 8192, 8192) },
-        );
+        let p = Query::gemm(M355, Dtype::Bf16, 8192, 8192, 8192)
+            .pattern(pattern)
+            .blocks(bm, 256)
+            .grid(GRID_DEFAULT)
+            .dispatch()
+            .simulate();
         println!("{producers}P/8C (tile {bm}x256): {:>6.0} TFLOPS", p.tflops);
     }
 }
@@ -540,6 +604,7 @@ pub fn all() {
     fig14();
     fig19();
     fig24();
+    registry();
     ablations();
 }
 
@@ -559,9 +624,28 @@ pub fn run(name: &str) -> bool {
         "fig14" => fig14(),
         "fig19" => fig19(),
         "fig24" | "appf" => fig24(),
+        "registry" => registry(),
         "ablate" | "ablations" => ablations(),
         "all" => all(),
         _ => return false,
     }
     true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::registry::Op;
+
+    #[test]
+    fn gemm_default_is_fully_pinned() {
+        // paper-default rows must never depend on tuner state
+        let d = gemm_default(M355, Dtype::Bf16, 4096, 4096, 4096).dispatch();
+        assert_eq!(d.variant, "explicit");
+        assert!(!d.from_cache);
+        assert_eq!(d.key.op, Op::Gemm);
+        let cfg = d.gemm_config();
+        assert_eq!((cfg.block_m, cfg.block_n), (256, 256));
+        assert_eq!(cfg.grid, GRID_DEFAULT);
+    }
 }

@@ -1,8 +1,10 @@
-//! Minimal JSON parser — enough for the artifact manifest (objects,
-//! arrays, strings, numbers, booleans, null). Built in-repo because the
-//! environment is offline; no external crates beyond `xla`/`anyhow`.
+//! Minimal JSON parser + serializer — enough for the artifact manifest
+//! and the tuning cache (objects, arrays, strings, numbers, booleans,
+//! null). Built in-repo because the environment is offline; the crate
+//! carries no external dependencies.
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::error::Result;
 use std::collections::BTreeMap;
 
 /// A parsed JSON value.
@@ -46,6 +48,70 @@ impl Json {
         match self {
             Json::Arr(v) => Some(v),
             _ => None,
+        }
+    }
+
+    /// Convenience constructor: an object from key/value pairs.
+    pub fn obj<K: Into<String>>(pairs: Vec<(K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// Serialize to a compact JSON document.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write_to(&mut out);
+        out
+    }
+
+    fn write_to(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => out.push_str(&fmt_f64(*n)),
+            Json::Str(s) => {
+                out.push('"');
+                escape_into(s, out);
+                out.push('"');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_to(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    escape_into(k, out);
+                    out.push_str("\":");
+                    v.write_to(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn escape_into(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
         }
     }
 }
@@ -190,6 +256,9 @@ impl<'a> Parser<'a> {
                         Some(b'\\') => s.push('\\'),
                         Some(b'/') => s.push('/'),
                         Some(b'u') => {
+                            if self.i + 5 > self.b.len() {
+                                bail!("truncated \\u escape at byte {}", self.i);
+                            }
                             let hex = std::str::from_utf8(
                                 &self.b[self.i + 1..self.i + 5],
                             )?;
@@ -233,9 +302,12 @@ impl<'a> Parser<'a> {
     }
 }
 
-/// Serialize a float in a JSON-safe way.
+/// Serialize a float in a JSON-safe way (non-finite values clamp to 0:
+/// JSON has no NaN/Infinity literals).
 pub fn fmt_f64(v: f64) -> String {
-    if v.fract() == 0.0 && v.abs() < 1e15 {
+    if !v.is_finite() {
+        "0".to_string()
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
         format!("{}", v as i64)
     } else {
         format!("{v}")
@@ -289,11 +361,39 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("12 34").is_err());
         assert!(parse(r#"{"a" 1}"#).is_err());
+        // truncated \u escape must error, not panic (the tune cache is a
+        // hand-editable file routed through this parser)
+        assert!(parse(r#""\u1"#).is_err());
+        assert!(parse(r#""\u12"#).is_err());
     }
 
     #[test]
     fn empty_containers() {
         assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn dump_round_trips() {
+        let doc = Json::obj(vec![
+            ("s", Json::Str("a\n\"b\"\\c".into())),
+            ("n", Json::Num(-1.25)),
+            ("i", Json::Num(42.0)),
+            ("b", Json::Bool(true)),
+            ("z", Json::Null),
+            (
+                "arr",
+                Json::Arr(vec![Json::Num(1.0), Json::Str("x".into())]),
+            ),
+        ]);
+        let text = doc.dump();
+        let back = parse(&text).unwrap();
+        assert_eq!(back, doc, "{text}");
+    }
+
+    #[test]
+    fn dump_clamps_non_finite() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "0");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "0");
     }
 }

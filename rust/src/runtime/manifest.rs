@@ -1,7 +1,8 @@
 //! Typed view of `artifacts/manifest.json` (written by `compile/aot.py`).
 
 use super::json::{parse, Json};
-use anyhow::{anyhow, Context, Result};
+use crate::err;
+use crate::error::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -18,7 +19,7 @@ impl ArtDtype {
         match s {
             "float32" => Ok(ArtDtype::F32),
             "int32" => Ok(ArtDtype::I32),
-            other => Err(anyhow!("unsupported artifact dtype {other}")),
+            other => Err(err!("unsupported artifact dtype {other}")),
         }
     }
 }
@@ -39,7 +40,7 @@ impl TensorSpec {
         let shape = j
             .get("shape")
             .and_then(|s| s.as_arr())
-            .ok_or_else(|| anyhow!("missing shape"))?
+            .ok_or_else(|| err!("missing shape"))?
             .iter()
             .map(|d| d.as_u64().unwrap_or(0) as usize)
             .collect();
@@ -85,12 +86,12 @@ impl Manifest {
         for e in j
             .get("entries")
             .and_then(|e| e.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .ok_or_else(|| err!("manifest missing entries"))?
         {
             let name = e
                 .get("name")
                 .and_then(|n| n.as_str())
-                .ok_or_else(|| anyhow!("entry missing name"))?
+                .ok_or_else(|| err!("entry missing name"))?
                 .to_string();
             let file = dir.join(
                 e.get("file").and_then(|f| f.as_str()).unwrap_or_default(),
@@ -130,7 +131,7 @@ impl Manifest {
         self.entries
             .iter()
             .find(|e| e.name == name)
-            .ok_or_else(|| anyhow!("no artifact entry named {name}"))
+            .ok_or_else(|| err!("no artifact entry named {name}"))
     }
 
     /// The directory exists and has a manifest (used by tests to skip

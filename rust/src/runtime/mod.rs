@@ -1,11 +1,14 @@
-//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them
-//! from Rust. Python never runs on this path — `make artifacts` is the
-//! only compile-time step.
+//! Artifact runtime: load the AOT-compiled HLO artifacts and execute
+//! them from Rust. Python never runs on this path — `make artifacts` is
+//! the only compile-time step.
 //!
-//! - [`json`] — a minimal JSON parser for the artifact manifest (the
-//!   environment is offline; we build the substrate ourselves).
+//! - [`json`] — a minimal JSON parser/serializer for the artifact
+//!   manifest and the tuning cache (the environment is offline; we build
+//!   the substrate ourselves).
 //! - [`manifest`] — typed view of `artifacts/manifest.json`.
-//! - [`client`] — PJRT CPU client wrapper: compile once, execute many.
+//! - [`client`] — the execution-backend seam. The PJRT CPU client sits
+//!   behind the `pjrt` feature (vendored `xla` crate); the default build
+//!   ships a validating stub so the crate is dependency-free.
 //! - [`rng`] — a small deterministic PRNG (xoshiro-style) for synthetic
 //!   workloads on the request path.
 
