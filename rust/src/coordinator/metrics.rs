@@ -139,4 +139,60 @@ mod tests {
         assert_eq!(s.mean_us(), 0.0);
         assert_eq!(s.p99_us(), 0.0);
     }
+
+    // Edge cases for the per-request latency use in `serve::engine`
+    // (TTFT with one request, ITL streams dominated by one step time,
+    // out-of-order completion records).
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let mut s = LatencyStats::default();
+        s.record_s(42e-6);
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert!((s.percentile_us(p) - 42.0).abs() < 1e-9, "p{p}");
+        }
+        assert!((s.mean_us() - 42.0).abs() < 1e-9);
+        assert_eq!(s.count(), 1);
+    }
+
+    #[test]
+    fn duplicate_heavy_stream_keeps_percentiles_on_the_mode() {
+        // an ITL stream: 990 identical step times + 10 slow outliers
+        let mut s = LatencyStats::default();
+        for _ in 0..990 {
+            s.record_s(10e-6);
+        }
+        for _ in 0..10 {
+            s.record_s(1000e-6);
+        }
+        assert!((s.p50_us() - 10.0).abs() < 1e-9);
+        // p99 still lands inside the duplicate mass (990/1000 = 99%)
+        assert!((s.p99_us() - 10.0).abs() < 1e-9);
+        // the tail is only visible beyond it
+        assert!((s.percentile_us(99.95) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn out_of_order_insertion_matches_sorted_insertion() {
+        let mut fwd = LatencyStats::default();
+        let mut rev = LatencyStats::default();
+        let mut shuffled = LatencyStats::default();
+        let vals: Vec<f64> = (1..=101).map(|i| i as f64 * 1e-6).collect();
+        for &v in &vals {
+            fwd.record_s(v);
+        }
+        for &v in vals.iter().rev() {
+            rev.record_s(v);
+        }
+        // deterministic interleave: odds then evens
+        for &v in vals.iter().step_by(2).chain(vals.iter().skip(1).step_by(2)) {
+            shuffled.record_s(v);
+        }
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            let want = fwd.percentile_us(p);
+            assert_eq!(rev.percentile_us(p), want, "p{p} reversed");
+            assert_eq!(shuffled.percentile_us(p), want, "p{p} shuffled");
+        }
+        assert!((rev.mean_us() - fwd.mean_us()).abs() < 1e-9);
+    }
 }

@@ -110,6 +110,41 @@ pub fn evaluate_streaming(
     }
 }
 
+/// Evaluate a paged-gather kernel (decode attention over a block-table
+/// KV cache): like [`evaluate_streaming`], but the memory side is the
+/// streaming bound degraded by the block-table `indirection` factor
+/// (>= 1) — each page boundary serializes a dependent table lookup the
+/// gather cannot hide, so the pure-stream model is the upper bound on
+/// achievable bandwidth.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_paged(
+    arch: &Arch,
+    name: &str,
+    built: &BuiltSchedule,
+    blocks: f64,
+    total_flops: f64,
+    total_bytes: f64,
+    resident_bytes: f64,
+    indirection: f64,
+) -> KernelPerf {
+    // pointer-chased gathers mostly miss: model VMEM at HBM latency
+    let mut perf = evaluate_streaming(
+        arch,
+        name,
+        built,
+        blocks,
+        total_flops,
+        total_bytes,
+        resident_bytes,
+        Some(arch.hbm_lat),
+    );
+    perf.mem_s *= indirection.max(1.0);
+    perf.time_s = perf.compute_s.max(perf.mem_s);
+    perf.tflops = total_flops / perf.time_s / 1e12;
+    perf.eff_bw_tbps = total_bytes / perf.time_s / 1e12;
+    perf
+}
+
 /// Achieved fraction of the dtype peak — the paper's "efficiency ratio".
 pub fn efficiency(arch: &Arch, dtype: crate::sim::arch::Dtype, tflops: f64) -> f64 {
     tflops / arch.peak_tflops(dtype)

@@ -142,6 +142,28 @@ impl TuneCache {
             .with_context(|| format!("reading {}", path.display()))?;
         Self::from_json(&parse(&text)?)
     }
+
+    /// Load from disk, treating a damaged file as a *cold cache*: the
+    /// tune cache is a memo, so a corrupted or truncated document must
+    /// never propagate an error into dispatch — it costs one re-sweep.
+    /// A missing file is the normal first run (no warning); anything
+    /// unreadable or unparsable warns on stderr and starts empty.
+    pub fn load_or_cold(path: impl AsRef<Path>) -> Self {
+        let path = path.as_ref();
+        if !path.exists() {
+            return TuneCache::new();
+        }
+        match Self::load(path) {
+            Ok(cache) => cache,
+            Err(e) => {
+                eprintln!(
+                    "warning: tune cache {} is unusable ({e}); starting cold",
+                    path.display()
+                );
+                TuneCache::new()
+            }
+        }
+    }
 }
 
 /// Cache file location: `HK_TUNECACHE` or `.hk-tunecache.json`.
@@ -155,12 +177,12 @@ static GLOBAL: Mutex<Option<TuneCache>> = Mutex::new(None);
 
 /// Run `f` against the process-wide cache. On first use the cache is
 /// warmed from [`default_path`] when that file exists (the across-runs
-/// persistence path); otherwise it starts empty.
+/// persistence path); a missing or damaged file starts cold — dispatch
+/// never fails because the memo file is corrupt.
 pub fn with_global<R>(f: impl FnOnce(&mut TuneCache) -> R) -> R {
     let mut slot = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
-    let cache = slot.get_or_insert_with(|| {
-        TuneCache::load(default_path()).unwrap_or_default()
-    });
+    let cache =
+        slot.get_or_insert_with(|| TuneCache::load_or_cold(default_path()));
     f(cache)
 }
 
@@ -213,6 +235,35 @@ mod tests {
         assert!(TuneCache::from_json(&parse("{}").unwrap()).is_err());
         let no_variant = parse(r#"{"entries": {"k": {"window": 1}}}"#).unwrap();
         assert!(TuneCache::from_json(&no_variant).is_err());
+    }
+
+    #[test]
+    fn damaged_files_load_cold() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("hk_tunecache_damaged.json");
+
+        // truncated mid-record (a crashed writer)
+        std::fs::write(&path, r#"{"entries": {"k": {"varia"#).unwrap();
+        assert!(TuneCache::load_or_cold(&path).is_empty());
+
+        // not JSON at all
+        std::fs::write(&path, "���not json").unwrap();
+        assert!(TuneCache::load_or_cold(&path).is_empty());
+
+        // structurally valid but schema-less
+        std::fs::write(&path, "{}").unwrap();
+        assert!(TuneCache::load_or_cold(&path).is_empty());
+
+        // a healthy file still round-trips
+        let mut warm = TuneCache::new();
+        warm.put("k", rec("v", 3, 9));
+        warm.save(&path).unwrap();
+        assert_eq!(TuneCache::load_or_cold(&path), warm);
+
+        // a missing file is a silent cold start
+        let missing = dir.join("hk_tunecache_never_written.json");
+        let _ = std::fs::remove_file(&missing);
+        assert!(TuneCache::load_or_cold(&missing).is_empty());
     }
 
     #[test]

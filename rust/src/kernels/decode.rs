@@ -1,0 +1,329 @@
+//! Paged decode-attention kernel (`Op::AttnDecode`) — the serving
+//! workload the prefill-shaped kernels cannot model.
+//!
+//! Decode attention processes *one new query token per sequence* against
+//! the whole cached KV context, so arithmetic intensity collapses to
+//! O(1) FLOPs per KV byte: the kernel is memory-bound everywhere the
+//! paper's 1.2–2.4× memory-bound wins live. Two effects shape the cost:
+//!
+//! - **GQA sharing**: the KV stream scales with `heads_kv`, not
+//!   `heads_q` — every query head in a group rides the same K/V gather,
+//!   so an 8:1 GQA ratio cuts the traffic 8× relative to MHA.
+//! - **Paged gather**: the serving engine stores KV in fixed-size
+//!   blocks addressed through a per-sequence block table
+//!   ([`crate::serve::kvcache`]). Each page boundary costs a dependent
+//!   block-table lookup before the gather can issue, degrading
+//!   effective bandwidth by a factor that shrinks as the block grows
+//!   ([`AttnDecodeConfig::indirection`]); `block_size == 0` models a
+//!   contiguous (unpaged) cache and pays no penalty.
+//!
+//! The cost model is [`crate::hk::costmodel::evaluate_paged`]: the
+//! compute side runs the gather/dot/softmax loop through the cycle
+//! engine, the memory side is the `sim::cache` streaming bound scaled by
+//! the indirection factor — so the pure-stream model is a provable upper
+//! bound on decode bandwidth (see `tests/serve_engine.rs`).
+
+use crate::hk::costmodel::{evaluate_paged, KernelPerf};
+use crate::hk::schedule::{Cluster, LoopSpec};
+use crate::hk::{interleave, pingpong};
+use crate::kernels::gemm::Pattern;
+use crate::sim::arch::{Arch, Dtype, MFMA_16X16X32};
+use crate::sim::instr::Instr;
+
+/// Decode-attention problem + implementation description.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnDecodeConfig {
+    /// Sequences decoded this step (the continuous batch).
+    pub batch: u32,
+    pub heads_q: u32,
+    pub heads_kv: u32,
+    /// Cached KV tokens per sequence (prompt + generated so far).
+    pub context: u32,
+    pub d_head: u32,
+    /// Paged-KV block size in tokens; 0 = contiguous cache (no paging).
+    pub block_size: u32,
+    pub pattern: Pattern,
+}
+
+impl AttnDecodeConfig {
+    /// Tokens of KV the indirection penalty amortizes over: one
+    /// dependent block-table load per page of this many tokens.
+    const INDIRECTION_TOKENS: f64 = 8.0;
+
+    /// The paper's GQA serving shape: 64 query heads over 8 KV heads,
+    /// d_head 128 (Figs. 7/8 shape, decode-side).
+    pub fn gqa(batch: u32, context: u32, block_size: u32) -> Self {
+        AttnDecodeConfig {
+            batch,
+            heads_q: 64,
+            heads_kv: 8,
+            context,
+            d_head: 128,
+            block_size,
+            pattern: Pattern::Interleave4,
+        }
+    }
+
+    /// MHA decode (no KV sharing): every query head streams its own KV.
+    pub fn mha(batch: u32, context: u32, block_size: u32) -> Self {
+        AttnDecodeConfig { heads_kv: 64, ..Self::gqa(batch, context, block_size) }
+    }
+
+    /// Query heads sharing one KV head's stream.
+    pub fn gqa_ratio(&self) -> u32 {
+        (self.heads_q / self.heads_kv.max(1)).max(1)
+    }
+
+    /// Tokens per gathered page (contiguous caches stream 64-token
+    /// chunks — the fwd kernel's KV tile).
+    pub fn page_tokens(&self) -> u32 {
+        if self.block_size == 0 {
+            64
+        } else {
+            self.block_size
+        }
+    }
+
+    /// KV pages per sequence (= block-table entries per sequence).
+    pub fn pages_per_seq(&self) -> u32 {
+        self.context.div_ceil(self.page_tokens()).max(1)
+    }
+
+    /// K + V bytes streamed per decode step (bf16).
+    pub fn kv_bytes(&self) -> f64 {
+        2.0 * self.batch as f64
+            * self.heads_kv as f64
+            * self.context as f64
+            * self.d_head as f64
+            * 2.0
+    }
+
+    /// Q read + O write for the single new token per sequence.
+    pub fn qo_bytes(&self) -> f64 {
+        2.0 * self.batch as f64 * self.heads_q as f64 * self.d_head as f64 * 2.0
+    }
+
+    /// Block-table bytes (8 B physical-block pointer per entry).
+    pub fn table_bytes(&self) -> f64 {
+        if self.block_size == 0 {
+            0.0
+        } else {
+            self.batch as f64 * self.pages_per_seq() as f64 * 8.0
+        }
+    }
+
+    /// Total demand bytes of one decode step.
+    pub fn bytes(&self) -> f64 {
+        self.kv_bytes() + self.qo_bytes() + self.table_bytes()
+    }
+
+    /// FLOPs of one decode step: QK^T + AV for one query token.
+    pub fn flops(&self) -> f64 {
+        4.0 * self.batch as f64
+            * self.heads_q as f64
+            * self.context as f64
+            * self.d_head as f64
+    }
+
+    /// Effective-bandwidth degradation from block-table indirection:
+    /// every `block_size` tokens the gather stalls on a dependent table
+    /// lookup, so small blocks pay proportionally more. Contiguous
+    /// caches (block_size 0) pay nothing; the factor decays to 1 as the
+    /// block grows.
+    pub fn indirection(&self) -> f64 {
+        if self.block_size == 0 {
+            1.0
+        } else {
+            1.0 + Self::INDIRECTION_TOKENS / self.block_size as f64
+        }
+    }
+}
+
+fn softmax_valu_cycles(rows: u64, cols: u64) -> u64 {
+    // max/sub/exp2/sum/scale over a (rows x cols) logits tile
+    5 * ((rows * cols) / 64).max(1)
+}
+
+/// Decode LoopSpec: per iteration each wave gathers one KV page for its
+/// (sequence, KV-head) block, dots the group's query rows against it,
+/// and folds the page into the online softmax.
+pub fn build_decode_spec(cfg: &AttnDecodeConfig) -> LoopSpec {
+    let d = cfg.d_head;
+    let page = cfg.page_tokens();
+    let gqa = cfg.gqa_ratio();
+    let waves = cfg.pattern.waves();
+
+    // K and V page gathers: page x d bf16 each, straight to registers
+    // (decode skips LDS staging — there is no cross-wave tile reuse).
+    let page_bytes = (page as u64) * (d as u64) * 2;
+    let issues = ((page_bytes / 64 / 16).max(1)) as u32;
+
+    // QK^T: the group's gqa query rows against the page; AV matches.
+    let qk_flops = 2 * gqa as u64 * page as u64 * d as u64;
+    let mfma = ((qk_flops / MFMA_16X16X32.flops()).max(1)) as u32;
+    let sm = softmax_valu_cycles(gqa as u64, page as u64);
+
+    let compute = vec![
+        Cluster::new(
+            "qk+softmax",
+            vec![
+                Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: mfma },
+                Instr::Valu { cycles: sm },
+            ],
+        ),
+        Cluster::new(
+            "av+rescale",
+            vec![
+                Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: mfma },
+                Instr::Valu { cycles: sm / 2 + 1 },
+            ],
+        ),
+    ];
+    let memory = vec![
+        Cluster::new(
+            "gatherK",
+            vec![
+                // dependent block-table pointer math before the gather
+                Instr::Salu { cycles: 4 },
+                Instr::VMemLoad { bytes: page_bytes, to_lds: false, issues },
+            ],
+        ),
+        Cluster::new(
+            "gatherV",
+            vec![Instr::VMemLoad { bytes: page_bytes, to_lds: false, issues }],
+        ),
+    ];
+
+    let table_bytes = if cfg.block_size == 0 {
+        0
+    } else {
+        cfg.pages_per_seq() as u64 * 8
+    };
+    LoopSpec {
+        name: format!("attn-decode-d{}-ctx{}-blk{}", d, cfg.context, cfg.block_size),
+        prologue: vec![Instr::VMemLoad {
+            // the group's query rows + the sequence's block table
+            bytes: (gqa as u64) * (d as u64) * 2 + table_bytes,
+            to_lds: false,
+            issues: 1,
+        }],
+        compute,
+        memory,
+        iters: cfg.pages_per_seq().div_ceil(waves).max(1),
+        epilogue: vec![
+            Instr::Valu { cycles: sm }, // final normalization
+            Instr::VMemStore { bytes: (gqa as u64) * (d as u64) * 4, issues: 1 },
+        ],
+    }
+}
+
+/// Simulate one decode step. The metric of record is `time_s` (the
+/// engine's inter-token latency contribution); `eff_bw_tbps` is the
+/// paper-style effective-bandwidth figure.
+pub fn simulate_decode(arch: &Arch, cfg: &AttnDecodeConfig) -> KernelPerf {
+    let spec = build_decode_spec(cfg);
+    let built = match cfg.pattern {
+        Pattern::Interleave4 => interleave::build(&spec),
+        _ => pingpong::build(&spec),
+    };
+    // one block per (sequence, KV head): the query heads of a group
+    // share the gather, which is exactly GQA's decode advantage
+    let blocks = cfg.batch as f64 * cfg.heads_kv as f64;
+    evaluate_paged(
+        arch,
+        &format!(
+            "attn-decode b{} hq{} hkv{} ctx{} blk{}",
+            cfg.batch, cfg.heads_q, cfg.heads_kv, cfg.context, cfg.block_size
+        ),
+        &built,
+        blocks,
+        cfg.flops(),
+        cfg.bytes(),
+        cfg.kv_bytes(),
+        cfg.indirection(),
+    )
+}
+
+/// The canonical block-size ablation (report "Serve B" and the
+/// `serve_engine` example's JSON rows share it): `(block_size, label,
+/// perf)` for the GQA serving shape at batch 32, context 32768 —
+/// block 0 is the contiguous (unpaged) reference.
+pub fn block_ablation(arch: &Arch) -> Vec<(u32, String, KernelPerf)> {
+    [8u32, 16, 64, 256, 0]
+        .iter()
+        .map(|&blk| {
+            let p = simulate_decode(arch, &AttnDecodeConfig::gqa(32, 32768, blk));
+            let label = if blk == 0 {
+                "contiguous".to_string()
+            } else {
+                format!("blk{blk}")
+            };
+            (blk, label, p)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> Arch {
+        Arch::mi355x()
+    }
+
+    #[test]
+    fn decode_is_memory_bound() {
+        let p = simulate_decode(&arch(), &AttnDecodeConfig::gqa(16, 16384, 16));
+        assert!(p.mem_s >= p.compute_s * 0.5, "mem {} compute {}", p.mem_s, p.compute_s);
+        assert!(p.time_s > 0.0 && p.time_s.is_finite());
+    }
+
+    #[test]
+    fn cost_grows_with_context() {
+        let a = arch();
+        let mut last = 0.0;
+        for ctx in [1024u32, 4096, 16384, 65536] {
+            let p = simulate_decode(&a, &AttnDecodeConfig::gqa(16, ctx, 16));
+            assert!(p.time_s > last, "ctx {ctx}: {} !> {last}", p.time_s);
+            last = p.time_s;
+        }
+    }
+
+    #[test]
+    fn gqa_sharing_cuts_decode_cost() {
+        let a = arch();
+        let gqa = simulate_decode(&a, &AttnDecodeConfig::gqa(16, 16384, 16));
+        let mha = simulate_decode(&a, &AttnDecodeConfig::mha(16, 16384, 16));
+        assert!(
+            gqa.time_s < mha.time_s / 2.0,
+            "gqa {} vs mha {}",
+            gqa.time_s,
+            mha.time_s
+        );
+    }
+
+    #[test]
+    fn larger_blocks_amortize_indirection() {
+        let a = arch();
+        let mut last_bw = 0.0;
+        for blk in [8u32, 32, 128, 0] {
+            let p = simulate_decode(&a, &AttnDecodeConfig::gqa(32, 32768, blk));
+            assert!(
+                p.eff_bw_tbps >= last_bw,
+                "blk {blk}: {} < {last_bw}",
+                p.eff_bw_tbps
+            );
+            last_bw = p.eff_bw_tbps;
+        }
+    }
+
+    #[test]
+    fn indirection_factor_shape() {
+        let c16 = AttnDecodeConfig::gqa(1, 4096, 16);
+        let c128 = AttnDecodeConfig::gqa(1, 4096, 128);
+        let contig = AttnDecodeConfig::gqa(1, 4096, 0);
+        assert!(c16.indirection() > c128.indirection());
+        assert!(c128.indirection() > contig.indirection());
+        assert_eq!(contig.indirection(), 1.0);
+    }
+}

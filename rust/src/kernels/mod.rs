@@ -5,6 +5,8 @@
 //!   Tables 2/3/4, App. F).
 //! - [`attention`] — attention forward/backward, MHA/GQA,
 //!   causal/non-causal (listing E.3, Figs. 7/8/15/16/17, Tables 1/3).
+//! - [`decode`] — paged decode attention over a block-table KV cache
+//!   (the serving engine's memory-bound gather workload).
 //! - [`membound`] — fused dropout-residual-layernorm + RoPE (Fig. 9,
 //!   listing E.2).
 //! - [`baselines`] — AITER/CK/hipBLASLt/Triton/PyTorch/Mojo models.
@@ -14,11 +16,13 @@
 
 pub mod attention;
 pub mod baselines;
+pub mod decode;
 pub mod gemm;
 pub mod membound;
 pub mod registry;
 
 pub use attention::AttnConfig;
+pub use decode::AttnDecodeConfig;
 pub use baselines::Baseline;
 pub use gemm::{GemmConfig, GridOrder, Pattern};
 pub use membound::{FusedLnConfig, RopeConfig};

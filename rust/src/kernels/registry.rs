@@ -32,6 +32,7 @@ use crate::hk::costmodel::KernelPerf;
 use crate::hk::regalloc::RegMode;
 use crate::hk::tunecache::{self, TuneCache, TuneRecord};
 use crate::kernels::attention::{self, AttnConfig};
+use crate::kernels::decode::{self, AttnDecodeConfig};
 use crate::kernels::gemm::{self, GemmConfig, GridOrder, Pattern};
 use crate::kernels::membound::{self, FusedLnConfig, RopeConfig};
 use crate::sim::arch::{Arch, Dtype};
@@ -42,22 +43,37 @@ pub enum Op {
     Gemm,
     AttnFwd,
     AttnBwd,
+    /// Paged decode attention: one query token against the cached KV
+    /// context through a block table (the serving engine's hot kernel).
+    AttnDecode,
     FusedLn,
     Rope,
 }
 
 impl Op {
-    pub const ALL: [Op; 5] =
-        [Op::Gemm, Op::AttnFwd, Op::AttnBwd, Op::FusedLn, Op::Rope];
+    pub const ALL: [Op; 6] = [
+        Op::Gemm,
+        Op::AttnFwd,
+        Op::AttnBwd,
+        Op::AttnDecode,
+        Op::FusedLn,
+        Op::Rope,
+    ];
 
     pub fn tag(self) -> &'static str {
         match self {
             Op::Gemm => "gemm",
             Op::AttnFwd => "attn-fwd",
             Op::AttnBwd => "attn-bwd",
+            Op::AttnDecode => "attn-decode",
             Op::FusedLn => "fused-ln",
             Op::Rope => "rope",
         }
+    }
+
+    /// Inverse of [`Op::tag`] (tune-cache key parsing).
+    pub fn from_tag(tag: &str) -> Option<Op> {
+        Self::ALL.into_iter().find(|o| o.tag() == tag)
     }
 }
 
@@ -145,6 +161,11 @@ impl ShapeClass {
             ShapeClass::Huge => "huge",
         }
     }
+
+    /// Inverse of [`ShapeClass::tag`] (tune-cache key parsing).
+    pub fn from_tag(tag: &str) -> Option<ShapeClass> {
+        Self::ALL.into_iter().find(|s| s.tag() == tag)
+    }
 }
 
 /// Concrete problem dimensions behind a key.
@@ -162,6 +183,14 @@ pub enum Problem {
         seq: u32,
         d_head: u32,
         causal: bool,
+    },
+    AttnDecode {
+        batch: u32,
+        heads_q: u32,
+        heads_kv: u32,
+        context: u32,
+        d_head: u32,
+        block_size: u32,
     },
     FusedLn {
         rows: u32,
@@ -182,6 +211,7 @@ impl Problem {
         match *self {
             Problem::Gemm { m, n, k } => m.max(n).max(k) as u64,
             Problem::Attn { seq, .. } => seq as u64,
+            Problem::AttnDecode { context, .. } => context as u64,
             Problem::FusedLn { rows, .. } => (rows / 16).max(1) as u64,
             Problem::Rope { seq, .. } => seq as u64,
         }
@@ -325,6 +355,25 @@ pub fn variants(key: &KernelKey) -> Vec<Variant> {
                 swizzled: false,
             },
         ],
+        // Decode is a pure gather: 4 waves keep the memory pipes busy
+        // without starving the register file; 8-wave is the fallback
+        // for huge contexts where extra waves hide more latency.
+        Op::AttnDecode => vec![
+            Variant {
+                name: "dec-gather-il4",
+                pattern: Pattern::Interleave4,
+                block_m: 0,
+                block_n: 0,
+                swizzled: false,
+            },
+            Variant {
+                name: "dec-gather-pp8",
+                pattern: Pattern::PingPong8,
+                block_m: 0,
+                block_n: 0,
+                swizzled: false,
+            },
+        ],
         Op::FusedLn => vec![Variant {
             name: "ln-il4",
             pattern: Pattern::Interleave4,
@@ -401,6 +450,40 @@ impl Query {
     /// heads (Figs. 7/8).
     pub fn attn_gqa(arch: ArchId, seq: u32, d_head: u32, causal: bool) -> Self {
         Self::attn(arch, 16, 64, 8, seq, d_head, causal)
+    }
+
+    /// Paged decode attention over a block-table KV cache: `batch`
+    /// sequences each extend by one token against `context` cached
+    /// tokens. `block_size` 0 models a contiguous (unpaged) cache.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_decode(
+        arch: ArchId,
+        batch: u32,
+        heads_q: u32,
+        heads_kv: u32,
+        context: u32,
+        d_head: u32,
+        block_size: u32,
+    ) -> Self {
+        Query {
+            op: Op::AttnDecode,
+            dtype: Dtype::Bf16,
+            arch,
+            problem: Problem::AttnDecode {
+                batch,
+                heads_q,
+                heads_kv,
+                context,
+                d_head,
+                block_size,
+            },
+            ov: Overrides::default(),
+        }
+    }
+
+    /// The GQA serving shape (64 query heads over 8 KV heads, d 128).
+    pub fn decode_gqa(arch: ArchId, batch: u32, context: u32, block_size: u32) -> Self {
+        Self::attn_decode(arch, batch, 64, 8, context, 128, block_size)
     }
 
     /// The paper's MHA shape: batch 16, 16 heads (Figs. 15/16/17, Tab. 1).
@@ -501,7 +584,9 @@ impl Query {
                     && self.ov.block_n.is_some()
                     && self.ov.grid.is_some()
             }
-            Op::AttnFwd | Op::AttnBwd => self.ov.pattern.is_some(),
+            Op::AttnFwd | Op::AttnBwd | Op::AttnDecode => {
+                self.ov.pattern.is_some()
+            }
             Op::FusedLn | Op::Rope => true,
         }
     }
@@ -674,6 +759,22 @@ impl Query {
                     lds_ways: self.ov.lds_ways.unwrap_or(1),
                 })
             }
+            Problem::AttnDecode {
+                batch,
+                heads_q,
+                heads_kv,
+                context,
+                d_head,
+                block_size,
+            } => KernelConfig::AttnDecode(AttnDecodeConfig {
+                batch,
+                heads_q,
+                heads_kv,
+                context,
+                d_head,
+                block_size,
+                pattern: self.ov.pattern.unwrap_or(v.pattern),
+            }),
             Problem::FusedLn { rows, d, dropout } => {
                 KernelConfig::FusedLn(FusedLnConfig {
                     rows,
@@ -694,6 +795,7 @@ impl Query {
 pub enum KernelConfig {
     Gemm(GemmConfig),
     Attn(AttnConfig),
+    AttnDecode(AttnDecodeConfig),
     FusedLn(FusedLnConfig),
     Rope(RopeConfig),
 }
@@ -728,6 +830,13 @@ impl Dispatch {
         }
     }
 
+    pub fn decode_config(&self) -> &AttnDecodeConfig {
+        match &self.config {
+            KernelConfig::AttnDecode(c) => c,
+            other => panic!("dispatch is not decode attention: {other:?}"),
+        }
+    }
+
     pub fn ln_config(&self) -> &FusedLnConfig {
         match &self.config {
             KernelConfig::FusedLn(c) => c,
@@ -750,6 +859,9 @@ pub fn simulate_config(key: &KernelKey, cfg: &KernelConfig) -> KernelPerf {
         (Op::Gemm, KernelConfig::Gemm(c)) => gemm::simulate(&arch, c),
         (Op::AttnFwd, KernelConfig::Attn(c)) => attention::simulate_fwd(&arch, c),
         (Op::AttnBwd, KernelConfig::Attn(c)) => attention::simulate_bwd(&arch, c),
+        (Op::AttnDecode, KernelConfig::AttnDecode(c)) => {
+            decode::simulate_decode(&arch, c)
+        }
         (Op::FusedLn, KernelConfig::FusedLn(c)) => {
             membound::simulate_fused_ln(&arch, c)
         }
@@ -804,5 +916,31 @@ mod tests {
             assert_eq!(ArchId::from_tag(a.tag()), Some(a));
         }
         assert_eq!(ArchId::from_tag("tpu"), None);
+    }
+
+    #[test]
+    fn op_and_shape_tags_round_trip() {
+        for op in Op::ALL {
+            assert_eq!(Op::from_tag(op.tag()), Some(op));
+        }
+        for s in ShapeClass::ALL {
+            assert_eq!(ShapeClass::from_tag(s.tag()), Some(s));
+        }
+        assert_eq!(Op::from_tag("conv"), None);
+        assert_eq!(ShapeClass::from_tag("tiny"), None);
+    }
+
+    #[test]
+    fn decode_dispatch_resolves_and_simulates() {
+        let q = Query::decode_gqa(ArchId::Mi355x, 16, 8192, 16);
+        let mut cache = TuneCache::new();
+        let d = q.dispatch_with(&mut cache);
+        assert_eq!(d.key.op, Op::AttnDecode);
+        let cfg = d.decode_config();
+        assert_eq!((cfg.heads_q, cfg.heads_kv), (64, 8));
+        let p = d.simulate();
+        assert!(p.time_s > 0.0 && p.time_s.is_finite());
+        // warm re-dispatch hits the tune cache
+        assert!(q.dispatch_with(&mut cache).from_cache);
     }
 }

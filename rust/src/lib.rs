@@ -19,6 +19,9 @@
 //!   client sits behind the `pjrt` feature seam.
 //! - [`coordinator`] — the serving/training drivers built on the
 //!   runtime and the registry (including the mixed-op service).
+//! - [`serve`] — the decode-serving subsystem: paged KV cache with
+//!   ref-counted prefix sharing + the continuous-batching engine over
+//!   `Op::AttnDecode`.
 //! - [`report`] — regenerates every table and figure of the paper.
 
 pub mod coordinator;
@@ -27,4 +30,5 @@ pub mod hk;
 pub mod kernels;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;

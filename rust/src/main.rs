@@ -2,9 +2,12 @@
 //!
 //! Subcommands:
 //!   report <exp|all>      regenerate a paper table/figure (see DESIGN.md)
-//!   serve [--mixed] [--requests N] [--rate R]
-//!                         run the batching attention service on a
-//!                         Poisson trace. `--mixed` serves a mixed-op
+//!   serve [--paged|--mixed] [--requests N] [--rate R]
+//!                         run a serving loop on a Poisson trace.
+//!                         `--paged` runs the continuous-batching
+//!                         engine over the paged KV cache (prefill +
+//!                         decode through the registry).
+//!                         `--mixed` serves a mixed-op
 //!                         trace (attention + GEMM + layernorm + RoPE)
 //!                         through the autotuned kernel registry — no
 //!                         artifacts needed; the plain mode executes AOT
@@ -28,6 +31,7 @@ use hipkittens::error::Result;
 use hipkittens::hk::tunecache;
 use hipkittens::kernels::registry::{ArchId, Query};
 use hipkittens::runtime::Runtime;
+use hipkittens::serve::{serve_trace, ServeConfig, ServeEngine};
 use hipkittens::sim::Dtype;
 use hipkittens::{bail, err, report, sim};
 
@@ -53,7 +57,7 @@ fn main() -> Result<()> {
             let exp = args.get(1).map(String::as_str).unwrap_or("all");
             if !report::run(exp) {
                 bail!(
-                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, all"
+                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, all"
                 );
             }
         }
@@ -66,7 +70,18 @@ fn main() -> Result<()> {
                 .map(|v| v.parse())
                 .transpose()?
                 .unwrap_or(200.0);
-            if has_flag(&args, "--mixed") {
+            if has_flag(&args, "--paged") {
+                let arch = arch_flag(&args)?;
+                let cfg = ServeConfig { arch, ..ServeConfig::default() };
+                let mut eng = ServeEngine::new(cfg)?;
+                let trace = serve_trace(n, rate, 7);
+                let report = eng.run_trace(&trace)?;
+                println!(
+                    "arch: {} (paged KV cache + continuous batching)",
+                    arch.tag()
+                );
+                println!("{}", report.summary());
+            } else if has_flag(&args, "--mixed") {
                 let arch = arch_flag(&args)?;
                 let mut svc = MixedService::new(arch, ServiceConfig::default())?;
                 let trace = mixed_trace(n, rate, 7);
@@ -190,7 +205,7 @@ fn main() -> Result<()> {
                 eprintln!("unknown command {o:?}\n");
             }
             eprintln!("usage: {exe} report <exp|all>");
-            eprintln!("       {exe} serve [--mixed] [--requests N] [--rate R]");
+            eprintln!("       {exe} serve [--paged|--mixed] [--requests N] [--rate R]");
             eprintln!("       {exe} train [--steps N] [--path kernels|reference]");
             eprintln!("       {exe} tune [--arch mi355x|mi350x|mi325x|b200|h100]");
             eprintln!("       {exe} artifacts | solve | arch");

@@ -1,0 +1,568 @@
+//! Continuous-batching serving engine over the paged KV cache.
+//!
+//! The engine interleaves *prefill* and *decode* steps on the trace
+//! clock, the way a production serving loop does:
+//!
+//! - Arrivals queue FIFO. Admission allocates paged KV for the prompt
+//!   (forking the shared system prefix when one is configured), gated
+//!   by [`crate::serve::kvcache::KvCacheManager::can_admit`].
+//! - Newly admitted requests run one **prefill** step (an `Op::AttnFwd`
+//!   dispatch at the batch's longest prompt); its completion is the
+//!   request's first token, so time-to-first-token (TTFT) is measured
+//!   here.
+//! - Otherwise the running batch takes one **decode** step (an
+//!   `Op::AttnDecode` dispatch at the batch's longest context); each
+//!   step emits one token per running sequence and its duration is the
+//!   inter-token latency (ITL).
+//! - A sequence that cannot grow its KV (pool exhausted, nothing
+//!   evictable) is *preempted*: its blocks are freed and it requeues
+//!   for a fresh prefill — progress is never silently lost, it is
+//!   recomputed.
+//!
+//! Every step duration comes from `registry` dispatch against an
+//! engine-private [`TuneCache`] and the kernel cost model, so a trace
+//! replays bit-identically: `BENCH_serve.json` is deterministic across
+//! runs (asserted in `tests/serve_engine.rs`).
+
+use crate::coordinator::metrics::LatencyStats;
+use crate::error::Result;
+use crate::hk::tunecache::TuneCache;
+use crate::kernels::registry::{ArchId, Query};
+use crate::runtime::json::Json;
+use crate::runtime::Rng;
+use crate::bail;
+use crate::serve::kvcache::{KvCacheConfig, KvCacheManager, KvCacheStats};
+use std::collections::{HashMap, VecDeque};
+
+/// Reserved prefix id for the engine's shared system prompt.
+const SYSTEM_PREFIX: u64 = u64::MAX;
+
+/// Step-cost memo bucket width (tokens): nearby contexts share one
+/// dispatch so the memo stays small and the tune cache is exercised.
+const CTX_BUCKET: u32 = 256;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub arch: ArchId,
+    /// Paged-KV block size (tokens).
+    pub block_size: u32,
+    /// Physical blocks in the KV pool.
+    pub num_blocks: u32,
+    /// Max sequences decoded per step (the continuous batch width).
+    pub max_batch: usize,
+    pub heads_q: u32,
+    pub heads_kv: u32,
+    pub d_head: u32,
+    /// Shared system-prompt tokens prepended to every request (0 =
+    /// disabled). Served from one ref-counted prefix, not re-allocated.
+    pub shared_prefix_tokens: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            arch: ArchId::Mi355x,
+            block_size: 16,
+            num_blocks: 4096,
+            max_batch: 32,
+            heads_q: 64,
+            heads_kv: 8,
+            d_head: 128,
+            shared_prefix_tokens: 128,
+        }
+    }
+}
+
+/// One serving request on the trace clock.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub prompt_tokens: u32,
+    pub output_tokens: u32,
+}
+
+/// Poisson arrivals with uniformly mixed prompt/output lengths
+/// (prompts 64..=512, outputs 16..=128 tokens).
+pub fn serve_trace(n: u64, rate: f64, seed: u64) -> Vec<ServeRequest> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|id| {
+            t += rng.exp(rate);
+            ServeRequest {
+                id,
+                arrival_s: t,
+                prompt_tokens: 64 + rng.below(449) as u32,
+                output_tokens: 16 + rng.below(113) as u32,
+            }
+        })
+        .collect()
+}
+
+/// Outcome of serving a trace.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub served: u64,
+    pub preemptions: u64,
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    pub makespan_s: f64,
+    /// Delivered output tokens per second of trace time (recomputed
+    /// work from preemptions is excluded).
+    pub throughput_tok_s: f64,
+    /// Time-to-first-token per request.
+    pub ttft: LatencyStats,
+    /// Inter-token latency per generated token.
+    pub itl: LatencyStats,
+    /// End-to-end latency per request.
+    pub e2e: LatencyStats,
+    /// Peak KV-pool occupancy over the run, 0..=1.
+    pub peak_occupancy: f64,
+    pub kv: KvCacheStats,
+}
+
+impl ServeReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "served={} preempt={} steps[prefill={} decode={}] makespan={:.3}s \
+             {:.0} tok/s ttft[p50={:.0}us p99={:.0}us] itl[p50={:.0}us p99={:.0}us] \
+             kv[peak={:.0}% cow={} evicted={} shared_saved={}]",
+            self.served,
+            self.preemptions,
+            self.prefill_steps,
+            self.decode_steps,
+            self.makespan_s,
+            self.throughput_tok_s,
+            self.ttft.p50_us(),
+            self.ttft.p99_us(),
+            self.itl.p50_us(),
+            self.itl.p99_us(),
+            self.peak_occupancy * 100.0,
+            self.kv.cow_copies,
+            self.kv.evicted_blocks,
+            self.kv.shared_blocks_saved,
+        )
+    }
+
+    /// The `BENCH_serve.json` payload. Keys are BTreeMap-ordered and
+    /// every number is a deterministic cost-model product, so the dump
+    /// is byte-stable across runs.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("served", Json::Num(self.served as f64)),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+            ("prefill_steps", Json::Num(self.prefill_steps as f64)),
+            ("decode_steps", Json::Num(self.decode_steps as f64)),
+            ("makespan_s", Json::Num(self.makespan_s)),
+            ("throughput_tok_s", Json::Num(self.throughput_tok_s)),
+            ("ttft_p50_us", Json::Num(self.ttft.p50_us())),
+            ("ttft_p99_us", Json::Num(self.ttft.p99_us())),
+            ("itl_p50_us", Json::Num(self.itl.p50_us())),
+            ("itl_p99_us", Json::Num(self.itl.p99_us())),
+            ("e2e_p50_us", Json::Num(self.e2e.p50_us())),
+            ("e2e_p99_us", Json::Num(self.e2e.p99_us())),
+            ("peak_occupancy", Json::Num(self.peak_occupancy)),
+            ("kv_allocated", Json::Num(self.kv.allocated_blocks as f64)),
+            ("kv_freed", Json::Num(self.kv.freed_blocks as f64)),
+            ("kv_cow_copies", Json::Num(self.kv.cow_copies as f64)),
+            (
+                "kv_shared_saved",
+                Json::Num(self.kv.shared_blocks_saved as f64),
+            ),
+            ("kv_evicted", Json::Num(self.kv.evicted_blocks as f64)),
+        ])
+    }
+}
+
+struct Running {
+    idx: usize,
+    decoded: u32,
+}
+
+/// The continuous-batching engine.
+pub struct ServeEngine {
+    cfg: ServeConfig,
+    kv: KvCacheManager,
+    cache: TuneCache,
+    prefill_memo: HashMap<(u32, u32), f64>,
+    decode_memo: HashMap<(u32, u32), f64>,
+}
+
+impl ServeEngine {
+    pub fn new(cfg: ServeConfig) -> Result<Self> {
+        if cfg.block_size == 0 || cfg.num_blocks == 0 || cfg.max_batch == 0 {
+            bail!("serve config needs nonzero block_size/num_blocks/max_batch");
+        }
+        let kv = KvCacheManager::new(KvCacheConfig {
+            num_blocks: cfg.num_blocks,
+            block_size: cfg.block_size,
+        });
+        Ok(ServeEngine {
+            cfg,
+            kv,
+            cache: TuneCache::new(),
+            prefill_memo: HashMap::new(),
+            decode_memo: HashMap::new(),
+        })
+    }
+
+    pub fn kv(&self) -> &KvCacheManager {
+        &self.kv
+    }
+
+    fn bucket(n: u32) -> u32 {
+        n.div_ceil(CTX_BUCKET).max(1) * CTX_BUCKET
+    }
+
+    /// Simulated wall time of one prefill step (batch x longest prompt).
+    fn prefill_step_s(&mut self, batch: u32, seq: u32) -> f64 {
+        let key = (batch, Self::bucket(seq));
+        if let Some(&t) = self.prefill_memo.get(&key) {
+            return t;
+        }
+        let q = Query::attn(
+            self.cfg.arch,
+            batch,
+            self.cfg.heads_q,
+            self.cfg.heads_kv,
+            key.1,
+            self.cfg.d_head,
+            true,
+        );
+        let t = q.dispatch_with(&mut self.cache).simulate().time_s;
+        self.prefill_memo.insert(key, t);
+        t
+    }
+
+    /// Simulated wall time of one decode step (batch x longest context).
+    fn decode_step_s(&mut self, batch: u32, context: u32) -> f64 {
+        let key = (batch, Self::bucket(context));
+        if let Some(&t) = self.decode_memo.get(&key) {
+            return t;
+        }
+        let q = Query::attn_decode(
+            self.cfg.arch,
+            batch,
+            self.cfg.heads_q,
+            self.cfg.heads_kv,
+            key.1,
+            self.cfg.d_head,
+            self.cfg.block_size,
+        );
+        let t = q.dispatch_with(&mut self.cache).simulate().time_s;
+        self.decode_memo.insert(key, t);
+        t
+    }
+
+    /// KV context a request occupies once prefilled + `decoded` tokens.
+    fn context_of(&self, req: &ServeRequest, decoded: u32) -> u32 {
+        self.cfg.shared_prefix_tokens + req.prompt_tokens + decoded
+    }
+
+    /// Serve a trace to completion on the trace clock.
+    pub fn run_trace(&mut self, trace: &[ServeRequest]) -> Result<ServeReport> {
+        if trace.is_empty() {
+            bail!("empty trace");
+        }
+        for w in trace.windows(2) {
+            if w[1].arrival_s < w[0].arrival_s {
+                bail!("trace arrivals must be sorted");
+            }
+        }
+        let prefix = self.cfg.shared_prefix_tokens;
+        if prefix > 0 && !self.kv.has_prefix(SYSTEM_PREFIX) {
+            self.kv.cache_prefix(SYSTEM_PREFIX, prefix)?;
+        }
+        // per-trace KV accounting: the manager (and its counters)
+        // outlive run_trace, so the report holds deltas from here
+        let kv_base = self.kv.stats();
+
+        let mut waiting: VecDeque<usize> = VecDeque::new();
+        let mut running: Vec<Running> = Vec::new();
+        // highest token index each request has *delivered*; recomputed
+        // tokens after a preemption must not re-enter the latency stats
+        let mut reached: Vec<u32> = vec![0; trace.len()];
+        // trace time of each request's latest delivered token — ITL for
+        // the next one spans prefills and preemption stalls in between
+        let mut last_emit: Vec<f64> = vec![0.0; trace.len()];
+        let mut next = 0usize;
+        let mut now = 0.0f64;
+        let mut finished = 0usize;
+        let mut ttft = LatencyStats::default();
+        let mut itl = LatencyStats::default();
+        let mut e2e = LatencyStats::default();
+        let mut prefill_steps = 0u64;
+        let mut decode_steps = 0u64;
+        let mut preemptions = 0u64;
+        let mut peak_occ = 0.0f64;
+        // tokens of *finished* requests only: preempted-and-recomputed
+        // work must not inflate delivered throughput
+        let mut delivered_tokens = 0u64;
+
+        while finished < trace.len() {
+            // fold in everything that has arrived by `now`
+            while next < trace.len() && trace[next].arrival_s <= now {
+                waiting.push_back(next);
+                next += 1;
+            }
+            if waiting.is_empty() && running.is_empty() {
+                if next < trace.len() {
+                    now = trace[next].arrival_s;
+                    continue;
+                }
+                bail!("serving stalled with requests unfinished");
+            }
+
+            // admission: FIFO, capacity- and batch-gated
+            let mut newly: Vec<usize> = Vec::new();
+            while running.len() + newly.len() < self.cfg.max_batch {
+                let Some(&idx) = waiting.front() else {
+                    break;
+                };
+                let req = &trace[idx];
+                if req.prompt_tokens == 0 {
+                    bail!("request {} has an empty prompt", req.id);
+                }
+                // reject requests that can never fit even alone —
+                // admitting one would preempt/re-prefill forever
+                let total = self.context_of(req, req.output_tokens.max(1));
+                if self.kv.blocks_for(total) + 1 > self.cfg.num_blocks {
+                    bail!(
+                        "request {} needs {} KV blocks (+1 CoW) but the \
+                         pool holds {}",
+                        req.id,
+                        self.kv.blocks_for(total),
+                        self.cfg.num_blocks,
+                    );
+                }
+                // headroom: prompt + one decode block + a CoW copy
+                let need = req.prompt_tokens + 2 * self.cfg.block_size;
+                if !self.kv.can_admit(need) {
+                    break;
+                }
+                if self.cfg.shared_prefix_tokens > 0 {
+                    // the shared prefix may have been evicted while no
+                    // live sequence held it; re-pin before forking — a
+                    // full pool defers admission, it doesn't abort
+                    if !self.kv.has_prefix(SYSTEM_PREFIX)
+                        && self
+                            .kv
+                            .cache_prefix(SYSTEM_PREFIX, prefix)
+                            .is_err()
+                    {
+                        break;
+                    }
+                    if self.kv.fork_from_prefix(SYSTEM_PREFIX, req.id).is_err() {
+                        break;
+                    }
+                    // extend the fork with the request's own prompt
+                    let mut ok = true;
+                    for _ in 0..req.prompt_tokens {
+                        if self.kv.append_token(req.id).is_err() {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if !ok {
+                        self.kv.free_seq(req.id)?;
+                        break;
+                    }
+                } else if self.kv.admit(req.id, req.prompt_tokens).is_err() {
+                    break;
+                }
+                waiting.pop_front();
+                newly.push(idx);
+            }
+            peak_occ = peak_occ.max(self.kv.occupancy());
+
+            if !newly.is_empty() {
+                // prefill the admitted batch; completion = first token
+                let batch = newly.len() as u32;
+                let seq = newly
+                    .iter()
+                    .map(|&i| self.context_of(&trace[i], 0))
+                    .max()
+                    .expect("non-empty batch");
+                let dt = self.prefill_step_s(batch, seq);
+                now += dt;
+                prefill_steps += 1;
+                for &idx in &newly {
+                    let req = &trace[idx];
+                    if reached[idx] == 0 {
+                        // first prefill; a re-prefill after preemption
+                        // recomputes an already-delivered token
+                        ttft.record_s(now - req.arrival_s);
+                        reached[idx] = 1;
+                        last_emit[idx] = now;
+                    }
+                    if req.output_tokens <= 1 {
+                        self.kv.free_seq(req.id)?;
+                        e2e.record_s(now - req.arrival_s);
+                        delivered_tokens += u64::from(req.output_tokens.max(1));
+                        finished += 1;
+                    } else {
+                        running.push(Running { idx, decoded: 1 });
+                    }
+                }
+                continue;
+            }
+
+            if running.is_empty() {
+                // admission blocked with nothing running: the head
+                // request can never fit
+                let idx = *waiting.front().expect("non-empty waiting");
+                bail!(
+                    "request {} needs more KV than the pool holds \
+                     ({} blocks of {} tokens)",
+                    trace[idx].id,
+                    self.cfg.num_blocks,
+                    self.cfg.block_size,
+                );
+            }
+
+            // one decode step over the running batch
+            let batch = running.len() as u32;
+            let ctx = running
+                .iter()
+                .map(|r| self.context_of(&trace[r.idx], r.decoded))
+                .max()
+                .expect("non-empty running set");
+            let dt = self.decode_step_s(batch, ctx);
+            now += dt;
+            decode_steps += 1;
+
+            let mut still = Vec::with_capacity(running.len());
+            for mut r in running.drain(..) {
+                let req = &trace[r.idx];
+                r.decoded += 1;
+                if r.decoded > reached[r.idx] {
+                    // a newly delivered token: its inter-token gap
+                    // spans any prefill steps and preemption stalls
+                    // since the previous delivery, not just `dt`
+                    itl.record_s(now - last_emit[r.idx]);
+                    reached[r.idx] = r.decoded;
+                    last_emit[r.idx] = now;
+                }
+                if r.decoded >= req.output_tokens.max(1) {
+                    self.kv.free_seq(req.id)?;
+                    e2e.record_s(now - req.arrival_s);
+                    delivered_tokens += u64::from(req.output_tokens.max(1));
+                    finished += 1;
+                    continue;
+                }
+                match self.kv.append_token(req.id) {
+                    Ok(()) => still.push(r),
+                    Err(_) => {
+                        // pool exhausted: preempt and recompute later
+                        self.kv.free_seq(req.id)?;
+                        preemptions += 1;
+                        waiting.push_front(r.idx);
+                    }
+                }
+            }
+            running = still;
+            peak_occ = peak_occ.max(self.kv.occupancy());
+        }
+
+        let makespan = now - trace[0].arrival_s;
+        Ok(ServeReport {
+            served: trace.len() as u64,
+            preemptions,
+            prefill_steps,
+            decode_steps,
+            makespan_s: makespan,
+            throughput_tok_s: delivered_tokens as f64 / makespan.max(1e-9),
+            ttft,
+            itl,
+            e2e,
+            peak_occupancy: peak_occ,
+            kv: self.kv.stats().since(&kv_base),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_trace_is_sorted_and_bounded() {
+        let tr = serve_trace(64, 100.0, 3);
+        assert_eq!(tr.len(), 64);
+        for w in tr.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        for r in &tr {
+            assert!((64..=512).contains(&r.prompt_tokens), "{}", r.prompt_tokens);
+            assert!((16..=128).contains(&r.output_tokens), "{}", r.output_tokens);
+        }
+    }
+
+    #[test]
+    fn small_trace_completes() {
+        let mut eng = ServeEngine::new(ServeConfig::default()).unwrap();
+        let trace = serve_trace(16, 100.0, 5);
+        let rep = eng.run_trace(&trace).unwrap();
+        assert_eq!(rep.served, 16);
+        assert_eq!(rep.ttft.count(), 16);
+        assert_eq!(rep.e2e.count(), 16);
+        assert!(rep.decode_steps > 0 && rep.prefill_steps > 0);
+        assert!(rep.makespan_s > 0.0);
+        assert!(rep.peak_occupancy > 0.0 && rep.peak_occupancy <= 1.0);
+        // all KV returned once the trace drains (the pinned system
+        // prefix is the only resident allocation)
+        let prefix_blocks =
+            eng.kv().blocks_for(ServeConfig::default().shared_prefix_tokens);
+        assert_eq!(eng.kv().used_blocks(), prefix_blocks as usize);
+        eng.kv().validate().unwrap();
+    }
+
+    #[test]
+    fn tiny_pool_preempts_but_finishes() {
+        let cfg = ServeConfig {
+            num_blocks: 96,
+            max_batch: 8,
+            shared_prefix_tokens: 32,
+            ..ServeConfig::default()
+        };
+        let mut eng = ServeEngine::new(cfg).unwrap();
+        let trace = serve_trace(24, 500.0, 9);
+        let rep = eng.run_trace(&trace).unwrap();
+        assert_eq!(rep.served, 24);
+        eng.kv().validate().unwrap();
+    }
+
+    #[test]
+    fn impossible_request_errors_out() {
+        let cfg = ServeConfig {
+            num_blocks: 4,
+            shared_prefix_tokens: 0,
+            ..ServeConfig::default()
+        };
+        let mut eng = ServeEngine::new(cfg.clone()).unwrap();
+        let trace = vec![ServeRequest {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_tokens: 4096,
+            output_tokens: 8,
+        }];
+        assert!(eng.run_trace(&trace).is_err());
+
+        // the prompt fits but prompt+output can never fit: must be a
+        // clean error, not an endless preempt/re-prefill livelock
+        let mut eng = ServeEngine::new(ServeConfig {
+            num_blocks: 8, // 128 tokens
+            ..cfg
+        })
+        .unwrap();
+        let trace = vec![ServeRequest {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_tokens: 64,
+            output_tokens: 128,
+        }];
+        assert!(eng.run_trace(&trace).is_err());
+    }
+}

@@ -1,0 +1,494 @@
+//! Paged KV-cache manager: fixed-size blocks, per-sequence block
+//! tables, ref-counted sharing with copy-on-write, and an LRU
+//! eviction/admission policy over cached prefixes.
+//!
+//! The design is the vLLM paged-attention memory plane scaled to the
+//! simulated substrate: the cache owns `num_blocks` physical blocks of
+//! `block_size` tokens each; a sequence is a block table (a vector of
+//! physical block ids) plus a token length. Blocks are ref-counted so
+//! prefixes can be shared:
+//!
+//! - [`KvCacheManager::cache_prefix`] pins a prefix (e.g. a system
+//!   prompt) in the cache under its own reference.
+//! - [`KvCacheManager::fork_from_prefix`] gives a new sequence the
+//!   prefix's blocks for free (refcount bump, no copy).
+//! - [`KvCacheManager::append_token`] grows a sequence one token at a
+//!   time; appending into a *shared* partial block triggers
+//!   copy-on-write so the prefix is never corrupted.
+//! - When the free list runs dry, the allocator evicts the
+//!   least-recently-used cached prefix whose blocks are referenced by
+//!   nobody else — a block referenced by any live sequence is never
+//!   freed (the refcount guard; see `tests/serve_engine.rs`).
+//!
+//! Occupancy and traffic counters ([`KvCacheStats`]) feed the serving
+//! report ([`crate::serve::engine`]).
+
+use crate::err;
+use crate::error::Result;
+use std::collections::HashMap;
+
+/// Cache geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct KvCacheConfig {
+    /// Physical blocks in the pool.
+    pub num_blocks: u32,
+    /// Tokens per block.
+    pub block_size: u32,
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig { num_blocks: 4096, block_size: 16 }
+    }
+}
+
+/// Allocation/sharing traffic counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KvCacheStats {
+    /// Physical blocks granted (fresh allocations, including CoW copies).
+    pub allocated_blocks: u64,
+    /// Blocks returned to the free list by sequence frees.
+    pub freed_blocks: u64,
+    /// Copy-on-write block copies (append into a shared partial block).
+    pub cow_copies: u64,
+    /// Block allocations avoided by prefix sharing.
+    pub shared_blocks_saved: u64,
+    /// Blocks reclaimed by evicting cached prefixes.
+    pub evicted_blocks: u64,
+    /// Admissions rejected for lack of blocks.
+    pub failed_admissions: u64,
+}
+
+impl KvCacheStats {
+    /// Counter deltas since `base` — per-trace accounting on a
+    /// long-lived manager whose counters only ever grow.
+    pub fn since(&self, base: &KvCacheStats) -> KvCacheStats {
+        KvCacheStats {
+            allocated_blocks: self.allocated_blocks - base.allocated_blocks,
+            freed_blocks: self.freed_blocks - base.freed_blocks,
+            cow_copies: self.cow_copies - base.cow_copies,
+            shared_blocks_saved: self.shared_blocks_saved
+                - base.shared_blocks_saved,
+            evicted_blocks: self.evicted_blocks - base.evicted_blocks,
+            failed_admissions: self.failed_admissions - base.failed_admissions,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct SeqState {
+    table: Vec<u32>,
+    len: u32,
+}
+
+#[derive(Debug, Clone)]
+struct PrefixState {
+    table: Vec<u32>,
+    len: u32,
+    last_use: u64,
+}
+
+/// The paged block pool + sequence/prefix tables.
+#[derive(Debug)]
+pub struct KvCacheManager {
+    cfg: KvCacheConfig,
+    /// Per-block reference count (0 = on the free list).
+    refcount: Vec<u32>,
+    /// Free list (LIFO; deterministic).
+    free: Vec<u32>,
+    seqs: HashMap<u64, SeqState>,
+    prefixes: HashMap<u64, PrefixState>,
+    clock: u64,
+    stats: KvCacheStats,
+}
+
+impl KvCacheManager {
+    pub fn new(cfg: KvCacheConfig) -> Self {
+        let n = cfg.num_blocks.max(1);
+        // reversed so pops hand out ascending block ids
+        let free: Vec<u32> = (0..n).rev().collect();
+        KvCacheManager {
+            cfg: KvCacheConfig { num_blocks: n, block_size: cfg.block_size.max(1) },
+            refcount: vec![0; n as usize],
+            free,
+            seqs: HashMap::new(),
+            prefixes: HashMap::new(),
+            clock: 0,
+            stats: KvCacheStats::default(),
+        }
+    }
+
+    pub fn block_size(&self) -> u32 {
+        self.cfg.block_size
+    }
+
+    pub fn num_blocks(&self) -> u32 {
+        self.cfg.num_blocks
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.cfg.block_size)
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.cfg.num_blocks as usize - self.free.len()
+    }
+
+    /// Used fraction of the pool, 0..=1.
+    pub fn occupancy(&self) -> f64 {
+        self.used_blocks() as f64 / self.cfg.num_blocks as f64
+    }
+
+    pub fn stats(&self) -> KvCacheStats {
+        self.stats
+    }
+
+    pub fn seq_len(&self, id: u64) -> Option<u32> {
+        self.seqs.get(&id).map(|s| s.len)
+    }
+
+    pub fn seq_table(&self, id: u64) -> Option<&[u32]> {
+        self.seqs.get(&id).map(|s| s.table.as_slice())
+    }
+
+    pub fn has_prefix(&self, prefix_id: u64) -> bool {
+        self.prefixes.contains_key(&prefix_id)
+    }
+
+    /// Blocks reclaimable by evicting unshared cached prefixes.
+    fn evictable_blocks(&self) -> usize {
+        self.prefixes
+            .values()
+            .filter(|p| p.table.iter().all(|&b| self.refcount[b as usize] == 1))
+            .map(|p| p.table.len())
+            .sum()
+    }
+
+    /// Admission check: can `tokens` more tokens be allocated, counting
+    /// blocks that eviction could reclaim?
+    pub fn can_admit(&self, tokens: u32) -> bool {
+        self.blocks_for(tokens) as usize
+            <= self.free.len() + self.evictable_blocks()
+    }
+
+    /// Evict the least-recently-used cached prefix whose blocks nobody
+    /// else references. Returns false when no prefix is evictable —
+    /// shared blocks are *never* reclaimed from under a live sequence.
+    fn evict_lru_prefix(&mut self) -> bool {
+        let victim = self
+            .prefixes
+            .iter()
+            .filter(|(_, p)| {
+                p.table.iter().all(|&b| self.refcount[b as usize] == 1)
+            })
+            .min_by_key(|(id, p)| (p.last_use, **id))
+            .map(|(id, _)| *id);
+        let Some(id) = victim else {
+            return false;
+        };
+        let p = self.prefixes.remove(&id).expect("victim exists");
+        let n = p.table.len() as u64;
+        for b in p.table {
+            debug_assert_eq!(self.refcount[b as usize], 1);
+            self.refcount[b as usize] = 0;
+            self.free.push(b);
+        }
+        self.stats.evicted_blocks += n;
+        n > 0
+    }
+
+    /// Pop a free block, evicting cached prefixes as needed.
+    fn grab_block(&mut self) -> Option<u32> {
+        loop {
+            if let Some(b) = self.free.pop() {
+                debug_assert_eq!(self.refcount[b as usize], 0);
+                return Some(b);
+            }
+            if !self.evict_lru_prefix() {
+                return None;
+            }
+        }
+    }
+
+    /// Allocate a fresh table of `n` blocks (rolled back on shortfall).
+    fn alloc_table(&mut self, n: u32) -> Option<Vec<u32>> {
+        let mut table = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            match self.grab_block() {
+                Some(b) => {
+                    self.refcount[b as usize] = 1;
+                    table.push(b);
+                }
+                None => {
+                    for b in table {
+                        self.refcount[b as usize] = 0;
+                        self.free.push(b);
+                    }
+                    return None;
+                }
+            }
+        }
+        self.stats.allocated_blocks += n as u64;
+        Some(table)
+    }
+
+    /// Create a sequence holding `tokens` tokens (a prompt admission).
+    pub fn admit(&mut self, id: u64, tokens: u32) -> Result<()> {
+        if self.seqs.contains_key(&id) {
+            return Err(err!("sequence {id} already admitted"));
+        }
+        if tokens == 0 {
+            return Err(err!("sequence {id} admitted with zero tokens"));
+        }
+        let Some(table) = self.alloc_table(self.blocks_for(tokens)) else {
+            self.stats.failed_admissions += 1;
+            return Err(err!(
+                "kv cache exhausted admitting sequence {id} ({tokens} tokens)"
+            ));
+        };
+        self.seqs.insert(id, SeqState { table, len: tokens });
+        Ok(())
+    }
+
+    /// Pin a shareable prefix (e.g. a system prompt) in the cache. The
+    /// cache itself holds one reference; forks add theirs on top.
+    pub fn cache_prefix(&mut self, prefix_id: u64, tokens: u32) -> Result<()> {
+        if self.prefixes.contains_key(&prefix_id) {
+            return Err(err!("prefix {prefix_id} already cached"));
+        }
+        if tokens == 0 {
+            return Err(err!("prefix {prefix_id} cached with zero tokens"));
+        }
+        let Some(table) = self.alloc_table(self.blocks_for(tokens)) else {
+            self.stats.failed_admissions += 1;
+            return Err(err!("kv cache exhausted caching prefix {prefix_id}"));
+        };
+        self.clock += 1;
+        self.prefixes.insert(
+            prefix_id,
+            PrefixState { table, len: tokens, last_use: self.clock },
+        );
+        Ok(())
+    }
+
+    /// Create a sequence sharing a cached prefix's blocks (no copies;
+    /// refcount bump only). Returns the shared token count.
+    pub fn fork_from_prefix(&mut self, prefix_id: u64, id: u64) -> Result<u32> {
+        if self.seqs.contains_key(&id) {
+            return Err(err!("sequence {id} already admitted"));
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let Some(p) = self.prefixes.get_mut(&prefix_id) else {
+            return Err(err!("unknown prefix {prefix_id}"));
+        };
+        p.last_use = clock;
+        let (table, len) = (p.table.clone(), p.len);
+        for &b in &table {
+            self.refcount[b as usize] += 1;
+        }
+        self.stats.shared_blocks_saved += table.len() as u64;
+        self.seqs.insert(id, SeqState { table, len });
+        Ok(len)
+    }
+
+    /// Grow a sequence by one token, allocating a new block at block
+    /// boundaries and copy-on-writing a shared partial tail block.
+    pub fn append_token(&mut self, id: u64) -> Result<()> {
+        let (len, last) = {
+            let st = self
+                .seqs
+                .get(&id)
+                .ok_or_else(|| err!("unknown sequence {id}"))?;
+            (st.len, st.table.last().copied())
+        };
+        if len % self.cfg.block_size == 0 {
+            // first token of a fresh block
+            let Some(b) = self.grab_block() else {
+                return Err(err!("kv cache exhausted appending to sequence {id}"));
+            };
+            self.refcount[b as usize] = 1;
+            self.stats.allocated_blocks += 1;
+            let st = self.seqs.get_mut(&id).expect("checked above");
+            st.table.push(b);
+            st.len += 1;
+            return Ok(());
+        }
+        let last = last.ok_or_else(|| err!("sequence {id} has no blocks"))?;
+        if self.refcount[last as usize] > 1 {
+            // shared partial tail: copy-on-write before appending
+            let Some(b) = self.grab_block() else {
+                return Err(err!("kv cache exhausted appending to sequence {id}"));
+            };
+            self.refcount[b as usize] = 1;
+            self.refcount[last as usize] -= 1;
+            self.stats.allocated_blocks += 1;
+            self.stats.cow_copies += 1;
+            let st = self.seqs.get_mut(&id).expect("checked above");
+            *st.table.last_mut().expect("non-empty table") = b;
+            st.len += 1;
+        } else {
+            let st = self.seqs.get_mut(&id).expect("checked above");
+            st.len += 1;
+        }
+        Ok(())
+    }
+
+    /// Release a sequence: blocks return to the free list only when the
+    /// last reference drops (shared prefix blocks stay resident).
+    pub fn free_seq(&mut self, id: u64) -> Result<()> {
+        let st = self
+            .seqs
+            .remove(&id)
+            .ok_or_else(|| err!("unknown sequence {id}"))?;
+        for b in st.table {
+            let rc = &mut self.refcount[b as usize];
+            debug_assert!(*rc > 0, "double free of block {b}");
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(b);
+                self.stats.freed_blocks += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Bookkeeping invariant: every block's refcount equals the number
+    /// of tables (sequences + cached prefixes) referencing it, and the
+    /// free list is exactly the refcount-0 blocks, no duplicates.
+    pub fn validate(&self) -> Result<()> {
+        let mut counts = vec![0u32; self.cfg.num_blocks as usize];
+        for st in self.seqs.values() {
+            for &b in &st.table {
+                counts[b as usize] += 1;
+            }
+        }
+        for p in self.prefixes.values() {
+            for &b in &p.table {
+                counts[b as usize] += 1;
+            }
+        }
+        for (b, (&have, &want)) in
+            self.refcount.iter().zip(counts.iter()).enumerate()
+        {
+            if have != want {
+                return Err(err!(
+                    "block {b}: refcount {have} but {want} table references"
+                ));
+            }
+        }
+        let mut on_free = vec![false; self.cfg.num_blocks as usize];
+        for &b in &self.free {
+            if on_free[b as usize] {
+                return Err(err!("block {b} on the free list twice"));
+            }
+            on_free[b as usize] = true;
+            if self.refcount[b as usize] != 0 {
+                return Err(err!("block {b} free but refcount nonzero"));
+            }
+        }
+        let zero = self.refcount.iter().filter(|&&r| r == 0).count();
+        if zero != self.free.len() {
+            return Err(err!(
+                "{zero} refcount-0 blocks but {} on the free list",
+                self.free.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(blocks: u32, bs: u32) -> KvCacheManager {
+        KvCacheManager::new(KvCacheConfig { num_blocks: blocks, block_size: bs })
+    }
+
+    #[test]
+    fn admit_and_free_round_trip() {
+        let mut m = mgr(8, 16);
+        m.admit(1, 33).unwrap(); // 3 blocks
+        assert_eq!(m.used_blocks(), 3);
+        assert_eq!(m.seq_len(1), Some(33));
+        m.validate().unwrap();
+        m.free_seq(1).unwrap();
+        assert_eq!(m.used_blocks(), 0);
+        assert_eq!(m.stats().freed_blocks, 3);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn append_allocates_at_block_boundaries() {
+        let mut m = mgr(8, 4);
+        m.admit(1, 4).unwrap(); // exactly one full block
+        assert_eq!(m.used_blocks(), 1);
+        m.append_token(1).unwrap(); // token 5 -> new block
+        assert_eq!(m.used_blocks(), 2);
+        for _ in 0..3 {
+            m.append_token(1).unwrap(); // fills block 2
+        }
+        assert_eq!(m.used_blocks(), 2);
+        m.append_token(1).unwrap(); // token 9 -> third block
+        assert_eq!(m.used_blocks(), 3);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn fork_shares_and_cow_splits() {
+        let mut m = mgr(16, 4);
+        m.cache_prefix(7, 6).unwrap(); // 2 blocks, second partial
+        let shared = m.fork_from_prefix(7, 1).unwrap();
+        assert_eq!(shared, 6);
+        assert_eq!(m.used_blocks(), 2); // no copies yet
+        m.append_token(1).unwrap(); // partial shared tail -> CoW
+        assert_eq!(m.stats().cow_copies, 1);
+        assert_eq!(m.used_blocks(), 3);
+        // prefix untouched
+        assert!(m.has_prefix(7));
+        m.validate().unwrap();
+        // freeing the fork keeps the prefix resident
+        m.free_seq(1).unwrap();
+        assert_eq!(m.used_blocks(), 2);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_fails_cleanly_and_rolls_back() {
+        let mut m = mgr(4, 16);
+        m.admit(1, 32).unwrap(); // 2 of 4 blocks
+        assert!(m.admit(2, 64).is_err()); // needs 4
+        assert_eq!(m.stats().failed_admissions, 1);
+        // the partial allocation was rolled back
+        assert_eq!(m.used_blocks(), 2);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn eviction_reclaims_only_unshared_prefixes() {
+        let mut m = mgr(8, 16);
+        m.cache_prefix(1, 32).unwrap(); // 2 blocks
+        m.cache_prefix(2, 32).unwrap(); // 2 blocks
+        m.fork_from_prefix(1, 10).unwrap(); // prefix 1 now shared
+        // needs 4 blocks; free = 4, so no eviction required
+        m.admit(11, 64).unwrap();
+        assert_eq!(m.free_blocks(), 0);
+        // needs 2 more: prefix 2 (unshared) is evicted, prefix 1 is not
+        m.admit(12, 32).unwrap();
+        assert!(m.has_prefix(1));
+        assert!(!m.has_prefix(2));
+        assert_eq!(m.stats().evicted_blocks, 2);
+        m.validate().unwrap();
+        // nothing evictable left: prefix 1 is shared by live sequence 10
+        assert!(m.admit(13, 32).is_err());
+        assert!(m.has_prefix(1));
+        assert_eq!(m.seq_table(10).unwrap().len(), 2);
+        m.validate().unwrap();
+    }
+}

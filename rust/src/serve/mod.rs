@@ -1,0 +1,20 @@
+//! `serve` — the LLM decode-serving subsystem: a paged KV-cache manager
+//! ([`kvcache`]) and a continuous-batching engine ([`engine`]) that
+//! interleaves prefill and paged-decode steps through the kernel
+//! registry's `Op::AttnFwd` / `Op::AttnDecode` dispatch.
+//!
+//! This is the layer the ROADMAP's "heavy traffic" north star needs and
+//! the prefill-shaped services in [`crate::coordinator`] cannot provide:
+//! decode serving is dominated by memory-bound GQA attention over a
+//! growing KV cache — exactly the regime where the paper's kernels win
+//! 1.2–2.4× — and its memory plane (block tables, ref-counted prefix
+//! sharing, copy-on-write, eviction) is a first-class subsystem, not a
+//! kernel detail.
+
+pub mod engine;
+pub mod kvcache;
+
+pub use engine::{
+    serve_trace, ServeConfig, ServeEngine, ServeReport, ServeRequest,
+};
+pub use kvcache::{KvCacheConfig, KvCacheManager, KvCacheStats};

@@ -39,6 +39,7 @@ fn dispatch_produces_runnable_configs_for_all_ops() {
         Query::gemm(arch, Dtype::Bf16, 2048, 2048, 2048),
         Query::attn_gqa(arch, 2048, 128, false),
         Query::attn_gqa(arch, 2048, 128, false).bwd(),
+        Query::decode_gqa(arch, 16, 8192, 16),
         Query::fused_ln_paper(arch, 2048),
         Query::rope_paper(arch, 2048),
     ];
@@ -50,6 +51,36 @@ fn dispatch_produces_runnable_configs_for_all_ops() {
     }
     // every tunable op left a cache record behind
     assert!(cache.len() >= 3, "only {} cache entries", cache.len());
+}
+
+#[test]
+fn enum_tags_round_trip_exhaustively() {
+    // property: from_tag(tag(x)) == x for every variant of every tagged
+    // enum the tune-cache key is built from — including `AttnDecode`
+    for op in Op::ALL {
+        assert_eq!(Op::from_tag(op.tag()), Some(op), "{}", op.tag());
+    }
+    for shape in ShapeClass::ALL {
+        assert_eq!(
+            ShapeClass::from_tag(shape.tag()),
+            Some(shape),
+            "{}",
+            shape.tag()
+        );
+    }
+    for arch in ArchId::ALL {
+        assert_eq!(ArchId::from_tag(arch.tag()), Some(arch), "{}", arch.tag());
+    }
+    // tags are pairwise distinct (round-tripping implies injectivity,
+    // but a direct check keeps the failure message useful)
+    let mut tags: Vec<&str> = Op::ALL.iter().map(|o| o.tag()).collect();
+    tags.sort_unstable();
+    tags.dedup();
+    assert_eq!(tags.len(), Op::ALL.len());
+    // and unknown tags are rejected, not defaulted
+    assert_eq!(Op::from_tag(""), None);
+    assert_eq!(Op::from_tag("gemm "), None);
+    assert_eq!(ShapeClass::from_tag("Huge"), None);
 }
 
 #[test]
