@@ -1,0 +1,101 @@
+//! MoE FFN walkthrough: router -> dispatch (alignment) -> grouped GEMM
+//! through the autotuned registry, end to end on the cost model.
+//!
+//! The three stages mirror the amd-kernels MoE suite: top-k gating with
+//! capacity/rerouting, the token permutation into expert-contiguous
+//! ragged segments, and the `Op::MoeGemm` grouped kernel whose cost is
+//! the max over chiplet-placed expert shards. A round-trip numerics
+//! check (permute -> identity "experts" -> unpermute == input) runs on
+//! real buffers, so the alignment path is exercised, not just printed.
+//!
+//! Run: `cargo run --release --example moe_ffn`
+
+use hipkittens::error::Result;
+use hipkittens::hk::tunecache::TuneCache;
+use hipkittens::kernels::moe::dense_ffn_baseline;
+use hipkittens::kernels::registry::{ArchId, Query};
+use hipkittens::moe::{route, MoeConfig, MoeDispatchPlan};
+use hipkittens::runtime::Rng;
+
+const TOKENS: u32 = 4096;
+const D: usize = 16; // round-trip check width (small on purpose)
+
+fn main() -> Result<()> {
+    let arch = ArchId::Mi355x;
+    let cfg = MoeConfig::new(8, 2).with_skew(0.3);
+    println!(
+        "== MoE FFN walkthrough ({} tokens, {} experts, top-{}, skew {:.0}%) ==",
+        TOKENS,
+        cfg.experts,
+        cfg.top_k,
+        cfg.skew * 100.0
+    );
+
+    // 1. route
+    let routing = route(&cfg, TOKENS);
+    let s = &routing.stats;
+    println!(
+        "router: {} assignments, rerouted {}, dropped {}, \
+         max/mean {:.2}, aux-imbalance {:.2}",
+        s.assignments, s.rerouted, s.dropped_slots, s.max_over_mean, s.aux_imbalance
+    );
+
+    // 2. align into expert-contiguous ragged segments
+    let plan = MoeDispatchPlan::new(&routing);
+    println!("dispatch: {} ragged segments:", plan.segments.len());
+    for seg in &plan.segments {
+        println!(
+            "  expert {:>2}: offset {:>5}, {:>5} tokens",
+            seg.expert, seg.offset, seg.len
+        );
+    }
+
+    // numerics round trip: identity experts must reconstruct the input
+    let x = Rng::new(3).normal_vec(TOKENS as usize * D);
+    let permuted = plan.permute(&routing, &x, D);
+    let back = plan.unpermute(&routing, &permuted, D);
+    let max_err = x
+        .iter()
+        .zip(&back)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("permute ∘ unpermute max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-4, "alignment round trip drifted: {max_err}");
+
+    // 3. grouped GEMM through the registry (autotuned variant choice)
+    let mut cache = TuneCache::new();
+    println!("\n== grouped GEMM dispatch (d_model {}, d_ff {}) ==", cfg.d_model, cfg.d_ff);
+    for (label, skew_pct) in [("balanced", 0u32), ("skew 40%", 40), ("skew 80%", 80)] {
+        let q = Query::moe_gemm(
+            arch,
+            TOKENS,
+            cfg.d_model,
+            cfg.d_ff,
+            cfg.experts,
+            cfg.top_k,
+            skew_pct,
+        );
+        let d = q.dispatch_with(&mut cache);
+        let p = d.simulate();
+        println!(
+            "{label:<10} -> {:<16} {:>8.1} us  {:>7.0} TFLOPS hw",
+            d.variant,
+            p.time_s * 1e6,
+            p.tflops
+        );
+    }
+
+    let dense = dense_ffn_baseline(
+        &arch.arch(),
+        TOKENS,
+        cfg.d_model,
+        cfg.experts * cfg.d_ff,
+    );
+    println!(
+        "dense iso-parameter baseline: {:>8.1} us  {:>7.0} TFLOPS",
+        dense.time_s * 1e6,
+        dense.tflops
+    );
+    println!("\n(run `hipkittens moe` for the full BENCH_moe.json sweep)");
+    Ok(())
+}

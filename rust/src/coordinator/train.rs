@@ -140,6 +140,8 @@ impl<'rt> Trainer<'rt> {
             d_model: 256,
             heads: 8,
             d_head: 32,
+            moe_experts: 0,
+            moe_top_k: 0,
         };
         kernel_plan(arch, &shape)
     }
@@ -153,24 +155,50 @@ pub struct TrainShape {
     pub d_model: u32,
     pub heads: u32,
     pub d_head: u32,
+    /// Experts of the MoE FFN; 0 = dense MLP.
+    pub moe_experts: u32,
+    /// Active experts per token (ignored when `moe_experts` is 0).
+    pub moe_top_k: u32,
 }
 
 impl Default for TrainShape {
     /// The artifact model (`compile/model.py`): batch 4, seq 128,
-    /// d_model 256.
+    /// d_model 256, dense MLP.
     fn default() -> Self {
-        TrainShape { batch: 4, seq: 128, d_model: 256, heads: 8, d_head: 32 }
+        TrainShape {
+            batch: 4,
+            seq: 128,
+            d_model: 256,
+            heads: 8,
+            d_head: 32,
+            moe_experts: 0,
+            moe_top_k: 0,
+        }
+    }
+}
+
+impl TrainShape {
+    /// Swap the dense MLP for an MoE FFN with `experts` experts, top-k
+    /// routing, and per-expert width `2 * d_model / top_k` — sized so
+    /// the grouped up+down projection pair prices exactly the FLOPs of
+    /// the single fused `mlp-gemm` entry it replaces, while the layer
+    /// holds `experts / top_k` times its parameters.
+    pub fn moe(mut self, experts: u32, top_k: u32) -> Self {
+        self.moe_experts = experts.max(1);
+        self.moe_top_k = top_k.clamp(1, experts.max(1));
+        self
     }
 }
 
 /// The per-step kernel plan of the training loop, resolved through
-/// `registry::dispatch`: attention forward + backward, the MLP/projection
-/// GEMMs, the fused layernorm and RoPE. Every entry is an autotuned
-/// dispatch — the trainer inherits new kernels/dtypes from the registry
-/// with no plumbing of its own.
+/// `registry::dispatch`: attention forward + backward, the FFN (a dense
+/// MLP GEMM, or the `Op::MoeGemm` grouped expert FFN when the shape
+/// carries experts), the projection GEMM, the fused layernorm and RoPE.
+/// Every entry is an autotuned dispatch — the trainer inherits new
+/// kernels/dtypes from the registry with no plumbing of its own.
 pub fn kernel_plan(arch: ArchId, s: &TrainShape) -> Vec<(String, KernelPerf)> {
     let tokens = s.batch * s.seq;
-    let queries = [
+    let mut queries: Vec<(&str, Query)> = vec![
         (
             "attn-fwd",
             Query::attn(arch, s.batch, s.heads, s.heads, s.seq, s.d_head, true),
@@ -180,17 +208,39 @@ pub fn kernel_plan(arch: ArchId, s: &TrainShape) -> Vec<(String, KernelPerf)> {
             Query::attn(arch, s.batch, s.heads, s.heads, s.seq, s.d_head, true)
                 .bwd(),
         ),
-        (
+    ];
+    if s.moe_experts > 0 {
+        let top_k = s.moe_top_k.max(1);
+        // FLOP-matched MoE FFN: the grouped kernel prices an up + down
+        // projection pair (4 * routed * d_model * d_ff), so experts of
+        // width 2*d_model/top_k reproduce the mlp-gemm entry's
+        // 8 * tokens * d_model^2 exactly
+        queries.push((
+            "moe-ffn",
+            Query::moe_gemm(
+                arch,
+                tokens,
+                s.d_model,
+                (2 * s.d_model / top_k).max(1),
+                s.moe_experts,
+                top_k,
+                0,
+            ),
+        ));
+    } else {
+        queries.push((
             "mlp-gemm",
             Query::gemm(arch, Dtype::Bf16, tokens, 4 * s.d_model, s.d_model),
-        ),
+        ));
+    }
+    queries.extend([
         (
             "proj-gemm",
             Query::gemm(arch, Dtype::Bf16, tokens, s.d_model, s.d_model),
         ),
         ("fused-ln", Query::fused_ln(arch, tokens, s.d_model)),
         ("rope", Query::rope(arch, s.batch, s.heads, s.seq, s.d_head)),
-    ];
+    ]);
     queries
         .into_iter()
         .map(|(name, q)| (name.to_string(), q.dispatch().simulate()))
@@ -210,5 +260,21 @@ mod tests {
     fn path_artifacts() {
         assert_eq!(Path::Kernels.artifact(), "train_step");
         assert_eq!(Path::Reference.artifact(), "train_step_ref");
+    }
+
+    #[test]
+    fn moe_shape_swaps_the_mlp_for_a_grouped_ffn() {
+        let dense = kernel_plan(ArchId::Mi355x, &TrainShape::default());
+        let moe =
+            kernel_plan(ArchId::Mi355x, &TrainShape::default().moe(8, 2));
+        assert_eq!(dense.len(), moe.len());
+        assert!(dense.iter().any(|(n, _)| n == "mlp-gemm"));
+        assert!(!dense.iter().any(|(n, _)| n == "moe-ffn"));
+        assert!(moe.iter().any(|(n, _)| n == "moe-ffn"));
+        assert!(!moe.iter().any(|(n, _)| n == "mlp-gemm"));
+        for (name, perf) in &moe {
+            assert!(perf.time_s > 0.0 && perf.time_s.is_finite(), "{name}");
+        }
+        assert!(predicted_step_s(&moe) > 0.0);
     }
 }

@@ -26,6 +26,30 @@ pub const WINDOWS: [u32; 5] = [2, 4, 5, 7, 8];
 /// Candidate chunks: one CU-round per XCD down to fine interleaving.
 pub const CHUNKS: [u32; 5] = [8, 25, 32, 64, 216];
 
+/// Rank sweep points best-first with a *total, deterministic* order:
+/// cost (TFLOPS, descending, `total_cmp` so NaN cannot panic the
+/// sweep), then the variant tag `(window, chunk, block_m, block_n)`
+/// ascending. Ties on predicted cost therefore always resolve the same
+/// way, which keeps the persisted `tunecache` JSON byte-identical
+/// across runs — the regression test below pins this down.
+pub fn rank(points: &mut [TunePoint]) {
+    // a NaN cost must never win a sweep: demote it below every real
+    // number before comparing
+    fn cost(p: &TunePoint) -> f64 {
+        if p.perf.tflops.is_nan() {
+            f64::NEG_INFINITY
+        } else {
+            p.perf.tflops
+        }
+    }
+    points.sort_by(|a, b| {
+        cost(b).total_cmp(&cost(a)).then_with(|| {
+            (a.window, a.chunk, a.block_m, a.block_n)
+                .cmp(&(b.window, b.chunk, b.block_m, b.block_n))
+        })
+    });
+}
+
 /// Sweep (W, C) for a fixed GEMM config; returns points sorted best-first.
 pub fn tune_grid(arch: &Arch, base: &GemmConfig) -> Vec<TunePoint> {
     let mut points = Vec::new();
@@ -45,7 +69,7 @@ pub fn tune_grid(arch: &Arch, base: &GemmConfig) -> Vec<TunePoint> {
             });
         }
     }
-    points.sort_by(|a, b| b.perf.tflops.partial_cmp(&a.perf.tflops).unwrap());
+    rank(&mut points);
     points
 }
 
@@ -61,7 +85,7 @@ pub fn tune_full(arch: &Arch, base: &GemmConfig) -> Vec<TunePoint> {
             points.push(TunePoint { block_m: bm, block_n: bn, ..p });
         }
     }
-    points.sort_by(|a, b| b.perf.tflops.partial_cmp(&a.perf.tflops).unwrap());
+    rank(&mut points);
     points
 }
 
@@ -108,6 +132,53 @@ mod tests {
         for w in pts.windows(2) {
             assert!(w[0].perf.tflops >= w[1].perf.tflops);
         }
+    }
+
+    #[test]
+    fn equal_cost_points_rank_by_variant_tag() {
+        // regression: the sweep order must be a *total* order — equal
+        // TFLOPS ties break on (window, chunk, block_m, block_n), so the
+        // persisted tune cache is byte-identical across runs
+        let perf_of = |tflops: f64| {
+            let arch = Arch::mi355x();
+            let mut p =
+                gemm::simulate(&arch, &GemmConfig::bf16(2048, 2048, 2048));
+            p.tflops = tflops;
+            p
+        };
+        let pt = |w, c, t| TunePoint {
+            window: w,
+            chunk: c,
+            block_m: 256,
+            block_n: 256,
+            perf: perf_of(t),
+        };
+        let mut pts = vec![
+            pt(8, 64, 1000.0),
+            pt(2, 8, 1000.0),
+            pt(5, 25, 1200.0),
+            pt(2, 216, 1000.0),
+            pt(7, 8, f64::NAN), // must sort deterministically, not panic
+        ];
+        rank(&mut pts);
+        assert_eq!((pts[0].window, pts[0].chunk), (5, 25));
+        // the 1000-TFLOPS tie resolves by ascending (window, chunk)
+        assert_eq!((pts[1].window, pts[1].chunk), (2, 8));
+        assert_eq!((pts[2].window, pts[2].chunk), (2, 216));
+        assert_eq!((pts[3].window, pts[3].chunk), (8, 64));
+        // NaN sorts to the end under total_cmp's descending order
+        assert!(pts[4].perf.tflops.is_nan());
+    }
+
+    #[test]
+    fn sweep_order_is_identical_across_runs() {
+        let arch = Arch::mi355x();
+        let base = GemmConfig::bf16(8192, 8192, 8192);
+        let key = |pts: &[TunePoint]| -> Vec<(u32, u32)> {
+            pts.iter().map(|p| (p.window, p.chunk)).collect()
+        };
+        assert_eq!(key(&tune_grid(&arch, &base)), key(&tune_grid(&arch, &base)));
+        assert_eq!(key(&tune_full(&arch, &base)), key(&tune_full(&arch, &base)));
     }
 
     #[test]

@@ -109,6 +109,37 @@ pub fn row_major_schedule(num_rows: u32, num_cols: u32) -> Vec<(u32, u32)> {
     crate::sim::cache::row_major_order(num_rows, num_cols)
 }
 
+/// Chiplet-aware expert placement for the grouped-GEMM cost model:
+/// assign each expert's workload to one XCD so the heaviest chiplet is
+/// as light as possible (greedy LPT — longest processing time first).
+///
+/// Returns `placement[expert] = xcd`. Deterministic: experts are
+/// considered in (load descending, index ascending) order and ties
+/// between equally-loaded XCDs resolve to the lowest id, so the grouped
+/// dispatch — and everything downstream, tune cache included — is
+/// byte-stable across runs. Zero-load experts still get a home (they
+/// cost nothing).
+pub fn place_experts(n_xcds: u32, loads: &[f64]) -> Vec<u32> {
+    let x = n_xcds.max(1) as usize;
+    let mut order: Vec<usize> = (0..loads.len()).collect();
+    order.sort_by(|&a, &b| {
+        loads[b].total_cmp(&loads[a]).then_with(|| a.cmp(&b))
+    });
+    let mut shard = vec![0.0f64; x];
+    let mut placement = vec![0u32; loads.len()];
+    for e in order {
+        let mut best = 0usize;
+        for (i, &s) in shard.iter().enumerate() {
+            if s < shard[best] {
+                best = i;
+            }
+        }
+        placement[e] = best as u32;
+        shard[best] += loads[e];
+    }
+    placement
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,6 +206,42 @@ mod tests {
         let sched = swz.schedule(10, 6);
         let seen: HashSet<(u32, u32)> = sched.into_iter().collect();
         assert_eq!(seen.len(), 60);
+    }
+
+    #[test]
+    fn lpt_balances_uniform_loads_exactly() {
+        let loads = vec![1.0; 16];
+        let p = place_experts(8, &loads);
+        let mut per = vec![0u32; 8];
+        for &x in &p {
+            per[x as usize] += 1;
+        }
+        assert!(per.iter().all(|&n| n == 2), "{per:?}");
+    }
+
+    #[test]
+    fn lpt_isolates_the_heavy_expert() {
+        // one hot expert + seven light ones on 8 XCDs: the hot one must
+        // get an XCD to itself (LPT optimal here)
+        let mut loads = vec![1.0; 8];
+        loads[3] = 100.0;
+        let p = place_experts(8, &loads);
+        let hot = p[3];
+        for (e, &x) in p.iter().enumerate() {
+            if e != 3 {
+                assert_ne!(x, hot, "expert {e} colocated with the hot expert");
+            }
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let loads = vec![3.0, 3.0, 2.0, 2.0, 1.0, 1.0, 1.0, 1.0, 5.0];
+        assert_eq!(place_experts(4, &loads), place_experts(4, &loads));
+        // every expert got a valid XCD
+        for &x in &place_experts(4, &loads) {
+            assert!(x < 4);
+        }
     }
 
     #[test]

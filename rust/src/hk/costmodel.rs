@@ -145,6 +145,88 @@ pub fn evaluate_paged(
     perf
 }
 
+/// One XCD's share of a grouped (ragged multi-expert) kernel.
+///
+/// Built by the grouped-GEMM lowering in [`crate::kernels::moe`]: each
+/// expert's block-cycles, activation traffic and weight working set are
+/// summed onto the XCD the chiplet-aware placement
+/// ([`crate::hk::chiplet::place_experts`]) assigned it to.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GroupedShard {
+    /// Total engine block-cycles of the shard's expert GEMM blocks,
+    /// pipelined across the XCD's CUs.
+    pub compute_cycles: f64,
+    /// Activation bytes streamed through the shard (token-proportional).
+    pub stream_bytes: f64,
+    /// Expert weight bytes re-read through the shard's LLC slice
+    /// (working set of the experts placed here; experts with no routed
+    /// tokens never touch their weights).
+    pub weight_bytes: f64,
+}
+
+/// Evaluate a grouped kernel (the `Op::MoeGemm` class): per-expert
+/// ragged GEMMs are sharded across XCDs, each shard runs its experts on
+/// its own CUs and cache slice, and **total time is the max over
+/// shards** — the skew law. A balanced routing fills every shard
+/// equally and finishes together; a skewed routing leaves all but the
+/// hot chiplet idle, so for equal total tokens balanced routing is
+/// never slower than skewed routing (asserted in `tests/moe.rs`).
+///
+/// Per shard: the compute side pipelines the shard's block-cycles over
+/// `cus_per_xcd`; the memory side streams activations at the XCD's HBM
+/// share and re-reads the resident expert weights at its LLC share.
+/// `block` is the engine run of one representative macro block — the
+/// caller already simulated it to derive the shard cycles, so it is
+/// passed in rather than re-run here.
+pub fn evaluate_grouped(
+    arch: &Arch,
+    name: &str,
+    info: ScheduleInfo,
+    block: &crate::sim::engine::EngineStats,
+    shards: &[GroupedShard],
+    total_flops: f64,
+    total_bytes: f64,
+) -> KernelPerf {
+    let cus = arch.cus_per_xcd.max(1) as f64;
+    let hbm_share = arch.hbm_tbps / arch.n_xcds.max(1) as f64 * 1e12;
+    let llc_share = arch.llc_tbps / arch.n_xcds.max(1) as f64 * 1e12;
+
+    let mut compute_s = 0.0f64;
+    let mut mem_s = 0.0f64;
+    let mut time_s = 0.0f64;
+    let mut weight_total = 0.0f64;
+    for s in shards {
+        let c = s.compute_cycles / cus * arch.cycle_s();
+        let m = s.stream_bytes / hbm_share + s.weight_bytes / llc_share;
+        compute_s = compute_s.max(c);
+        mem_s = mem_s.max(m);
+        time_s = time_s.max(c.max(m));
+        weight_total += s.weight_bytes;
+    }
+    // degenerate (no routed tokens): charge one engine pass
+    if time_s <= 0.0 {
+        time_s = block.cycles as f64 * arch.cycle_s();
+        compute_s = time_s;
+    }
+
+    KernelPerf {
+        name: name.to_string(),
+        tflops: total_flops / time_s / 1e12,
+        time_s,
+        compute_s,
+        mem_s,
+        mfma_util: block.mfma_utilization(),
+        l2_hit: 0.0,
+        llc_hit: if total_bytes > 0.0 {
+            (weight_total / total_bytes).min(1.0)
+        } else {
+            0.0
+        },
+        eff_bw_tbps: total_bytes / time_s / 1e12,
+        info,
+    }
+}
+
 /// Achieved fraction of the dtype peak — the paper's "efficiency ratio".
 pub fn efficiency(arch: &Arch, dtype: crate::sim::arch::Dtype, tflops: f64) -> f64 {
     tflops / arch.peak_tflops(dtype)

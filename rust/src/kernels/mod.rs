@@ -7,6 +7,9 @@
 //!   causal/non-causal (listing E.3, Figs. 7/8/15/16/17, Tables 1/3).
 //! - [`decode`] — paged decode attention over a block-table KV cache
 //!   (the serving engine's memory-bound gather workload).
+//! - [`moe`] — grouped GEMM over ragged per-expert batches (the MoE
+//!   FFN), costed by the max-over-XCD-shards law with chiplet-aware
+//!   expert placement.
 //! - [`membound`] — fused dropout-residual-layernorm + RoPE (Fig. 9,
 //!   listing E.2).
 //! - [`baselines`] — AITER/CK/hipBLASLt/Triton/PyTorch/Mojo models.
@@ -19,6 +22,7 @@ pub mod baselines;
 pub mod decode;
 pub mod gemm;
 pub mod membound;
+pub mod moe;
 pub mod registry;
 
 pub use attention::AttnConfig;
@@ -26,4 +30,5 @@ pub use decode::AttnDecodeConfig;
 pub use baselines::Baseline;
 pub use gemm::{GemmConfig, GridOrder, Pattern};
 pub use membound::{FusedLnConfig, RopeConfig};
+pub use moe::MoeGemmConfig;
 pub use registry::{ArchId, Dispatch, KernelKey, Op, Query, ShapeClass};

@@ -1,0 +1,405 @@
+//! Grouped-GEMM kernel class for MoE expert FFNs (`Op::MoeGemm`).
+//!
+//! After the [`crate::moe`] router + dispatch align a token batch into
+//! expert-contiguous segments, the FFN is a *grouped* GEMM: one ragged
+//! `[tokens_e x d_model] @ [d_model x d_ff]` up-projection and one
+//! `[tokens_e x d_ff] @ [d_ff x d_model]` down-projection per expert.
+//! Two scheduling variants cover the amd-kernels suite's split:
+//!
+//! - **moe-ep-pp8** — 8-wave ping-pong with the full 256x256 macro
+//!   tile, for large balanced expert batches (every expert fills whole
+//!   tiles, so the bulk pattern's MFMA density wins);
+//! - **moe-il4-ragged** — 4-wave interleave with a 128x256 tile, for
+//!   skewed or small expert batches where ragged tails would leave an
+//!   8-wave tile mostly idle.
+//!
+//! The cost model is [`crate::hk::costmodel::evaluate_grouped`]: each
+//! expert is placed on an XCD by the chiplet-aware LPT placement
+//! ([`crate::hk::chiplet::place_experts`]) and **total time is the max
+//! over per-XCD shards** — so balanced routing is provably no slower
+//! than skewed routing at equal total tokens (`tests/moe.rs`).
+
+use crate::hk::chiplet::place_experts;
+use crate::hk::costmodel::{evaluate_grouped, GroupedShard, KernelPerf};
+use crate::kernels::gemm::{self, GemmConfig, Pattern};
+use crate::sim::arch::{Arch, Dtype};
+use crate::sim::engine::{run_block, EngineConfig};
+
+/// Fixed per-active-expert cost (segment descriptor fetch + ragged
+/// setup), in engine cycles: this is what makes very high expert counts
+/// pay for their fragmentation.
+const SEGMENT_OVERHEAD_CYCLES: f64 = 2500.0;
+
+/// Grouped-GEMM problem + implementation description. The ragged
+/// per-expert batch histogram is first-class: it is exactly what the
+/// max-shard law prices.
+#[derive(Debug, Clone)]
+pub struct MoeGemmConfig {
+    pub d_model: u32,
+    /// Hidden width of one expert.
+    pub d_ff: u32,
+    pub experts: u32,
+    /// Routed tokens per expert (the dispatch plan's segment lengths).
+    pub expert_tokens: Vec<u32>,
+    pub dtype: Dtype,
+    pub block_m: u32,
+    pub block_n: u32,
+    pub block_k: u32,
+    pub pattern: Pattern,
+}
+
+impl MoeGemmConfig {
+    /// A grouped GEMM over an explicit ragged histogram.
+    pub fn from_loads(loads: Vec<u32>, d_model: u32, d_ff: u32) -> Self {
+        MoeGemmConfig {
+            d_model,
+            d_ff,
+            experts: loads.len().max(1) as u32,
+            expert_tokens: loads,
+            dtype: Dtype::Bf16,
+            block_m: 256,
+            block_n: 256,
+            block_k: 64,
+            pattern: Pattern::PingPong8,
+        }
+    }
+
+    /// `routed` total assignments spread with the parametric skew
+    /// profile (0.0 balanced .. 1.0 all-on-one-expert).
+    pub fn skewed(routed: u32, d_model: u32, d_ff: u32, experts: u32, skew: f64) -> Self {
+        Self::from_loads(skewed_loads(routed, experts, skew), d_model, d_ff)
+    }
+
+    /// Perfectly balanced grouped GEMM.
+    pub fn balanced(routed: u32, d_model: u32, d_ff: u32, experts: u32) -> Self {
+        Self::skewed(routed, d_model, d_ff, experts, 0.0)
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.expert_tokens.iter().map(|&t| t as u64).sum()
+    }
+
+    /// FLOPs of the grouped FFN: up + down projection per routed token.
+    pub fn flops(&self) -> f64 {
+        4.0 * self.total_tokens() as f64 * self.d_model as f64 * self.d_ff as f64
+    }
+
+    /// Activation bytes one expert streams for `t` routed tokens
+    /// (input + intermediate + output rows).
+    pub fn act_bytes(&self, t: u32) -> f64 {
+        2.0 * t as f64
+            * (self.d_model as f64 + self.d_ff as f64)
+            * self.dtype.bytes_f()
+    }
+
+    /// One expert's weight working set (both projection matrices).
+    pub fn weight_bytes_per_expert(&self) -> f64 {
+        2.0 * self.d_model as f64 * self.d_ff as f64 * self.dtype.bytes_f()
+    }
+
+    /// Total demand bytes (activations of routed tokens + weights of
+    /// every expert that received tokens).
+    pub fn bytes(&self) -> f64 {
+        let active = self.expert_tokens.iter().filter(|&&t| t > 0).count() as f64;
+        self.expert_tokens
+            .iter()
+            .map(|&t| self.act_bytes(t))
+            .sum::<f64>()
+            + active * self.weight_bytes_per_expert()
+    }
+}
+
+/// Exact-total parametric skew profile: interpolates between a uniform
+/// histogram (`skew` 0) and everything on expert 0 (`skew` 1), always
+/// summing to `total`. The hot-expert load is monotone in `skew`, which
+/// is what makes the grouped cost model's skew sweep monotone.
+pub fn skewed_loads(total: u32, experts: u32, skew: f64) -> Vec<u32> {
+    let e = experts.max(1);
+    if e == 1 {
+        return vec![total];
+    }
+    let s = skew.clamp(0.0, 1.0);
+    let base = total / e;
+    let hot = ((base as f64 + s * (total - base) as f64).round() as u32).min(total);
+    let rest = total - hot;
+    let per = rest / (e - 1);
+    let extra = rest % (e - 1);
+    let mut v = Vec::with_capacity(e as usize);
+    v.push(hot);
+    for i in 0..e - 1 {
+        v.push(per + u32::from(i < extra));
+    }
+    v
+}
+
+/// Per-block engine schedule for one projection with reduction depth
+/// `k` (the macro-tile is the unit the grouped evaluator prices).
+fn build_block(arch: &Arch, cfg: &MoeGemmConfig, k: u32) -> crate::hk::BuiltSchedule {
+    let rep = GemmConfig {
+        m: cfg.block_m,
+        n: cfg.block_n,
+        k: k.max(cfg.block_k),
+        dtype: cfg.dtype,
+        block_m: cfg.block_m,
+        block_n: cfg.block_n,
+        block_k: cfg.block_k,
+        pattern: cfg.pattern,
+        ..GemmConfig::bf16(cfg.block_m, cfg.block_n, k.max(cfg.block_k))
+    };
+    gemm::build(arch, &rep)
+}
+
+/// Simulate the grouped FFN: lower each expert's ragged batch to macro
+/// blocks, place experts on XCDs (LPT over block-cycles), and apply the
+/// max-shard law.
+pub fn simulate_grouped(arch: &Arch, cfg: &MoeGemmConfig) -> KernelPerf {
+    let built_up = build_block(arch, cfg, cfg.d_model);
+    let built_down = build_block(arch, cfg, cfg.d_ff);
+    // expert weights are cache-resident between blocks, so the engine
+    // sees LLC-grade latency on its loads
+    let ecfg = EngineConfig::for_arch(arch).with_vmem_latency(arch.llc_lat);
+    let stats_up = run_block(arch, &ecfg, &built_up.block);
+    let cyc_up = stats_up.cycles as f64;
+    let cyc_down = run_block(arch, &ecfg, &built_down.block).cycles as f64;
+
+    let tiles_up = cfg.d_ff.div_ceil(cfg.block_n) as f64;
+    let tiles_down = cfg.d_model.div_ceil(cfg.block_n) as f64;
+    let loads: Vec<f64> = cfg
+        .expert_tokens
+        .iter()
+        .map(|&t| {
+            if t == 0 {
+                return 0.0;
+            }
+            let rows = t.div_ceil(cfg.block_m) as f64;
+            rows * (tiles_up * cyc_up + tiles_down * cyc_down)
+                + SEGMENT_OVERHEAD_CYCLES
+        })
+        .collect();
+
+    let placement = place_experts(arch.n_xcds, &loads);
+    let mut shards =
+        vec![GroupedShard::default(); arch.n_xcds.max(1) as usize];
+    for (e, &t) in cfg.expert_tokens.iter().enumerate() {
+        if t == 0 {
+            continue;
+        }
+        let sh = &mut shards[placement[e] as usize];
+        sh.compute_cycles += loads[e];
+        sh.stream_bytes += cfg.act_bytes(t);
+        sh.weight_bytes += cfg.weight_bytes_per_expert();
+    }
+
+    evaluate_grouped(
+        arch,
+        &format!(
+            "moe-gemm e{} d{}x{} tok{} {:?}",
+            cfg.experts,
+            cfg.d_model,
+            cfg.d_ff,
+            cfg.total_tokens(),
+            cfg.pattern
+        ),
+        built_up.info,
+        &stats_up,
+        &shards,
+        cfg.flops(),
+        cfg.bytes(),
+    )
+}
+
+/// Iso-parameter dense FFN baseline: one up + down projection pair at
+/// `d_ff_dense = experts * d_ff` over the same token count, through the
+/// ordinary GEMM model. This is the capacity-equivalent dense layer the
+/// MoE replaces — `BENCH_moe.json` compares the MoE's dense-equivalent
+/// throughput against it.
+pub fn dense_ffn_baseline(
+    arch: &Arch,
+    tokens: u32,
+    d_model: u32,
+    d_ff_dense: u32,
+) -> KernelPerf {
+    let up = gemm::simulate(arch, &GemmConfig::bf16(tokens, d_ff_dense, d_model));
+    let down = gemm::simulate(arch, &GemmConfig::bf16(tokens, d_model, d_ff_dense));
+    let flops = 4.0 * tokens as f64 * d_model as f64 * d_ff_dense as f64;
+    let time_s = up.time_s + down.time_s;
+    KernelPerf {
+        name: format!("dense-ffn {tokens}x{d_model}x{d_ff_dense}"),
+        tflops: flops / time_s / 1e12,
+        time_s,
+        compute_s: up.compute_s + down.compute_s,
+        mem_s: up.mem_s + down.mem_s,
+        mfma_util: (up.mfma_util + down.mfma_util) / 2.0,
+        l2_hit: (up.l2_hit + down.l2_hit) / 2.0,
+        llc_hit: (up.llc_hit + down.llc_hit) / 2.0,
+        eff_bw_tbps: (up.eff_bw_tbps + down.eff_bw_tbps) / 2.0,
+        info: up.info.clone(),
+    }
+}
+
+/// One `BENCH_moe.json` row: a (experts, top_k, skew) cell versus its
+/// iso-parameter dense baseline.
+#[derive(Debug, Clone)]
+pub struct MoeBenchRow {
+    pub experts: u32,
+    pub top_k: u32,
+    pub skew_pct: u32,
+    /// Variant the registry's autotuned dispatch picked.
+    pub variant: String,
+    pub moe_time_s: f64,
+    /// Computed FLOPs / time — raw hardware throughput of the grouped
+    /// kernel.
+    pub moe_hw_tflops: f64,
+    /// Dense-equivalent FLOPs / time: the iso-parameter dense layer's
+    /// FLOP count delivered per second of MoE time (the standard MoE
+    /// capacity accounting; the MoE computes only `top_k/experts` of
+    /// those FLOPs).
+    pub moe_equiv_tflops: f64,
+    pub dense_time_s: f64,
+    pub dense_tflops: f64,
+}
+
+impl MoeBenchRow {
+    /// Dense-equivalent speedup over the dense baseline (>1 = MoE wins).
+    pub fn speedup(&self) -> f64 {
+        self.dense_time_s / self.moe_time_s
+    }
+}
+
+/// The bench shapes: 8192 tokens of d_model 2048 through 1024-wide
+/// experts — expert counts {8, 16, 64}, top-k {1, 2}, skew {0, 40, 80}%.
+pub const BENCH_TOKENS: u32 = 8192;
+pub const BENCH_D_MODEL: u32 = 2048;
+pub const BENCH_D_FF: u32 = 1024;
+pub const BENCH_EXPERTS: [u32; 3] = [8, 16, 64];
+pub const BENCH_TOP_K: [u32; 2] = [1, 2];
+pub const BENCH_SKEW_PCT: [u32; 3] = [0, 40, 80];
+
+/// The full `BENCH_moe.json` sweep on one arch, dispatched through the
+/// registry (autotuned variant selection against a private tune cache).
+pub fn bench_sweep(arch: crate::kernels::registry::ArchId) -> Vec<MoeBenchRow> {
+    use crate::hk::tunecache::TuneCache;
+    use crate::kernels::registry::Query;
+
+    let hw = arch.arch();
+    let mut cache = TuneCache::new();
+    let dense: Vec<(u32, KernelPerf)> = BENCH_EXPERTS
+        .iter()
+        .map(|&e| {
+            (e, dense_ffn_baseline(&hw, BENCH_TOKENS, BENCH_D_MODEL, e * BENCH_D_FF))
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+    for &experts in &BENCH_EXPERTS {
+        let d = &dense.iter().find(|(e, _)| *e == experts).unwrap().1;
+        for &top_k in &BENCH_TOP_K {
+            for &skew_pct in &BENCH_SKEW_PCT {
+                let q = Query::moe_gemm(
+                    arch,
+                    BENCH_TOKENS,
+                    BENCH_D_MODEL,
+                    BENCH_D_FF,
+                    experts,
+                    top_k,
+                    skew_pct,
+                );
+                let disp = q.dispatch_with(&mut cache);
+                let perf = disp.simulate();
+                let equiv_flops = 4.0
+                    * BENCH_TOKENS as f64
+                    * BENCH_D_MODEL as f64
+                    * (experts * BENCH_D_FF) as f64;
+                rows.push(MoeBenchRow {
+                    experts,
+                    top_k,
+                    skew_pct,
+                    variant: disp.variant.clone(),
+                    moe_time_s: perf.time_s,
+                    moe_hw_tflops: perf.tflops,
+                    moe_equiv_tflops: equiv_flops / perf.time_s / 1e12,
+                    dense_time_s: d.time_s,
+                    dense_tflops: d.tflops,
+                });
+            }
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> Arch {
+        Arch::mi355x()
+    }
+
+    #[test]
+    fn skewed_loads_preserve_the_total() {
+        for (total, e) in [(16384u32, 8u32), (8192, 16), (1000, 64), (7, 3)] {
+            for skew in [0.0, 0.25, 0.5, 0.9, 1.0] {
+                let v = skewed_loads(total, e, skew);
+                assert_eq!(v.len(), e as usize);
+                assert_eq!(v.iter().sum::<u32>(), total, "e={e} skew={skew}");
+            }
+        }
+        assert_eq!(skewed_loads(100, 1, 0.7), vec![100]);
+        // full skew lands everything on expert 0
+        let full = skewed_loads(4096, 8, 1.0);
+        assert_eq!(full[0], 4096);
+        assert!(full[1..].iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn hot_expert_load_is_monotone_in_skew() {
+        let mut last = 0;
+        for pct in [0u32, 20, 40, 60, 80, 100] {
+            let v = skewed_loads(16384, 16, pct as f64 / 100.0);
+            assert!(v[0] >= last, "skew {pct}%: {} < {last}", v[0]);
+            last = v[0];
+        }
+    }
+
+    #[test]
+    fn grouped_sim_is_finite_and_compute_bound_at_ffn_shapes() {
+        let cfg = MoeGemmConfig::balanced(16384, 2048, 1024, 8);
+        let p = simulate_grouped(&arch(), &cfg);
+        assert!(p.time_s > 0.0 && p.time_s.is_finite());
+        assert!(p.tflops > 0.0);
+        assert!(
+            p.compute_s >= p.mem_s,
+            "FFN shards must be compute-bound: c {} < m {}",
+            p.compute_s,
+            p.mem_s
+        );
+    }
+
+    #[test]
+    fn full_skew_costs_about_one_chiplet() {
+        let a = arch();
+        let balanced =
+            simulate_grouped(&a, &MoeGemmConfig::balanced(16384, 2048, 1024, 8));
+        let skewed = simulate_grouped(
+            &a,
+            &MoeGemmConfig::skewed(16384, 2048, 1024, 8, 1.0),
+        );
+        // everything on one XCD: roughly n_xcds x slower than balanced
+        let ratio = skewed.time_s / balanced.time_s;
+        assert!(ratio > 4.0 && ratio < 12.0, "skew ratio {ratio}");
+    }
+
+    #[test]
+    fn empty_routing_is_degenerate_but_finite() {
+        let cfg = MoeGemmConfig::from_loads(vec![0, 0, 0, 0], 2048, 1024);
+        let p = simulate_grouped(&arch(), &cfg);
+        assert!(p.time_s > 0.0 && p.time_s.is_finite());
+    }
+
+    #[test]
+    fn dense_baseline_is_sane() {
+        let p = dense_ffn_baseline(&arch(), 8192, 2048, 8192);
+        assert!(p.tflops > 500.0 && p.tflops < 2500.0, "{}", p.tflops);
+        assert!(p.time_s > 0.0);
+    }
+}

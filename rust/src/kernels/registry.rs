@@ -35,6 +35,7 @@ use crate::kernels::attention::{self, AttnConfig};
 use crate::kernels::decode::{self, AttnDecodeConfig};
 use crate::kernels::gemm::{self, GemmConfig, GridOrder, Pattern};
 use crate::kernels::membound::{self, FusedLnConfig, RopeConfig};
+use crate::kernels::moe::{self, MoeGemmConfig};
 use crate::sim::arch::{Arch, Dtype};
 
 /// Kernel operation families served by the registry.
@@ -46,16 +47,19 @@ pub enum Op {
     /// Paged decode attention: one query token against the cached KV
     /// context through a block table (the serving engine's hot kernel).
     AttnDecode,
+    /// Grouped GEMM over ragged per-expert batches (the MoE FFN).
+    MoeGemm,
     FusedLn,
     Rope,
 }
 
 impl Op {
-    pub const ALL: [Op; 6] = [
+    pub const ALL: [Op; 7] = [
         Op::Gemm,
         Op::AttnFwd,
         Op::AttnBwd,
         Op::AttnDecode,
+        Op::MoeGemm,
         Op::FusedLn,
         Op::Rope,
     ];
@@ -66,6 +70,7 @@ impl Op {
             Op::AttnFwd => "attn-fwd",
             Op::AttnBwd => "attn-bwd",
             Op::AttnDecode => "attn-decode",
+            Op::MoeGemm => "moe-gemm",
             Op::FusedLn => "fused-ln",
             Op::Rope => "rope",
         }
@@ -192,6 +197,18 @@ pub enum Problem {
         d_head: u32,
         block_size: u32,
     },
+    MoeGemm {
+        /// Tokens entering the router (assignments = tokens * top_k).
+        tokens: u32,
+        d_model: u32,
+        /// Hidden width of one expert.
+        d_ff: u32,
+        experts: u32,
+        top_k: u32,
+        /// Routing-skew percentage for the parametric load profile
+        /// (0 = balanced, 100 = everything on one expert).
+        skew_pct: u32,
+    },
     FusedLn {
         rows: u32,
         d: u32,
@@ -212,6 +229,17 @@ impl Problem {
             Problem::Gemm { m, n, k } => m.max(n).max(k) as u64,
             Problem::Attn { seq, .. } => seq as u64,
             Problem::AttnDecode { context, .. } => context as u64,
+            // grouped GEMMs bucket on the *hot* expert's batch (mean
+            // per-expert load plus the skew concentration): the tile
+            // choice serves the shard the max-over-shards law prices,
+            // and skewed problems must not reuse balanced-tuned
+            // decisions
+            Problem::MoeGemm { tokens, experts, top_k, skew_pct, .. } => {
+                let routed = tokens as u64 * top_k.max(1) as u64;
+                let base = (routed / experts.max(1) as u64).max(1);
+                base + routed.saturating_sub(base) * skew_pct.min(100) as u64
+                    / 100
+            }
             Problem::FusedLn { rows, .. } => (rows / 16).max(1) as u64,
             Problem::Rope { seq, .. } => seq as u64,
         }
@@ -374,6 +402,29 @@ pub fn variants(key: &KernelKey) -> Vec<Variant> {
                 swizzled: false,
             },
         ],
+        // Grouped GEMM over ragged expert batches. The NVIDIA-like
+        // archs carry no native table (the amd-kernels MoE suite is
+        // CDNA-shaped); they resolve through the CDNA3 fallback of
+        // [`variants_or_fallback`].
+        Op::MoeGemm => match key.arch {
+            ArchId::B200Like | ArchId::H100Like => vec![],
+            _ => vec![
+                Variant {
+                    name: "moe-ep-pp8",
+                    pattern: Pattern::PingPong8,
+                    block_m: 256,
+                    block_n: 256,
+                    swizzled: false,
+                },
+                Variant {
+                    name: "moe-il4-ragged",
+                    pattern: Pattern::Interleave4,
+                    block_m: 128,
+                    block_n: 256,
+                    swizzled: false,
+                },
+            ],
+        },
         Op::FusedLn => vec![Variant {
             name: "ln-il4",
             pattern: Pattern::Interleave4,
@@ -389,6 +440,34 @@ pub fn variants(key: &KernelKey) -> Vec<Variant> {
             swizzled: false,
         }],
     }
+}
+
+/// [`variants`] with an arch fallback: a key whose arch has no native
+/// table resolves against the CDNA3 (MI325X) table — the paper's oldest
+/// fully-covered generation — with a warning, instead of panicking the
+/// dispatcher. Returns the table and whether the fallback fired. The
+/// warning prints once per (op, arch) per process, not per dispatch —
+/// a serving loop re-dispatches the same key thousands of times.
+pub fn variants_or_fallback(key: &KernelKey) -> (Vec<Variant>, bool) {
+    let vs = variants(key);
+    if !vs.is_empty() {
+        return (vs, false);
+    }
+    let fallback = KernelKey { arch: ArchId::Mi325x, ..*key };
+    static WARNED: std::sync::Mutex<Vec<(Op, ArchId)>> =
+        std::sync::Mutex::new(Vec::new());
+    let mut warned = WARNED.lock().unwrap_or_else(|e| e.into_inner());
+    if !warned.contains(&(key.op, key.arch)) {
+        warned.push((key.op, key.arch));
+        eprintln!(
+            "warning: no {} variants for arch {}; dispatching against \
+             the CDNA3 ({}) table",
+            key.op.tag(),
+            key.arch.tag(),
+            fallback.arch.tag()
+        );
+    }
+    (variants(&fallback), true)
 }
 
 /// Caller-pinned tunables. Report tables use these to reproduce specific
@@ -484,6 +563,41 @@ impl Query {
     /// The GQA serving shape (64 query heads over 8 KV heads, d 128).
     pub fn decode_gqa(arch: ArchId, batch: u32, context: u32, block_size: u32) -> Self {
         Self::attn_decode(arch, batch, 64, 8, context, 128, block_size)
+    }
+
+    /// Grouped MoE FFN: `tokens` routed through `top_k` of `experts`
+    /// experts of hidden width `d_ff`, with the parametric skew profile
+    /// `skew_pct` (0 = balanced routing).
+    #[allow(clippy::too_many_arguments)]
+    pub fn moe_gemm(
+        arch: ArchId,
+        tokens: u32,
+        d_model: u32,
+        d_ff: u32,
+        experts: u32,
+        top_k: u32,
+        skew_pct: u32,
+    ) -> Self {
+        Query {
+            op: Op::MoeGemm,
+            dtype: Dtype::Bf16,
+            arch,
+            problem: Problem::MoeGemm {
+                tokens,
+                d_model,
+                d_ff,
+                experts: experts.max(1),
+                top_k: top_k.max(1),
+                skew_pct: skew_pct.min(100),
+            },
+            ov: Overrides::default(),
+        }
+    }
+
+    /// The `BENCH_moe.json` MoE FFN shape (d_model 2048, 1024-wide
+    /// experts, balanced routing).
+    pub fn moe_ffn(arch: ArchId, tokens: u32, experts: u32, top_k: u32) -> Self {
+        Self::moe_gemm(arch, tokens, 2048, 1024, experts, top_k, 0)
     }
 
     /// The paper's MHA shape: batch 16, 16 heads (Figs. 15/16/17, Tab. 1).
@@ -587,6 +701,11 @@ impl Query {
             Op::AttnFwd | Op::AttnBwd | Op::AttnDecode => {
                 self.ov.pattern.is_some()
             }
+            Op::MoeGemm => {
+                self.ov.pattern.is_some()
+                    && self.ov.block_m.is_some()
+                    && self.ov.block_n.is_some()
+            }
             Op::FusedLn | Op::Rope => true,
         }
     }
@@ -616,7 +735,7 @@ impl Query {
     /// Dispatch against an explicit cache (tests, isolated sweeps).
     pub fn dispatch_with(&self, cache: &mut TuneCache) -> Dispatch {
         let key = self.key();
-        let vs = variants(&key);
+        let (vs, _fell_back) = variants_or_fallback(&key);
         assert!(!vs.is_empty(), "no variants for {}", key.id());
 
         if self.fully_specified() {
@@ -775,6 +894,39 @@ impl Query {
                 block_size,
                 pattern: self.ov.pattern.unwrap_or(v.pattern),
             }),
+            Problem::MoeGemm {
+                tokens,
+                d_model,
+                d_ff,
+                experts,
+                top_k,
+                skew_pct,
+            } => {
+                let routed = tokens.saturating_mul(top_k.max(1));
+                let mut cfg = MoeGemmConfig::skewed(
+                    routed,
+                    d_model,
+                    d_ff,
+                    experts,
+                    skew_pct as f64 / 100.0,
+                );
+                cfg.dtype = self.dtype;
+                cfg.pattern = self.ov.pattern.unwrap_or(v.pattern);
+                if v.block_m > 0 {
+                    cfg.block_m = v.block_m;
+                    cfg.block_n = v.block_n;
+                }
+                if let Some(bm) = self.ov.block_m {
+                    cfg.block_m = bm;
+                }
+                if let Some(bn) = self.ov.block_n {
+                    cfg.block_n = bn;
+                }
+                if let Some(bk) = self.ov.block_k {
+                    cfg.block_k = bk;
+                }
+                KernelConfig::MoeGemm(cfg)
+            }
             Problem::FusedLn { rows, d, dropout } => {
                 KernelConfig::FusedLn(FusedLnConfig {
                     rows,
@@ -796,6 +948,7 @@ pub enum KernelConfig {
     Gemm(GemmConfig),
     Attn(AttnConfig),
     AttnDecode(AttnDecodeConfig),
+    MoeGemm(MoeGemmConfig),
     FusedLn(FusedLnConfig),
     Rope(RopeConfig),
 }
@@ -837,6 +990,13 @@ impl Dispatch {
         }
     }
 
+    pub fn moe_config(&self) -> &MoeGemmConfig {
+        match &self.config {
+            KernelConfig::MoeGemm(c) => c,
+            other => panic!("dispatch is not a grouped MoE GEMM: {other:?}"),
+        }
+    }
+
     pub fn ln_config(&self) -> &FusedLnConfig {
         match &self.config {
             KernelConfig::FusedLn(c) => c,
@@ -862,6 +1022,7 @@ pub fn simulate_config(key: &KernelKey, cfg: &KernelConfig) -> KernelPerf {
         (Op::AttnDecode, KernelConfig::AttnDecode(c)) => {
             decode::simulate_decode(&arch, c)
         }
+        (Op::MoeGemm, KernelConfig::MoeGemm(c)) => moe::simulate_grouped(&arch, c),
         (Op::FusedLn, KernelConfig::FusedLn(c)) => {
             membound::simulate_fused_ln(&arch, c)
         }
@@ -928,6 +1089,41 @@ mod tests {
         }
         assert_eq!(Op::from_tag("conv"), None);
         assert_eq!(ShapeClass::from_tag("tiny"), None);
+    }
+
+    #[test]
+    fn moe_dispatch_resolves_and_simulates() {
+        let q = Query::moe_ffn(ArchId::Mi355x, 8192, 8, 2);
+        let mut cache = TuneCache::new();
+        let d = q.dispatch_with(&mut cache);
+        assert_eq!(d.key.op, Op::MoeGemm);
+        let cfg = d.moe_config();
+        assert_eq!(cfg.experts, 8);
+        assert_eq!(cfg.total_tokens(), 8192 * 2);
+        let p = d.simulate();
+        assert!(p.time_s > 0.0 && p.time_s.is_finite());
+        assert!(q.dispatch_with(&mut cache).from_cache);
+    }
+
+    #[test]
+    fn nvidia_moe_keys_fall_back_to_cdna3() {
+        let p = Problem::MoeGemm {
+            tokens: 4096,
+            d_model: 2048,
+            d_ff: 1024,
+            experts: 8,
+            top_k: 2,
+            skew_pct: 0,
+        };
+        let key = KernelKey::of(Op::MoeGemm, Dtype::Bf16, &p, ArchId::B200Like);
+        assert!(variants(&key).is_empty(), "B200 grew a native MoE table");
+        let (vs, fell_back) = variants_or_fallback(&key);
+        assert!(fell_back);
+        assert!(!vs.is_empty());
+        // and the full dispatch path resolves instead of panicking
+        let q = Query::moe_ffn(ArchId::B200Like, 4096, 8, 2);
+        let d = q.dispatch_with(&mut TuneCache::new());
+        assert!(d.simulate().time_s > 0.0);
     }
 
     #[test]

@@ -22,12 +22,16 @@
 //! - [`serve`] — the decode-serving subsystem: paged KV cache with
 //!   ref-counted prefix sharing + the continuous-batching engine over
 //!   `Op::AttnDecode`.
+//! - [`moe`] — the Mixture-of-Experts subsystem: top-k routing and
+//!   token alignment into the expert-contiguous ragged batches the
+//!   `Op::MoeGemm` grouped-GEMM kernel class consumes.
 //! - [`report`] — regenerates every table and figure of the paper.
 
 pub mod coordinator;
 pub mod error;
 pub mod hk;
 pub mod kernels;
+pub mod moe;
 pub mod report;
 pub mod runtime;
 pub mod serve;

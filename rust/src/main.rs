@@ -15,6 +15,9 @@
 //!   train [--steps N] [--path kernels|reference]
 //!                         train the transformer through the AOT
 //!                         train_step artifact, logging the loss curve
+//!   moe                   MoE walkthrough: router load-balance table +
+//!                         grouped-GEMM vs dense-FFN sweep; writes
+//!                         BENCH_moe.json (override with HK_MOE_OUT)
 //!   tune [--arch A]       warm the persistent registry tune cache for
 //!                         the headline kernel keys and save it
 //!   artifacts             list artifact entries + shapes
@@ -57,10 +60,11 @@ fn main() -> Result<()> {
             let exp = args.get(1).map(String::as_str).unwrap_or("all");
             if !report::run(exp) {
                 bail!(
-                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, all"
+                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, all"
                 );
             }
         }
+        Some("moe") => report::moe(),
         Some("serve") => {
             let n: u64 = flag(&args, "--requests")
                 .map(|v| v.parse())
@@ -207,6 +211,7 @@ fn main() -> Result<()> {
             eprintln!("usage: {exe} report <exp|all>");
             eprintln!("       {exe} serve [--paged|--mixed] [--requests N] [--rate R]");
             eprintln!("       {exe} train [--steps N] [--path kernels|reference]");
+            eprintln!("       {exe} moe");
             eprintln!("       {exe} tune [--arch mi355x|mi350x|mi325x|b200|h100]");
             eprintln!("       {exe} artifacts | solve | arch");
             if other.is_some() {

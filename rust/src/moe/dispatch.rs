@@ -1,0 +1,166 @@
+//! Token permutation into expert-contiguous segments — the "alignment"
+//! step that turns a routing decision into a grouped-GEMM input.
+//!
+//! The grouped-GEMM kernel class wants each expert's tokens packed
+//! contiguously so every expert segment is one ragged GEMM operand. The
+//! plan here is a stable counting sort of the routing's assignments by
+//! expert: `perm[slot]` names the assignment occupying permuted slot
+//! `slot`, and `segments` describes the ragged per-expert batches
+//! (offset + length). The inverse direction — un-permutation — gathers
+//! each token's expert outputs back and combines them with the gate
+//! weights; because the router normalizes kept weights per token,
+//! `unpermute(permute(x))` with identity expert computation reproduces
+//! `x` exactly (up to f32 rounding), even when capacity overflow
+//! rerouted some assignments (`tests/moe.rs`).
+
+use crate::moe::router::Routing;
+
+/// One expert's contiguous slice of the permuted token buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExpertSegment {
+    pub expert: u32,
+    /// First permuted slot of this expert's batch.
+    pub offset: u32,
+    /// Ragged batch size (assignments routed to this expert).
+    pub len: u32,
+}
+
+/// The alignment plan: assignment permutation + ragged batch descriptors.
+#[derive(Debug, Clone)]
+pub struct MoeDispatchPlan {
+    /// `perm[slot]` = index into the routing's assignment list.
+    pub perm: Vec<u32>,
+    /// Per-expert ragged batches, ascending by expert id; experts with
+    /// zero routed tokens are omitted.
+    pub segments: Vec<ExpertSegment>,
+    pub tokens: u32,
+}
+
+impl MoeDispatchPlan {
+    /// Build the plan from a routing decision (stable counting sort by
+    /// expert, preserving token order within each segment).
+    pub fn new(routing: &Routing) -> Self {
+        let e = routing.experts.max(1) as usize;
+        let mut counts = vec![0u32; e];
+        for a in &routing.assignments {
+            counts[a.expert as usize] += 1;
+        }
+        let mut offsets = vec![0u32; e];
+        let mut acc = 0u32;
+        let mut segments = Vec::new();
+        for (x, &n) in counts.iter().enumerate() {
+            offsets[x] = acc;
+            if n > 0 {
+                segments.push(ExpertSegment { expert: x as u32, offset: acc, len: n });
+            }
+            acc += n;
+        }
+        let mut perm = vec![0u32; routing.assignments.len()];
+        let mut cursor = offsets;
+        for (i, a) in routing.assignments.iter().enumerate() {
+            let slot = cursor[a.expert as usize];
+            cursor[a.expert as usize] += 1;
+            perm[slot as usize] = i as u32;
+        }
+        MoeDispatchPlan { perm, segments, tokens: routing.tokens }
+    }
+
+    /// Ragged batch sizes indexed by expert id (zeros included) — the
+    /// histogram the grouped cost model shards over XCDs.
+    pub fn expert_tokens(&self, experts: u32) -> Vec<u32> {
+        let mut v = vec![0u32; experts.max(1) as usize];
+        for s in &self.segments {
+            v[s.expert as usize] = s.len;
+        }
+        v
+    }
+
+    /// Inverse permutation: `inv[assignment index]` = permuted slot.
+    pub fn inverse(&self) -> Vec<u32> {
+        let mut inv = vec![0u32; self.perm.len()];
+        for (slot, &a) in self.perm.iter().enumerate() {
+            inv[a as usize] = slot as u32;
+        }
+        inv
+    }
+
+    /// Gather token rows into the expert-contiguous activation buffer:
+    /// permuted slot `s` holds the row of `assignments[perm[s]].token`.
+    pub fn permute(&self, routing: &Routing, x: &[f32], d: usize) -> Vec<f32> {
+        assert_eq!(x.len(), routing.tokens as usize * d, "input shape");
+        let mut out = vec![0.0f32; self.perm.len() * d];
+        for (slot, &ai) in self.perm.iter().enumerate() {
+            let t = routing.assignments[ai as usize].token as usize;
+            out[slot * d..(slot + 1) * d].copy_from_slice(&x[t * d..(t + 1) * d]);
+        }
+        out
+    }
+
+    /// Scatter expert outputs back to token order, combining each
+    /// token's assignments with its gate weights. Tokens that lost all
+    /// assignments (sub-unit capacity) come back as zero rows.
+    pub fn unpermute(&self, routing: &Routing, y: &[f32], d: usize) -> Vec<f32> {
+        assert_eq!(y.len(), self.perm.len() * d, "permuted shape");
+        let mut out = vec![0.0f64; routing.tokens as usize * d];
+        for (slot, &ai) in self.perm.iter().enumerate() {
+            let a = &routing.assignments[ai as usize];
+            let t = a.token as usize;
+            for j in 0..d {
+                out[t * d + j] += a.weight * y[slot * d + j] as f64;
+            }
+        }
+        out.into_iter().map(|v| v as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::router::{route, MoeConfig};
+
+    #[test]
+    fn segments_are_contiguous_and_cover_all_assignments() {
+        let r = route(&MoeConfig::new(8, 2), 256);
+        let plan = MoeDispatchPlan::new(&r);
+        assert_eq!(plan.perm.len(), r.assignments.len());
+        let mut next = 0u32;
+        for s in &plan.segments {
+            assert_eq!(s.offset, next, "gap before expert {}", s.expert);
+            assert!(s.len > 0);
+            // every slot of the segment routes to the segment's expert
+            for slot in s.offset..s.offset + s.len {
+                let a = &r.assignments[plan.perm[slot as usize] as usize];
+                assert_eq!(a.expert, s.expert);
+            }
+            next += s.len;
+        }
+        assert_eq!(next as usize, plan.perm.len());
+        let total: u32 = plan.expert_tokens(8).iter().sum();
+        assert_eq!(total as usize, r.assignments.len());
+    }
+
+    #[test]
+    fn perm_and_inverse_compose_to_identity() {
+        let r = route(&MoeConfig::new(16, 2).with_skew(0.5), 512);
+        let plan = MoeDispatchPlan::new(&r);
+        let inv = plan.inverse();
+        for (slot, &ai) in plan.perm.iter().enumerate() {
+            assert_eq!(inv[ai as usize] as usize, slot);
+        }
+    }
+
+    #[test]
+    fn segment_order_preserves_token_order() {
+        // the stable counting sort keeps tokens ascending inside a segment
+        let r = route(&MoeConfig::new(8, 1), 128);
+        let plan = MoeDispatchPlan::new(&r);
+        for s in &plan.segments {
+            let toks: Vec<u32> = (s.offset..s.offset + s.len)
+                .map(|slot| r.assignments[plan.perm[slot as usize] as usize].token)
+                .collect();
+            let mut sorted = toks.clone();
+            sorted.sort_unstable();
+            assert_eq!(toks, sorted, "expert {} tokens out of order", s.expert);
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! `moe` — the Mixture-of-Experts subsystem: top-k softmax routing
+//! ([`router`]) and token alignment into expert-contiguous ragged
+//! batches ([`dispatch`]).
+//!
+//! The real HipKittens kernel suite is dominated by MoE workloads
+//! (30+ of the 71 amd-kernels are routing / grouped-GEMM variants):
+//! a tile framework that claims the breadth assembly cannot reach has
+//! to cover expert parallelism. The split here mirrors that suite:
+//!
+//! - **router** — deterministic top-k gating over a seeded logit model,
+//!   capacity-factor slot budgeting with overflow rerouting, and the
+//!   Switch-style auxiliary imbalance statistics.
+//! - **dispatch** — the "alignment" step: a stable permutation of
+//!   assignments into per-expert contiguous segments (the grouped-GEMM
+//!   operand layout) plus the weighted inverse un-permutation.
+//! - the grouped-GEMM kernel class itself lives in
+//!   [`crate::kernels::moe`] (`Op::MoeGemm` in the registry), costed by
+//!   [`crate::hk::costmodel::evaluate_grouped`]'s max-over-XCD-shards
+//!   law with chiplet-aware expert placement.
+
+pub mod dispatch;
+pub mod router;
+
+pub use dispatch::{ExpertSegment, MoeDispatchPlan};
+pub use router::{route, Assignment, LoadStats, MoeConfig, Routing};

@@ -1,0 +1,330 @@
+//! Top-k softmax gating — the control plane of the MoE subsystem.
+//!
+//! The router decides, per token, which `top_k` of the `experts` FFN
+//! experts process it. Everything here is deterministic under a fixed
+//! seed: the logit model is a seeded pseudo-Gaussian stream (the
+//! simulator has no learned gate weights to evaluate), softmax and
+//! top-k selection break ties by expert index, and capacity assignment
+//! walks tokens in order. That determinism is load-bearing — the serve
+//! engine replays traces bit-identically and `BENCH_moe.json` must be
+//! byte-stable across runs (`tests/moe.rs`).
+//!
+//! Capacity follows the Switch-Transformer convention: each expert
+//! accepts at most `ceil(capacity_factor * tokens * top_k / experts)`
+//! assignments. An assignment that lands on a full expert is *rerouted*
+//! down the token's ranked expert list; only when every expert is full
+//! or already kept by the token is the slot *dropped*. Two guarantees,
+//! both pinned down in `tests/moe.rs`:
+//!
+//! - `capacity_factor >= 1`: no token ever loses *all* of its
+//!   assignments (a token's first slot always finds free capacity), so
+//!   permute/unpermute stays an identity;
+//! - `capacity_factor >= experts / (experts - top_k + 1)`: no slot
+//!   drops at all — the free pool can never concentrate on fewer than
+//!   `top_k` experts. At the exact floor of 1.0, a token may lose a
+//!   *slot* (the residual free capacity can sit entirely on experts it
+//!   already keeps), never its last assignment.
+
+use crate::runtime::Rng;
+
+/// MoE layer configuration: model shape + routing policy.
+#[derive(Debug, Clone, Copy)]
+pub struct MoeConfig {
+    pub d_model: u32,
+    /// Hidden width of **one expert** (a dense-FLOP-matched MoE uses
+    /// `d_ff = d_ff_dense / top_k`).
+    pub d_ff: u32,
+    pub experts: u32,
+    pub top_k: u32,
+    /// Per-expert slot budget multiplier (1.0 = exactly enough slots
+    /// for a perfectly balanced assignment).
+    pub capacity_factor: f64,
+    /// Routing-skew knob of the seeded logit model, 0.0 (balanced)
+    /// ..= 1.0 (collapse onto expert 0) — the ablation axis of
+    /// `BENCH_moe.json`.
+    pub skew: f64,
+    pub seed: u64,
+}
+
+impl MoeConfig {
+    /// The bench default: 2048 d_model, 1024-wide experts.
+    pub fn new(experts: u32, top_k: u32) -> Self {
+        MoeConfig {
+            d_model: 2048,
+            d_ff: 1024,
+            experts: experts.max(1),
+            top_k: top_k.clamp(1, experts.max(1)),
+            capacity_factor: 1.25,
+            skew: 0.0,
+            seed: 7,
+        }
+    }
+
+    pub fn with_skew(mut self, skew: f64) -> Self {
+        self.skew = skew.clamp(0.0, 1.0);
+        self
+    }
+
+    pub fn with_capacity(mut self, capacity_factor: f64) -> Self {
+        self.capacity_factor = capacity_factor.max(0.0);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Per-expert slot budget for `tokens` routed tokens.
+    pub fn capacity(&self, tokens: u32) -> u32 {
+        let slots = self.capacity_factor
+            * tokens as f64
+            * self.top_k as f64
+            / self.experts as f64;
+        (slots.ceil() as u32).max(1)
+    }
+}
+
+/// One (token, expert) routing decision that survived capacity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Assignment {
+    pub token: u32,
+    pub expert: u32,
+    /// Gate weight: the token's kept softmax probabilities renormalized
+    /// to sum to 1, so un-permutation reconstitutes the token exactly.
+    pub weight: f64,
+}
+
+/// Per-expert load statistics of one routing pass.
+#[derive(Debug, Clone)]
+pub struct LoadStats {
+    /// Assignments landing on each expert (post-capacity).
+    pub tokens_per_expert: Vec<u32>,
+    /// Total surviving assignments.
+    pub assignments: u32,
+    /// Assignments that overflowed their ranked expert and found a slot
+    /// further down the list.
+    pub rerouted: u32,
+    /// Assignments dropped because every expert was full or already
+    /// kept (guaranteed zero for
+    /// `capacity_factor >= experts / (experts - top_k + 1)`).
+    pub dropped_slots: u32,
+    /// Tokens that lost *all* their assignments (guaranteed zero for
+    /// `capacity_factor >= 1`).
+    pub dropped_tokens: u32,
+    /// Switch-style auxiliary imbalance metric:
+    /// `experts * sum_e f_e * p_e`, where `f_e` is the fraction of
+    /// assignments on expert e and `p_e` the mean gate probability of
+    /// e. Equals ~1.0 for uniform routing and grows with concentration.
+    pub aux_imbalance: f64,
+    /// Max per-expert load over the balanced mean (1.0 = perfectly
+    /// balanced) — the quantity the grouped cost model's max-shard law
+    /// punishes.
+    pub max_over_mean: f64,
+}
+
+/// The routing decision for a token batch.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    pub tokens: u32,
+    pub experts: u32,
+    pub assignments: Vec<Assignment>,
+    pub stats: LoadStats,
+}
+
+/// Route `tokens` tokens through the seeded gating model.
+pub fn route(cfg: &MoeConfig, tokens: u32) -> Routing {
+    let e = cfg.experts.max(1) as usize;
+    let k = cfg.top_k.clamp(1, cfg.experts) as usize;
+    let capacity = cfg.capacity(tokens);
+    // the skew bias pushes probability mass toward low-index experts
+    let bias_gain = 6.0 * cfg.skew;
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut free: Vec<u32> = vec![capacity; e];
+    let mut assignments: Vec<Assignment> = Vec::with_capacity(tokens as usize * k);
+    let mut mean_prob = vec![0.0f64; e];
+    let mut rerouted = 0u32;
+    let mut dropped_slots = 0u32;
+    let mut dropped_tokens = 0u32;
+
+    for t in 0..tokens {
+        // seeded logit model: N(0,1) per expert minus the skew ramp
+        let logits: Vec<f64> = (0..e)
+            .map(|i| rng.normal() as f64 - bias_gain * i as f64)
+            .collect();
+        let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|l| (l - max).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let probs: Vec<f64> = exps.iter().map(|x| x / z).collect();
+        for (i, p) in probs.iter().enumerate() {
+            mean_prob[i] += p / tokens.max(1) as f64;
+        }
+
+        // rank experts by probability, ties broken by index
+        let mut ranked: Vec<usize> = (0..e).collect();
+        ranked.sort_by(|&a, &b| {
+            probs[b].total_cmp(&probs[a]).then_with(|| a.cmp(&b))
+        });
+
+        // take the top-k, rerouting overflow down the ranked list
+        let mut kept: Vec<(usize, f64)> = Vec::with_capacity(k);
+        let mut cursor = 0usize;
+        for &want in ranked.iter().take(k) {
+            // `want` is the preferred expert for this slot
+            if free[want] > 0 && !kept.iter().any(|&(x, _)| x == want) {
+                free[want] -= 1;
+                kept.push((want, probs[want]));
+                continue;
+            }
+            // overflow: walk the rest of the ranked list for a free slot
+            let mut placed = false;
+            while cursor < e {
+                let cand = ranked[cursor];
+                cursor += 1;
+                if cand == want || kept.iter().any(|&(x, _)| x == cand) {
+                    continue;
+                }
+                if free[cand] > 0 {
+                    free[cand] -= 1;
+                    kept.push((cand, probs[cand]));
+                    rerouted += 1;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                dropped_slots += 1;
+            }
+        }
+
+        if kept.is_empty() {
+            dropped_tokens += 1;
+            continue;
+        }
+        let wz: f64 = kept.iter().map(|&(_, p)| p).sum();
+        for (expert, p) in kept {
+            assignments.push(Assignment {
+                token: t,
+                expert: expert as u32,
+                weight: p / wz,
+            });
+        }
+    }
+
+    let mut tokens_per_expert = vec![0u32; e];
+    for a in &assignments {
+        tokens_per_expert[a.expert as usize] += 1;
+    }
+    let total = assignments.len() as f64;
+    let aux_imbalance = if total > 0.0 {
+        e as f64
+            * tokens_per_expert
+                .iter()
+                .zip(&mean_prob)
+                .map(|(&n, &p)| (n as f64 / total) * p)
+                .sum::<f64>()
+    } else {
+        0.0
+    };
+    let mean_load = total / e as f64;
+    let max_over_mean = if mean_load > 0.0 {
+        tokens_per_expert.iter().copied().max().unwrap_or(0) as f64 / mean_load
+    } else {
+        0.0
+    };
+
+    Routing {
+        tokens,
+        experts: cfg.experts,
+        assignments,
+        stats: LoadStats {
+            tokens_per_expert,
+            assignments: total as u32,
+            rerouted,
+            dropped_slots,
+            dropped_tokens,
+            aux_imbalance,
+            max_over_mean,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic_per_seed() {
+        let cfg = MoeConfig::new(8, 2).with_seed(11);
+        let a = route(&cfg, 256);
+        let b = route(&cfg, 256);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.stats.tokens_per_expert, b.stats.tokens_per_expert);
+        let c = route(&cfg.with_seed(12), 256);
+        assert_ne!(a.assignments, c.assignments);
+    }
+
+    #[test]
+    fn capacity_bounds_every_expert() {
+        let cfg = MoeConfig::new(8, 2).with_capacity(1.0).with_skew(0.9);
+        let r = route(&cfg, 512);
+        let cap = cfg.capacity(512);
+        for (e, &n) in r.stats.tokens_per_expert.iter().enumerate() {
+            assert!(n <= cap, "expert {e} holds {n} > capacity {cap}");
+        }
+        // heavy skew under tight capacity must reroute, not drop
+        assert!(r.stats.rerouted > 0);
+        assert_eq!(r.stats.dropped_tokens, 0);
+    }
+
+    #[test]
+    fn skew_concentrates_load() {
+        let flat = route(&MoeConfig::new(16, 2), 2048);
+        let skewed = route(&MoeConfig::new(16, 2).with_skew(0.8).with_capacity(8.0), 2048);
+        assert!(
+            skewed.stats.max_over_mean > flat.stats.max_over_mean,
+            "skewed {} !> flat {}",
+            skewed.stats.max_over_mean,
+            flat.stats.max_over_mean
+        );
+        assert!(
+            skewed.stats.aux_imbalance > flat.stats.aux_imbalance,
+            "aux: skewed {} !> flat {}",
+            skewed.stats.aux_imbalance,
+            flat.stats.aux_imbalance
+        );
+    }
+
+    #[test]
+    fn gate_weights_normalize_per_token() {
+        let r = route(&MoeConfig::new(8, 2), 128);
+        let mut sums = vec![0.0f64; 128];
+        for a in &r.assignments {
+            sums[a.token as usize] += a.weight;
+        }
+        for (t, s) in sums.iter().enumerate() {
+            assert!((s - 1.0).abs() < 1e-9, "token {t} weights sum to {s}");
+        }
+    }
+
+    #[test]
+    fn sub_unit_capacity_drops_but_counts() {
+        // capacity_factor 0.25: only a quarter of the slots exist, so
+        // drops are expected and must be accounted, never silent
+        let cfg = MoeConfig::new(8, 2).with_capacity(0.25).with_skew(1.0);
+        let r = route(&cfg, 512);
+        let placed: u32 = r.stats.tokens_per_expert.iter().sum();
+        assert_eq!(placed, r.stats.assignments);
+        assert_eq!(placed as usize, r.assignments.len());
+        assert!(r.stats.dropped_slots > 0);
+        // every slot is either placed or dropped
+        assert_eq!(
+            placed + r.stats.dropped_slots,
+            512 * 2,
+            "slots leaked: {} placed, {} dropped",
+            placed,
+            r.stats.dropped_slots
+        );
+    }
+}

@@ -568,6 +568,112 @@ pub fn serve() {
     );
 }
 
+/// MoE: top-k routing + grouped GEMM vs the iso-parameter dense FFN,
+/// across expert counts {8, 16, 64}, top-k {1, 2} and routing skew
+/// {0, 40, 80}% — the serving/training projection of the amd-kernels
+/// MoE suite. Also writes the `BENCH_moe.json` artifact (override the
+/// path with `HK_MOE_OUT`).
+pub fn moe() {
+    use crate::kernels::moe::{
+        bench_sweep, BENCH_D_FF, BENCH_D_MODEL, BENCH_TOKENS,
+    };
+    use crate::moe::{route, MoeConfig};
+
+    hr("MoE A — router load balance (8192 tokens, 16 experts, top-2)");
+    println!(
+        "{:<8} {:>10} {:>12} {:>10} {:>9}",
+        "skew", "max/mean", "aux-imbal", "rerouted", "dropped"
+    );
+    for skew in [0.0, 0.4, 0.8] {
+        let r = route(&MoeConfig::new(16, 2).with_skew(skew), 8192);
+        println!(
+            "{:<8} {:>10.2} {:>12.2} {:>10} {:>9}",
+            format!("{:.0}%", skew * 100.0),
+            r.stats.max_over_mean,
+            r.stats.aux_imbalance,
+            r.stats.rerouted,
+            r.stats.dropped_slots
+        );
+    }
+    println!("  (capacity factor 1.25: overflow reroutes down the ranked");
+    println!("   list — tokens are never lost, only displaced)");
+
+    hr(&format!(
+        "MoE B — grouped GEMM vs iso-parameter dense FFN \
+         ({BENCH_TOKENS} tokens, d_model {BENCH_D_MODEL}, d_ff {BENCH_D_FF}/expert, MI355X)"
+    ));
+    let rows = bench_sweep(M355);
+    println!(
+        "{:<8} {:>5} {:>6} {:<16} {:>9} {:>11} {:>10} {:>9}",
+        "experts", "top-k", "skew", "variant", "hw TF", "equiv TF", "dense TF", "speedup"
+    );
+    for r in &rows {
+        println!(
+            "{:<8} {:>5} {:>5}% {:<16} {:>9.0} {:>11.0} {:>10.0} {:>8.2}x",
+            r.experts,
+            r.top_k,
+            r.skew_pct,
+            r.variant,
+            r.moe_hw_tflops,
+            r.moe_equiv_tflops,
+            r.dense_tflops,
+            r.speedup()
+        );
+    }
+    println!("  (equiv TF = iso-parameter dense-FFN FLOPs delivered per second");
+    println!("   of MoE time; the max-over-XCD-shards law prices routing skew)");
+
+    let doc = moe_bench_json(M355, &rows);
+    let out = std::env::var("HK_MOE_OUT")
+        .unwrap_or_else(|_| "BENCH_moe.json".to_string());
+    std::fs::write(&out, doc.dump()).expect("write BENCH_moe.json");
+    println!("\nwrote {out}");
+}
+
+/// The `BENCH_moe.json` document: bench shapes + one row per
+/// (experts, top_k, skew) cell. Every number is a deterministic
+/// cost-model product, so the dump is byte-stable across runs.
+pub fn moe_bench_json(
+    arch: ArchId,
+    rows: &[crate::kernels::moe::MoeBenchRow],
+) -> crate::runtime::json::Json {
+    use crate::kernels::moe::{BENCH_D_FF, BENCH_D_MODEL, BENCH_TOKENS};
+    use crate::runtime::json::Json;
+    Json::obj(vec![
+        ("bench", Json::Str("moe_ffn".into())),
+        ("arch", Json::Str(arch.tag().into())),
+        (
+            "shape",
+            Json::obj(vec![
+                ("tokens", Json::Num(BENCH_TOKENS as f64)),
+                ("d_model", Json::Num(BENCH_D_MODEL as f64)),
+                ("d_ff_per_expert", Json::Num(BENCH_D_FF as f64)),
+            ]),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("experts", Json::Num(r.experts as f64)),
+                            ("top_k", Json::Num(r.top_k as f64)),
+                            ("skew_pct", Json::Num(r.skew_pct as f64)),
+                            ("variant", Json::Str(r.variant.clone())),
+                            ("moe_time_s", Json::Num(r.moe_time_s)),
+                            ("moe_hw_tflops", Json::Num(r.moe_hw_tflops)),
+                            ("moe_tflops", Json::Num(r.moe_equiv_tflops)),
+                            ("dense_time_s", Json::Num(r.dense_time_s)),
+                            ("dense_tflops", Json::Num(r.dense_tflops)),
+                            ("speedup", Json::Num(r.speedup())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// Ablations (DESIGN.md design-choice studies): scheduling-pattern x
 /// tile sweep, bank-conflict sensitivity, prefetch (pipeline) depth via
 /// the autotuner's full sweep.
@@ -653,6 +759,7 @@ pub fn all() {
     fig24();
     registry();
     serve();
+    moe();
     ablations();
 }
 
@@ -674,6 +781,7 @@ pub fn run(name: &str) -> bool {
         "fig24" | "appf" => fig24(),
         "registry" => registry(),
         "serve" => serve(),
+        "moe" => moe(),
         "ablate" | "ablations" => ablations(),
         "all" => all(),
         _ => return false,

@@ -28,6 +28,7 @@ use crate::coordinator::metrics::LatencyStats;
 use crate::error::Result;
 use crate::hk::tunecache::TuneCache;
 use crate::kernels::registry::{ArchId, Query};
+use crate::moe::router::{route, MoeConfig};
 use crate::runtime::json::Json;
 use crate::runtime::Rng;
 use crate::bail;
@@ -57,6 +58,37 @@ pub struct ServeConfig {
     /// Shared system-prompt tokens prepended to every request (0 =
     /// disabled). Served from one ref-counted prefix, not re-allocated.
     pub shared_prefix_tokens: u32,
+    /// MoE model configuration: when set, every prefill/decode step
+    /// additionally issues a router pass + an `Op::MoeGemm` grouped FFN
+    /// over the step's token batch. The KV-cache plane (admission
+    /// headroom, eviction, preemption) is untouched — MoE only adds
+    /// FFN time to the step clock.
+    pub moe: Option<MoeServeConfig>,
+}
+
+/// MoE layer shape served per step.
+#[derive(Debug, Clone, Copy)]
+pub struct MoeServeConfig {
+    pub experts: u32,
+    pub top_k: u32,
+    pub d_model: u32,
+    /// Hidden width of one expert.
+    pub d_ff: u32,
+    /// Routing-skew percentage fed to the grouped cost model (0 =
+    /// balanced routing).
+    pub skew_pct: u32,
+}
+
+impl Default for MoeServeConfig {
+    fn default() -> Self {
+        MoeServeConfig {
+            experts: 8,
+            top_k: 2,
+            d_model: 2048,
+            d_ff: 1024,
+            skew_pct: 0,
+        }
+    }
 }
 
 impl Default for ServeConfig {
@@ -70,6 +102,7 @@ impl Default for ServeConfig {
             heads_kv: 8,
             d_head: 128,
             shared_prefix_tokens: 128,
+            moe: None,
         }
     }
 }
@@ -121,6 +154,26 @@ pub struct ServeReport {
     /// Peak KV-pool occupancy over the run, 0..=1.
     pub peak_occupancy: f64,
     pub kv: KvCacheStats,
+    /// MoE-side accounting (present when the engine serves an MoE model).
+    pub moe: Option<MoeServeStats>,
+}
+
+/// Aggregated router/grouped-GEMM statistics of an MoE serving run.
+#[derive(Debug, Clone, Default)]
+pub struct MoeServeStats {
+    /// Steps that issued a router + grouped-FFN pass.
+    pub steps: u64,
+    /// Total FFN time added to the step clock.
+    pub ffn_time_s: f64,
+    /// Mean Switch-style auxiliary imbalance over the run's router
+    /// passes (~1.0 = balanced).
+    pub mean_imbalance: f64,
+    /// Assignments rerouted by capacity overflow.
+    pub rerouted: u64,
+    /// Assignment slots dropped — zero whenever the router's 1.25
+    /// capacity factor clears the `experts/(experts-top_k+1)` no-drop
+    /// bound, which holds for every default shape.
+    pub dropped_slots: u64,
 }
 
 impl ServeReport {
@@ -150,7 +203,7 @@ impl ServeReport {
     /// every number is a deterministic cost-model product, so the dump
     /// is byte-stable across runs.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut doc = Json::obj(vec![
             ("served", Json::Num(self.served as f64)),
             ("preemptions", Json::Num(self.preemptions as f64)),
             ("prefill_steps", Json::Num(self.prefill_steps as f64)),
@@ -172,7 +225,21 @@ impl ServeReport {
                 Json::Num(self.kv.shared_blocks_saved as f64),
             ),
             ("kv_evicted", Json::Num(self.kv.evicted_blocks as f64)),
-        ])
+        ]);
+        if let Some(m) = &self.moe {
+            let Json::Obj(map) = &mut doc else { unreachable!() };
+            map.insert(
+                "moe".to_string(),
+                Json::obj(vec![
+                    ("steps", Json::Num(m.steps as f64)),
+                    ("ffn_time_s", Json::Num(m.ffn_time_s)),
+                    ("mean_imbalance", Json::Num(m.mean_imbalance)),
+                    ("rerouted", Json::Num(m.rerouted as f64)),
+                    ("dropped_slots", Json::Num(m.dropped_slots as f64)),
+                ]),
+            );
+        }
+        doc
     }
 }
 
@@ -188,6 +255,8 @@ pub struct ServeEngine {
     cache: TuneCache,
     prefill_memo: HashMap<(u32, u32), f64>,
     decode_memo: HashMap<(u32, u32), f64>,
+    /// MoE FFN step time memo, keyed by routed token count.
+    moe_memo: HashMap<u32, f64>,
 }
 
 impl ServeEngine {
@@ -205,6 +274,7 @@ impl ServeEngine {
             cache: TuneCache::new(),
             prefill_memo: HashMap::new(),
             decode_memo: HashMap::new(),
+            moe_memo: HashMap::new(),
         })
     }
 
@@ -261,6 +331,56 @@ impl ServeEngine {
         self.cfg.shared_prefix_tokens + req.prompt_tokens + decoded
     }
 
+    /// Simulated wall time of the MoE FFN over `tokens` step tokens
+    /// (0.0 when the engine serves a dense model). Memoized by token
+    /// count — the grouped dispatch itself is tuned once per shape
+    /// bucket in the engine's tune cache.
+    fn moe_ffn_step_s(&mut self, tokens: u32) -> f64 {
+        let Some(m) = self.cfg.moe else {
+            return 0.0;
+        };
+        if tokens == 0 {
+            return 0.0;
+        }
+        if let Some(&t) = self.moe_memo.get(&tokens) {
+            return t;
+        }
+        let q = Query::moe_gemm(
+            self.cfg.arch,
+            tokens,
+            m.d_model,
+            m.d_ff,
+            m.experts,
+            m.top_k,
+            m.skew_pct,
+        );
+        let t = q.dispatch_with(&mut self.cache).simulate().time_s;
+        self.moe_memo.insert(tokens, t);
+        t
+    }
+
+    /// One router pass over the step's token batch, folded into the
+    /// run's MoE statistics. Seeded by the step ordinal so a replayed
+    /// trace routes identically.
+    fn moe_route_step(&mut self, tokens: u32, step: u64, stats: &mut MoeServeStats) {
+        let Some(m) = self.cfg.moe else {
+            return;
+        };
+        if tokens == 0 {
+            return;
+        }
+        // only the routing policy matters here: the FFN's width/cost is
+        // priced separately by `moe_ffn_step_s`
+        let rc = MoeConfig::new(m.experts, m.top_k)
+            .with_skew(m.skew_pct as f64 / 100.0)
+            .with_seed(0x5EED ^ step);
+        let r = route(&rc, tokens);
+        stats.steps += 1;
+        stats.mean_imbalance += r.stats.aux_imbalance;
+        stats.rerouted += u64::from(r.stats.rerouted);
+        stats.dropped_slots += u64::from(r.stats.dropped_slots);
+    }
+
     /// Serve a trace to completion on the trace clock.
     pub fn run_trace(&mut self, trace: &[ServeRequest]) -> Result<ServeReport> {
         if trace.is_empty() {
@@ -300,6 +420,7 @@ impl ServeEngine {
         // tokens of *finished* requests only: preempted-and-recomputed
         // work must not inflate delivered throughput
         let mut delivered_tokens = 0u64;
+        let mut moe_stats = MoeServeStats::default();
 
         while finished < trace.len() {
             // fold in everything that has arrived by `now`
@@ -385,7 +506,16 @@ impl ServeEngine {
                     .map(|&i| self.context_of(&trace[i], 0))
                     .max()
                     .expect("non-empty batch");
-                let dt = self.prefill_step_s(batch, seq);
+                let mut dt = self.prefill_step_s(batch, seq);
+                // the MoE FFN processes every prompt token of the batch
+                let step_tokens = batch.saturating_mul(seq);
+                let ffn = self.moe_ffn_step_s(step_tokens);
+                if ffn > 0.0 {
+                    let ordinal = moe_stats.steps;
+                    self.moe_route_step(step_tokens, ordinal, &mut moe_stats);
+                    moe_stats.ffn_time_s += ffn;
+                    dt += ffn;
+                }
                 now += dt;
                 prefill_steps += 1;
                 for &idx in &newly {
@@ -429,7 +559,16 @@ impl ServeEngine {
                 .map(|r| self.context_of(&trace[r.idx], r.decoded))
                 .max()
                 .expect("non-empty running set");
-            let dt = self.decode_step_s(batch, ctx);
+            let mut dt = self.decode_step_s(batch, ctx);
+            // decode emits one token per running sequence: route that
+            // batch and pay the grouped FFN on the step clock
+            let ffn = self.moe_ffn_step_s(batch);
+            if ffn > 0.0 {
+                let ordinal = moe_stats.steps;
+                self.moe_route_step(batch, ordinal, &mut moe_stats);
+                moe_stats.ffn_time_s += ffn;
+                dt += ffn;
+            }
             now += dt;
             decode_steps += 1;
 
@@ -479,6 +618,13 @@ impl ServeEngine {
             e2e,
             peak_occupancy: peak_occ,
             kv: self.kv.stats().since(&kv_base),
+            moe: self.cfg.moe.map(|_| {
+                let mut m = moe_stats;
+                if m.steps > 0 {
+                    m.mean_imbalance /= m.steps as f64;
+                }
+                m
+            }),
         })
     }
 }
@@ -532,6 +678,40 @@ mod tests {
         let rep = eng.run_trace(&trace).unwrap();
         assert_eq!(rep.served, 24);
         eng.kv().validate().unwrap();
+    }
+
+    #[test]
+    fn moe_model_adds_ffn_time_but_not_kv_pressure() {
+        let trace = serve_trace(12, 300.0, 21);
+        let dense_cfg = ServeConfig { max_batch: 8, ..ServeConfig::default() };
+        let moe_cfg = ServeConfig {
+            moe: Some(MoeServeConfig::default()),
+            ..dense_cfg.clone()
+        };
+        let mut dense = ServeEngine::new(dense_cfg).unwrap();
+        let mut moe = ServeEngine::new(moe_cfg).unwrap();
+        let dr = dense.run_trace(&trace).unwrap();
+        let mr = moe.run_trace(&trace).unwrap();
+        assert_eq!(mr.served, 12);
+        // the FFN rides the step clock: every step got slower
+        assert!(mr.makespan_s > dr.makespan_s, "{} !> {}", mr.makespan_s, dr.makespan_s);
+        let stats = mr.moe.as_ref().expect("moe stats present");
+        assert_eq!(stats.steps, mr.prefill_steps + mr.decode_steps);
+        assert!(stats.ffn_time_s > 0.0);
+        assert!(stats.mean_imbalance > 0.5, "{}", stats.mean_imbalance);
+        assert!(dr.moe.is_none());
+        // KV plane untouched: the MoE engine finishes the same trace
+        // without extra preemption pressure
+        assert_eq!(mr.preemptions, dr.preemptions);
+        // and the payload is deterministic across replays
+        let mut again = ServeEngine::new(ServeConfig {
+            moe: Some(MoeServeConfig::default()),
+            max_batch: 8,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let rep2 = again.run_trace(&trace).unwrap();
+        assert_eq!(mr.to_json().dump(), rep2.to_json().dump());
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod engine;
 pub mod kvcache;
 
 pub use engine::{
-    serve_trace, ServeConfig, ServeEngine, ServeReport, ServeRequest,
+    serve_trace, MoeServeConfig, MoeServeStats, ServeConfig, ServeEngine,
+    ServeReport, ServeRequest,
 };
 pub use kvcache::{KvCacheConfig, KvCacheManager, KvCacheStats};

@@ -30,6 +30,64 @@ fn chiplet_remap_bijective_over_random_grids() {
 }
 
 #[test]
+fn chiplet_remap_bijective_for_every_fleet_xcd_count() {
+    // The expert-placement path shards grouped GEMMs over whatever XCD
+    // count the arch reports (8 on MI3xx, 2 on the B200-like part, 1 on
+    // the H100-like part). The grid swizzle must stay a bijection over
+    // the full grid for all of them, not just the CDNA default of 8.
+    let mut rng = Rng::new(9);
+    for n_xcds in [1u32, 2, 4, 8, 16] {
+        for _ in 0..12 {
+            let rows = 1 + rng.below(64) as u32;
+            let cols = 1 + rng.below(64) as u32;
+            let w = 1 + rng.below(10) as u32;
+            let c = 1 + rng.below(128) as u32;
+            let swz = ChipletSwizzle::new(n_xcds, w, c);
+            let sched = swz.schedule(rows, cols);
+            assert_eq!(sched.len(), (rows * cols) as usize);
+            let seen: HashSet<(u32, u32)> = sched.into_iter().collect();
+            assert_eq!(
+                seen.len(),
+                (rows * cols) as usize,
+                "xcds={n_xcds} W={w} C={c} {rows}x{cols} not a bijection"
+            );
+            // every target is in-grid
+            for (r, col) in &seen {
+                assert!(*r < rows && *col < cols);
+            }
+        }
+    }
+}
+
+#[test]
+fn expert_placement_covers_all_loads_and_balances_uniform_work() {
+    use hipkittens::hk::chiplet::place_experts;
+    let mut rng = Rng::new(13);
+    for n_xcds in [1u32, 2, 8] {
+        for _ in 0..10 {
+            let n = 1 + rng.below(40) as usize;
+            let loads: Vec<f64> =
+                (0..n).map(|_| rng.below(1000) as f64).collect();
+            let p = place_experts(n_xcds, &loads);
+            assert_eq!(p.len(), n);
+            assert!(p.iter().all(|&x| x < n_xcds));
+            // LPT bound: max shard <= mean + heaviest single expert
+            let mut shard = vec![0.0f64; n_xcds as usize];
+            for (e, &x) in p.iter().enumerate() {
+                shard[x as usize] += loads[e];
+            }
+            let total: f64 = loads.iter().sum();
+            let heaviest = loads.iter().cloned().fold(0.0, f64::max);
+            let max_shard = shard.iter().cloned().fold(0.0, f64::max);
+            assert!(
+                max_shard <= total / n_xcds as f64 + heaviest + 1e-9,
+                "xcds={n_xcds} max {max_shard} total {total} heavy {heaviest}"
+            );
+        }
+    }
+}
+
+#[test]
 fn chiplet_grouping_keeps_chunks_on_one_xcd() {
     // After remapping, each chunk of C consecutive remapped positions in
     // the full-cycle prefix must trace back to one XCD.

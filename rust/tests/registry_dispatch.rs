@@ -9,7 +9,7 @@ use hipkittens::coordinator::{
 };
 use hipkittens::hk::tunecache::TuneCache;
 use hipkittens::kernels::registry::{
-    variants, ArchId, KernelKey, Op, Query, ShapeClass,
+    variants, variants_or_fallback, ArchId, KernelKey, Op, Query, ShapeClass,
 };
 use hipkittens::sim::Dtype;
 
@@ -20,14 +20,42 @@ fn every_kernel_key_resolves_to_a_variant() {
             for shape in ShapeClass::ALL {
                 for arch in ArchId::ALL {
                     let key = KernelKey { op, dtype, shape, arch };
-                    let vs = variants(&key);
+                    // arch gaps resolve through the CDNA3 fallback
+                    // instead of panicking the dispatcher
+                    let (vs, fell_back) = variants_or_fallback(&key);
                     assert!(!vs.is_empty(), "{} has no variants", key.id());
                     for v in &vs {
                         assert!(!v.name.is_empty());
                     }
+                    // the CDNA3 table itself must be total: it is the
+                    // fallback of last resort
+                    if arch == ArchId::Mi325x {
+                        assert!(!fell_back, "{} fell back from CDNA3", key.id());
+                        assert!(!variants(&key).is_empty());
+                    }
                 }
             }
         }
+    }
+}
+
+#[test]
+fn uncovered_arch_dispatch_warns_and_uses_cdna3_table() {
+    // The NVIDIA-like archs carry no native grouped-MoE table; dispatch
+    // must resolve them against the CDNA3 variants instead of panicking.
+    for arch in [ArchId::B200Like, ArchId::H100Like] {
+        let q = Query::moe_ffn(arch, 2048, 8, 2);
+        let key = q.key();
+        assert!(variants(&key).is_empty(), "{} grew a native table", key.id());
+        let (vs, fell_back) = variants_or_fallback(&key);
+        assert!(fell_back && !vs.is_empty(), "{}", key.id());
+        let cdna3 = variants(&KernelKey { arch: ArchId::Mi325x, ..key });
+        let names: Vec<&str> = vs.iter().map(|v| v.name).collect();
+        let cdna3_names: Vec<&str> = cdna3.iter().map(|v| v.name).collect();
+        assert_eq!(names, cdna3_names, "fallback is not the CDNA3 table");
+        let d = q.dispatch_with(&mut TuneCache::new());
+        let p = d.simulate();
+        assert!(p.time_s > 0.0 && p.time_s.is_finite(), "{}", key.id());
     }
 }
 
@@ -40,6 +68,7 @@ fn dispatch_produces_runnable_configs_for_all_ops() {
         Query::attn_gqa(arch, 2048, 128, false),
         Query::attn_gqa(arch, 2048, 128, false).bwd(),
         Query::decode_gqa(arch, 16, 8192, 16),
+        Query::moe_ffn(arch, 4096, 8, 2),
         Query::fused_ln_paper(arch, 2048),
         Query::rope_paper(arch, 2048),
     ];
