@@ -14,4 +14,6 @@ pub use service::{
     mixed_trace, poisson_trace, AttnRequest, BatchingService, MixedReport,
     MixedRequest, MixedService, OpClass, ServiceConfig,
 };
-pub use train::{kernel_plan, predicted_step_s, Path, TrainShape, Trainer};
+pub use train::{
+    fwd_bwd_split, kernel_plan, predicted_step_s, Path, TrainShape, Trainer,
+};

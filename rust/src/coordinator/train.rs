@@ -241,6 +241,34 @@ pub fn kernel_plan(arch: ArchId, s: &TrainShape) -> Vec<(String, KernelPerf)> {
         ("fused-ln", Query::fused_ln(arch, tokens, s.d_model)),
         ("rope", Query::rope(arch, s.batch, s.heads, s.seq, s.d_head)),
     ]);
+    // Backward is priced separately, not as a forward multiple: the
+    // attention entry above dispatches the dQ/dK/dV recomputation
+    // subsystem, and each GEMM-shaped layer adds a dgrad+wgrad entry
+    // (2x the forward FLOPs, priced as one doubled-M dispatch).
+    if s.moe_experts > 0 {
+        let top_k = s.moe_top_k.max(1);
+        queries.push((
+            "moe-ffn-bwd",
+            Query::moe_gemm(
+                arch,
+                2 * tokens,
+                s.d_model,
+                (2 * s.d_model / top_k).max(1),
+                s.moe_experts,
+                top_k,
+                0,
+            ),
+        ));
+    } else {
+        queries.push((
+            "mlp-gemm-bwd",
+            Query::gemm(arch, Dtype::Bf16, 2 * tokens, 4 * s.d_model, s.d_model),
+        ));
+    }
+    queries.push((
+        "proj-gemm-bwd",
+        Query::gemm(arch, Dtype::Bf16, 2 * tokens, s.d_model, s.d_model),
+    ));
     queries
         .into_iter()
         .map(|(name, q)| (name.to_string(), q.dispatch().simulate()))
@@ -250,6 +278,19 @@ pub fn kernel_plan(arch: ArchId, s: &TrainShape) -> Vec<(String, KernelPerf)> {
 /// Predicted step time: the sum of the plan's kernel times.
 pub fn predicted_step_s(plan: &[(String, KernelPerf)]) -> f64 {
     plan.iter().map(|(_, p)| p.time_s).sum()
+}
+
+/// Split a plan into (forward, backward) predicted seconds — the
+/// backward entries are the `-bwd`-suffixed dispatches (the attention
+/// one being the dQ/dK/dV recomputation subsystem).
+pub fn fwd_bwd_split(plan: &[(String, KernelPerf)]) -> (f64, f64) {
+    plan.iter().fold((0.0, 0.0), |(f, b), (name, p)| {
+        if name.ends_with("bwd") {
+            (f, b + p.time_s)
+        } else {
+            (f + p.time_s, b)
+        }
+    })
 }
 
 #[cfg(test)]
@@ -271,10 +312,27 @@ mod tests {
         assert!(dense.iter().any(|(n, _)| n == "mlp-gemm"));
         assert!(!dense.iter().any(|(n, _)| n == "moe-ffn"));
         assert!(moe.iter().any(|(n, _)| n == "moe-ffn"));
+        assert!(moe.iter().any(|(n, _)| n == "moe-ffn-bwd"));
         assert!(!moe.iter().any(|(n, _)| n == "mlp-gemm"));
         for (name, perf) in &moe {
             assert!(perf.time_s > 0.0 && perf.time_s.is_finite(), "{name}");
         }
         assert!(predicted_step_s(&moe) > 0.0);
+    }
+
+    #[test]
+    fn plan_prices_fwd_and_bwd_separately() {
+        let plan = kernel_plan(ArchId::Mi355x, &TrainShape::default());
+        let (fwd, bwd) = fwd_bwd_split(&plan);
+        assert!(fwd > 0.0 && bwd > 0.0);
+        assert!((fwd + bwd - predicted_step_s(&plan)).abs() < 1e-12);
+        // attention backward must cost strictly more than its forward
+        let t = |n: &str| {
+            plan.iter().find(|(name, _)| name == n).unwrap().1.time_s
+        };
+        assert!(t("attn-bwd") > t("attn-fwd"));
+        // dense plan carries dgrad+wgrad entries for both GEMMs
+        assert!(plan.iter().any(|(n, _)| n == "mlp-gemm-bwd"));
+        assert!(plan.iter().any(|(n, _)| n == "proj-gemm-bwd"));
     }
 }

@@ -227,6 +227,111 @@ pub fn evaluate_grouped(
     }
 }
 
+/// Register-pressure summary of the backward kernel's hot loop, fed to
+/// [`evaluate_bwd`] (the Table 1 / §3.2.1 quantities: what the wave
+/// demands, what the occupancy leaves it, and what fell out).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BwdRegPressure {
+    /// Per-wave 32-bit registers the tile set demands.
+    pub demand: u32,
+    /// Per-wave budget at the variant's occupancy (512 at one wave per
+    /// SIMD, 256 at two — the 4-wave vs 8-wave fork of Table 3).
+    pub budget: u32,
+    /// Registers spilled to scratch (demand beyond the whole file).
+    pub spilled: u32,
+    /// `v_accvgpr_read` moves per hot-loop iteration (compiler mode).
+    pub acc_moves_per_iter: u32,
+}
+
+/// Scratch-traffic penalty per hot-loop iteration for `spilled`
+/// registers, in cycles. Deliberately **linear with a zero intercept**:
+/// the cost of spilling is proportional to what spilled, so crossing the
+/// 256-register (or 512-register) boundary by one register costs one
+/// register's worth of scratch traffic — not a cliff. The continuity of
+/// this function at the boundary is asserted in `tests/hk_properties.rs`.
+pub fn spill_penalty_cycles(spilled: u32) -> u64 {
+    // one dword per lane round-trips through scratch: ~12 cycles of
+    // issue + bandwidth occupancy per register per iteration
+    12 * spilled as u64
+}
+
+/// Full backward-attention evaluation: the dO*O preprocess pass, the
+/// main dK/dV (+dQ) recomputation pass, the optional split-dQ pass, and
+/// an explicit register-pressure term, combined serially.
+#[derive(Debug, Clone)]
+pub struct BwdEval {
+    /// The combined kernel-level estimate (TFLOPS over the *algorithmic*
+    /// FLOP count — the paper's Fig. 8 metric).
+    pub perf: KernelPerf,
+    /// Time in the dO*O rowsum preprocess pass.
+    pub preprocess_s: f64,
+    /// Time in the main kv-stationary recomputation pass.
+    pub main_s: f64,
+    /// Time in the q-stationary dQ pass (0 for the atomic-dQ fusion).
+    pub dq_s: f64,
+    /// Register-pressure scratch time ([`spill_penalty_cycles`]).
+    pub spill_s: f64,
+    /// FLOPs the hardware actually executes, recompute included.
+    pub hw_flops: f64,
+    /// The recompute share of `hw_flops` (S=QK^T re-materialization).
+    pub recompute_flops: f64,
+    pub pressure: BwdRegPressure,
+}
+
+/// Combine the backward passes into one [`BwdEval`].
+///
+/// `iter_rounds` is the main pass's engine rounds x hot-loop iterations
+/// — the multiplier for the per-iteration spill penalty. `alg_flops` is
+/// the TFLOPS numerator (the conventional 2.5x-forward count);
+/// `hw_flops` additionally counts what the chosen dQ strategy
+/// recomputes.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_bwd(
+    arch: &Arch,
+    name: &str,
+    pre: &KernelPerf,
+    main: &KernelPerf,
+    dq: Option<&KernelPerf>,
+    pressure: BwdRegPressure,
+    iter_rounds: f64,
+    alg_flops: f64,
+    hw_flops: f64,
+    recompute_flops: f64,
+    total_bytes: f64,
+) -> BwdEval {
+    let spill_s =
+        iter_rounds * spill_penalty_cycles(pressure.spilled) as f64 * arch.cycle_s();
+    let dq_s = dq.map(|p| p.time_s).unwrap_or(0.0);
+    let time_s = pre.time_s + main.time_s + dq_s + spill_s;
+    let compute_s = pre.compute_s
+        + main.compute_s
+        + dq.map(|p| p.compute_s).unwrap_or(0.0)
+        + spill_s;
+    let mem_s = pre.mem_s + main.mem_s + dq.map(|p| p.mem_s).unwrap_or(0.0);
+    let perf = KernelPerf {
+        name: name.to_string(),
+        tflops: alg_flops / time_s / 1e12,
+        time_s,
+        compute_s,
+        mem_s,
+        mfma_util: main.mfma_util,
+        l2_hit: 0.0,
+        llc_hit: 0.0,
+        eff_bw_tbps: total_bytes / time_s / 1e12,
+        info: main.info.clone(),
+    };
+    BwdEval {
+        perf,
+        preprocess_s: pre.time_s,
+        main_s: main.time_s,
+        dq_s,
+        spill_s,
+        hw_flops,
+        recompute_flops,
+        pressure,
+    }
+}
+
 /// Achieved fraction of the dtype peak — the paper's "efficiency ratio".
 pub fn efficiency(arch: &Arch, dtype: crate::sim::arch::Dtype, tflops: f64) -> f64 {
     tflops / arch.peak_tflops(dtype)

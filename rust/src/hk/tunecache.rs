@@ -213,7 +213,7 @@ mod tests {
     fn round_trips_through_json() {
         let mut cache = TuneCache::new();
         cache.put("gemm/bf16/large/mi355x", rec("pp-256x256", 8, 64));
-        cache.put("attn-bwd/bf16/medium/mi355x", rec("bwd-il4", 0, 0));
+        cache.put("attn-bwd/bf16/medium/mi355x", rec("bwd-4wave", 0, 0));
         let back = TuneCache::from_json(&cache.to_json()).unwrap();
         assert_eq!(back, cache);
     }

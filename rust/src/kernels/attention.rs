@@ -5,12 +5,31 @@
 //! (batch, head), interleaving online-softmax VALU ops with QK/AV MFMAs
 //! while the paired wave prefetches the next K/V tiles (listing E.3).
 //!
-//! Backward: the register-heavy workload (5 matmuls per tile pair +
-//! recompute). It mixes MFMA shapes (16x16x32 and 32x32x16), row- and
-//! column-layout loads from the same shared tiles, and *pinned register
-//! tiles* so AGPRs can feed MFMA operands — the Table 1 experiment.
+//! Backward: the register-heavy workload, rebuilt as a first-class
+//! subsystem (Figs. 8/15, Tables 1/3):
+//!
+//! 1. a **dO*O preprocess pass** materializes the per-row delta vector
+//!    (rowsum of dO o O) the softmax gradient needs;
+//! 2. the **main kv-stationary pass** recomputes S = QK^T and P per
+//!    (q, kv) tile pair and runs the 5-matmul dQ/dK/dV inner loop,
+//!    mixing MFMA shapes (16x16x32 and 32x32x16), row- and
+//!    column-layout loads from the same shared tiles, and *pinned
+//!    register tiles* so AGPRs can feed MFMA operands (Table 1);
+//! 3. dQ is accumulated either with `global_atomic_add` from every kv
+//!    block ([`DqMode::Atomic`], the fused flagship) or by a separate
+//!    q-stationary **dQ recomputation pass** ([`DqMode::Split`], which
+//!    re-materializes S and dP but needs no atomics).
+//!
+//! The register story is the 4-wave one: one wave per SIMD keeps the
+//! full 512-register file and 64-row resident K/V tiles; a variant that
+//! forces 8 waves halves the budget to 256 registers, halves the
+//! resident tiles, and pays explicit LDS re-staging plus the linear
+//! scratch-spill model of [`crate::hk::costmodel::spill_penalty_cycles`]
+//! for anything that still does not fit.
 
-use crate::hk::costmodel::{evaluate_streaming, KernelPerf};
+use crate::hk::costmodel::{
+    evaluate_bwd, evaluate_streaming, BwdEval, BwdRegPressure, KernelPerf,
+};
 use crate::hk::regalloc::{allocate, AllocResult, RegMode, TileDemand};
 use crate::hk::schedule::{BuiltSchedule, Cluster, LoopSpec};
 use crate::hk::{interleave, pingpong};
@@ -18,6 +37,19 @@ use crate::kernels::gemm::Pattern;
 use crate::sim::arch::{Arch, Dtype, MFMA_16X16X32, MFMA_32X32X16};
 use crate::sim::instr::Instr;
 use crate::sim::lds::DsInstr;
+
+/// How the backward kernel accumulates dQ across kv-stationary blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DqMode {
+    /// `global_atomic_add` dQ contributions from every kv block — one
+    /// fused kernel, 5 matmuls per tile pair, read-modify-write dQ
+    /// traffic (the flagship layout; `bwd-atomic-dq` in the registry).
+    Atomic,
+    /// A separate q-stationary dQ pass that recomputes S and dP — no
+    /// atomics (bitwise-deterministic accumulation order) at the price
+    /// of two extra recompute matmuls per tile pair (`bwd-4wave`).
+    Split,
+}
 
 /// Attention problem + implementation description.
 #[derive(Debug, Clone, Copy)]
@@ -32,6 +64,8 @@ pub struct AttnConfig {
     pub reg_mode: RegMode,
     /// Bank-conflict ways on shared-memory loads (1 = HK swizzles).
     pub lds_ways: u32,
+    /// dQ accumulation strategy of the backward pass (ignored forward).
+    pub dq_mode: DqMode,
 }
 
 impl AttnConfig {
@@ -48,6 +82,7 @@ impl AttnConfig {
             pattern: Pattern::PingPong8,
             reg_mode: RegMode::Pinned,
             lds_ways: 1,
+            dq_mode: DqMode::Atomic,
         }
     }
 
@@ -71,25 +106,106 @@ impl AttnConfig {
         }
     }
 
-    /// Backward-pass FLOPs (5 matmuls + recompute ~ 2.5x forward).
+    /// Query heads sharing one KV head (1 for MHA, 8 for the paper's
+    /// GQA shape) — the KV-head reduction factor of the backward pass.
+    pub fn group_size(&self) -> u32 {
+        (self.heads_q / self.heads_kv.max(1)).max(1)
+    }
+
+    /// Backward-pass algorithmic FLOPs: the conventional 2.5x-forward
+    /// count (5 matmuls per tile pair, S-recompute included) — the
+    /// Fig. 8 TFLOPS numerator.
     pub fn bwd_flops(&self) -> f64 {
         2.5 * self.fwd_flops()
+    }
+
+    /// The recompute share of [`Self::bwd_hw_flops`]: the main pass
+    /// re-materializes S = QK^T (one of its 5 matmuls); the split-dQ
+    /// pass re-materializes S *and* dP a second time, adding a full
+    /// forward's worth. Either way `bwd_hw_flops - bwd_recompute_flops`
+    /// is the 2x-forward algorithmic gradient work.
+    pub fn bwd_recompute_flops(&self) -> f64 {
+        match self.dq_mode {
+            DqMode::Atomic => 0.5 * self.fwd_flops(),
+            DqMode::Split => 1.5 * self.fwd_flops(),
+        }
+    }
+
+    /// FLOPs the hardware executes under a dQ strategy: the split-dQ
+    /// pass re-materializes S and dP a second time (2 extra matmuls).
+    pub fn bwd_hw_flops(&self) -> f64 {
+        match self.dq_mode {
+            DqMode::Atomic => self.bwd_flops(),
+            DqMode::Split => self.bwd_flops() + self.fwd_flops(),
+        }
+    }
+
+    /// One activation plane of the query side (elements).
+    fn q_plane(&self) -> f64 {
+        self.batch as f64 * self.heads_q as f64 * self.seq as f64
+            * self.d_head as f64
+    }
+
+    /// One activation plane of the KV side (elements) — scales with
+    /// `heads_kv`, which is where GQA KV-head sharing pays off.
+    fn kv_plane(&self) -> f64 {
+        self.batch as f64 * self.heads_kv as f64 * self.seq as f64
+            * self.d_head as f64
+    }
+
+    /// The lse + delta row vectors (f32 bytes).
+    fn vector_bytes(&self) -> f64 {
+        2.0 * self.batch as f64 * self.heads_q as f64 * self.seq as f64 * 4.0
     }
 
     /// Bytes streamed from HBM for the forward pass: Q once, K/V per
     /// q-block wave-front (bounded by LLC reuse), O once.
     pub fn fwd_bytes(&self) -> f64 {
         let e = 2.0; // bf16
-        let q = self.batch as f64 * self.heads_q as f64 * self.seq as f64
-            * self.d_head as f64;
-        let kv = 2.0 * self.batch as f64 * self.heads_kv as f64
-            * self.seq as f64 * self.d_head as f64;
-        (2.0 * q + kv) * e
+        (2.0 * self.q_plane() + 2.0 * self.kv_plane()) * e
     }
 
+    /// Bytes of the dO*O preprocess pass: stream O and dO once, write
+    /// the delta vector.
+    pub fn bwd_preprocess_bytes(&self) -> f64 {
+        2.0 * self.q_plane() * 2.0 + self.vector_bytes() / 2.0
+    }
+
+    /// Bytes of the main kv-stationary pass: Q/dO streamed per kv
+    /// wave-front, K/V + dK/dV once per KV head (the GQA reduction),
+    /// plus the dQ read-modify-write traffic under atomic accumulation.
+    pub fn bwd_main_bytes(&self) -> f64 {
+        let e = 2.0; // bf16 activations
+        let f = 4.0; // f32 gradient accumulation
+        let common = 2.0 * self.q_plane() * e
+            + 2.0 * self.kv_plane() * e
+            + 2.0 * self.kv_plane() * f
+            + self.vector_bytes();
+        match self.dq_mode {
+            DqMode::Atomic => common + 2.0 * self.q_plane() * f,
+            DqMode::Split => common,
+        }
+    }
+
+    /// Bytes of the split-dQ pass: Q/dO resident, K/V re-streamed, dQ
+    /// written once (0 under atomic accumulation).
+    pub fn bwd_dq_bytes(&self) -> f64 {
+        match self.dq_mode {
+            DqMode::Atomic => 0.0,
+            DqMode::Split => {
+                2.0 * self.q_plane() * 2.0
+                    + 2.0 * self.kv_plane() * 2.0
+                    + self.q_plane() * 4.0
+                    + self.vector_bytes()
+            }
+        }
+    }
+
+    /// Total backward HBM traffic across all passes. Monotone
+    /// non-decreasing in `heads_kv`: KV-head sharing only ever removes
+    /// K/V/dK/dV traffic (asserted in `tests/attn_bwd.rs`).
     pub fn bwd_bytes(&self) -> f64 {
-        // q,k,v,o,do read; dq,dk,dv written; lse/delta vectors small
-        2.5 * self.fwd_bytes()
+        self.bwd_preprocess_bytes() + self.bwd_main_bytes() + self.bwd_dq_bytes()
     }
 }
 
@@ -127,6 +243,24 @@ pub fn bwd_reg_demand(cfg: &AttnConfig) -> Vec<TileDemand> {
     ]
 }
 
+/// Total per-wave register demand of the backward hot loop as a pure
+/// function of the tile geometry — the quantity the 4-wave/8-wave fork
+/// turns on. Monotone non-decreasing in `d_head`, `q_blk` and `kv_blk`
+/// (every term is; asserted in `tests/hk_properties.rs`).
+pub fn bwd_register_demand(d_head: u32, q_blk: u32, kv_blk: u32) -> u32 {
+    let (d, q, kv) = (d_head as u64, q_blk as u64, kv_blk as u64);
+    let regs = |elems: u64, bytes: u64| ((elems * bytes) / (64 * 4)).max(1) as u32;
+    // K + V resident, Q + dO fragments, P + dS intermediates,
+    // dq/dk/dv f32 accumulators, softmax vectors + addressing — the
+    // same tile set `bwd_reg_demand` hands to the allocator.
+    2 * regs(kv * d, 2)
+        + 2 * regs(q * d, 2)
+        + 2 * regs(q * kv, 4)
+        + regs(q * d, 4) / 2
+        + 2 * (regs(kv * d, 4) / 2)
+        + 24
+}
+
 /// KV tile rows of the backward kernel under a pattern (see
 /// `bwd_reg_demand`).
 fn bwd_kv_blk(cfg: &AttnConfig) -> u32 {
@@ -135,6 +269,13 @@ fn bwd_kv_blk(cfg: &AttnConfig) -> u32 {
     } else {
         32
     }
+}
+
+/// Register allocation of the backward hot loop under the config's
+/// occupancy and register mode.
+pub fn bwd_alloc(arch: &Arch, cfg: &AttnConfig) -> AllocResult {
+    let waves_per_simd = cfg.pattern.waves().div_ceil(arch.simds_per_cu);
+    allocate(arch, waves_per_simd, cfg.reg_mode, &bwd_reg_demand(cfg))
 }
 
 fn softmax_valu_cycles(q_blk: u64, kv_blk: u64) -> u64 {
@@ -229,15 +370,16 @@ pub fn build_fwd_spec(cfg: &AttnConfig) -> LoopSpec {
     }
 }
 
-/// Backward-pass LoopSpec: 5 matmuls per (q, kv) tile pair, mixed MFMA
-/// shapes, AccMove penalties under compiler-managed registers.
+/// Main backward-pass LoopSpec (kv-stationary): recompute S = QK^T and
+/// P per (q, kv) tile pair, then the dQ/dK/dV matmul chain — 5 matmuls
+/// under atomic dQ, 4 when the split-dQ pass owns dQ — with mixed MFMA
+/// shapes, column-layout shared-tile reloads, and AccMove penalties
+/// under compiler-managed registers.
 pub fn build_bwd_spec(arch: &Arch, cfg: &AttnConfig) -> LoopSpec {
     let d = cfg.d_head;
     let q_blk = 16u32;
     let kv_blk = bwd_kv_blk(cfg);
-    let waves_per_simd = cfg.pattern.waves().div_ceil(arch.simds_per_cu);
-    let alloc: AllocResult =
-        allocate(arch, waves_per_simd, cfg.reg_mode, &bwd_reg_demand(cfg));
+    let alloc: AllocResult = bwd_alloc(arch, cfg);
 
     let pair_flops = 2 * q_blk as u64 * kv_blk as u64 * d as u64;
     // recompute QK + dV + dP + dK + dQ = 5 matmuls
@@ -283,15 +425,23 @@ pub fn build_bwd_spec(arch: &Arch, cfg: &AttnConfig) -> LoopSpec {
     ]);
     let mut c1 = acc_move(2);
     c1.extend([
-        // dP = dO V^T ; dS ; dK += dS^T Q ; dQ += dS K
+        // dP = dO V^T ; dS ; dK += dS^T Q
         Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: m16 },
         Instr::Valu { cycles: sm },
         Instr::Mfma { shape: MFMA_32X32X16, dtype: Dtype::Bf16, count: m32 },
-        Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: m16 },
     ]);
+    if cfg.dq_mode == DqMode::Atomic {
+        // dQ += dS K fused here; the split variant owns dQ in its own
+        // q-stationary pass (`build_bwd_dq_spec`)
+        c1.push(Instr::Mfma {
+            shape: MFMA_16X16X32,
+            dtype: Dtype::Bf16,
+            count: m16,
+        });
+    }
     let compute = vec![Cluster::new("qk+dv", c0), Cluster::new("dp+dk+dq", c1)];
 
-    let mut load_q = vec![
+    let load_q = vec![
         Instr::VMemLoad { bytes: q_bytes, to_lds: true, issues },
         // row-layout read for Q, column-layout (transpose) read of
         // the same shared tile for Q^T — the D.1 co-occurrence
@@ -314,13 +464,18 @@ pub fn build_bwd_spec(arch: &Arch, cfg: &AttnConfig) -> LoopSpec {
             count: ds_count,
         },
     ];
-    if alloc.spilled > 0 {
-        // spilled working-set registers reload/store from scratch every
-        // iteration: 4 B x 64 lanes per register, half the set per stage
-        let scratch = alloc.spilled as u64 * 256 / 2;
-        load_q.push(Instr::VMemLoad { bytes: scratch, to_lds: false, issues: 2 });
-        load_do.push(Instr::VMemStore { bytes: scratch, issues: 2 });
+    if cfg.dq_mode == DqMode::Atomic {
+        // global_atomic_add of this tile pair's dQ contribution: the
+        // read-modify-write doubles the wire traffic of the store
+        load_do.push(Instr::VMemStore {
+            bytes: (2 * q_blk * d * 4 / cfg.pattern.waves()) as u64,
+            issues: 1,
+        });
     }
+    // Registers spilled past the whole file are priced once, by the
+    // evaluator's per-iteration scratch term (costmodel::
+    // spill_penalty_cycles) — the schedule carries no extra instrs, so
+    // the penalty has a single source of truth.
     let memory = vec![
         Cluster::new("loadQ", load_q),
         Cluster::new("loadDO", load_do),
@@ -347,6 +502,130 @@ pub fn build_bwd_spec(arch: &Arch, cfg: &AttnConfig) -> LoopSpec {
         memory,
         iters,
         epilogue,
+    }
+}
+
+/// The dO*O preprocess LoopSpec: stream O and dO row tiles, multiply
+/// elementwise and rowsum into the delta vector the softmax gradient
+/// consumes. Pure streaming — each wave owns a 32-row stripe per
+/// iteration.
+pub fn build_bwd_preprocess_spec(cfg: &AttnConfig) -> LoopSpec {
+    let d = cfg.d_head;
+    let rows = 32u32;
+    let tile_bytes = (rows * d * 2) as u64;
+    let issues = ((tile_bytes / 64 / 16).max(1)) as u32;
+    let per_lane = (rows as u64 * d as u64) / 64;
+    LoopSpec {
+        name: format!("attn-bwd-pre-d{}-n{}", d, cfg.seq),
+        prologue: vec![],
+        compute: vec![Cluster::new(
+            "dotO+rowsum",
+            vec![
+                // multiply + tree-reduce across d: ~2 VALU passes
+                Instr::Valu { cycles: 2 * per_lane.max(1) },
+                Instr::VMemStore { bytes: (rows * 4) as u64, issues: 1 },
+            ],
+        )],
+        memory: vec![Cluster::new(
+            "loadO+dO",
+            vec![
+                Instr::VMemLoad { bytes: tile_bytes, to_lds: false, issues },
+                Instr::VMemLoad { bytes: tile_bytes, to_lds: false, issues },
+            ],
+        )],
+        iters: (cfg.seq / (rows * cfg.pattern.waves())).max(1),
+        epilogue: vec![],
+    }
+}
+
+/// The split-dQ LoopSpec (q-stationary): resident Q/dO tiles, streamed
+/// K/V tiles, 3 matmuls per pair — recompute S = QK^T, dP = dO V^T,
+/// dQ += dS K — with the same row+column shared-tile reload structure
+/// as the main pass. Only built under [`DqMode::Split`].
+pub fn build_bwd_dq_spec(arch: &Arch, cfg: &AttnConfig) -> LoopSpec {
+    let d = cfg.d_head;
+    let q_res = bwd_kv_blk(cfg); // resident rows mirror the kv tile size
+    let kv_blk = 16u32;
+    let alloc = bwd_alloc(arch, cfg);
+
+    let pair_flops = 2 * q_res as u64 * kv_blk as u64 * d as u64;
+    let m16 = (pair_flops / MFMA_16X16X32.flops()).max(1) as u32;
+    let m32 = (pair_flops / MFMA_32X32X16.flops()).max(1) as u32;
+    let sm = softmax_valu_cycles(q_res as u64, kv_blk as u64);
+
+    let kv_bytes = (kv_blk * d * 2 / cfg.pattern.waves()) as u64;
+    let issues = ((kv_bytes / 64 / 16).max(1)) as u32;
+    let ds_count = ((kv_blk * d * 2 / 64 / 16).max(1)) as u32;
+
+    let acc = |frac: u32| -> Vec<Instr> {
+        if alloc.acc_moves_per_iter > 0 {
+            vec![Instr::AccMove { count: (alloc.acc_moves_per_iter / frac).max(1) }]
+        } else {
+            vec![]
+        }
+    };
+
+    let mut c0 = acc(2);
+    c0.extend([
+        // recompute S = QK^T + the softmax-gradient VALU work
+        Instr::Mfma { shape: MFMA_32X32X16, dtype: Dtype::Bf16, count: m32 },
+        Instr::Valu { cycles: sm },
+    ]);
+    let mut c1 = acc(2);
+    c1.extend([
+        // dP = dO V^T ; dQ += dS K
+        Instr::Mfma { shape: MFMA_16X16X32, dtype: Dtype::Bf16, count: m16 },
+        Instr::Mfma { shape: MFMA_32X32X16, dtype: Dtype::Bf16, count: m32 },
+    ]);
+    let compute = vec![Cluster::new("qk-recomp", c0), Cluster::new("dp+dq", c1)];
+
+    let memory = vec![
+        Cluster::new(
+            "loadK",
+            vec![
+                Instr::VMemLoad { bytes: kv_bytes, to_lds: true, issues },
+                // row read for dQ += dS K, column read for S = QK^T
+                Instr::DsRead {
+                    instr: DsInstr::ReadB128,
+                    conflict_ways: cfg.lds_ways,
+                    count: ds_count,
+                },
+                Instr::DsRead {
+                    instr: DsInstr::ReadB64TrB16,
+                    conflict_ways: cfg.lds_ways,
+                    count: ds_count,
+                },
+            ],
+        ),
+        Cluster::new(
+            "loadV",
+            vec![
+                Instr::VMemLoad { bytes: kv_bytes, to_lds: true, issues },
+                Instr::DsRead {
+                    instr: DsInstr::ReadB64TrB16,
+                    conflict_ways: cfg.lds_ways,
+                    count: ds_count,
+                },
+            ],
+        ),
+    ];
+
+    let total = cfg.seq / kv_blk;
+    let iters = if cfg.causal { total.max(2) / 2 } else { total };
+    LoopSpec {
+        name: format!("attn-bwd-dq-d{}-n{}", d, cfg.seq),
+        prologue: vec![Instr::VMemLoad {
+            bytes: (2 * q_res * d * 2) as u64,
+            to_lds: true,
+            issues: 2,
+        }],
+        compute,
+        memory,
+        iters,
+        epilogue: vec![Instr::VMemStore {
+            bytes: (q_res * d * 4 / cfg.pattern.waves()) as u64,
+            issues: 1,
+        }],
     }
 }
 
@@ -387,9 +666,33 @@ pub fn simulate_fwd(arch: &Arch, cfg: &AttnConfig) -> KernelPerf {
 
 /// Simulate the backward pass (Fig. 8 / Table 1).
 pub fn simulate_bwd(arch: &Arch, cfg: &AttnConfig) -> KernelPerf {
+    simulate_bwd_detailed(arch, cfg).perf
+}
+
+/// Simulate the backward pass with the full per-pass breakdown: dO*O
+/// preprocess, main kv-stationary recomputation, the split-dQ pass (if
+/// any) and the register-pressure spill term.
+pub fn simulate_bwd_detailed(arch: &Arch, cfg: &AttnConfig) -> BwdEval {
+    let alloc = bwd_alloc(arch, cfg);
+
+    // dO*O preprocess: one block per (batch, head), waves stripe rows.
+    let pre_spec = build_bwd_preprocess_spec(cfg);
+    let pre_built = build(arch, cfg, &pre_spec);
+    let pre = evaluate_streaming(
+        arch,
+        &format!("attn-bwd-pre d{} n{}", cfg.d_head, cfg.seq),
+        &pre_built,
+        cfg.batch as f64 * cfg.heads_q as f64,
+        2.0 * cfg.q_plane(),
+        cfg.bwd_preprocess_bytes(),
+        cfg.vector_bytes(),
+        Some(arch.llc_lat),
+    );
+
+    // Main pass: each wave owns a resident kv tile; the block covers
+    // waves x kv_blk rows of one (batch, query-head) slice.
     let spec = build_bwd_spec(arch, cfg);
     let built = build(arch, cfg, &spec);
-    // each wave owns a resident kv tile; the block covers waves x kv_blk
     let kv_rows_per_block = bwd_kv_blk(cfg) * cfg.pattern.waves();
     let blocks = cfg.batch as f64
         * cfg.heads_q as f64
@@ -400,15 +703,69 @@ pub fn simulate_bwd(arch: &Arch, cfg: &AttnConfig) -> KernelPerf {
         * cfg.seq as f64
         * cfg.d_head as f64
         * 2.0;
-    evaluate_streaming(
+    let main_flops = match cfg.dq_mode {
+        DqMode::Atomic => cfg.bwd_flops(),
+        DqMode::Split => 2.0 * cfg.fwd_flops(), // 4 of the 5 matmuls
+    };
+    let main = evaluate_streaming(
         arch,
         &format!("attn-bwd {:?}", cfg),
         &built,
         blocks,
-        cfg.bwd_flops(),
-        cfg.bwd_bytes(),
+        main_flops,
+        cfg.bwd_main_bytes(),
         resident,
         Some(arch.llc_lat),
+    );
+
+    // The spill term is charged per executed hot-loop iteration across
+    // every register-heavy pass (the preprocess pass holds no tiles).
+    let rounds = (blocks / arch.total_cus() as f64).ceil();
+    let mut spill_iter_rounds = rounds * spec.iters as f64;
+
+    // Split-dQ pass: q-stationary recomputation, no atomics.
+    let dq = match cfg.dq_mode {
+        DqMode::Atomic => None,
+        DqMode::Split => {
+            let dq_spec = build_bwd_dq_spec(arch, cfg);
+            let dq_built = build(arch, cfg, &dq_spec);
+            let q_rows_per_block = bwd_kv_blk(cfg) * cfg.pattern.waves();
+            let dq_blocks = cfg.batch as f64
+                * cfg.heads_q as f64
+                * (cfg.seq as f64 / q_rows_per_block as f64).max(1.0);
+            let dq_rounds = (dq_blocks / arch.total_cus() as f64).ceil();
+            spill_iter_rounds += dq_rounds * dq_spec.iters as f64;
+            Some(evaluate_streaming(
+                arch,
+                &format!("attn-bwd-dq d{} n{}", cfg.d_head, cfg.seq),
+                &dq_built,
+                dq_blocks,
+                1.5 * cfg.fwd_flops(),
+                cfg.bwd_dq_bytes(),
+                2.0 * cfg.kv_plane() * 2.0,
+                Some(arch.llc_lat),
+            ))
+        }
+    };
+
+    let pressure = BwdRegPressure {
+        demand: alloc.total_demand,
+        budget: alloc.budget,
+        spilled: alloc.spilled,
+        acc_moves_per_iter: alloc.acc_moves_per_iter,
+    };
+    evaluate_bwd(
+        arch,
+        &format!("attn-bwd {:?}", cfg),
+        &pre,
+        &main,
+        dq.as_ref(),
+        pressure,
+        spill_iter_rounds,
+        cfg.bwd_flops(),
+        cfg.bwd_hw_flops(),
+        cfg.bwd_recompute_flops(),
+        cfg.bwd_bytes(),
     )
 }
 
@@ -472,5 +829,44 @@ mod tests {
             p4.tflops,
             p8.tflops
         );
+    }
+
+    #[test]
+    fn demand_vec_agrees_with_pure_register_demand() {
+        // the allocator's tile set and the pure demand function must
+        // price the same geometry identically
+        for pattern in [Pattern::Interleave4, Pattern::PingPong8] {
+            for d in [64u32, 128, 256] {
+                let cfg =
+                    AttnConfig { pattern, ..AttnConfig::gqa(4096, d, false) };
+                let kv = if pattern.waves() <= 4 { 64 } else { 32 };
+                let total: u32 =
+                    bwd_reg_demand(&cfg).iter().map(|t| t.regs).sum();
+                assert_eq!(total, bwd_register_demand(d, 16, kv), "d{d}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_size_reflects_kv_sharing() {
+        assert_eq!(AttnConfig::gqa(4096, 128, false).group_size(), 8);
+        assert_eq!(AttnConfig::mha(4096, 128, false).group_size(), 1);
+    }
+
+    #[test]
+    fn bwd_passes_split_the_wallclock() {
+        let cfg = AttnConfig {
+            pattern: Pattern::Interleave4,
+            ..AttnConfig::gqa(2048, 128, false)
+        };
+        let det = simulate_bwd_detailed(&arch(), &cfg);
+        assert!(det.preprocess_s > 0.0 && det.main_s > 0.0);
+        assert_eq!(det.dq_s, 0.0); // atomic default: no split pass
+        assert_eq!(det.hw_flops, cfg.bwd_flops());
+        assert!(det.recompute_flops > 0.0);
+        let split = AttnConfig { dq_mode: DqMode::Split, ..cfg };
+        let det_s = simulate_bwd_detailed(&arch(), &split);
+        assert!(det_s.dq_s > 0.0);
+        assert!(det_s.hw_flops > det.hw_flops);
     }
 }

@@ -25,7 +25,7 @@ pub mod membound;
 pub mod moe;
 pub mod registry;
 
-pub use attention::AttnConfig;
+pub use attention::{AttnConfig, DqMode};
 pub use decode::AttnDecodeConfig;
 pub use baselines::Baseline;
 pub use gemm::{GemmConfig, GridOrder, Pattern};

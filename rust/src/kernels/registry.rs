@@ -31,7 +31,7 @@ use crate::hk::autotune;
 use crate::hk::costmodel::KernelPerf;
 use crate::hk::regalloc::RegMode;
 use crate::hk::tunecache::{self, TuneCache, TuneRecord};
-use crate::kernels::attention::{self, AttnConfig};
+use crate::kernels::attention::{self, AttnConfig, DqMode};
 use crate::kernels::decode::{self, AttnDecodeConfig};
 use crate::kernels::gemm::{self, GemmConfig, GridOrder, Pattern};
 use crate::kernels::membound::{self, FusedLnConfig, RopeConfig};
@@ -367,22 +367,41 @@ pub fn variants(key: &KernelKey) -> Vec<Variant> {
                 swizzled: false,
             },
         ],
-        Op::AttnBwd => vec![
-            Variant {
-                name: "bwd-il4",
-                pattern: Pattern::Interleave4,
-                block_m: 0,
-                block_n: 0,
-                swizzled: false,
-            },
-            Variant {
-                name: "bwd-pp8",
-                pattern: Pattern::PingPong8,
-                block_m: 0,
-                block_n: 0,
-                swizzled: false,
-            },
-        ],
+        // Backward attention is the dQ/dK/dV recomputation subsystem:
+        // the 4-wave variants keep one wave per SIMD (full 512-register
+        // file, 64-row resident K/V tiles) and differ in dQ strategy —
+        // `bwd-atomic-dq` fuses dQ via global atomics, `bwd-4wave` runs
+        // the deterministic split-dQ recompute pass. `bwd-pp8` is the
+        // 8-wave fallback that halves the register budget and pays LDS
+        // re-staging + the spill model. The recompute structure leans on
+        // CDNA's AGPR-fed MFMAs, so NVIDIA-like archs carry no native
+        // table and resolve through [`variants_or_fallback`].
+        Op::AttnBwd => match key.arch {
+            ArchId::B200Like | ArchId::H100Like => vec![],
+            _ => vec![
+                Variant {
+                    name: "bwd-atomic-dq",
+                    pattern: Pattern::Interleave4,
+                    block_m: 0,
+                    block_n: 0,
+                    swizzled: false,
+                },
+                Variant {
+                    name: "bwd-4wave",
+                    pattern: Pattern::Interleave4,
+                    block_m: 0,
+                    block_n: 0,
+                    swizzled: false,
+                },
+                Variant {
+                    name: "bwd-pp8",
+                    pattern: Pattern::PingPong8,
+                    block_m: 0,
+                    block_n: 0,
+                    swizzled: false,
+                },
+            ],
+        },
         // Decode is a pure gather: 4 waves keep the memory pipes busy
         // without starving the register file; 8-wave is the fallback
         // for huge contexts where extra waves hide more latency.
@@ -483,6 +502,8 @@ pub struct Overrides {
     pub lds_ways: Option<u32>,
     pub shuffle_cycles: Option<u64>,
     pub vectorized: Option<bool>,
+    /// Backward-attention dQ accumulation strategy (atomic vs split).
+    pub dq_mode: Option<DqMode>,
 }
 
 /// A dispatch request: key ingredients + concrete problem + overrides.
@@ -641,6 +662,12 @@ impl Query {
         self
     }
 
+    /// Pin the backward dQ accumulation strategy.
+    pub fn dq(mut self, m: DqMode) -> Self {
+        self.ov.dq_mode = Some(m);
+        self
+    }
+
     pub fn pattern(mut self, p: Pattern) -> Self {
         self.ov.pattern = Some(p);
         self
@@ -725,6 +752,7 @@ impl Query {
             || ov.lds_ways.is_some()
             || ov.shuffle_cycles.is_some()
             || ov.vectorized.is_some()
+            || ov.dq_mode.is_some()
     }
 
     /// Dispatch against the process-wide persistent tune cache.
@@ -876,6 +904,12 @@ impl Query {
                     pattern: self.ov.pattern.unwrap_or(v.pattern),
                     reg_mode: self.ov.reg_mode.unwrap_or(RegMode::Pinned),
                     lds_ways: self.ov.lds_ways.unwrap_or(1),
+                    // the variant name carries the dQ strategy; the
+                    // split-dQ recompute pass is bwd-4wave's identity
+                    dq_mode: self.ov.dq_mode.unwrap_or(match v.name {
+                        "bwd-4wave" => DqMode::Split,
+                        _ => DqMode::Atomic,
+                    }),
                 })
             }
             Problem::AttnDecode {

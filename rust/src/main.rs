@@ -18,6 +18,9 @@
 //!   moe                   MoE walkthrough: router load-balance table +
 //!                         grouped-GEMM vs dense-FFN sweep; writes
 //!                         BENCH_moe.json (override with HK_MOE_OUT)
+//!   attn-bwd              attention-backwards grid (dQ/dK/dV recompute
+//!                         subsystem vs baselines, Table 3 re-check);
+//!                         writes BENCH_attn_bwd.json (HK_ATTN_BWD_OUT)
 //!   tune [--arch A]       warm the persistent registry tune cache for
 //!                         the headline kernel keys and save it
 //!   artifacts             list artifact entries + shapes
@@ -60,11 +63,12 @@ fn main() -> Result<()> {
             let exp = args.get(1).map(String::as_str).unwrap_or("all");
             if !report::run(exp) {
                 bail!(
-                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, all"
+                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, attn-bwd, all"
                 );
             }
         }
         Some("moe") => report::moe(),
+        Some("attn-bwd") => report::attn_bwd(),
         Some("serve") => {
             let n: u64 = flag(&args, "--requests")
                 .map(|v| v.parse())
@@ -118,10 +122,14 @@ fn main() -> Result<()> {
             println!("platform: {}", rt.platform());
             let mut tr = Trainer::new(&mut rt, 0)?;
             let plan = tr.plan(ArchId::Mi355x);
+            let (fwd_s, bwd_s) = hipkittens::coordinator::fwd_bwd_split(&plan);
             println!(
-                "kernel plan ({} dispatches, predicted {:.3} ms/step on MI355X):",
+                "kernel plan ({} dispatches, predicted {:.3} ms/step on MI355X; \
+                 fwd {:.3} ms + bwd {:.3} ms):",
                 plan.len(),
-                predicted_step_s(&plan) * 1e3
+                predicted_step_s(&plan) * 1e3,
+                fwd_s * 1e3,
+                bwd_s * 1e3
             );
             for (name, perf) in &plan {
                 println!("  {name:<10} {:>9.3} us", perf.time_s * 1e6);
@@ -212,6 +220,7 @@ fn main() -> Result<()> {
             eprintln!("       {exe} serve [--paged|--mixed] [--requests N] [--rate R]");
             eprintln!("       {exe} train [--steps N] [--path kernels|reference]");
             eprintln!("       {exe} moe");
+            eprintln!("       {exe} attn-bwd");
             eprintln!("       {exe} tune [--arch mi355x|mi350x|mi325x|b200|h100]");
             eprintln!("       {exe} artifacts | solve | arch");
             if other.is_some() {

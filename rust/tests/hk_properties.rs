@@ -169,6 +169,72 @@ fn solved_swizzles_always_beat_identity() {
 }
 
 #[test]
+fn bwd_register_demand_monotone_in_head_dim_and_tile_size() {
+    use hipkittens::kernels::attention::bwd_register_demand;
+    // head dim
+    let mut prev = 0;
+    for d in [16u32, 32, 48, 64, 96, 128, 192, 256] {
+        let r = bwd_register_demand(d, 16, 64);
+        assert!(r >= prev, "d{d}: {r} < {prev}");
+        prev = r;
+    }
+    assert!(bwd_register_demand(128, 16, 64) > bwd_register_demand(64, 16, 64));
+    // kv tile rows (the 4-wave vs 8-wave fork: 64 vs 32)
+    let mut prev = 0;
+    for kv in [8u32, 16, 32, 64, 128] {
+        let r = bwd_register_demand(128, 16, kv);
+        assert!(r >= prev, "kv{kv}: {r} < {prev}");
+        prev = r;
+    }
+    assert!(bwd_register_demand(128, 16, 64) > bwd_register_demand(128, 16, 32));
+    // q tile rows
+    let mut prev = 0;
+    for q in [4u32, 8, 16, 32, 64] {
+        let r = bwd_register_demand(128, q, 64);
+        assert!(r >= prev, "q{q}: {r} < {prev}");
+        prev = r;
+    }
+}
+
+#[test]
+fn spill_penalty_continuous_at_the_register_boundary() {
+    use hipkittens::hk::costmodel::spill_penalty_cycles;
+    // zero exactly at the boundary...
+    assert_eq!(spill_penalty_cycles(0), 0);
+    // ...with a small constant slope after it: a 1-register change can
+    // never produce a cost cliff
+    let slope = spill_penalty_cycles(1);
+    assert!(slope > 0 && slope <= 32, "slope {slope}");
+    for n in 0..600u32 {
+        assert_eq!(
+            spill_penalty_cycles(n + 1) - spill_penalty_cycles(n),
+            slope,
+            "cliff at {n} -> {}",
+            n + 1
+        );
+    }
+    // end to end through the allocator: one register past the 256-reg
+    // two-wave budget spills exactly one register's worth
+    let a = Arch::mi355x();
+    let at = |regs: u32| {
+        allocate(
+            &a,
+            2,
+            RegMode::Pinned,
+            &[TileDemand { regs, mfma_operand: false, mfma_uses_per_iter: 0 }],
+        )
+    };
+    let under = at(256);
+    let over = at(257);
+    assert_eq!(under.spilled, 0);
+    assert_eq!(over.spilled, 1);
+    assert_eq!(
+        spill_penalty_cycles(over.spilled) - spill_penalty_cycles(under.spilled),
+        slope
+    );
+}
+
+#[test]
 fn budget_monotone_in_occupancy() {
     let a = Arch::mi355x();
     let mut prev = u32::MAX;

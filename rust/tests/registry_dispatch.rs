@@ -4,8 +4,8 @@
 //! kernel plan run end to end on registry dispatch alone (no artifacts).
 
 use hipkittens::coordinator::{
-    kernel_plan, mixed_trace, predicted_step_s, MixedService, OpClass,
-    ServiceConfig, TrainShape,
+    fwd_bwd_split, kernel_plan, mixed_trace, predicted_step_s, MixedService,
+    OpClass, ServiceConfig, TrainShape,
 };
 use hipkittens::hk::tunecache::TuneCache;
 use hipkittens::kernels::registry::{
@@ -184,14 +184,63 @@ fn constrained_queries_do_not_poison_the_cache() {
 }
 
 #[test]
-fn attn_bwd_tuner_picks_the_four_wave_kernel() {
-    // Table 3: the 4-wave interleave wins MHA backwards; the registry's
-    // sweep must find that without being told.
+fn attn_bwd_tuner_picks_a_four_wave_variant() {
+    // Table 3: one wave per SIMD (the full 512-register file) wins MHA
+    // backwards; the registry's sweep must find that without being told
+    // — either 4-wave dQ strategy, but never the 8-wave fallback.
     let mut cache = TuneCache::new();
-    let d = Query::attn_mha(ArchId::Mi355x, 8192, 128, false)
+    let q = Query::attn_mha(ArchId::Mi355x, 8192, 128, false).bwd();
+    let d = q.dispatch_with(&mut cache);
+    assert!(
+        d.variant == "bwd-atomic-dq" || d.variant == "bwd-4wave",
+        "tuner picked {}",
+        d.variant
+    );
+    // and the decision round-trips through the warm cache
+    let warm = q.dispatch_with(&mut cache);
+    assert!(warm.from_cache);
+    assert_eq!(warm.variant, d.variant);
+}
+
+#[test]
+fn bwd_variants_cover_dq_modes_and_unknown_archs_fall_back() {
+    use hipkittens::kernels::attention::DqMode;
+    use hipkittens::kernels::Pattern;
+
+    // CDNA carries the full dQ/dK/dV variant set, in table order.
+    let native = Query::attn_gqa(ArchId::Mi355x, 8192, 128, false).bwd();
+    let names: Vec<&str> =
+        variants(&native.key()).iter().map(|v| v.name).collect();
+    assert_eq!(names, ["bwd-atomic-dq", "bwd-4wave", "bwd-pp8"]);
+
+    // NVIDIA-like archs have no native backward table (the recompute
+    // kernel leans on CDNA's AGPR-fed MFMAs): the dispatcher must warn
+    // and resolve against CDNA3 instead of panicking.
+    let foreign = Query::attn_gqa(ArchId::B200Like, 8192, 128, false).bwd();
+    let key = foreign.key();
+    assert!(variants(&key).is_empty(), "B200 grew a native bwd table");
+    let (vs, fell_back) = variants_or_fallback(&key);
+    assert!(fell_back, "{}", key.id());
+    let fallback_names: Vec<&str> = vs.iter().map(|v| v.name).collect();
+    assert_eq!(fallback_names, names, "fallback is not the CDNA3 table");
+    let p = foreign.dispatch_with(&mut TuneCache::new()).simulate();
+    assert!(p.time_s > 0.0 && p.time_s.is_finite());
+
+    // the dQ override round-trips into the resolved config
+    let pinned = Query::attn_gqa(ArchId::Mi355x, 4096, 128, false)
         .bwd()
-        .dispatch_with(&mut cache);
-    assert_eq!(d.variant, "bwd-il4", "tuner picked {}", d.variant);
+        .pattern(Pattern::Interleave4)
+        .dq(DqMode::Split)
+        .dispatch_with(&mut TuneCache::new());
+    assert_eq!(pinned.variant, "explicit");
+    assert_eq!(pinned.attn_config().dq_mode, DqMode::Split);
+    // ...and the named variants carry their dq strategies: a pinned
+    // 4-wave query with no dq override resolves to the table head
+    let default_dq = Query::attn_gqa(ArchId::Mi355x, 4096, 128, false)
+        .bwd()
+        .pattern(Pattern::Interleave4)
+        .dispatch_with(&mut TuneCache::new());
+    assert_eq!(default_dq.attn_config().dq_mode, DqMode::Atomic);
 }
 
 #[test]
@@ -236,11 +285,15 @@ fn mixed_service_batches_bursts_per_op() {
 #[test]
 fn trainer_kernel_plan_routes_through_registry() {
     let plan = kernel_plan(ArchId::Mi355x, &TrainShape::default());
-    assert_eq!(plan.len(), 6);
+    assert_eq!(plan.len(), 8);
     for (name, perf) in &plan {
         assert!(perf.time_s > 0.0, "{name} has zero time");
         assert!(perf.time_s.is_finite(), "{name}");
     }
     let step = predicted_step_s(&plan);
     assert!(step > 0.0 && step < 1.0, "predicted step {step}s");
+    // the plan prices forward and backward separately, and they add up
+    let (fwd, bwd) = fwd_bwd_split(&plan);
+    assert!(fwd > 0.0 && bwd > 0.0);
+    assert!((fwd + bwd - step).abs() < 1e-12);
 }
