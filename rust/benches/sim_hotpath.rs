@@ -4,7 +4,7 @@
 //! model.
 
 use hipkittens::coordinator::bench_fn;
-use hipkittens::hk::chiplet::ChipletSwizzle;
+use hipkittens::hk::topology::ChipletSwizzle;
 use hipkittens::kernels::attention;
 use hipkittens::kernels::gemm::{self, GridOrder, Pattern};
 use hipkittens::kernels::registry::{ArchId, Query};

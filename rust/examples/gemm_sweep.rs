@@ -7,7 +7,7 @@
 //!
 //! Run: `cargo run --release --example gemm_sweep`
 
-use hipkittens::hk::chiplet::{render_first_round, ChipletSwizzle};
+use hipkittens::hk::topology::{render_first_round, ChipletSwizzle};
 use hipkittens::kernels::baselines::{self, Baseline};
 use hipkittens::kernels::gemm::{GridOrder, Pattern};
 use hipkittens::kernels::registry::{ArchId, Query};

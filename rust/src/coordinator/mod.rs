@@ -15,5 +15,6 @@ pub use service::{
     MixedRequest, MixedService, OpClass, ServiceConfig,
 };
 pub use train::{
-    fwd_bwd_split, kernel_plan, predicted_step_s, Path, TrainShape, Trainer,
+    allreduce_perf, fwd_bwd_split, kernel_plan, predicted_step_s, Path,
+    TrainShape, Trainer,
 };

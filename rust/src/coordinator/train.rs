@@ -9,6 +9,8 @@
 use crate::err;
 use crate::error::Result;
 use crate::hk::costmodel::KernelPerf;
+use crate::hk::schedule::ScheduleInfo;
+use crate::hk::topology::NodeTopology;
 use crate::kernels::registry::{ArchId, Query};
 use crate::runtime::{Rng, Runtime, Tensor};
 use crate::sim::Dtype;
@@ -142,6 +144,7 @@ impl<'rt> Trainer<'rt> {
             d_head: 32,
             moe_experts: 0,
             moe_top_k: 0,
+            n_gpus: 1,
         };
         kernel_plan(arch, &shape)
     }
@@ -159,6 +162,9 @@ pub struct TrainShape {
     pub moe_experts: u32,
     /// Active experts per token (ignored when `moe_experts` is 0).
     pub moe_top_k: u32,
+    /// Data-parallel replicas: above 1 the plan carries a gradient
+    /// all-reduce entry priced by the node link model.
+    pub n_gpus: u32,
 }
 
 impl Default for TrainShape {
@@ -173,6 +179,7 @@ impl Default for TrainShape {
             d_head: 32,
             moe_experts: 0,
             moe_top_k: 0,
+            n_gpus: 1,
         }
     }
 }
@@ -186,6 +193,13 @@ impl TrainShape {
     pub fn moe(mut self, experts: u32, top_k: u32) -> Self {
         self.moe_experts = experts.max(1);
         self.moe_top_k = top_k.clamp(1, experts.max(1));
+        self
+    }
+
+    /// Train data-parallel across `n` simulated GPUs (gradient
+    /// all-reduce joins the backward plan).
+    pub fn data_parallel(mut self, n: u32) -> Self {
+        self.n_gpus = n.max(1);
         self
     }
 }
@@ -269,10 +283,49 @@ pub fn kernel_plan(arch: ArchId, s: &TrainShape) -> Vec<(String, KernelPerf)> {
         "proj-gemm-bwd",
         Query::gemm(arch, Dtype::Bf16, 2 * tokens, s.d_model, s.d_model),
     ));
-    queries
+    let mut plan: Vec<(String, KernelPerf)> = queries
         .into_iter()
         .map(|(name, q)| (name.to_string(), q.dispatch().simulate()))
-        .collect()
+        .collect();
+    // Data parallelism: the backward plan ends in a ring all-reduce of
+    // the gradients across the node, priced by the inter-GPU link model
+    // (hk::topology). Absent at one GPU — the plan is unchanged.
+    if s.n_gpus > 1 {
+        plan.push(("grads-allreduce-bwd".to_string(), allreduce_perf(arch, s)));
+    }
+    plan
+}
+
+/// The data-parallel gradient all-reduce as a plan entry: `2 (n-1)/n`
+/// of the gradient buffer through each GPU's link, ring style. The
+/// gradient size is the block's parameter count (qkv + attention
+/// projection + MLP + layernorms) in f32.
+pub fn allreduce_perf(arch: ArchId, s: &TrainShape) -> KernelPerf {
+    let d = s.d_model as f64;
+    let grad_bytes = (12.0 * d * d + 4.0 * d) * 4.0;
+    let topo = NodeTopology::for_arch(&arch.arch(), s.n_gpus);
+    let time_s = topo.allreduce_s(grad_bytes);
+    KernelPerf {
+        name: format!("grads-allreduce g{}", s.n_gpus),
+        tflops: 0.0,
+        time_s,
+        compute_s: 0.0,
+        mem_s: time_s,
+        mfma_util: 0.0,
+        l2_hit: 0.0,
+        llc_hit: 0.0,
+        eff_bw_tbps: if time_s > 0.0 {
+            grad_bytes / time_s / 1e12
+        } else {
+            0.0
+        },
+        info: ScheduleInfo {
+            pattern: "allreduce",
+            loc: 0,
+            waves: 0,
+            waves_per_simd: 0,
+        },
+    }
 }
 
 /// Predicted step time: the sum of the plan's kernel times.
@@ -318,6 +371,28 @@ mod tests {
             assert!(perf.time_s > 0.0 && perf.time_s.is_finite(), "{name}");
         }
         assert!(predicted_step_s(&moe) > 0.0);
+    }
+
+    #[test]
+    fn data_parallel_plan_pays_the_allreduce() {
+        let single = kernel_plan(ArchId::Mi355x, &TrainShape::default());
+        let dp4 =
+            kernel_plan(ArchId::Mi355x, &TrainShape::default().data_parallel(4));
+        assert!(!single.iter().any(|(n, _)| n == "grads-allreduce-bwd"));
+        let ar = dp4
+            .iter()
+            .find(|(n, _)| n == "grads-allreduce-bwd")
+            .expect("dp plan carries the all-reduce");
+        assert!(ar.1.time_s > 0.0 && ar.1.time_s.is_finite());
+        // it lands on the backward side of the split
+        let (_, bwd_single) = fwd_bwd_split(&single);
+        let (_, bwd_dp) = fwd_bwd_split(&dp4);
+        assert!(bwd_dp > bwd_single);
+        // the ring term grows with the replica count
+        let dp8 =
+            kernel_plan(ArchId::Mi355x, &TrainShape::default().data_parallel(8));
+        let ar8 = &dp8.iter().find(|(n, _)| n == "grads-allreduce-bwd").unwrap().1;
+        assert!(ar8.time_s > ar.1.time_s);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! best schedule, the programmatic counterpart of the paper's tuning.
 
 use crate::hk::costmodel::KernelPerf;
+use crate::kernels::attention::{self, AttnConfig, DqMode};
 use crate::kernels::gemm::{self, GemmConfig, GridOrder};
 use crate::sim::arch::Arch;
 
@@ -95,6 +96,47 @@ pub fn best_grid(arch: &Arch, base: &GemmConfig) -> (u32, u32) {
     (pts[0].window, pts[0].chunk)
 }
 
+/// Candidate kv tile heights of the split-dQ backward pass (ROADMAP
+/// backward-attention follow-up; 16 was the fixed pre-autotune value).
+pub const DQ_KV_TILES: [u32; 4] = [8, 16, 32, 64];
+
+/// One evaluated split-dQ tile point.
+#[derive(Debug, Clone)]
+pub struct DqTilePoint {
+    pub tile: u32,
+    pub perf: KernelPerf,
+}
+
+/// Sweep the split-dQ kv tile height through the backward cost model;
+/// returns points sorted best-first with the same total, deterministic
+/// order contract as [`rank`] (TFLOPS descending via `total_cmp` so NaN
+/// cannot win or panic, ties by tile ascending) — the persisted tune
+/// cache stays byte-identical across runs.
+pub fn tune_dq_tile(arch: &Arch, base: &AttnConfig) -> Vec<DqTilePoint> {
+    let mut points: Vec<DqTilePoint> = DQ_KV_TILES
+        .iter()
+        .map(|&tile| {
+            let cfg = AttnConfig {
+                dq_mode: DqMode::Split,
+                dq_kv_tile: tile,
+                ..*base
+            };
+            DqTilePoint { tile, perf: attention::simulate_bwd(arch, &cfg) }
+        })
+        .collect();
+    fn cost(p: &DqTilePoint) -> f64 {
+        if p.perf.tflops.is_nan() {
+            f64::NEG_INFINITY
+        } else {
+            p.perf.tflops
+        }
+    }
+    points.sort_by(|a, b| {
+        cost(b).total_cmp(&cost(a)).then_with(|| a.tile.cmp(&b.tile))
+    });
+    points
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +221,29 @@ mod tests {
         };
         assert_eq!(key(&tune_grid(&arch, &base)), key(&tune_grid(&arch, &base)));
         assert_eq!(key(&tune_full(&arch, &base)), key(&tune_full(&arch, &base)));
+    }
+
+    #[test]
+    fn dq_tile_sweep_is_total_and_deterministic() {
+        let arch = Arch::mi355x();
+        let base = AttnConfig {
+            dq_mode: DqMode::Split,
+            pattern: crate::kernels::gemm::Pattern::Interleave4,
+            ..AttnConfig::gqa(4096, 128, false)
+        };
+        let pts = tune_dq_tile(&arch, &base);
+        assert_eq!(pts.len(), DQ_KV_TILES.len());
+        let tiles: Vec<u32> = pts.iter().map(|p| p.tile).collect();
+        for &t in &DQ_KV_TILES {
+            assert!(tiles.contains(&t), "tile {t} missing from sweep");
+        }
+        // sorted best-first, and identical across runs
+        for w in pts.windows(2) {
+            assert!(w[0].perf.tflops >= w[1].perf.tflops);
+        }
+        let again: Vec<u32> =
+            tune_dq_tile(&arch, &base).iter().map(|p| p.tile).collect();
+        assert_eq!(tiles, again);
     }
 
     #[test]

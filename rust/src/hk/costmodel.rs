@@ -2,6 +2,7 @@
 //! side) -> TFLOPS, the combination rule of Eq. (1) + roofline.
 
 use super::schedule::{BuiltSchedule, ScheduleInfo};
+use super::topology::NodeTopology;
 use crate::sim::arch::Arch;
 use crate::sim::cache::{simulate_gemm_schedule, CacheStats, GemmGrid};
 use crate::sim::engine::{run_block, EngineConfig};
@@ -149,8 +150,8 @@ pub fn evaluate_paged(
 ///
 /// Built by the grouped-GEMM lowering in [`crate::kernels::moe`]: each
 /// expert's block-cycles, activation traffic and weight working set are
-/// summed onto the XCD the chiplet-aware placement
-/// ([`crate::hk::chiplet::place_experts`]) assigned it to.
+/// summed onto the XCD the LPT placement
+/// ([`crate::hk::topology::place_shards`]) assigned it to.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct GroupedShard {
     /// Total engine block-cycles of the shard's expert GEMM blocks,
@@ -164,13 +165,32 @@ pub struct GroupedShard {
     pub weight_bytes: f64,
 }
 
-/// Evaluate a grouped kernel (the `Op::MoeGemm` class): per-expert
-/// ragged GEMMs are sharded across XCDs, each shard runs its experts on
-/// its own CUs and cache slice, and **total time is the max over
-/// shards** — the skew law. A balanced routing fills every shard
-/// equally and finishes together; a skewed routing leaves all but the
-/// hot chiplet idle, so for equal total tokens balanced routing is
-/// never slower than skewed routing (asserted in `tests/moe.rs`).
+/// The node-level grouped evaluation: the combined estimate plus the
+/// per-GPU wall-clock breakdown and the all-to-all comms term.
+#[derive(Debug, Clone)]
+pub struct GroupedEval {
+    pub perf: KernelPerf,
+    /// Wall-clock of each GPU's shard set (max over its XCD shards).
+    pub per_gpu_s: Vec<f64>,
+    /// All-to-all dispatch/combine time on the node link (0 at 1 GPU).
+    pub comms_s: f64,
+}
+
+/// Evaluate a grouped kernel (the `Op::MoeGemm` class) over the node
+/// hierarchy: per-expert ragged GEMMs are sharded across GPUs and,
+/// within each GPU, across XCDs. Each shard runs its experts on its own
+/// CUs and cache slice, and **total time is the max over shards at both
+/// levels plus the inter-GPU all-to-all** — the skew law. A balanced
+/// routing fills every shard equally and finishes together; a skewed
+/// routing leaves all but the hot shard idle, so for equal total tokens
+/// balanced routing is never slower than skewed routing (asserted in
+/// `tests/moe.rs` and `tests/topology.rs`).
+///
+/// `gpu_shards[g]` holds GPU `g`'s per-XCD shards; `cross_bytes` is the
+/// activation traffic the expert-parallel dispatch/combine moves across
+/// GPU boundaries, priced by `topo`'s link model. With one GPU the
+/// comms term is exactly 0.0 and the result reduces bit-for-bit to the
+/// flat single-GPU max-shard law (asserted in `tests/topology.rs`).
 ///
 /// Per shard: the compute side pipelines the shard's block-cycles over
 /// `cus_per_xcd`; the memory side streams activations at the XCD's HBM
@@ -178,15 +198,18 @@ pub struct GroupedShard {
 /// `block` is the engine run of one representative macro block — the
 /// caller already simulated it to derive the shard cycles, so it is
 /// passed in rather than re-run here.
+#[allow(clippy::too_many_arguments)]
 pub fn evaluate_grouped(
     arch: &Arch,
+    topo: &NodeTopology,
     name: &str,
     info: ScheduleInfo,
     block: &crate::sim::engine::EngineStats,
-    shards: &[GroupedShard],
+    gpu_shards: &[Vec<GroupedShard>],
+    cross_bytes: f64,
     total_flops: f64,
     total_bytes: f64,
-) -> KernelPerf {
+) -> GroupedEval {
     let cus = arch.cus_per_xcd.max(1) as f64;
     let hbm_share = arch.hbm_tbps / arch.n_xcds.max(1) as f64 * 1e12;
     let llc_share = arch.llc_tbps / arch.n_xcds.max(1) as f64 * 1e12;
@@ -195,21 +218,33 @@ pub fn evaluate_grouped(
     let mut mem_s = 0.0f64;
     let mut time_s = 0.0f64;
     let mut weight_total = 0.0f64;
-    for s in shards {
-        let c = s.compute_cycles / cus * arch.cycle_s();
-        let m = s.stream_bytes / hbm_share + s.weight_bytes / llc_share;
-        compute_s = compute_s.max(c);
-        mem_s = mem_s.max(m);
-        time_s = time_s.max(c.max(m));
-        weight_total += s.weight_bytes;
+    let mut per_gpu_s = Vec::with_capacity(gpu_shards.len());
+    for shards in gpu_shards {
+        let mut gpu_s = 0.0f64;
+        for s in shards {
+            let c = s.compute_cycles / cus * arch.cycle_s();
+            let m = s.stream_bytes / hbm_share + s.weight_bytes / llc_share;
+            compute_s = compute_s.max(c);
+            mem_s = mem_s.max(m);
+            gpu_s = gpu_s.max(c.max(m));
+            weight_total += s.weight_bytes;
+        }
+        time_s = time_s.max(gpu_s);
+        per_gpu_s.push(gpu_s);
     }
-    // degenerate (no routed tokens): charge one engine pass
+    // degenerate (no routed tokens): charge one engine pass, and keep
+    // the per-GPU breakdown consistent with the combined wall-clock
     if time_s <= 0.0 {
         time_s = block.cycles as f64 * arch.cycle_s();
         compute_s = time_s;
+        if let Some(first) = per_gpu_s.first_mut() {
+            *first = time_s;
+        }
     }
+    let comms_s = topo.all_to_all_s(cross_bytes);
+    time_s += comms_s;
 
-    KernelPerf {
+    let perf = KernelPerf {
         name: name.to_string(),
         tflops: total_flops / time_s / 1e12,
         time_s,
@@ -224,7 +259,8 @@ pub fn evaluate_grouped(
         },
         eff_bw_tbps: total_bytes / time_s / 1e12,
         info,
-    }
+    };
+    GroupedEval { perf, per_gpu_s, comms_s }
 }
 
 /// Register-pressure summary of the backward kernel's hot loop, fed to
@@ -253,6 +289,21 @@ pub fn spill_penalty_cycles(spilled: u32) -> u64 {
     // one dword per lane round-trips through scratch: ~12 cycles of
     // issue + bandwidth occupancy per register per iteration
     12 * spilled as u64
+}
+
+/// Contention multiplier on the atomic-dQ read-modify-write stream, as a
+/// function of the kv-stationary blocks concurrently issuing
+/// `global_atomic_add` to the same head's dQ tiles.
+///
+/// A single writer pays the plain RMW read-back (factor 1.0, the old
+/// flat model's regime); each doubling of concurrent writers bounces the
+/// dQ cache lines once more between XCDs, adding a fixed increment of
+/// retry/line-transfer traffic. Monotone non-decreasing in the writer
+/// count (asserted in `tests/attn_bwd.rs`), so contention grows with
+/// `seq_len / kv_tile` — longer sequences or finer kv tiles mean more
+/// blocks hammering the same rows.
+pub fn dq_contention_factor(concurrent_kv_blocks: f64) -> f64 {
+    1.0 + 0.08 * concurrent_kv_blocks.max(1.0).log2()
 }
 
 /// Full backward-attention evaluation: the dO*O preprocess pass, the

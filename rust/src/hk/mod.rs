@@ -13,13 +13,14 @@
 //! - [`schedule`] — cluster IR shared by all scheduling patterns.
 //! - [`pingpong`] / [`interleave`] / [`wavespec`] — the three scheduling
 //!   patterns of §3.3.
-//! - [`chiplet`] — Algorithm 1 grid remapping (§3.4).
+//! - [`topology`] — the hierarchical placement layer: Algorithm 1 grid
+//!   remapping over XCDs (§3.4), generic LPT shard placement, and the
+//!   node level (GPUs joined by an Infinity Fabric / NVLink link model).
 //! - [`costmodel`] — engine x cache roofline -> TFLOPS.
 //! - [`tunecache`] — persistent memoization of autotuned dispatch
 //!   decisions (consumed by `kernels::registry`).
 
 pub mod autotune;
-pub mod chiplet;
 pub mod costmodel;
 pub mod interleave;
 pub mod layout;
@@ -29,12 +30,13 @@ pub mod regalloc;
 pub mod schedule;
 pub mod swizzle;
 pub mod tile;
+pub mod topology;
 pub mod tunecache;
 pub mod wavespec;
 
-pub use chiplet::ChipletSwizzle;
 pub use costmodel::KernelPerf;
 pub use regalloc::RegMode;
 pub use schedule::{BuiltSchedule, Cluster, LoopSpec};
 pub use swizzle::Swizzle;
 pub use tile::{Layout, RegTile, SharedTile};
+pub use topology::{ChipletSwizzle, LinkModel, NodeTopology};

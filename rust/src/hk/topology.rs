@@ -1,0 +1,424 @@
+//! Hierarchical topology: XCDs within a GPU x GPUs within a node.
+//!
+//! The paper's chiplet insight (§3.4) — performance comes from placing
+//! work to match the XCD hierarchy instead of treating the GPU as flat —
+//! is one instance of a general law: **cost = max over shards +
+//! interconnect traffic**, at every level of the hierarchy. This module
+//! holds both levels:
+//!
+//! - **Intra-GPU**: the Algorithm 1 grid remapping ([`ChipletSwizzle`])
+//!   that steers thread blocks onto XCDs for L2/LLC reuse, exactly as in
+//!   the paper.
+//! - **Inter-GPU**: a [`NodeTopology`] — `n_gpus` identical GPUs joined
+//!   by a [`LinkModel`] (Infinity Fabric on CDNA parts, NVLink-class on
+//!   the NVIDIA-like context archs) — pricing all-to-all expert
+//!   dispatch/combine and data-parallel gradient all-reduce.
+//! - **Placement**: [`place_shards`], the greedy LPT bin-packing that
+//!   assigns weighted work items to shards so the heaviest shard is as
+//!   light as possible. It is the same algorithm at both levels: experts
+//!   onto XCDs within a GPU, and experts onto GPUs within a node.
+//!
+//! The chiplet-era entry point `hk::chiplet::place_experts` is gone;
+//! callers name the shard count explicitly (`arch.n_xcds` or
+//! `topo.n_gpus`) through [`place_shards`].
+
+use crate::sim::arch::{Arch, Gen};
+
+/// Parameters of Algorithm 1 (paper §3.4).
+///
+/// The hardware dispatches thread blocks to XCDs round-robin by block
+/// ID, so remapping block IDs controls which XCD (and hence which L2)
+/// each output tile lands on. Algorithm 1 composes two steps:
+///
+/// 1. **XCD grouping** — remap IDs so chunks of `C` consecutive IDs land
+///    on the same XCD (reduces cross-chiplet traffic);
+/// 2. **hierarchical windowed traversal** — walk the grid in vertical
+///    windows of height `W` ("fold" the ID space into rectangles for L2
+///    reuse).
+///
+/// `W` trades L2 reuse (paper: 8x4 / 4x8 L2 tiles are best on MI355X)
+/// against LLC overlap, which `C` coordinates across XCDs.
+#[derive(Debug, Clone, Copy)]
+pub struct ChipletSwizzle {
+    pub n_xcds: u32,
+    /// Window height W (rows of tiles walked before moving a column).
+    pub window: u32,
+    /// Chunk size C (consecutive remapped IDs resident on one XCD).
+    pub chunk: u32,
+}
+
+impl ChipletSwizzle {
+    pub fn new(n_xcds: u32, window: u32, chunk: u32) -> Self {
+        assert!(n_xcds > 0 && window > 0 && chunk > 0);
+        ChipletSwizzle { n_xcds, window, chunk }
+    }
+
+    /// Step 1: XCD grouping. Remap a flattened block id so that chunks of
+    /// `C` consecutive ids are resident on the same XCD under round-robin
+    /// hardware dispatch (Algorithm 1 lines 3–12).
+    pub fn xcd_group(&self, xy: u32, blocks: u32) -> u32 {
+        let blocks_per_cycle = self.n_xcds * self.chunk;
+        let limit = (blocks / blocks_per_cycle) * blocks_per_cycle;
+        if xy >= limit {
+            // tail region: leave order unchanged
+            return xy;
+        }
+        let xcd = xy % self.n_xcds;
+        let local = xy / self.n_xcds;
+        let chunk_idx = local / self.chunk;
+        let pos = local % self.chunk;
+        chunk_idx * blocks_per_cycle + xcd * self.chunk + pos
+    }
+
+    /// Step 2: hierarchical windowed traversal (Algorithm 1 lines 13–22):
+    /// map a remapped id to output-tile coordinates.
+    pub fn windowed(&self, xy: u32, num_rows: u32, num_cols: u32) -> (u32, u32) {
+        let tid_per_group = self.window * num_cols;
+        let group_id = xy / tid_per_group;
+        let first_row = group_id * self.window;
+        let win_h = (num_rows - first_row.min(num_rows)).min(self.window).max(1);
+        let l = xy % tid_per_group;
+        let row = first_row + (l % win_h);
+        let col = l / win_h;
+        (row.min(num_rows - 1), col.min(num_cols - 1))
+    }
+
+    /// Full Algorithm 1: dispatch-order block `xy` -> output tile (row, col).
+    pub fn remap(&self, xy: u32, num_rows: u32, num_cols: u32) -> (u32, u32) {
+        let blocks = num_rows * num_cols;
+        let grouped = self.xcd_group(xy, blocks);
+        self.windowed(grouped, num_rows, num_cols)
+    }
+
+    /// The full dispatch-order schedule for a grid: `order[i]` is the tile
+    /// computed by the i-th dispatched block (consumed by
+    /// `sim::cache::simulate_gemm_schedule`).
+    pub fn schedule(&self, num_rows: u32, num_cols: u32) -> Vec<(u32, u32)> {
+        (0..num_rows * num_cols)
+            .map(|xy| self.remap(xy, num_rows, num_cols))
+            .collect()
+    }
+}
+
+/// Which XCD the hardware assigns to dispatch-order block `i`.
+pub fn xcd_of_block(i: u32, n_xcds: u32) -> u32 {
+    i % n_xcds
+}
+
+/// ASCII visualization of the first dispatch round (paper Fig. 5 / 18):
+/// each output tile is marked with the XCD (0-7) of the block computing
+/// it in the first `concurrent` dispatched blocks, or '.' if later.
+pub fn render_first_round(
+    swz: &ChipletSwizzle,
+    num_rows: u32,
+    num_cols: u32,
+    concurrent: u32,
+) -> String {
+    let mut grid = vec![vec!['.'; num_cols as usize]; num_rows as usize];
+    for xy in 0..concurrent.min(num_rows * num_cols) {
+        let (r, c) = swz.remap(xy, num_rows, num_cols);
+        let x = xcd_of_block(xy, swz.n_xcds);
+        grid[r as usize][c as usize] =
+            char::from_digit(x, 10).unwrap_or('?');
+    }
+    grid.into_iter()
+        .map(|row| row.into_iter().collect::<String>())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// The identity schedule: row-major block order (the naive baseline).
+pub fn row_major_schedule(num_rows: u32, num_cols: u32) -> Vec<(u32, u32)> {
+    crate::sim::cache::row_major_order(num_rows, num_cols)
+}
+
+/// Generic LPT shard placement — the max-shard law's placement policy at
+/// *either* hierarchy level: assign each item's workload to one of
+/// `n_shards` shards so the heaviest shard is as light as possible
+/// (greedy LPT — longest processing time first).
+///
+/// At the XCD level the items are experts and the shards are chiplets
+/// (the grouped-GEMM lowering in `kernels::moe`); at the GPU level the
+/// items are experts and the shards are the node's GPUs (expert
+/// parallelism). Returns `placement[item] = shard`.
+///
+/// Deterministic: items are considered in (load descending, index
+/// ascending) order and ties between equally-loaded shards resolve to
+/// the lowest id, so everything downstream — tune cache included — is
+/// byte-stable across runs. Zero-load items still get a home (they cost
+/// nothing).
+pub fn place_shards(n_shards: u32, loads: &[f64]) -> Vec<u32> {
+    let x = n_shards.max(1) as usize;
+    let mut order: Vec<usize> = (0..loads.len()).collect();
+    order.sort_by(|&a, &b| {
+        loads[b].total_cmp(&loads[a]).then_with(|| a.cmp(&b))
+    });
+    let mut shard = vec![0.0f64; x];
+    let mut placement = vec![0u32; loads.len()];
+    for e in order {
+        let mut best = 0usize;
+        for (i, &s) in shard.iter().enumerate() {
+            if s < shard[best] {
+                best = i;
+            }
+        }
+        placement[e] = best as u32;
+        shard[best] += loads[e];
+    }
+    placement
+}
+
+/// Inter-GPU link model: per-GPU all-to-all egress bandwidth plus a
+/// per-hop latency. The numbers are class-level (xGMI Infinity Fabric
+/// on CDNA nodes, NVLink on the NVIDIA-like context archs), not a
+/// specific SKU's routing table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Per-GPU egress bandwidth into the switch/mesh, TB/s.
+    pub bw_tbps: f64,
+    /// Per-transfer latency, seconds (software + serdes + hop).
+    pub lat_s: f64,
+}
+
+impl LinkModel {
+    /// CDNA xGMI Infinity Fabric: ~7 links x 64 GB/s per GPU.
+    pub fn infinity_fabric() -> Self {
+        LinkModel { bw_tbps: 0.448, lat_s: 1.5e-6 }
+    }
+
+    /// Hopper-class NVLink (~900 GB/s per GPU).
+    pub fn nvlink4() -> Self {
+        LinkModel { bw_tbps: 0.9, lat_s: 1.0e-6 }
+    }
+
+    /// Blackwell-class NVLink (~1.8 TB/s per GPU).
+    pub fn nvlink5() -> Self {
+        LinkModel { bw_tbps: 1.8, lat_s: 1.0e-6 }
+    }
+
+    /// The link class an architecture's node is built from.
+    pub fn for_arch(arch: &Arch) -> Self {
+        match arch.gen {
+            Gen::Cdna3 | Gen::Cdna4 => Self::infinity_fabric(),
+            Gen::H100Like => Self::nvlink4(),
+            Gen::B200Like => Self::nvlink5(),
+        }
+    }
+}
+
+/// The two-level hierarchy: `n_gpus` identical GPUs (each with its own
+/// XCD level, described by the `Arch`) joined by a [`LinkModel`].
+///
+/// Every cost it prices is **exactly zero at `n_gpus = 1`** — the
+/// single-GPU node is not a special case, it is the fixed point the
+/// node-level law collapses to (asserted in `tests/topology.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeTopology {
+    pub n_gpus: u32,
+    pub link: LinkModel,
+}
+
+impl NodeTopology {
+    /// A single GPU: the degenerate node every pre-existing call site
+    /// lives on. The link is never exercised (all costs are 0).
+    pub fn single() -> Self {
+        NodeTopology { n_gpus: 1, link: LinkModel::infinity_fabric() }
+    }
+
+    /// An `n_gpus` node with the link class matching `arch`.
+    pub fn for_arch(arch: &Arch, n_gpus: u32) -> Self {
+        NodeTopology { n_gpus: n_gpus.max(1), link: LinkModel::for_arch(arch) }
+    }
+
+    /// Time of an all-to-all exchange moving `total_bytes` across GPU
+    /// boundaries (the MoE dispatch/combine pattern). The exchange runs
+    /// concurrently on every GPU's egress link, so the wire time is the
+    /// per-GPU share; one latency hop each for dispatch and combine.
+    /// Exactly 0.0 when `n_gpus <= 1` or nothing crosses.
+    pub fn all_to_all_s(&self, total_bytes: f64) -> f64 {
+        if self.n_gpus <= 1 || total_bytes <= 0.0 {
+            return 0.0;
+        }
+        let per_gpu = total_bytes / self.n_gpus as f64;
+        per_gpu / (self.link.bw_tbps * 1e12) + 2.0 * self.link.lat_s
+    }
+
+    /// Time of a ring all-reduce over `bytes` of gradients (the
+    /// data-parallel training term): each GPU moves `2 (n-1)/n` of the
+    /// buffer through its link, plus `2 (n-1)` latency hops. Exactly 0.0
+    /// when `n_gpus <= 1`.
+    pub fn allreduce_s(&self, bytes: f64) -> f64 {
+        if self.n_gpus <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let n = self.n_gpus as f64;
+        2.0 * (n - 1.0) / n * bytes / (self.link.bw_tbps * 1e12)
+            + 2.0 * (n - 1.0) * self.link.lat_s
+    }
+
+    /// The expected fraction of uniformly-originated traffic that
+    /// crosses a GPU boundary under `n_gpus` equal shards:
+    /// `(n - 1) / n`. Exactly 0.0 at one GPU.
+    pub fn cross_fraction(&self) -> f64 {
+        if self.n_gpus <= 1 {
+            0.0
+        } else {
+            (self.n_gpus as f64 - 1.0) / self.n_gpus as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn remap_is_a_bijection() {
+        for (rows, cols, w, c) in
+            [(48u32, 36u32, 8u32, 64u32), (57, 57, 8, 64), (12, 20, 5, 25)]
+        {
+            let swz = ChipletSwizzle::new(8, w, c);
+            let seen: HashSet<(u32, u32)> =
+                swz.schedule(rows, cols).into_iter().collect();
+            assert_eq!(
+                seen.len(),
+                (rows * cols) as usize,
+                "W={w} C={c} rows={rows} cols={cols}"
+            );
+        }
+    }
+
+    #[test]
+    fn xcd_grouping_places_chunks_together() {
+        // After grouping, the blocks dispatched to XCD 0 in the first
+        // cycle (ids 0, 8, 16, ... under round-robin) must map to C
+        // consecutive remapped positions.
+        let swz = ChipletSwizzle::new(8, 8, 4);
+        let blocks = 256;
+        // ids dispatched to xcd 0: 0,8,16,24 (first chunk-cycle)
+        let remapped: Vec<u32> =
+            (0..4).map(|i| swz.xcd_group(i * 8, blocks)).collect();
+        assert_eq!(remapped, vec![0, 1, 2, 3]);
+        // xcd 1's first chunk occupies the next C slots
+        let remapped1: Vec<u32> =
+            (0..4).map(|i| swz.xcd_group(i * 8 + 1, blocks)).collect();
+        assert_eq!(remapped1, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn tail_region_left_unchanged() {
+        let swz = ChipletSwizzle::new(8, 8, 64);
+        let blocks = 8 * 64 + 37; // 37 tail blocks
+        for xy in (8 * 64)..blocks {
+            assert_eq!(swz.xcd_group(xy, blocks), xy);
+        }
+    }
+
+    #[test]
+    fn windowed_walks_down_columns() {
+        let swz = ChipletSwizzle::new(8, 4, 16);
+        // first window: rows 0..4, walking down then right
+        assert_eq!(swz.windowed(0, 16, 8), (0, 0));
+        assert_eq!(swz.windowed(1, 16, 8), (1, 0));
+        assert_eq!(swz.windowed(3, 16, 8), (3, 0));
+        assert_eq!(swz.windowed(4, 16, 8), (0, 1));
+        // next group starts at row 4
+        assert_eq!(swz.windowed(4 * 8, 16, 8), (4, 0));
+    }
+
+    #[test]
+    fn short_last_window_handled() {
+        // 10 rows, W=4 -> last window height 2
+        let swz = ChipletSwizzle::new(8, 4, 16);
+        let sched = swz.schedule(10, 6);
+        let seen: HashSet<(u32, u32)> = sched.into_iter().collect();
+        assert_eq!(seen.len(), 60);
+    }
+
+    #[test]
+    fn lpt_balances_uniform_loads_exactly() {
+        let loads = vec![1.0; 16];
+        let p = place_shards(8, &loads);
+        let mut per = vec![0u32; 8];
+        for &x in &p {
+            per[x as usize] += 1;
+        }
+        assert!(per.iter().all(|&n| n == 2), "{per:?}");
+    }
+
+    #[test]
+    fn lpt_isolates_the_heavy_item() {
+        // one hot expert + seven light ones on 8 shards: the hot one
+        // must get a shard to itself (LPT optimal here)
+        let mut loads = vec![1.0; 8];
+        loads[3] = 100.0;
+        let p = place_shards(8, &loads);
+        let hot = p[3];
+        for (e, &x) in p.iter().enumerate() {
+            if e != 3 {
+                assert_ne!(x, hot, "item {e} colocated with the hot item");
+            }
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let loads = vec![3.0, 3.0, 2.0, 2.0, 1.0, 1.0, 1.0, 1.0, 5.0];
+        assert_eq!(place_shards(4, &loads), place_shards(4, &loads));
+        // every item got a valid shard
+        for &x in &place_shards(4, &loads) {
+            assert!(x < 4);
+        }
+    }
+
+    #[test]
+    fn render_marks_all_xcds() {
+        let swz = ChipletSwizzle::new(8, 8, 8);
+        let s = render_first_round(&swz, 48, 48, 256);
+        for d in '0'..='7' {
+            assert!(s.contains(d), "XCD {d} missing from render");
+        }
+    }
+
+    #[test]
+    fn single_gpu_node_prices_everything_at_zero() {
+        let t = NodeTopology::single();
+        assert_eq!(t.all_to_all_s(1e9), 0.0);
+        assert_eq!(t.allreduce_s(1e9), 0.0);
+        assert_eq!(t.cross_fraction(), 0.0);
+    }
+
+    #[test]
+    fn comms_grow_with_bytes_and_cross_fraction_with_gpus() {
+        let a = Arch::mi355x();
+        let t = NodeTopology::for_arch(&a, 4);
+        assert!(t.all_to_all_s(1e9) > t.all_to_all_s(1e6));
+        assert!(t.allreduce_s(1e9) > t.allreduce_s(1e6));
+        let mut prev = 0.0;
+        for n in [1u32, 2, 4, 8] {
+            let f = NodeTopology::for_arch(&a, n).cross_fraction();
+            assert!(f >= prev, "cross fraction not monotone at {n}");
+            assert!(f < 1.0);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn link_class_follows_the_arch_generation() {
+        assert_eq!(
+            LinkModel::for_arch(&Arch::mi355x()),
+            LinkModel::infinity_fabric()
+        );
+        assert_eq!(
+            LinkModel::for_arch(&Arch::mi325x()),
+            LinkModel::infinity_fabric()
+        );
+        assert_eq!(LinkModel::for_arch(&Arch::b200_like()), LinkModel::nvlink5());
+        assert_eq!(LinkModel::for_arch(&Arch::h100_like()), LinkModel::nvlink4());
+        // NVLink-class links are faster than IF; both are far below HBM
+        let a = Arch::mi355x();
+        assert!(LinkModel::nvlink5().bw_tbps > LinkModel::infinity_fabric().bw_tbps);
+        assert!(LinkModel::infinity_fabric().bw_tbps < a.hbm_tbps / 4.0);
+    }
+}

@@ -31,6 +31,9 @@ pub struct TuneRecord {
     pub block_m: u32,
     pub block_n: u32,
     pub block_k: u32,
+    /// Tuned kv tile height of the split-dQ backward pass (0 = not
+    /// applicable / untuned; see `hk::autotune::tune_dq_tile`).
+    pub dq_kv_tile: u32,
     /// Predicted performance at tuning time (TFLOPS; bandwidth-style
     /// kernels store their effective-bandwidth figure here).
     pub tflops: f64,
@@ -45,6 +48,7 @@ impl TuneRecord {
             ("block_m", Json::Num(self.block_m as f64)),
             ("block_n", Json::Num(self.block_n as f64)),
             ("block_k", Json::Num(self.block_k as f64)),
+            ("dq_kv_tile", Json::Num(self.dq_kv_tile as f64)),
             ("tflops", Json::Num(self.tflops)),
         ])
     }
@@ -64,6 +68,8 @@ impl TuneRecord {
             block_m: u("block_m"),
             block_n: u("block_n"),
             block_k: u("block_k"),
+            // absent in pre-dq-tile cache files: 0 = untuned
+            dq_kv_tile: u("dq_kv_tile"),
             tflops: j.get("tflops").and_then(Json::as_f64).unwrap_or(0.0),
         })
     }
@@ -205,6 +211,7 @@ mod tests {
             block_m: 256,
             block_n: 256,
             block_k: 64,
+            dq_kv_tile: 0,
             tflops: 1543.25,
         }
     }

@@ -66,6 +66,11 @@ pub struct AttnConfig {
     pub lds_ways: u32,
     /// dQ accumulation strategy of the backward pass (ignored forward).
     pub dq_mode: DqMode,
+    /// KV tile rows of the split-dQ pass (ignored under atomic dQ and
+    /// forward). 16 is the shipped default; the registry autotunes it
+    /// over {8, 16, 32, 64} via `hk::autotune::tune_dq_tile` and
+    /// persists the winner in the tune cache.
+    pub dq_kv_tile: u32,
 }
 
 impl AttnConfig {
@@ -83,6 +88,7 @@ impl AttnConfig {
             reg_mode: RegMode::Pinned,
             lds_ways: 1,
             dq_mode: DqMode::Atomic,
+            dq_kv_tile: 16,
         }
     }
 
@@ -171,9 +177,32 @@ impl AttnConfig {
         2.0 * self.q_plane() * 2.0 + self.vector_bytes() / 2.0
     }
 
+    /// kv-stationary blocks concurrently updating one head's dQ under
+    /// atomic accumulation: every kv block of a (batch, query-head)
+    /// slice issues `global_atomic_add` into the same dQ rows, and the
+    /// dispatch wavefront keeps `seq / (kv_tile_rows x waves)` of them
+    /// in flight. Monotone in `seq` and in the reciprocal of the kv
+    /// tile — longer sequences and finer tiles mean more writers
+    /// hammering the same lines (asserted in `tests/attn_bwd.rs`).
+    pub fn dq_concurrent_kv_blocks(&self) -> f64 {
+        dq_atomic_writers(self.seq, bwd_kv_blk(self) * self.pattern.waves())
+    }
+
+    /// The atomic-dQ read-modify-write traffic multiplier: the write
+    /// itself plus the contention-scaled read-back/line-bounce term
+    /// ([`crate::hk::costmodel::dq_contention_factor`]). Exactly the
+    /// old flat 2x RMW factor when a single kv block owns the head.
+    pub fn dq_rmw_factor(&self) -> f64 {
+        1.0 + crate::hk::costmodel::dq_contention_factor(
+            self.dq_concurrent_kv_blocks(),
+        )
+    }
+
     /// Bytes of the main kv-stationary pass: Q/dO streamed per kv
     /// wave-front, K/V + dK/dV once per KV head (the GQA reduction),
-    /// plus the dQ read-modify-write traffic under atomic accumulation.
+    /// plus the dQ read-modify-write traffic under atomic accumulation
+    /// — priced per concurrent kv block via [`Self::dq_rmw_factor`],
+    /// not a flat factor.
     pub fn bwd_main_bytes(&self) -> f64 {
         let e = 2.0; // bf16 activations
         let f = 4.0; // f32 gradient accumulation
@@ -182,7 +211,7 @@ impl AttnConfig {
             + 2.0 * self.kv_plane() * f
             + self.vector_bytes();
         match self.dq_mode {
-            DqMode::Atomic => common + 2.0 * self.q_plane() * f,
+            DqMode::Atomic => common + self.dq_rmw_factor() * self.q_plane() * f,
             DqMode::Split => common,
         }
     }
@@ -207,6 +236,16 @@ impl AttnConfig {
     pub fn bwd_bytes(&self) -> f64 {
         self.bwd_preprocess_bytes() + self.bwd_main_bytes() + self.bwd_dq_bytes()
     }
+}
+
+/// Concurrent atomic dQ writers per (batch, query-head) slice for a kv
+/// tile covering `kv_tile_rows` rows: `seq / kv_tile_rows`, floored at
+/// one writer. The pure function behind
+/// [`AttnConfig::dq_concurrent_kv_blocks`] — monotone non-decreasing in
+/// `seq` and in the reciprocal of `kv_tile_rows` (asserted in
+/// `tests/attn_bwd.rs`).
+pub fn dq_atomic_writers(seq: u32, kv_tile_rows: u32) -> f64 {
+    (seq as f64 / kv_tile_rows.max(1) as f64).max(1.0)
 }
 
 /// Per-wave register demand of the backward kernel (Table 1 driver):
@@ -466,9 +505,12 @@ pub fn build_bwd_spec(arch: &Arch, cfg: &AttnConfig) -> LoopSpec {
     ];
     if cfg.dq_mode == DqMode::Atomic {
         // global_atomic_add of this tile pair's dQ contribution: the
-        // read-modify-write doubles the wire traffic of the store
+        // read-modify-write multiplies the store's wire traffic by the
+        // per-concurrent-kv-block contention factor
         load_do.push(Instr::VMemStore {
-            bytes: (2 * q_blk * d * 4 / cfg.pattern.waves()) as u64,
+            bytes: (cfg.dq_rmw_factor()
+                * (q_blk * d * 4 / cfg.pattern.waves()) as f64)
+                as u64,
             issues: 1,
         });
     }
@@ -541,11 +583,14 @@ pub fn build_bwd_preprocess_spec(cfg: &AttnConfig) -> LoopSpec {
 /// The split-dQ LoopSpec (q-stationary): resident Q/dO tiles, streamed
 /// K/V tiles, 3 matmuls per pair — recompute S = QK^T, dP = dO V^T,
 /// dQ += dS K — with the same row+column shared-tile reload structure
-/// as the main pass. Only built under [`DqMode::Split`].
+/// as the main pass. Only built under [`DqMode::Split`]. The streamed
+/// kv tile height is `cfg.dq_kv_tile` (registry-autotuned over
+/// {8, 16, 32, 64}): finer tiles shorten the pipeline fill per pair,
+/// coarser tiles amortize the per-iteration load/softmax overhead.
 pub fn build_bwd_dq_spec(arch: &Arch, cfg: &AttnConfig) -> LoopSpec {
     let d = cfg.d_head;
     let q_res = bwd_kv_blk(cfg); // resident rows mirror the kv tile size
-    let kv_blk = 16u32;
+    let kv_blk = cfg.dq_kv_tile.max(1);
     let alloc = bwd_alloc(arch, cfg);
 
     let pair_flops = 2 * q_res as u64 * kv_blk as u64 * d as u64;
@@ -610,7 +655,7 @@ pub fn build_bwd_dq_spec(arch: &Arch, cfg: &AttnConfig) -> LoopSpec {
         ),
     ];
 
-    let total = cfg.seq / kv_blk;
+    let total = (cfg.seq / kv_blk).max(1);
     let iters = if cfg.causal { total.max(2) / 2 } else { total };
     LoopSpec {
         name: format!("attn-bwd-dq-d{}-n{}", d, cfg.seq),

@@ -6,7 +6,7 @@
 //! shape. `build_spec` lowers it to the pattern-independent `LoopSpec`
 //! (the HK source), `simulate` runs it through the cost model.
 
-use crate::hk::chiplet::ChipletSwizzle;
+use crate::hk::topology::ChipletSwizzle;
 use crate::hk::costmodel::{evaluate_gemm, KernelPerf};
 use crate::hk::regalloc::{allocate, AllocResult, RegMode, TileDemand};
 use crate::hk::schedule::{BuiltSchedule, Cluster, LoopSpec};

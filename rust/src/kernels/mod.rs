@@ -8,8 +8,8 @@
 //! - [`decode`] — paged decode attention over a block-table KV cache
 //!   (the serving engine's memory-bound gather workload).
 //! - [`moe`] — grouped GEMM over ragged per-expert batches (the MoE
-//!   FFN), costed by the max-over-XCD-shards law with chiplet-aware
-//!   expert placement.
+//!   FFN), costed by the max-over-shards law at both topology levels
+//!   (XCDs within a GPU, GPUs within a node) with LPT expert placement.
 //! - [`membound`] — fused dropout-residual-layernorm + RoPE (Fig. 9,
 //!   listing E.2).
 //! - [`baselines`] — AITER/CK/hipBLASLt/Triton/PyTorch/Mojo models.

@@ -13,14 +13,19 @@
 //!   skewed or small expert batches where ragged tails would leave an
 //!   8-wave tile mostly idle.
 //!
-//! The cost model is [`crate::hk::costmodel::evaluate_grouped`]: each
-//! expert is placed on an XCD by the chiplet-aware LPT placement
-//! ([`crate::hk::chiplet::place_experts`]) and **total time is the max
-//! over per-XCD shards** — so balanced routing is provably no slower
-//! than skewed routing at equal total tokens (`tests/moe.rs`).
+//! The cost model is [`crate::hk::costmodel::evaluate_grouped`] over the
+//! two-level [`crate::hk::topology::NodeTopology`]: experts are placed
+//! on GPUs (expert parallelism) and, within each GPU, on XCDs — both by
+//! the same LPT placement ([`crate::hk::topology::place_shards`]) — and
+//! **total time is the max over shards at both levels plus the
+//! inter-GPU all-to-all dispatch/combine** priced by the link model. So
+//! balanced routing is provably no slower than skewed routing at equal
+//! total tokens (`tests/moe.rs`), at every GPU count
+//! (`tests/topology.rs`), and the node-level cost at `n_gpus = 1`
+//! reduces exactly to the single-GPU max-shard law.
 
-use crate::hk::chiplet::place_experts;
-use crate::hk::costmodel::{evaluate_grouped, GroupedShard, KernelPerf};
+use crate::hk::costmodel::{evaluate_grouped, GroupedEval, GroupedShard, KernelPerf};
+use crate::hk::topology::{place_shards, NodeTopology};
 use crate::kernels::gemm::{self, GemmConfig, Pattern};
 use crate::sim::arch::{Arch, Dtype};
 use crate::sim::engine::{run_block, EngineConfig};
@@ -46,6 +51,9 @@ pub struct MoeGemmConfig {
     pub block_n: u32,
     pub block_k: u32,
     pub pattern: Pattern,
+    /// Simulated GPUs the experts are sharded across (expert
+    /// parallelism). 1 = the single-GPU max-shard law, unchanged.
+    pub n_gpus: u32,
 }
 
 impl MoeGemmConfig {
@@ -61,7 +69,14 @@ impl MoeGemmConfig {
             block_n: 256,
             block_k: 64,
             pattern: Pattern::PingPong8,
+            n_gpus: 1,
         }
+    }
+
+    /// Shard the experts across `n` simulated GPUs.
+    pub fn with_gpus(mut self, n: u32) -> Self {
+        self.n_gpus = n.max(1);
+        self
     }
 
     /// `routed` total assignments spread with the parametric skew
@@ -107,6 +122,18 @@ impl MoeGemmConfig {
             .sum::<f64>()
             + active * self.weight_bytes_per_expert()
     }
+
+    /// Activation bytes the expert-parallel all-to-all moves across GPU
+    /// boundaries: each routed token's `d_model` input row is dispatched
+    /// to its expert's GPU and the `d_model` output row combined back,
+    /// and under uniformly-originated tokens `(n_gpus - 1) / n_gpus` of
+    /// both legs cross a boundary. Exactly 0.0 at one GPU.
+    pub fn cross_bytes(&self, topo: &NodeTopology) -> f64 {
+        2.0 * self.total_tokens() as f64
+            * self.d_model as f64
+            * self.dtype.bytes_f()
+            * topo.cross_fraction()
+    }
 }
 
 /// Exact-total parametric skew profile: interpolates between a uniform
@@ -149,10 +176,13 @@ fn build_block(arch: &Arch, cfg: &MoeGemmConfig, k: u32) -> crate::hk::BuiltSche
     gemm::build(arch, &rep)
 }
 
-/// Simulate the grouped FFN: lower each expert's ragged batch to macro
-/// blocks, place experts on XCDs (LPT over block-cycles), and apply the
-/// max-shard law.
-pub fn simulate_grouped(arch: &Arch, cfg: &MoeGemmConfig) -> KernelPerf {
+/// Simulate the grouped FFN over the full node hierarchy: lower each
+/// expert's ragged batch to macro blocks, place experts on GPUs then on
+/// XCDs within their GPU (LPT over block-cycles at both levels), price
+/// the inter-GPU all-to-all, and apply the max-shard law. Returns the
+/// detailed per-GPU breakdown.
+pub fn simulate_grouped_node(arch: &Arch, cfg: &MoeGemmConfig) -> GroupedEval {
+    let topo = NodeTopology::for_arch(arch, cfg.n_gpus);
     let built_up = build_block(arch, cfg, cfg.d_model);
     let built_down = build_block(arch, cfg, cfg.d_ff);
     // expert weights are cache-resident between blocks, so the engine
@@ -177,35 +207,58 @@ pub fn simulate_grouped(arch: &Arch, cfg: &MoeGemmConfig) -> KernelPerf {
         })
         .collect();
 
-    let placement = place_experts(arch.n_xcds, &loads);
-    let mut shards =
-        vec![GroupedShard::default(); arch.n_xcds.max(1) as usize];
-    for (e, &t) in cfg.expert_tokens.iter().enumerate() {
-        if t == 0 {
-            continue;
+    // Level 1: experts onto GPUs. With one shard the LPT degenerates to
+    // the identity placement (everything on GPU 0), so the single-GPU
+    // path is bit-identical to the flat max-shard law — no special case.
+    let gpu_of: Vec<u32> = place_shards(topo.n_gpus, &loads);
+
+    // Level 2: within each GPU, its experts onto that GPU's XCDs.
+    let n_xcds = arch.n_xcds.max(1) as usize;
+    let mut gpu_shards =
+        vec![vec![GroupedShard::default(); n_xcds]; topo.n_gpus.max(1) as usize];
+    for g in 0..topo.n_gpus.max(1) {
+        let local: Vec<usize> = (0..loads.len())
+            .filter(|&e| gpu_of[e] == g)
+            .collect();
+        let local_loads: Vec<f64> = local.iter().map(|&e| loads[e]).collect();
+        let placement = place_shards(arch.n_xcds, &local_loads);
+        for (i, &e) in local.iter().enumerate() {
+            let t = cfg.expert_tokens[e];
+            if t == 0 {
+                continue;
+            }
+            let sh = &mut gpu_shards[g as usize][placement[i] as usize];
+            sh.compute_cycles += loads[e];
+            sh.stream_bytes += cfg.act_bytes(t);
+            sh.weight_bytes += cfg.weight_bytes_per_expert();
         }
-        let sh = &mut shards[placement[e] as usize];
-        sh.compute_cycles += loads[e];
-        sh.stream_bytes += cfg.act_bytes(t);
-        sh.weight_bytes += cfg.weight_bytes_per_expert();
     }
 
     evaluate_grouped(
         arch,
+        &topo,
         &format!(
-            "moe-gemm e{} d{}x{} tok{} {:?}",
+            "moe-gemm e{} d{}x{} tok{} g{} {:?}",
             cfg.experts,
             cfg.d_model,
             cfg.d_ff,
             cfg.total_tokens(),
+            cfg.n_gpus.max(1),
             cfg.pattern
         ),
         built_up.info,
         &stats_up,
-        &shards,
+        &gpu_shards,
+        cfg.cross_bytes(&topo),
         cfg.flops(),
         cfg.bytes(),
     )
+}
+
+/// [`simulate_grouped_node`]'s combined estimate — the registry's
+/// simulate surface for `Op::MoeGemm`.
+pub fn simulate_grouped(arch: &Arch, cfg: &MoeGemmConfig) -> KernelPerf {
+    simulate_grouped_node(arch, cfg).perf
 }
 
 /// Iso-parameter dense FFN baseline: one up + down projection pair at
@@ -327,6 +380,98 @@ pub fn bench_sweep(arch: crate::kernels::registry::ArchId) -> Vec<MoeBenchRow> {
     rows
 }
 
+/// GPU counts of the `BENCH_multi_gpu.json` grid.
+pub const BENCH_GPUS: [u32; 4] = [1, 2, 4, 8];
+
+/// One `BENCH_multi_gpu.json` MoE row: a (experts, n_gpus, skew) cell
+/// under top-2 routing, with the node-level time breakdown. The
+/// `n_gpus = 1` column of this grid matches the corresponding
+/// `BENCH_moe.json` top-2 cells *exactly* (asserted in
+/// `tests/topology.rs`).
+#[derive(Debug, Clone)]
+pub struct MultiGpuMoeRow {
+    pub experts: u32,
+    pub n_gpus: u32,
+    pub skew_pct: u32,
+    /// Variant the registry's node-aware dispatch picked.
+    pub variant: String,
+    pub time_s: f64,
+    pub hw_tflops: f64,
+    /// Inter-GPU all-to-all share of `time_s` (0 at one GPU).
+    pub comms_s: f64,
+    /// The busiest GPU's shard time (the node-level max-shard term).
+    pub max_gpu_s: f64,
+}
+
+/// The `BENCH_multi_gpu.json` MoE sweep on one arch: expert counts
+/// {8, 16, 64} x GPUs {1, 2, 4, 8} x skew {0, 40, 80}%, top-2 routing.
+///
+/// The per-GPU kernel variant is a *single-GPU* tuning decision — the
+/// node level only changes placement and adds the all-to-all — so the
+/// sweep first warms its tune cache in exactly [`bench_sweep`]'s
+/// dispatch order and then applies the GPU count to each resolved
+/// config. That makes the `n_gpus = 1` column equal the single-GPU
+/// `BENCH_moe.json` top-2 grid bit-for-bit (`tests/topology.rs`).
+pub fn multi_gpu_sweep(
+    arch: crate::kernels::registry::ArchId,
+) -> Vec<MultiGpuMoeRow> {
+    use crate::hk::tunecache::TuneCache;
+    use crate::kernels::registry::Query;
+
+    let hw = arch.arch();
+    let mut cache = TuneCache::new();
+    // warm the cache with the single-GPU bench's exact query sequence,
+    // so shape buckets resolve to the same tuned variants here as there
+    for &experts in &BENCH_EXPERTS {
+        for &top_k in &BENCH_TOP_K {
+            for &skew_pct in &BENCH_SKEW_PCT {
+                let _ = Query::moe_gemm(
+                    arch,
+                    BENCH_TOKENS,
+                    BENCH_D_MODEL,
+                    BENCH_D_FF,
+                    experts,
+                    top_k,
+                    skew_pct,
+                )
+                .dispatch_with(&mut cache);
+            }
+        }
+    }
+
+    let mut rows = Vec::new();
+    for &experts in &BENCH_EXPERTS {
+        for &n_gpus in &BENCH_GPUS {
+            for &skew_pct in &BENCH_SKEW_PCT {
+                let q = Query::moe_gemm(
+                    arch,
+                    BENCH_TOKENS,
+                    BENCH_D_MODEL,
+                    BENCH_D_FF,
+                    experts,
+                    2,
+                    skew_pct,
+                );
+                let disp = q.dispatch_with(&mut cache);
+                let mut cfg = disp.moe_config().clone();
+                cfg.n_gpus = n_gpus.max(1);
+                let det = simulate_grouped_node(&hw, &cfg);
+                rows.push(MultiGpuMoeRow {
+                    experts,
+                    n_gpus,
+                    skew_pct,
+                    variant: disp.variant.clone(),
+                    time_s: det.perf.time_s,
+                    hw_tflops: det.perf.tflops,
+                    comms_s: det.comms_s,
+                    max_gpu_s: det.per_gpu_s.iter().cloned().fold(0.0, f64::max),
+                });
+            }
+        }
+    }
+    rows
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -394,6 +539,36 @@ mod tests {
         let cfg = MoeGemmConfig::from_loads(vec![0, 0, 0, 0], 2048, 1024);
         let p = simulate_grouped(&arch(), &cfg);
         assert!(p.time_s > 0.0 && p.time_s.is_finite());
+    }
+
+    #[test]
+    fn node_path_at_one_gpu_is_the_flat_law() {
+        let cfg = MoeGemmConfig::balanced(16384, 2048, 1024, 16);
+        let det = simulate_grouped_node(&arch(), &cfg);
+        assert_eq!(det.comms_s, 0.0);
+        assert_eq!(det.per_gpu_s.len(), 1);
+        assert_eq!(det.perf.time_s, simulate_grouped(&arch(), &cfg).time_s);
+        assert_eq!(det.per_gpu_s[0], det.perf.time_s);
+    }
+
+    #[test]
+    fn expert_parallelism_splits_compute_but_pays_comms() {
+        let a = arch();
+        let base = MoeGemmConfig::balanced(16384, 2048, 1024, 16);
+        let one = simulate_grouped_node(&a, &base);
+        let four = simulate_grouped_node(&a, &base.clone().with_gpus(4));
+        assert_eq!(four.per_gpu_s.len(), 4);
+        assert!(four.comms_s > 0.0);
+        // each GPU runs ~a quarter of the experts: the busiest GPU's
+        // shard time drops well below the single-GPU wall-clock
+        let max_gpu = four.per_gpu_s.iter().cloned().fold(0.0, f64::max);
+        assert!(
+            max_gpu < one.perf.time_s,
+            "{max_gpu} !< {}",
+            one.perf.time_s
+        );
+        // the breakdown accounts for the whole wall-clock
+        assert_eq!(four.perf.time_s, max_gpu + four.comms_s);
     }
 
     #[test]

@@ -422,11 +422,29 @@ pub fn variants(key: &KernelKey) -> Vec<Variant> {
             },
         ],
         // Grouped GEMM over ragged expert batches. The NVIDIA-like
-        // archs carry no native table (the amd-kernels MoE suite is
-        // CDNA-shaped); they resolve through the CDNA3 fallback of
-        // [`variants_or_fallback`].
+        // archs carry their own native table (ROADMAP registry-coverage
+        // item): wave specialization is the right pattern there —
+        // producers are register-cheap, so the large macro tile survives
+        // — with a ping-pong variant for ragged tails. Only genuinely
+        // unknown arch/op pairs (e.g. NVIDIA `attn-bwd`) still ride
+        // [`variants_or_fallback`]'s warning path.
         Op::MoeGemm => match key.arch {
-            ArchId::B200Like | ArchId::H100Like => vec![],
+            ArchId::B200Like | ArchId::H100Like => vec![
+                Variant {
+                    name: "moe-ws-4p8c",
+                    pattern: Pattern::WaveSpec { producers: 4, consumers: 8 },
+                    block_m: 256,
+                    block_n: 256,
+                    swizzled: false,
+                },
+                Variant {
+                    name: "moe-pp8-ragged",
+                    pattern: Pattern::PingPong8,
+                    block_m: 128,
+                    block_n: 256,
+                    swizzled: false,
+                },
+            ],
             _ => vec![
                 Variant {
                     name: "moe-ep-pp8",
@@ -504,6 +522,10 @@ pub struct Overrides {
     pub vectorized: Option<bool>,
     /// Backward-attention dQ accumulation strategy (atomic vs split).
     pub dq_mode: Option<DqMode>,
+    /// Split-dQ kv tile height (None = tuned / default 16).
+    pub dq_kv_tile: Option<u32>,
+    /// Node-level GPU count for shardable ops (None = single GPU).
+    pub n_gpus: Option<u32>,
 }
 
 /// A dispatch request: key ingredients + concrete problem + overrides.
@@ -668,6 +690,24 @@ impl Query {
         self
     }
 
+    /// Pin the split-dQ kv tile height (bypasses the tile autotuner).
+    pub fn dq_tile(mut self, rows: u32) -> Self {
+        self.ov.dq_kv_tile = Some(rows);
+        self
+    }
+
+    /// Shard the problem across `n` simulated GPUs (the node-aware
+    /// override: MoE expert parallelism through `hk::topology`).
+    ///
+    /// Currently honored by `Op::MoeGemm` only — the one op with a
+    /// node-level sharding lowering. On other ops the value is ignored
+    /// by `construct`, though like any override it still makes the
+    /// query non-cacheable.
+    pub fn gpus(mut self, n: u32) -> Self {
+        self.ov.n_gpus = Some(n.max(1));
+        self
+    }
+
     pub fn pattern(mut self, p: Pattern) -> Self {
         self.ov.pattern = Some(p);
         self
@@ -753,6 +793,8 @@ impl Query {
             || ov.shuffle_cycles.is_some()
             || ov.vectorized.is_some()
             || ov.dq_mode.is_some()
+            || ov.dq_kv_tile.is_some()
+            || ov.n_gpus.is_some()
     }
 
     /// Dispatch against the process-wide persistent tune cache.
@@ -785,17 +827,20 @@ impl Query {
         let cacheable = !self.has_overrides();
         if cacheable {
             if let Some(rec) = cache.get(&key.id()).cloned() {
-                let v = vs
-                    .iter()
-                    .find(|v| v.name == rec.variant)
-                    .copied()
-                    .unwrap_or(vs[0]);
-                return Dispatch {
-                    key,
-                    variant: v.name.to_string(),
-                    from_cache: true,
-                    config: self.construct(&v, Some(&rec)),
-                };
+                // a record whose variant no longer exists in the table
+                // (e.g. persisted before an arch grew a native table) is
+                // a stale decision, not a hit: fall through to the cold
+                // sweep, which overwrites it
+                if let Some(v) =
+                    vs.iter().find(|v| v.name == rec.variant).copied()
+                {
+                    return Dispatch {
+                        key,
+                        variant: v.name.to_string(),
+                        from_cache: true,
+                        config: self.construct(&v, Some(&rec)),
+                    };
+                }
             }
         }
 
@@ -821,6 +866,7 @@ impl Query {
             block_m: winner.block_m,
             block_n: winner.block_n,
             block_k: 0,
+            dq_kv_tile: 0,
             tflops: perf.tflops,
         };
 
@@ -833,6 +879,23 @@ impl Query {
                     rec.window = top.window;
                     rec.chunk = top.chunk;
                     rec.block_k = base.block_k;
+                    rec.tflops = top.perf.tflops;
+                }
+            }
+        }
+
+        // Refine the split-dQ kv tile when the split variant won the
+        // backward sweep (the variant fixes the dQ strategy; the tile is
+        // the remaining free knob, searched over {8, 16, 32, 64}).
+        if key.op == Op::AttnBwd
+            && winner.name == "bwd-4wave"
+            && self.ov.dq_kv_tile.is_none()
+        {
+            if let KernelConfig::Attn(base) = self.construct(&winner, None) {
+                let arch = key.arch.arch();
+                let pts = autotune::tune_dq_tile(&arch, &base);
+                if let Some(top) = pts.first() {
+                    rec.dq_kv_tile = top.tile;
                     rec.tflops = top.perf.tflops;
                 }
             }
@@ -910,6 +973,12 @@ impl Query {
                         "bwd-4wave" => DqMode::Split,
                         _ => DqMode::Atomic,
                     }),
+                    // caller's pin wins; otherwise the tuned tile from
+                    // the cache record, falling back to the shipped 16
+                    dq_kv_tile: self.ov.dq_kv_tile.unwrap_or(match rec {
+                        Some(r) if r.dq_kv_tile > 0 => r.dq_kv_tile,
+                        _ => 16,
+                    }),
                 })
             }
             Problem::AttnDecode {
@@ -959,6 +1028,8 @@ impl Query {
                 if let Some(bk) = self.ov.block_k {
                     cfg.block_k = bk;
                 }
+                // node-aware override: shard the experts across GPUs
+                cfg.n_gpus = self.ov.n_gpus.unwrap_or(1).max(1);
                 KernelConfig::MoeGemm(cfg)
             }
             Problem::FusedLn { rows, d, dropout } => {
@@ -1140,7 +1211,10 @@ mod tests {
     }
 
     #[test]
-    fn nvidia_moe_keys_fall_back_to_cdna3() {
+    fn nvidia_moe_keys_resolve_natively() {
+        // ROADMAP registry-coverage item: the NVIDIA-like archs carry
+        // their own MoE variant table, so these keys no longer ride the
+        // CDNA3 fallback warning path.
         let p = Problem::MoeGemm {
             tokens: 4096,
             d_model: 2048,
@@ -1149,15 +1223,59 @@ mod tests {
             top_k: 2,
             skew_pct: 0,
         };
-        let key = KernelKey::of(Op::MoeGemm, Dtype::Bf16, &p, ArchId::B200Like);
-        assert!(variants(&key).is_empty(), "B200 grew a native MoE table");
-        let (vs, fell_back) = variants_or_fallback(&key);
-        assert!(fell_back);
-        assert!(!vs.is_empty());
-        // and the full dispatch path resolves instead of panicking
+        for arch in [ArchId::B200Like, ArchId::H100Like] {
+            let key = KernelKey::of(Op::MoeGemm, Dtype::Bf16, &p, arch);
+            assert!(!variants(&key).is_empty(), "{} lost its table", key.id());
+            let (vs, fell_back) = variants_or_fallback(&key);
+            assert!(!fell_back, "{} fell back despite a native table", key.id());
+            assert!(vs.iter().any(|v| v.name == "moe-ws-4p8c"));
+        }
+        // and the full dispatch path resolves and simulates
         let q = Query::moe_ffn(ArchId::B200Like, 4096, 8, 2);
         let d = q.dispatch_with(&mut TuneCache::new());
         assert!(d.simulate().time_s > 0.0);
+    }
+
+    #[test]
+    fn stale_cached_variant_is_a_miss_not_a_hit() {
+        // a record persisted before an arch grew (or changed) its
+        // variant table must not pin dispatch to an arbitrary variant:
+        // it re-sweeps and overwrites the stale decision
+        let q = Query::moe_ffn(ArchId::Mi355x, 4096, 8, 2);
+        let mut cache = TuneCache::new();
+        let id = q.key().id();
+        cache.put(
+            id.clone(),
+            TuneRecord {
+                variant: "retired-variant".to_string(),
+                window: 0,
+                chunk: 0,
+                block_m: 0,
+                block_n: 0,
+                block_k: 0,
+                dq_kv_tile: 0,
+                tflops: 0.0,
+            },
+        );
+        let d = q.dispatch_with(&mut cache);
+        assert!(!d.from_cache, "stale record served as a hit");
+        let rec = cache.get(&id).expect("record refreshed");
+        assert_ne!(rec.variant, "retired-variant");
+        // and the refreshed record serves the next dispatch warm
+        assert!(q.dispatch_with(&mut cache).from_cache);
+    }
+
+    #[test]
+    fn node_aware_moe_override_threads_through_dispatch() {
+        let q = Query::moe_ffn(ArchId::Mi355x, 4096, 8, 2).gpus(4);
+        let d = q.dispatch_with(&mut TuneCache::new());
+        assert_eq!(d.moe_config().n_gpus, 4);
+        let p = d.simulate();
+        assert!(p.time_s > 0.0 && p.time_s.is_finite());
+        // the unsharded dispatch stays on one GPU
+        let single = Query::moe_ffn(ArchId::Mi355x, 4096, 8, 2)
+            .dispatch_with(&mut TuneCache::new());
+        assert_eq!(single.moe_config().n_gpus, 1);
     }
 
     #[test]

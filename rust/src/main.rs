@@ -18,6 +18,10 @@
 //!   moe                   MoE walkthrough: router load-balance table +
 //!                         grouped-GEMM vs dense-FFN sweep; writes
 //!                         BENCH_moe.json (override with HK_MOE_OUT)
+//!   multi-gpu             node-level sharding report: MoE expert
+//!                         parallelism across simulated GPUs + the
+//!                         per-GPU-KV-pool serving engine; writes
+//!                         BENCH_multi_gpu.json (HK_MULTI_GPU_OUT)
 //!   attn-bwd              attention-backwards grid (dQ/dK/dV recompute
 //!                         subsystem vs baselines, Table 3 re-check);
 //!                         writes BENCH_attn_bwd.json (HK_ATTN_BWD_OUT)
@@ -63,11 +67,12 @@ fn main() -> Result<()> {
             let exp = args.get(1).map(String::as_str).unwrap_or("all");
             if !report::run(exp) {
                 bail!(
-                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, attn-bwd, all"
+                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, multi-gpu, attn-bwd, all"
                 );
             }
         }
         Some("moe") => report::moe(),
+        Some("multi-gpu") => report::multi_gpu(),
         Some("attn-bwd") => report::attn_bwd(),
         Some("serve") => {
             let n: u64 = flag(&args, "--requests")
@@ -220,6 +225,7 @@ fn main() -> Result<()> {
             eprintln!("       {exe} serve [--paged|--mixed] [--requests N] [--rate R]");
             eprintln!("       {exe} train [--steps N] [--path kernels|reference]");
             eprintln!("       {exe} moe");
+            eprintln!("       {exe} multi-gpu");
             eprintln!("       {exe} attn-bwd");
             eprintln!("       {exe} tune [--arch mi355x|mi350x|mi325x|b200|h100]");
             eprintln!("       {exe} artifacts | solve | arch");

@@ -15,8 +15,10 @@
 //!   operand layout) plus the weighted inverse un-permutation.
 //! - the grouped-GEMM kernel class itself lives in
 //!   [`crate::kernels::moe`] (`Op::MoeGemm` in the registry), costed by
-//!   [`crate::hk::costmodel::evaluate_grouped`]'s max-over-XCD-shards
-//!   law with chiplet-aware expert placement.
+//!   [`crate::hk::costmodel::evaluate_grouped`]'s max-over-shards law
+//!   over the [`crate::hk::topology`] hierarchy — experts placed on
+//!   XCDs within a GPU and on GPUs within a node, plus the inter-GPU
+//!   all-to-all when `n_gpus > 1`.
 
 pub mod dispatch;
 pub mod router;

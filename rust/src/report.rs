@@ -10,7 +10,7 @@
 //! [`Query`] overrides (pattern / macro-tile / grid), while the
 //! `registry` experiment shows the autotuned path end to end.
 
-use crate::hk::chiplet::{render_first_round, ChipletSwizzle};
+use crate::hk::topology::{render_first_round, ChipletSwizzle};
 use crate::hk::costmodel::KernelPerf;
 use crate::hk::phase::{format_threads, solve_table5};
 use crate::hk::regalloc::RegMode;
@@ -674,6 +674,199 @@ pub fn moe_bench_json(
     ])
 }
 
+/// Multi-GPU sharding: the node-level projection of the chiplet
+/// max-shard law — MoE expert parallelism across simulated GPUs
+/// (`hk::topology` link model) and the per-GPU-KV-pool serving engine.
+/// Writes `BENCH_multi_gpu.json` (override with `HK_MULTI_GPU_OUT`).
+pub fn multi_gpu() {
+    use crate::kernels::moe::{
+        bench_sweep, multi_gpu_sweep, BENCH_D_FF, BENCH_D_MODEL, BENCH_TOKENS,
+    };
+    use crate::serve::{serve_trace, ServeConfig, ServeEngine};
+
+    hr(&format!(
+        "Multi-GPU A — MoE expert parallelism ({BENCH_TOKENS} tokens x top-2, \
+         d_model {BENCH_D_MODEL}, d_ff {BENCH_D_FF}/expert, MI355X node)"
+    ));
+    let rows = multi_gpu_sweep(M355);
+    println!(
+        "{:<8} {:>5} {:>6} {:<16} {:>10} {:>11} {:>9} {:>8}",
+        "experts", "gpus", "skew", "variant", "time us", "max-gpu us", "comms us",
+        "hw TF"
+    );
+    for r in &rows {
+        println!(
+            "{:<8} {:>5} {:>5}% {:<16} {:>10.1} {:>11.1} {:>9.1} {:>8.0}",
+            r.experts,
+            r.n_gpus,
+            r.skew_pct,
+            r.variant,
+            r.time_s * 1e6,
+            r.max_gpu_s * 1e6,
+            r.comms_s * 1e6,
+            r.hw_tflops
+        );
+    }
+    // the acceptance anchor: the n_gpus=1 column of this grid is the
+    // single-GPU BENCH_moe.json top-2 grid, exactly
+    let single = bench_sweep(M355);
+    let grid_matches = rows
+        .iter()
+        .filter(|r| r.n_gpus == 1)
+        .all(|r| {
+            single
+                .iter()
+                .find(|s| {
+                    s.experts == r.experts
+                        && s.top_k == 2
+                        && s.skew_pct == r.skew_pct
+                })
+                .is_some_and(|s| s.moe_time_s == r.time_s)
+        });
+    println!(
+        "  (cost = max over GPU shards + all-to-all; n_gpus=1 column equals \
+         the BENCH_moe.json top-2 grid: {grid_matches})"
+    );
+
+    hr("Multi-GPU B — serving with per-GPU KV pools (saturating trace)");
+    let trace = serve_trace(96, 50000.0, 11);
+    let mut serve_reports = Vec::new();
+    println!(
+        "{:<6} {:>9} {:>13} {:>12} {:>12} {:>13}",
+        "gpus", "tok/s", "ttft p50 ms", "itl p50 us", "itl p99 us", "peak occ"
+    );
+    for n_gpus in [1u32, 2, 4] {
+        let cfg = ServeConfig {
+            n_gpus,
+            max_batch: 16,
+            num_blocks: 1024,
+            ..ServeConfig::default()
+        };
+        let mut eng = ServeEngine::new(cfg).expect("multi-gpu serve config");
+        let rep = eng.run_trace(&trace).expect("multi-gpu serve trace");
+        let peak_gpu = rep
+            .per_gpu
+            .iter()
+            .map(|l| l.peak_occupancy)
+            .fold(0.0, f64::max);
+        println!(
+            "{:<6} {:>9.0} {:>13.2} {:>12.0} {:>12.0} {:>12.0}%",
+            n_gpus,
+            rep.throughput_tok_s,
+            rep.ttft.p50_us() / 1e3,
+            rep.itl.p50_us(),
+            rep.itl.p99_us(),
+            peak_gpu * 100.0
+        );
+        serve_reports.push(rep);
+    }
+    println!("  (each GPU owns a KV pool + decode lane; admission balances");
+    println!("   lanes, so aggregate tok/s scales while per-GPU occupancy");
+    println!("   stays bounded)");
+
+    let doc = multi_gpu_bench_json(M355, &rows, grid_matches, &serve_reports);
+    let out = std::env::var("HK_MULTI_GPU_OUT")
+        .unwrap_or_else(|_| "BENCH_multi_gpu.json".to_string());
+    std::fs::write(&out, doc.dump()).expect("write BENCH_multi_gpu.json");
+    println!("\nwrote {out}");
+}
+
+/// The `BENCH_multi_gpu.json` document: the expert-parallel MoE grid
+/// (experts x GPUs x skew, top-2), the single-GPU-equality flag, and the
+/// serve scaling rows at 1/2/4 GPUs. Every number is a deterministic
+/// cost-model product, so the dump is byte-stable across runs.
+pub fn multi_gpu_bench_json(
+    arch: ArchId,
+    rows: &[crate::kernels::moe::MultiGpuMoeRow],
+    grid_matches: bool,
+    serve_reports: &[crate::serve::ServeReport],
+) -> crate::runtime::json::Json {
+    use crate::kernels::moe::{BENCH_D_FF, BENCH_D_MODEL, BENCH_TOKENS};
+    use crate::runtime::json::Json;
+    Json::obj(vec![
+        ("bench", Json::Str("multi_gpu".into())),
+        ("arch", Json::Str(arch.tag().into())),
+        (
+            "shape",
+            Json::obj(vec![
+                ("tokens", Json::Num(BENCH_TOKENS as f64)),
+                ("d_model", Json::Num(BENCH_D_MODEL as f64)),
+                ("d_ff_per_expert", Json::Num(BENCH_D_FF as f64)),
+                ("top_k", Json::Num(2.0)),
+            ]),
+        ),
+        (
+            "moe_single_gpu_grid_matches_bench_moe",
+            Json::Bool(grid_matches),
+        ),
+        (
+            "moe_rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("experts", Json::Num(r.experts as f64)),
+                            ("n_gpus", Json::Num(r.n_gpus as f64)),
+                            ("skew_pct", Json::Num(r.skew_pct as f64)),
+                            ("variant", Json::Str(r.variant.clone())),
+                            ("time_s", Json::Num(r.time_s)),
+                            ("hw_tflops", Json::Num(r.hw_tflops)),
+                            ("comms_s", Json::Num(r.comms_s)),
+                            ("max_gpu_s", Json::Num(r.max_gpu_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "serve_rows",
+            Json::Arr(
+                serve_reports
+                    .iter()
+                    .map(|rep| {
+                        Json::obj(vec![
+                            ("n_gpus", Json::Num(rep.n_gpus as f64)),
+                            (
+                                "throughput_tok_s",
+                                Json::Num(rep.throughput_tok_s),
+                            ),
+                            ("makespan_s", Json::Num(rep.makespan_s)),
+                            ("ttft_p50_us", Json::Num(rep.ttft.p50_us())),
+                            ("ttft_p99_us", Json::Num(rep.ttft.p99_us())),
+                            ("itl_p50_us", Json::Num(rep.itl.p50_us())),
+                            ("itl_p99_us", Json::Num(rep.itl.p99_us())),
+                            (
+                                "preemptions",
+                                Json::Num(rep.preemptions as f64),
+                            ),
+                            (
+                                "per_gpu_peak_occupancy",
+                                Json::Arr(
+                                    rep.per_gpu
+                                        .iter()
+                                        .map(|l| Json::Num(l.peak_occupancy))
+                                        .collect(),
+                                ),
+                            ),
+                            (
+                                "per_gpu_decode_tokens",
+                                Json::Arr(
+                                    rep.per_gpu
+                                        .iter()
+                                        .map(|l| {
+                                            Json::Num(l.decode_tokens as f64)
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// One cell of the `BENCH_attn_bwd.json` grid: the autotuned HK
 /// backward kernel vs the best baseline at that shape.
 #[derive(Debug, Clone)]
@@ -998,6 +1191,7 @@ pub fn all() {
     registry();
     serve();
     moe();
+    multi_gpu();
     attn_bwd();
     ablations();
 }
@@ -1021,6 +1215,7 @@ pub fn run(name: &str) -> bool {
         "registry" => registry(),
         "serve" => serve(),
         "moe" => moe(),
+        "multi-gpu" | "multi_gpu" => multi_gpu(),
         "attn-bwd" | "attn_bwd" => attn_bwd(),
         "ablate" | "ablations" => ablations(),
         "all" => all(),

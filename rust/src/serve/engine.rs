@@ -48,10 +48,15 @@ pub struct ServeConfig {
     pub arch: ArchId,
     /// Paged-KV block size (tokens).
     pub block_size: u32,
-    /// Physical blocks in the KV pool.
+    /// Physical blocks in **each GPU's** KV pool.
     pub num_blocks: u32,
-    /// Max sequences decoded per step (the continuous batch width).
+    /// Max sequences decoded per step **per GPU** (the continuous batch
+    /// width of one GPU's lane).
     pub max_batch: usize,
+    /// Simulated GPUs. Each owns a KV pool and a decode lane; requests
+    /// are placed on the least-loaded GPU at admission and their KV
+    /// never migrates. 1 = the pre-sharding single-GPU engine.
+    pub n_gpus: u32,
     pub heads_q: u32,
     pub heads_kv: u32,
     pub d_head: u32,
@@ -98,6 +103,7 @@ impl Default for ServeConfig {
             block_size: 16,
             num_blocks: 4096,
             max_batch: 32,
+            n_gpus: 1,
             heads_q: 64,
             heads_kv: 8,
             d_head: 128,
@@ -151,11 +157,26 @@ pub struct ServeReport {
     pub itl: LatencyStats,
     /// End-to-end latency per request.
     pub e2e: LatencyStats,
-    /// Peak KV-pool occupancy over the run, 0..=1.
+    /// Peak aggregate KV occupancy over the run (all pools), 0..=1.
     pub peak_occupancy: f64,
     pub kv: KvCacheStats,
     /// MoE-side accounting (present when the engine serves an MoE model).
     pub moe: Option<MoeServeStats>,
+    /// GPUs the engine served across (one KV pool + decode lane each).
+    pub n_gpus: u32,
+    /// Per-GPU lane statistics.
+    pub per_gpu: Vec<GpuLaneStats>,
+}
+
+/// One GPU lane's share of a serving run.
+#[derive(Debug, Clone, Default)]
+pub struct GpuLaneStats {
+    /// Prompt admissions placed on this GPU.
+    pub admitted: u64,
+    /// Decode tokens emitted from this GPU's lane.
+    pub decode_tokens: u64,
+    /// Peak occupancy of this GPU's KV pool, 0..=1.
+    pub peak_occupancy: f64,
 }
 
 /// Aggregated router/grouped-GEMM statistics of an MoE serving run.
@@ -179,10 +200,11 @@ pub struct MoeServeStats {
 impl ServeReport {
     pub fn summary(&self) -> String {
         format!(
-            "served={} preempt={} steps[prefill={} decode={}] makespan={:.3}s \
+            "served={} gpus={} preempt={} steps[prefill={} decode={}] makespan={:.3}s \
              {:.0} tok/s ttft[p50={:.0}us p99={:.0}us] itl[p50={:.0}us p99={:.0}us] \
              kv[peak={:.0}% cow={} evicted={} shared_saved={}]",
             self.served,
+            self.n_gpus,
             self.preemptions,
             self.prefill_steps,
             self.decode_steps,
@@ -225,6 +247,28 @@ impl ServeReport {
                 Json::Num(self.kv.shared_blocks_saved as f64),
             ),
             ("kv_evicted", Json::Num(self.kv.evicted_blocks as f64)),
+            ("n_gpus", Json::Num(self.n_gpus as f64)),
+            (
+                "per_gpu",
+                Json::Arr(
+                    self.per_gpu
+                        .iter()
+                        .map(|g| {
+                            Json::obj(vec![
+                                ("admitted", Json::Num(g.admitted as f64)),
+                                (
+                                    "decode_tokens",
+                                    Json::Num(g.decode_tokens as f64),
+                                ),
+                                (
+                                    "peak_occupancy",
+                                    Json::Num(g.peak_occupancy),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ]);
         if let Some(m) = &self.moe {
             let Json::Obj(map) = &mut doc else { unreachable!() };
@@ -246,6 +290,8 @@ impl ServeReport {
 struct Running {
     idx: usize,
     decoded: u32,
+    /// The GPU lane whose KV pool holds this sequence.
+    gpu: u32,
 }
 
 /// The continuous-batching engine.
@@ -264,9 +310,13 @@ impl ServeEngine {
         if cfg.block_size == 0 || cfg.num_blocks == 0 || cfg.max_batch == 0 {
             bail!("serve config needs nonzero block_size/num_blocks/max_batch");
         }
+        if cfg.n_gpus == 0 {
+            bail!("serve config needs at least one GPU");
+        }
         let kv = KvCacheManager::new(KvCacheConfig {
             num_blocks: cfg.num_blocks,
             block_size: cfg.block_size,
+            n_gpus: cfg.n_gpus,
         });
         Ok(ServeEngine {
             cfg,
@@ -392,7 +442,10 @@ impl ServeEngine {
             }
         }
         let prefix = self.cfg.shared_prefix_tokens;
-        if prefix > 0 && !self.kv.has_prefix(SYSTEM_PREFIX) {
+        if prefix > 0 {
+            // replicate the system prefix into every GPU's pool
+            // (cross-GPU sharing is disabled; pools already holding a
+            // replica are skipped)
             self.kv.cache_prefix(SYSTEM_PREFIX, prefix)?;
         }
         // per-trace KV accounting: the manager (and its counters)
@@ -421,6 +474,9 @@ impl ServeEngine {
         // work must not inflate delivered throughput
         let mut delivered_tokens = 0u64;
         let mut moe_stats = MoeServeStats::default();
+        let n_gpus = self.cfg.n_gpus.max(1) as usize;
+        let mut lanes: Vec<GpuLaneStats> =
+            (0..n_gpus).map(|_| GpuLaneStats::default()).collect();
 
         while finished < trace.len() {
             // fold in everything that has arrived by `now`
@@ -436,12 +492,40 @@ impl ServeEngine {
                 bail!("serving stalled with requests unfinished");
             }
 
-            // admission: FIFO, capacity- and batch-gated
-            let mut newly: Vec<usize> = Vec::new();
-            while running.len() + newly.len() < self.cfg.max_batch {
+            // admission: FIFO onto the least-loaded GPU lane, capacity-
+            // and per-lane-batch-gated
+            let mut newly: Vec<Vec<usize>> = vec![Vec::new(); n_gpus];
+            let mut active: Vec<usize> = vec![0; n_gpus];
+            for r in &running {
+                active[r.gpu as usize] += 1;
+            }
+            'admit: loop {
                 let Some(&idx) = waiting.front() else {
                     break;
                 };
+                // load-balancing policy: fewest active sequences, ties
+                // to the emptier KV pool, then the lowest GPU id —
+                // deterministic, so traces replay bit-identically
+                let mut gpu: Option<usize> = None;
+                for cand in 0..n_gpus {
+                    if active[cand] >= self.cfg.max_batch {
+                        continue;
+                    }
+                    let key = |g: usize| {
+                        (active[g], self.kv.pool(g as u32).used_blocks())
+                    };
+                    let better = match gpu {
+                        None => true,
+                        Some(best) => key(cand) < key(best),
+                    };
+                    if better {
+                        gpu = Some(cand);
+                    }
+                }
+                let Some(g) = gpu else {
+                    break; // every lane is at its batch width
+                };
+                let gq = g as u32;
                 let req = &trace[idx];
                 if req.prompt_tokens == 0 {
                     bail!("request {} has an empty prompt", req.id);
@@ -451,8 +535,8 @@ impl ServeEngine {
                 let total = self.context_of(req, req.output_tokens.max(1));
                 if self.kv.blocks_for(total) + 1 > self.cfg.num_blocks {
                     bail!(
-                        "request {} needs {} KV blocks (+1 CoW) but the \
-                         pool holds {}",
+                        "request {} needs {} KV blocks (+1 CoW) but each \
+                         GPU's pool holds {}",
                         req.id,
                         self.kv.blocks_for(total),
                         self.cfg.num_blocks,
@@ -460,80 +544,104 @@ impl ServeEngine {
                 }
                 // headroom: prompt + one decode block + a CoW copy
                 let need = req.prompt_tokens + 2 * self.cfg.block_size;
-                if !self.kv.can_admit(need) {
+                if !self.kv.can_admit_on(gq, need) {
                     break;
                 }
                 if self.cfg.shared_prefix_tokens > 0 {
-                    // the shared prefix may have been evicted while no
-                    // live sequence held it; re-pin before forking — a
-                    // full pool defers admission, it doesn't abort
-                    if !self.kv.has_prefix(SYSTEM_PREFIX)
+                    // the lane's prefix replica may have been evicted
+                    // while no live sequence held it; re-pin before
+                    // forking — a full pool defers admission, it
+                    // doesn't abort
+                    if !self.kv.has_prefix_on(gq, SYSTEM_PREFIX)
                         && self
                             .kv
-                            .cache_prefix(SYSTEM_PREFIX, prefix)
+                            .cache_prefix_on(gq, SYSTEM_PREFIX, prefix)
                             .is_err()
                     {
                         break;
                     }
-                    if self.kv.fork_from_prefix(SYSTEM_PREFIX, req.id).is_err() {
+                    if self
+                        .kv
+                        .fork_from_prefix_on(gq, SYSTEM_PREFIX, req.id)
+                        .is_err()
+                    {
                         break;
                     }
                     // extend the fork with the request's own prompt
-                    let mut ok = true;
                     for _ in 0..req.prompt_tokens {
                         if self.kv.append_token(req.id).is_err() {
-                            ok = false;
-                            break;
+                            self.kv.free_seq(req.id)?;
+                            break 'admit;
                         }
                     }
-                    if !ok {
-                        self.kv.free_seq(req.id)?;
-                        break;
-                    }
-                } else if self.kv.admit(req.id, req.prompt_tokens).is_err() {
+                } else if self.kv.admit_on(gq, req.id, req.prompt_tokens).is_err()
+                {
                     break;
                 }
                 waiting.pop_front();
-                newly.push(idx);
+                active[g] += 1;
+                lanes[g].admitted += 1;
+                newly[g].push(idx);
             }
             peak_occ = peak_occ.max(self.kv.occupancy());
+            for (g, lane) in lanes.iter_mut().enumerate() {
+                lane.peak_occupancy =
+                    lane.peak_occupancy.max(self.kv.occupancy_on(g as u32));
+            }
 
-            if !newly.is_empty() {
-                // prefill the admitted batch; completion = first token
-                let batch = newly.len() as u32;
-                let seq = newly
-                    .iter()
-                    .map(|&i| self.context_of(&trace[i], 0))
-                    .max()
-                    .expect("non-empty batch");
-                let mut dt = self.prefill_step_s(batch, seq);
-                // the MoE FFN processes every prompt token of the batch
-                let step_tokens = batch.saturating_mul(seq);
-                let ffn = self.moe_ffn_step_s(step_tokens);
-                if ffn > 0.0 {
-                    let ordinal = moe_stats.steps;
-                    self.moe_route_step(step_tokens, ordinal, &mut moe_stats);
-                    moe_stats.ffn_time_s += ffn;
-                    dt += ffn;
+            if newly.iter().any(|lane| !lane.is_empty()) {
+                // prefill the admitted batches — every lane prefills its
+                // own batch in parallel, so the step costs the slowest
+                // lane; completion = each request's first token
+                let mut dt = 0.0f64;
+                for lane_newly in newly.iter() {
+                    if lane_newly.is_empty() {
+                        continue;
+                    }
+                    let batch = lane_newly.len() as u32;
+                    let seq = lane_newly
+                        .iter()
+                        .map(|&i| self.context_of(&trace[i], 0))
+                        .max()
+                        .expect("non-empty batch");
+                    let mut dt_g = self.prefill_step_s(batch, seq);
+                    // the MoE FFN processes every prompt token of the
+                    // lane's batch
+                    let step_tokens = batch.saturating_mul(seq);
+                    let ffn = self.moe_ffn_step_s(step_tokens);
+                    if ffn > 0.0 {
+                        let ordinal = moe_stats.steps;
+                        self.moe_route_step(step_tokens, ordinal, &mut moe_stats);
+                        moe_stats.ffn_time_s += ffn;
+                        dt_g += ffn;
+                    }
+                    dt = dt.max(dt_g);
                 }
                 now += dt;
                 prefill_steps += 1;
-                for &idx in &newly {
-                    let req = &trace[idx];
-                    if reached[idx] == 0 {
-                        // first prefill; a re-prefill after preemption
-                        // recomputes an already-delivered token
-                        ttft.record_s(now - req.arrival_s);
-                        reached[idx] = 1;
-                        last_emit[idx] = now;
-                    }
-                    if req.output_tokens <= 1 {
-                        self.kv.free_seq(req.id)?;
-                        e2e.record_s(now - req.arrival_s);
-                        delivered_tokens += u64::from(req.output_tokens.max(1));
-                        finished += 1;
-                    } else {
-                        running.push(Running { idx, decoded: 1 });
+                for (g, lane_newly) in newly.iter().enumerate() {
+                    for &idx in lane_newly {
+                        let req = &trace[idx];
+                        if reached[idx] == 0 {
+                            // first prefill; a re-prefill after preemption
+                            // recomputes an already-delivered token
+                            ttft.record_s(now - req.arrival_s);
+                            reached[idx] = 1;
+                            last_emit[idx] = now;
+                        }
+                        if req.output_tokens <= 1 {
+                            self.kv.free_seq(req.id)?;
+                            e2e.record_s(now - req.arrival_s);
+                            delivered_tokens +=
+                                u64::from(req.output_tokens.max(1));
+                            finished += 1;
+                        } else {
+                            running.push(Running {
+                                idx,
+                                decoded: 1,
+                                gpu: g as u32,
+                            });
+                        }
                     }
                 }
                 continue;
@@ -552,22 +660,32 @@ impl ServeEngine {
                 );
             }
 
-            // one decode step over the running batch
-            let batch = running.len() as u32;
-            let ctx = running
-                .iter()
-                .map(|r| self.context_of(&trace[r.idx], r.decoded))
-                .max()
-                .expect("non-empty running set");
-            let mut dt = self.decode_step_s(batch, ctx);
-            // decode emits one token per running sequence: route that
-            // batch and pay the grouped FFN on the step clock
-            let ffn = self.moe_ffn_step_s(batch);
-            if ffn > 0.0 {
-                let ordinal = moe_stats.steps;
-                self.moe_route_step(batch, ordinal, &mut moe_stats);
-                moe_stats.ffn_time_s += ffn;
-                dt += ffn;
+            // one decode step: every lane decodes its own running batch
+            // in parallel, so the step costs the slowest lane
+            let mut dt = 0.0f64;
+            for g in 0..n_gpus {
+                let lane: Vec<&Running> =
+                    running.iter().filter(|r| r.gpu == g as u32).collect();
+                if lane.is_empty() {
+                    continue;
+                }
+                let batch = lane.len() as u32;
+                let ctx = lane
+                    .iter()
+                    .map(|r| self.context_of(&trace[r.idx], r.decoded))
+                    .max()
+                    .expect("non-empty lane");
+                let mut dt_g = self.decode_step_s(batch, ctx);
+                // decode emits one token per running sequence: route the
+                // lane's batch and pay the grouped FFN on the step clock
+                let ffn = self.moe_ffn_step_s(batch);
+                if ffn > 0.0 {
+                    let ordinal = moe_stats.steps;
+                    self.moe_route_step(batch, ordinal, &mut moe_stats);
+                    moe_stats.ffn_time_s += ffn;
+                    dt_g += ffn;
+                }
+                dt = dt.max(dt_g);
             }
             now += dt;
             decode_steps += 1;
@@ -576,6 +694,7 @@ impl ServeEngine {
             for mut r in running.drain(..) {
                 let req = &trace[r.idx];
                 r.decoded += 1;
+                lanes[r.gpu as usize].decode_tokens += 1;
                 if r.decoded > reached[r.idx] {
                     // a newly delivered token: its inter-token gap
                     // spans any prefill steps and preemption stalls
@@ -603,6 +722,10 @@ impl ServeEngine {
             }
             running = still;
             peak_occ = peak_occ.max(self.kv.occupancy());
+            for (g, lane) in lanes.iter_mut().enumerate() {
+                lane.peak_occupancy =
+                    lane.peak_occupancy.max(self.kv.occupancy_on(g as u32));
+            }
         }
 
         let makespan = now - trace[0].arrival_s;
@@ -625,6 +748,8 @@ impl ServeEngine {
                 }
                 m
             }),
+            n_gpus: self.cfg.n_gpus,
+            per_gpu: lanes,
         })
     }
 }
@@ -712,6 +837,40 @@ mod tests {
         .unwrap();
         let rep2 = again.run_trace(&trace).unwrap();
         assert_eq!(mr.to_json().dump(), rep2.to_json().dump());
+    }
+
+    #[test]
+    fn multi_gpu_lanes_balance_and_scale() {
+        // near-simultaneous arrivals saturate the node, so aggregate
+        // decode throughput must scale with the GPU count
+        let trace = serve_trace(64, 100000.0, 13);
+        let mk = |n_gpus: u32| ServeConfig {
+            n_gpus,
+            max_batch: 8,
+            num_blocks: 1024,
+            ..ServeConfig::default()
+        };
+        let one = ServeEngine::new(mk(1)).unwrap().run_trace(&trace).unwrap();
+        let two = ServeEngine::new(mk(2)).unwrap().run_trace(&trace).unwrap();
+        assert_eq!(one.n_gpus, 1);
+        assert_eq!(two.n_gpus, 2);
+        assert_eq!(two.per_gpu.len(), 2);
+        // the load balancer used both lanes, and each stayed bounded
+        for lane in &two.per_gpu {
+            assert!(lane.admitted > 0 && lane.decode_tokens > 0);
+            assert!(lane.peak_occupancy > 0.0 && lane.peak_occupancy <= 1.0);
+        }
+        // wider node: shorter makespan, higher aggregate throughput
+        assert!(
+            two.makespan_s < one.makespan_s,
+            "{} !< {}",
+            two.makespan_s,
+            one.makespan_s
+        );
+        assert!(two.throughput_tok_s > one.throughput_tok_s);
+        // and the multi-GPU trace replays bit-identically
+        let again = ServeEngine::new(mk(2)).unwrap().run_trace(&trace).unwrap();
+        assert_eq!(two.to_json().dump(), again.to_json().dump());
     }
 
     #[test]

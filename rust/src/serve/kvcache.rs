@@ -1,44 +1,59 @@
-//! Paged KV-cache manager: fixed-size blocks, per-sequence block
-//! tables, ref-counted sharing with copy-on-write, and an LRU
-//! eviction/admission policy over cached prefixes.
+//! Paged KV-cache memory plane, sharded per GPU: each simulated GPU
+//! owns a [`KvPool`] — fixed-size blocks, per-sequence block tables,
+//! ref-counted sharing with copy-on-write, and an LRU eviction/admission
+//! policy over cached prefixes — and the [`KvCacheManager`] is the
+//! pool-per-GPU structure with sequence→GPU affinity on top.
 //!
-//! The design is the vLLM paged-attention memory plane scaled to the
-//! simulated substrate: the cache owns `num_blocks` physical blocks of
+//! The pool design is the vLLM paged-attention memory plane scaled to
+//! the simulated substrate: a pool owns `num_blocks` physical blocks of
 //! `block_size` tokens each; a sequence is a block table (a vector of
 //! physical block ids) plus a token length. Blocks are ref-counted so
 //! prefixes can be shared:
 //!
-//! - [`KvCacheManager::cache_prefix`] pins a prefix (e.g. a system
-//!   prompt) in the cache under its own reference.
-//! - [`KvCacheManager::fork_from_prefix`] gives a new sequence the
-//!   prefix's blocks for free (refcount bump, no copy).
-//! - [`KvCacheManager::append_token`] grows a sequence one token at a
-//!   time; appending into a *shared* partial block triggers
-//!   copy-on-write so the prefix is never corrupted.
+//! - [`KvPool::cache_prefix`] pins a prefix (e.g. a system prompt) in
+//!   the pool under its own reference.
+//! - [`KvPool::fork_from_prefix`] gives a new sequence the prefix's
+//!   blocks for free (refcount bump, no copy).
+//! - [`KvPool::append_token`] grows a sequence one token at a time;
+//!   appending into a *shared* partial block triggers copy-on-write so
+//!   the prefix is never corrupted.
 //! - When the free list runs dry, the allocator evicts the
 //!   least-recently-used cached prefix whose blocks are referenced by
 //!   nobody else — a block referenced by any live sequence is never
 //!   freed (the refcount guard; see `tests/serve_engine.rs`).
 //!
+//! Sharding rules (the node-level memory plane):
+//!
+//! - A sequence lives on exactly one GPU for its whole life (affinity);
+//!   its KV never migrates.
+//! - **Cross-GPU prefix sharing is disabled**: a shared prefix is
+//!   replicated — pinned once per pool — and ref-counting/CoW stay
+//!   strictly intra-GPU. Block ids are per-pool namespaces, so eviction
+//!   on one GPU structurally cannot free another GPU's live blocks
+//!   (asserted in `tests/topology.rs`).
+//!
 //! Occupancy and traffic counters ([`KvCacheStats`]) feed the serving
-//! report ([`crate::serve::engine`]).
+//! report ([`crate::serve::engine`]), per GPU and aggregated.
 
 use crate::err;
 use crate::error::Result;
 use std::collections::HashMap;
 
-/// Cache geometry.
+/// Cache geometry. `num_blocks` is **per GPU** — the node holds
+/// `n_gpus x num_blocks` physical blocks in disjoint pools.
 #[derive(Debug, Clone, Copy)]
 pub struct KvCacheConfig {
-    /// Physical blocks in the pool.
+    /// Physical blocks in each GPU's pool.
     pub num_blocks: u32,
     /// Tokens per block.
     pub block_size: u32,
+    /// GPUs (pools) in the node.
+    pub n_gpus: u32,
 }
 
 impl Default for KvCacheConfig {
     fn default() -> Self {
-        KvCacheConfig { num_blocks: 4096, block_size: 16 }
+        KvCacheConfig { num_blocks: 4096, block_size: 16, n_gpus: 1 }
     }
 }
 
@@ -73,6 +88,15 @@ impl KvCacheStats {
             failed_admissions: self.failed_admissions - base.failed_admissions,
         }
     }
+
+    fn add(&mut self, o: &KvCacheStats) {
+        self.allocated_blocks += o.allocated_blocks;
+        self.freed_blocks += o.freed_blocks;
+        self.cow_copies += o.cow_copies;
+        self.shared_blocks_saved += o.shared_blocks_saved;
+        self.evicted_blocks += o.evicted_blocks;
+        self.failed_admissions += o.failed_admissions;
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -88,10 +112,11 @@ struct PrefixState {
     last_use: u64,
 }
 
-/// The paged block pool + sequence/prefix tables.
+/// One GPU's paged block pool + sequence/prefix tables.
 #[derive(Debug)]
-pub struct KvCacheManager {
-    cfg: KvCacheConfig,
+pub struct KvPool {
+    num_blocks: u32,
+    block_size: u32,
     /// Per-block reference count (0 = on the free list).
     refcount: Vec<u32>,
     /// Free list (LIFO; deterministic).
@@ -102,13 +127,14 @@ pub struct KvCacheManager {
     stats: KvCacheStats,
 }
 
-impl KvCacheManager {
-    pub fn new(cfg: KvCacheConfig) -> Self {
-        let n = cfg.num_blocks.max(1);
+impl KvPool {
+    pub fn new(num_blocks: u32, block_size: u32) -> Self {
+        let n = num_blocks.max(1);
         // reversed so pops hand out ascending block ids
         let free: Vec<u32> = (0..n).rev().collect();
-        KvCacheManager {
-            cfg: KvCacheConfig { num_blocks: n, block_size: cfg.block_size.max(1) },
+        KvPool {
+            num_blocks: n,
+            block_size: block_size.max(1),
             refcount: vec![0; n as usize],
             free,
             seqs: HashMap::new(),
@@ -119,16 +145,16 @@ impl KvCacheManager {
     }
 
     pub fn block_size(&self) -> u32 {
-        self.cfg.block_size
+        self.block_size
     }
 
     pub fn num_blocks(&self) -> u32 {
-        self.cfg.num_blocks
+        self.num_blocks
     }
 
     /// Blocks needed to hold `tokens` tokens.
     pub fn blocks_for(&self, tokens: u32) -> u32 {
-        tokens.div_ceil(self.cfg.block_size)
+        tokens.div_ceil(self.block_size)
     }
 
     pub fn free_blocks(&self) -> usize {
@@ -136,16 +162,24 @@ impl KvCacheManager {
     }
 
     pub fn used_blocks(&self) -> usize {
-        self.cfg.num_blocks as usize - self.free.len()
+        self.num_blocks as usize - self.free.len()
     }
 
     /// Used fraction of the pool, 0..=1.
     pub fn occupancy(&self) -> f64 {
-        self.used_blocks() as f64 / self.cfg.num_blocks as f64
+        self.used_blocks() as f64 / self.num_blocks as f64
     }
 
     pub fn stats(&self) -> KvCacheStats {
         self.stats
+    }
+
+    pub fn n_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn has_seq(&self, id: u64) -> bool {
+        self.seqs.contains_key(&id)
     }
 
     pub fn seq_len(&self, id: u64) -> Option<u32> {
@@ -255,8 +289,8 @@ impl KvCacheManager {
         Ok(())
     }
 
-    /// Pin a shareable prefix (e.g. a system prompt) in the cache. The
-    /// cache itself holds one reference; forks add theirs on top.
+    /// Pin a shareable prefix (e.g. a system prompt) in the pool. The
+    /// pool itself holds one reference; forks add theirs on top.
     pub fn cache_prefix(&mut self, prefix_id: u64, tokens: u32) -> Result<()> {
         if self.prefixes.contains_key(&prefix_id) {
             return Err(err!("prefix {prefix_id} already cached"));
@@ -307,7 +341,7 @@ impl KvCacheManager {
                 .ok_or_else(|| err!("unknown sequence {id}"))?;
             (st.len, st.table.last().copied())
         };
-        if len % self.cfg.block_size == 0 {
+        if len % self.block_size == 0 {
             // first token of a fresh block
             let Some(b) = self.grab_block() else {
                 return Err(err!("kv cache exhausted appending to sequence {id}"));
@@ -362,7 +396,7 @@ impl KvCacheManager {
     /// of tables (sequences + cached prefixes) referencing it, and the
     /// free list is exactly the refcount-0 blocks, no duplicates.
     pub fn validate(&self) -> Result<()> {
-        let mut counts = vec![0u32; self.cfg.num_blocks as usize];
+        let mut counts = vec![0u32; self.num_blocks as usize];
         for st in self.seqs.values() {
             for &b in &st.table {
                 counts[b as usize] += 1;
@@ -382,7 +416,7 @@ impl KvCacheManager {
                 ));
             }
         }
-        let mut on_free = vec![false; self.cfg.num_blocks as usize];
+        let mut on_free = vec![false; self.num_blocks as usize];
         for &b in &self.free {
             if on_free[b as usize] {
                 return Err(err!("block {b} on the free list twice"));
@@ -403,12 +437,271 @@ impl KvCacheManager {
     }
 }
 
+/// The pool-per-GPU KV cache: one [`KvPool`] per simulated GPU plus the
+/// sequence→GPU affinity map. Single-GPU construction behaves exactly
+/// like the pre-sharding manager (one pool, every call routed to it).
+#[derive(Debug)]
+pub struct KvCacheManager {
+    cfg: KvCacheConfig,
+    pools: Vec<KvPool>,
+    /// Which GPU each live sequence's KV lives on.
+    affinity: HashMap<u64, u32>,
+}
+
+impl KvCacheManager {
+    pub fn new(cfg: KvCacheConfig) -> Self {
+        let n_gpus = cfg.n_gpus.max(1);
+        let pools = (0..n_gpus)
+            .map(|_| KvPool::new(cfg.num_blocks, cfg.block_size))
+            .collect();
+        KvCacheManager {
+            cfg: KvCacheConfig {
+                num_blocks: cfg.num_blocks.max(1),
+                block_size: cfg.block_size.max(1),
+                n_gpus,
+            },
+            pools,
+            affinity: HashMap::new(),
+        }
+    }
+
+    pub fn n_gpus(&self) -> u32 {
+        self.cfg.n_gpus
+    }
+
+    pub fn block_size(&self) -> u32 {
+        self.cfg.block_size
+    }
+
+    /// Physical blocks in **one** GPU's pool.
+    pub fn num_blocks(&self) -> u32 {
+        self.cfg.num_blocks
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.cfg.block_size)
+    }
+
+    /// One GPU's pool (read-only; panics on an out-of-range GPU).
+    pub fn pool(&self, gpu: u32) -> &KvPool {
+        &self.pools[gpu as usize]
+    }
+
+    /// Free blocks across all pools.
+    pub fn free_blocks(&self) -> usize {
+        self.pools.iter().map(|p| p.free_blocks()).sum()
+    }
+
+    /// Used blocks across all pools.
+    pub fn used_blocks(&self) -> usize {
+        self.pools.iter().map(|p| p.used_blocks()).sum()
+    }
+
+    /// Aggregate used fraction of the node's pools, 0..=1.
+    pub fn occupancy(&self) -> f64 {
+        self.used_blocks() as f64
+            / (self.cfg.num_blocks as u64 * self.cfg.n_gpus as u64) as f64
+    }
+
+    /// One GPU's used fraction, 0..=1.
+    pub fn occupancy_on(&self, gpu: u32) -> f64 {
+        self.pools[gpu as usize].occupancy()
+    }
+
+    /// Aggregate counters across all pools.
+    pub fn stats(&self) -> KvCacheStats {
+        let mut out = KvCacheStats::default();
+        for p in &self.pools {
+            out.add(&p.stats());
+        }
+        out
+    }
+
+    /// One GPU's counters.
+    pub fn stats_on(&self, gpu: u32) -> KvCacheStats {
+        self.pools[gpu as usize].stats()
+    }
+
+    /// The GPU a live sequence's KV lives on.
+    pub fn seq_gpu(&self, id: u64) -> Option<u32> {
+        self.affinity.get(&id).copied()
+    }
+
+    pub fn seq_len(&self, id: u64) -> Option<u32> {
+        let g = self.seq_gpu(id)?;
+        self.pools[g as usize].seq_len(id)
+    }
+
+    pub fn seq_table(&self, id: u64) -> Option<&[u32]> {
+        let g = self.seq_gpu(id)?;
+        self.pools[g as usize].seq_table(id)
+    }
+
+    /// Whether any pool has the prefix pinned.
+    pub fn has_prefix(&self, prefix_id: u64) -> bool {
+        self.pools.iter().any(|p| p.has_prefix(prefix_id))
+    }
+
+    /// Whether one GPU's pool has the prefix pinned.
+    pub fn has_prefix_on(&self, gpu: u32, prefix_id: u64) -> bool {
+        self.pools[gpu as usize].has_prefix(prefix_id)
+    }
+
+    /// Admission check against a specific GPU's pool.
+    pub fn can_admit_on(&self, gpu: u32, tokens: u32) -> bool {
+        self.pools[gpu as usize].can_admit(tokens)
+    }
+
+    /// Admission check: can any pool take `tokens` more tokens?
+    pub fn can_admit(&self, tokens: u32) -> bool {
+        self.pools.iter().any(|p| p.can_admit(tokens))
+    }
+
+    /// The load-balancing default placement: the GPU with the fewest
+    /// used blocks, ties to the lowest id. Deterministic.
+    pub fn least_loaded_gpu(&self) -> u32 {
+        let mut best = 0u32;
+        for g in 1..self.cfg.n_gpus {
+            if self.pools[g as usize].used_blocks()
+                < self.pools[best as usize].used_blocks()
+            {
+                best = g;
+            }
+        }
+        best
+    }
+
+    /// Create a sequence on a specific GPU (a prompt admission).
+    pub fn admit_on(&mut self, gpu: u32, id: u64, tokens: u32) -> Result<()> {
+        if self.affinity.contains_key(&id) {
+            return Err(err!("sequence {id} already admitted"));
+        }
+        if gpu >= self.cfg.n_gpus {
+            return Err(err!("gpu {gpu} out of range (n_gpus {})", self.cfg.n_gpus));
+        }
+        self.pools[gpu as usize].admit(id, tokens)?;
+        self.affinity.insert(id, gpu);
+        Ok(())
+    }
+
+    /// Create a sequence on the least-loaded GPU.
+    pub fn admit(&mut self, id: u64, tokens: u32) -> Result<()> {
+        self.admit_on(self.least_loaded_gpu(), id, tokens)
+    }
+
+    /// Pin a shareable prefix on one GPU's pool (cross-GPU sharing is
+    /// disabled: each pool needs its own replica).
+    pub fn cache_prefix_on(
+        &mut self,
+        gpu: u32,
+        prefix_id: u64,
+        tokens: u32,
+    ) -> Result<()> {
+        if gpu >= self.cfg.n_gpus {
+            return Err(err!("gpu {gpu} out of range (n_gpus {})", self.cfg.n_gpus));
+        }
+        self.pools[gpu as usize].cache_prefix(prefix_id, tokens)
+    }
+
+    /// Replicate a shareable prefix into every pool that doesn't hold it
+    /// yet. Fails if any pool cannot fit its replica.
+    pub fn cache_prefix(&mut self, prefix_id: u64, tokens: u32) -> Result<()> {
+        for p in &mut self.pools {
+            if !p.has_prefix(prefix_id) {
+                p.cache_prefix(prefix_id, tokens)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Fork a sequence from a GPU's prefix replica (intra-GPU sharing
+    /// only). Returns the shared token count.
+    pub fn fork_from_prefix_on(
+        &mut self,
+        gpu: u32,
+        prefix_id: u64,
+        id: u64,
+    ) -> Result<u32> {
+        if self.affinity.contains_key(&id) {
+            return Err(err!("sequence {id} already admitted"));
+        }
+        if gpu >= self.cfg.n_gpus {
+            return Err(err!("gpu {gpu} out of range (n_gpus {})", self.cfg.n_gpus));
+        }
+        let len = self.pools[gpu as usize].fork_from_prefix(prefix_id, id)?;
+        self.affinity.insert(id, gpu);
+        Ok(len)
+    }
+
+    /// Fork from the least-loaded GPU's prefix replica.
+    pub fn fork_from_prefix(&mut self, prefix_id: u64, id: u64) -> Result<u32> {
+        self.fork_from_prefix_on(self.least_loaded_gpu(), prefix_id, id)
+    }
+
+    /// Grow a sequence by one token on its home GPU.
+    pub fn append_token(&mut self, id: u64) -> Result<()> {
+        let g = *self
+            .affinity
+            .get(&id)
+            .ok_or_else(|| err!("unknown sequence {id}"))?;
+        self.pools[g as usize].append_token(id)
+    }
+
+    /// Release a sequence from its home GPU.
+    pub fn free_seq(&mut self, id: u64) -> Result<()> {
+        let g = self
+            .affinity
+            .remove(&id)
+            .ok_or_else(|| err!("unknown sequence {id}"))?;
+        self.pools[g as usize].free_seq(id)
+    }
+
+    /// Bookkeeping invariant: every pool validates in isolation, and the
+    /// affinity map and the pools' sequence tables agree exactly (no
+    /// orphaned affinity, no sequence outside its mapped pool, no
+    /// sequence resident in two pools — block namespaces are disjoint by
+    /// construction, so cross-pool frees are structurally impossible).
+    pub fn validate(&self) -> Result<()> {
+        for p in &self.pools {
+            p.validate()?;
+        }
+        let mapped = self.affinity.len();
+        let resident: usize = self.pools.iter().map(|p| p.n_seqs()).sum();
+        if mapped != resident {
+            return Err(err!(
+                "{mapped} sequences in the affinity map but {resident} resident"
+            ));
+        }
+        for (&id, &g) in &self.affinity {
+            if g >= self.cfg.n_gpus {
+                return Err(err!("sequence {id} mapped to bad gpu {g}"));
+            }
+            if !self.pools[g as usize].has_seq(id) {
+                return Err(err!("sequence {id} missing from its pool {g}"));
+            }
+            for (other, p) in self.pools.iter().enumerate() {
+                if other as u32 != g && p.has_seq(id) {
+                    return Err(err!(
+                        "sequence {id} resident in pools {g} and {other}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn mgr(blocks: u32, bs: u32) -> KvCacheManager {
-        KvCacheManager::new(KvCacheConfig { num_blocks: blocks, block_size: bs })
+        KvCacheManager::new(KvCacheConfig {
+            num_blocks: blocks,
+            block_size: bs,
+            n_gpus: 1,
+        })
     }
 
     #[test]
@@ -417,10 +710,12 @@ mod tests {
         m.admit(1, 33).unwrap(); // 3 blocks
         assert_eq!(m.used_blocks(), 3);
         assert_eq!(m.seq_len(1), Some(33));
+        assert_eq!(m.seq_gpu(1), Some(0));
         m.validate().unwrap();
         m.free_seq(1).unwrap();
         assert_eq!(m.used_blocks(), 0);
         assert_eq!(m.stats().freed_blocks, 3);
+        assert_eq!(m.seq_gpu(1), None);
         m.validate().unwrap();
     }
 
@@ -489,6 +784,53 @@ mod tests {
         assert!(m.admit(13, 32).is_err());
         assert!(m.has_prefix(1));
         assert_eq!(m.seq_table(10).unwrap().len(), 2);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn pools_are_disjoint_and_affinity_is_sticky() {
+        let mut m = KvCacheManager::new(KvCacheConfig {
+            num_blocks: 8,
+            block_size: 16,
+            n_gpus: 2,
+        });
+        m.admit_on(0, 1, 64).unwrap(); // 4 blocks on gpu 0
+        m.admit_on(1, 2, 32).unwrap(); // 2 blocks on gpu 1
+        assert_eq!(m.seq_gpu(1), Some(0));
+        assert_eq!(m.seq_gpu(2), Some(1));
+        assert_eq!(m.pool(0).used_blocks(), 4);
+        assert_eq!(m.pool(1).used_blocks(), 2);
+        assert_eq!(m.used_blocks(), 6);
+        // appends land on the home pool only
+        for _ in 0..16 {
+            m.append_token(2).unwrap();
+        }
+        assert_eq!(m.pool(0).used_blocks(), 4);
+        assert_eq!(m.pool(1).used_blocks(), 3);
+        m.validate().unwrap();
+        // duplicate ids are rejected across pools, not just within one
+        assert!(m.admit_on(1, 1, 16).is_err());
+        // least-loaded placement prefers the emptier pool
+        m.free_seq(1).unwrap();
+        assert_eq!(m.least_loaded_gpu(), 0);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn prefix_replicas_are_per_pool() {
+        let mut m = KvCacheManager::new(KvCacheConfig {
+            num_blocks: 8,
+            block_size: 16,
+            n_gpus: 2,
+        });
+        m.cache_prefix(9, 32).unwrap(); // replicated: 2 blocks per pool
+        assert_eq!(m.pool(0).used_blocks(), 2);
+        assert_eq!(m.pool(1).used_blocks(), 2);
+        assert!(m.has_prefix_on(0, 9) && m.has_prefix_on(1, 9));
+        // a fork on gpu 1 bumps only gpu 1's refcounts
+        m.fork_from_prefix_on(1, 9, 4).unwrap();
+        assert_eq!(m.stats_on(1).shared_blocks_saved, 2);
+        assert_eq!(m.stats_on(0).shared_blocks_saved, 0);
         m.validate().unwrap();
     }
 }

@@ -15,7 +15,7 @@ pub mod engine;
 pub mod kvcache;
 
 pub use engine::{
-    serve_trace, MoeServeConfig, MoeServeStats, ServeConfig, ServeEngine,
-    ServeReport, ServeRequest,
+    serve_trace, GpuLaneStats, MoeServeConfig, MoeServeStats, ServeConfig,
+    ServeEngine, ServeReport, ServeRequest,
 };
-pub use kvcache::{KvCacheConfig, KvCacheManager, KvCacheStats};
+pub use kvcache::{KvCacheConfig, KvCacheManager, KvCacheStats, KvPool};

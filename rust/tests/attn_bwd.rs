@@ -152,6 +152,105 @@ fn preprocess_pass_is_real_but_small() {
 }
 
 #[test]
+fn dq_atomic_contention_grows_with_seq_over_kv_tile() {
+    use hipkittens::hk::costmodel::dq_contention_factor;
+    use hipkittens::kernels::attention::dq_atomic_writers;
+
+    // monotone in seq_len at a fixed kv tile
+    let mut last = 0.0;
+    for seq in [1024u32, 2048, 4096, 8192, 16384, 32768] {
+        let w = dq_atomic_writers(seq, 256);
+        assert!(w >= last, "seq {seq}: {w} < {last}");
+        last = w;
+    }
+    assert!(dq_atomic_writers(32768, 256) > dq_atomic_writers(1024, 256));
+
+    // monotone in the reciprocal of the kv tile at a fixed seq
+    let mut last = f64::INFINITY;
+    for tile in [8u32, 16, 32, 64, 128, 256] {
+        let w = dq_atomic_writers(8192, tile);
+        assert!(w <= last, "tile {tile}: {w} > {last}");
+        last = w;
+    }
+    assert!(dq_atomic_writers(8192, 8) > dq_atomic_writers(8192, 64));
+
+    // the pricing function follows the writer count monotonically and
+    // is exactly 1.0 (the plain RMW read-back) at a single writer
+    assert_eq!(dq_contention_factor(1.0), 1.0);
+    let mut last = 0.0;
+    for w in [1.0, 2.0, 4.0, 16.0, 64.0, 256.0] {
+        let f = dq_contention_factor(w);
+        assert!(f >= last && f.is_finite(), "writers {w}: {f} < {last}");
+        last = f;
+    }
+
+    // end to end: the atomic byte model prices more RMW traffic at a
+    // longer sequence than the flat 2x factor would
+    let short = AttnConfig {
+        pattern: Pattern::Interleave4,
+        ..AttnConfig::gqa(256, 128, false)
+    };
+    assert_eq!(short.dq_concurrent_kv_blocks(), 1.0);
+    assert!((short.dq_rmw_factor() - 2.0).abs() < 1e-12);
+    let long = AttnConfig {
+        pattern: Pattern::Interleave4,
+        ..AttnConfig::gqa(16384, 128, false)
+    };
+    assert!(long.dq_rmw_factor() > short.dq_rmw_factor());
+}
+
+#[test]
+fn split_dq_tile_is_tunable_and_autotuned() {
+    use hipkittens::hk::autotune::{tune_dq_tile, DQ_KV_TILES};
+    use hipkittens::hk::tunecache::TuneCache;
+    use hipkittens::kernels::registry::{ArchId, Op, Query};
+
+    // the tile changes the built dQ pass (iteration count scales
+    // inversely), and every candidate simulates finitely
+    let base = AttnConfig {
+        pattern: Pattern::Interleave4,
+        dq_mode: DqMode::Split,
+        ..AttnConfig::gqa(4096, 128, false)
+    };
+    let mut iters = Vec::new();
+    for &tile in &DQ_KV_TILES {
+        let cfg = AttnConfig { dq_kv_tile: tile, ..base };
+        let spec = attention::build_bwd_dq_spec(&arch(), &cfg);
+        iters.push(spec.iters);
+        let p = attention::simulate_bwd(&arch(), &cfg);
+        assert!(p.time_s > 0.0 && p.time_s.is_finite(), "tile {tile}");
+    }
+    for w in iters.windows(2) {
+        assert!(w[0] > w[1], "finer tiles must run more dQ iterations");
+    }
+
+    // the sweep picks a candidate and the registry persists it: a warm
+    // re-dispatch reconstructs the same tuned tile from the cache
+    let pts = tune_dq_tile(&arch(), &base);
+    assert!(DQ_KV_TILES.contains(&pts[0].tile));
+    let mut cache = TuneCache::new();
+    let q = Query::attn_mha(ArchId::Mi355x, 8192, 128, false).bwd();
+    let cold = q.dispatch_with(&mut cache);
+    assert_eq!(cold.key.op, Op::AttnBwd);
+    let warm = q.dispatch_with(&mut cache);
+    assert!(warm.from_cache);
+    assert_eq!(
+        warm.attn_config().dq_kv_tile,
+        cold.attn_config().dq_kv_tile,
+        "tuned dq tile did not round-trip through the cache"
+    );
+    if cold.variant == "bwd-4wave" {
+        // the split winner's record carries the swept tile
+        let rec = cache.get(&cold.key.id()).expect("record written");
+        assert!(DQ_KV_TILES.contains(&rec.dq_kv_tile), "{rec:?}");
+        assert_eq!(warm.attn_config().dq_kv_tile, rec.dq_kv_tile);
+    }
+    // a caller's pin always wins over the tuner
+    let pinned = q.dq_tile(32).dispatch_with(&mut cache);
+    assert_eq!(pinned.attn_config().dq_kv_tile, 32);
+}
+
+#[test]
 fn bwd_simulation_is_deterministic() {
     let cfg = AttnConfig::gqa(2048, 128, false);
     let a = attention::simulate_bwd_detailed(&arch(), &cfg);

@@ -1,7 +1,7 @@
 //! Property tests over the HK framework: chiplet-remap bijectivity,
 //! swizzle algebra, regalloc monotonicity, schedule structure.
 
-use hipkittens::hk::chiplet::ChipletSwizzle;
+use hipkittens::hk::topology::ChipletSwizzle;
 use hipkittens::hk::regalloc::{allocate, wave_budget, RegMode, TileDemand};
 use hipkittens::hk::swizzle::{candidate_swizzles, solve, AccessReq, Swizzle};
 use hipkittens::hk::tile::{Layout, RegTile, SharedTile};
@@ -61,14 +61,14 @@ fn chiplet_remap_bijective_for_every_fleet_xcd_count() {
 
 #[test]
 fn expert_placement_covers_all_loads_and_balances_uniform_work() {
-    use hipkittens::hk::chiplet::place_experts;
+    use hipkittens::hk::topology::place_shards;
     let mut rng = Rng::new(13);
     for n_xcds in [1u32, 2, 8] {
         for _ in 0..10 {
             let n = 1 + rng.below(40) as usize;
             let loads: Vec<f64> =
                 (0..n).map(|_| rng.below(1000) as f64).collect();
-            let p = place_experts(n_xcds, &loads);
+            let p = place_shards(n_xcds, &loads);
             assert_eq!(p.len(), n);
             assert!(p.iter().all(|&x| x < n_xcds));
             // LPT bound: max shard <= mean + heaviest single expert

@@ -41,10 +41,11 @@ fn every_kernel_key_resolves_to_a_variant() {
 
 #[test]
 fn uncovered_arch_dispatch_warns_and_uses_cdna3_table() {
-    // The NVIDIA-like archs carry no native grouped-MoE table; dispatch
-    // must resolve them against the CDNA3 variants instead of panicking.
+    // The genuinely uncovered keys — NVIDIA backward attention, whose
+    // recompute kernel leans on CDNA's AGPR-fed MFMAs — must resolve
+    // against the CDNA3 variants instead of panicking.
     for arch in [ArchId::B200Like, ArchId::H100Like] {
-        let q = Query::moe_ffn(arch, 2048, 8, 2);
+        let q = Query::attn_gqa(arch, 4096, 128, false).bwd();
         let key = q.key();
         assert!(variants(&key).is_empty(), "{} grew a native table", key.id());
         let (vs, fell_back) = variants_or_fallback(&key);
@@ -53,6 +54,25 @@ fn uncovered_arch_dispatch_warns_and_uses_cdna3_table() {
         let names: Vec<&str> = vs.iter().map(|v| v.name).collect();
         let cdna3_names: Vec<&str> = cdna3.iter().map(|v| v.name).collect();
         assert_eq!(names, cdna3_names, "fallback is not the CDNA3 table");
+        let d = q.dispatch_with(&mut TuneCache::new());
+        let p = d.simulate();
+        assert!(p.time_s > 0.0 && p.time_s.is_finite(), "{}", key.id());
+    }
+}
+
+#[test]
+fn nvidia_moe_keys_no_longer_ride_the_fallback() {
+    // ROADMAP registry-coverage item: grouped-MoE keys on the
+    // NVIDIA-like archs resolve against their own native table now.
+    for arch in [ArchId::B200Like, ArchId::H100Like] {
+        let q = Query::moe_ffn(arch, 2048, 8, 2);
+        let key = q.key();
+        let native = variants(&key);
+        assert!(!native.is_empty(), "{} lost its native table", key.id());
+        let (vs, fell_back) = variants_or_fallback(&key);
+        assert!(!fell_back, "{} still falls back", key.id());
+        let names: Vec<&str> = vs.iter().map(|v| v.name).collect();
+        assert!(names.contains(&"moe-ws-4p8c"), "{names:?}");
         let d = q.dispatch_with(&mut TuneCache::new());
         let p = d.simulate();
         assert!(p.time_s > 0.0 && p.time_s.is_finite(), "{}", key.id());

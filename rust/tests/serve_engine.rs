@@ -13,7 +13,7 @@ use hipkittens::serve::{
 use hipkittens::sim::Arch;
 
 fn mgr(num_blocks: u32, block_size: u32) -> KvCacheManager {
-    KvCacheManager::new(KvCacheConfig { num_blocks, block_size })
+    KvCacheManager::new(KvCacheConfig { num_blocks, block_size, n_gpus: 1 })
 }
 
 #[test]

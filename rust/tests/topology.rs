@@ -1,0 +1,221 @@
+//! Topology-subsystem invariants (ISSUE 5): LPT placement validity at
+//! both hierarchy levels, exact `n_gpus = 1` reduction of the
+//! node-level grouped cost to the flat single-GPU max-shard law, the
+//! `BENCH_multi_gpu.json` / `BENCH_moe.json` equality anchor,
+//! balanced-never-loses-to-skewed at every GPU count, and per-GPU KV
+//! pool isolation — eviction on one pool can never free a block a live
+//! sequence on any pool references.
+
+use hipkittens::hk::costmodel::{evaluate_grouped, GroupedShard};
+use hipkittens::hk::schedule::ScheduleInfo;
+use hipkittens::hk::topology::{place_shards, NodeTopology};
+use hipkittens::kernels::moe::{
+    bench_sweep, multi_gpu_sweep, simulate_grouped_node, MoeGemmConfig,
+    BENCH_EXPERTS, BENCH_GPUS, BENCH_SKEW_PCT,
+};
+use hipkittens::kernels::registry::ArchId;
+use hipkittens::runtime::Rng;
+use hipkittens::serve::{KvCacheConfig, KvCacheManager};
+use hipkittens::sim::engine::EngineStats;
+use hipkittens::sim::Arch;
+
+#[test]
+fn place_shards_is_total_and_valid_at_both_levels() {
+    // the same LPT serves both hierarchy levels: experts -> XCDs within
+    // a GPU (counts 1..16) and experts -> GPUs within a node (1..8)
+    let mut rng = Rng::new(29);
+    for n_shards in [1u32, 2, 4, 8, 16] {
+        for _ in 0..8 {
+            let n = 1 + rng.below(48) as usize;
+            let loads: Vec<f64> =
+                (0..n).map(|_| rng.below(2000) as f64).collect();
+            let p = place_shards(n_shards, &loads);
+            // total: every item gets exactly one in-range shard
+            assert_eq!(p.len(), n);
+            assert!(p.iter().all(|&s| s < n_shards));
+            // deterministic
+            assert_eq!(p, place_shards(n_shards, &loads));
+            // LPT bound: max shard <= mean + heaviest single item
+            let mut shard = vec![0.0f64; n_shards as usize];
+            for (e, &s) in p.iter().enumerate() {
+                shard[s as usize] += loads[e];
+            }
+            let total: f64 = loads.iter().sum();
+            let heaviest = loads.iter().cloned().fold(0.0, f64::max);
+            let max_shard = shard.iter().cloned().fold(0.0, f64::max);
+            assert!(
+                max_shard <= total / n_shards as f64 + heaviest + 1e-9,
+                "shards={n_shards} max {max_shard} total {total}"
+            );
+        }
+    }
+}
+
+/// The pre-refactor flat law, reimplemented inline: max over per-XCD
+/// shards of max(compute, memory), no node term.
+fn flat_max_shard_s(arch: &Arch, shards: &[GroupedShard]) -> f64 {
+    let cus = arch.cus_per_xcd.max(1) as f64;
+    let hbm_share = arch.hbm_tbps / arch.n_xcds.max(1) as f64 * 1e12;
+    let llc_share = arch.llc_tbps / arch.n_xcds.max(1) as f64 * 1e12;
+    let mut t = 0.0f64;
+    for s in shards {
+        let c = s.compute_cycles / cus * arch.cycle_s();
+        let m = s.stream_bytes / hbm_share + s.weight_bytes / llc_share;
+        t = t.max(c.max(m));
+    }
+    t
+}
+
+#[test]
+fn single_gpu_grouped_cost_equals_the_flat_law_exactly() {
+    // evaluate_grouped over a one-GPU node must reproduce the flat
+    // max-shard law bit-for-bit: zero comms, identical max
+    let arch = Arch::mi355x();
+    let mut rng = Rng::new(41);
+    let info = ScheduleInfo {
+        pattern: "test",
+        loc: 0,
+        waves: 8,
+        waves_per_simd: 2,
+    };
+    let block = EngineStats { cycles: 1000, ..EngineStats::default() };
+    for _ in 0..10 {
+        let shards: Vec<GroupedShard> = (0..arch.n_xcds)
+            .map(|_| GroupedShard {
+                compute_cycles: rng.below(1_000_000) as f64,
+                stream_bytes: rng.below(1 << 24) as f64,
+                weight_bytes: rng.below(1 << 22) as f64,
+            })
+            .collect();
+        let eval = evaluate_grouped(
+            &arch,
+            &NodeTopology::single(),
+            "flat-check",
+            info.clone(),
+            &block,
+            &[shards.clone()],
+            0.0,
+            1e12,
+            1e9,
+        );
+        assert_eq!(eval.comms_s, 0.0);
+        assert_eq!(eval.per_gpu_s.len(), 1);
+        let flat = flat_max_shard_s(&arch, &shards);
+        if flat > 0.0 {
+            assert_eq!(eval.perf.time_s, flat, "node law drifted from flat law");
+        }
+    }
+}
+
+#[test]
+fn multi_gpu_grid_anchors_to_the_single_gpu_bench() {
+    // the acceptance criterion: every n_gpus=1 cell of the multi-GPU
+    // grid exactly equals the corresponding BENCH_moe.json top-2 cell
+    let rows = multi_gpu_sweep(ArchId::Mi355x);
+    assert_eq!(
+        rows.len(),
+        BENCH_EXPERTS.len() * BENCH_GPUS.len() * BENCH_SKEW_PCT.len(),
+        "grid shape drifted"
+    );
+    let single = bench_sweep(ArchId::Mi355x);
+    for r in rows.iter().filter(|r| r.n_gpus == 1) {
+        assert_eq!(r.comms_s, 0.0, "comms at one GPU");
+        let s = single
+            .iter()
+            .find(|s| {
+                s.experts == r.experts && s.top_k == 2 && s.skew_pct == r.skew_pct
+            })
+            .expect("matching BENCH_moe cell");
+        assert_eq!(
+            r.time_s, s.moe_time_s,
+            "experts={} skew={}: node cost != single-GPU cost",
+            r.experts, r.skew_pct
+        );
+        assert_eq!(r.variant, s.variant);
+    }
+}
+
+#[test]
+fn balanced_placement_never_loses_to_skew_at_any_gpu_count() {
+    // the other acceptance anchor: at every GPU count, more routing
+    // skew never makes the node faster
+    let rows = multi_gpu_sweep(ArchId::Mi355x);
+    for &experts in &BENCH_EXPERTS {
+        for &gpus in &BENCH_GPUS {
+            let cell: Vec<_> = rows
+                .iter()
+                .filter(|r| r.experts == experts && r.n_gpus == gpus)
+                .collect();
+            assert_eq!(cell.len(), BENCH_SKEW_PCT.len());
+            for w in cell.windows(2) {
+                assert!(
+                    w[0].time_s <= w[1].time_s * 1.0001,
+                    "experts={experts} gpus={gpus}: skew {} ({}) beat \
+                     skew {} ({})",
+                    w[1].skew_pct,
+                    w[1].time_s,
+                    w[0].skew_pct,
+                    w[0].time_s
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharding_a_big_expert_pool_beats_one_gpu_despite_comms() {
+    // 64 wide experts x 16384 routed tokens is deeply compute-dominated
+    // (the all-to-all moves only d_model activations per token, the FFN
+    // computes 4 x d_model x d_ff per token): splitting across 4 GPUs
+    // wins even after paying the link
+    let arch = Arch::mi355x();
+    let base = MoeGemmConfig::balanced(16384, 2048, 4096, 64);
+    let one = simulate_grouped_node(&arch, &base);
+    let four = simulate_grouped_node(&arch, &base.clone().with_gpus(4));
+    assert!(four.comms_s > 0.0);
+    // the busiest GPU runs ~a quarter of the experts
+    let max_gpu = four.per_gpu_s.iter().cloned().fold(0.0, f64::max);
+    assert!(max_gpu < one.perf.time_s);
+    assert!(
+        four.perf.time_s < one.perf.time_s,
+        "4-GPU {} !< 1-GPU {}",
+        four.perf.time_s,
+        one.perf.time_s
+    );
+}
+
+#[test]
+fn kv_pool_eviction_never_crosses_pools() {
+    // two GPUs, each with a prefix replica and a live fork on GPU 0;
+    // exhausting GPU 1 evicts only GPU 1's (unshared) replica and never
+    // touches GPU 0's live blocks
+    let mut m = KvCacheManager::new(KvCacheConfig {
+        num_blocks: 8,
+        block_size: 16,
+        n_gpus: 2,
+    });
+    m.cache_prefix(1, 32).unwrap(); // 2 blocks in each pool
+    m.fork_from_prefix_on(0, 1, 10).unwrap(); // live on GPU 0 only
+    let live_table: Vec<u32> = m.seq_table(10).unwrap().to_vec();
+
+    // fill GPU 1: 6 free blocks, then 2 more forces eviction of its
+    // own unshared prefix replica
+    m.admit_on(1, 20, 96).unwrap(); // 6 blocks
+    assert_eq!(m.pool(1).free_blocks(), 0);
+    m.admit_on(1, 21, 32).unwrap(); // evicts GPU 1's replica
+    assert!(!m.has_prefix_on(1, 1), "GPU 1's replica should be evicted");
+    assert!(m.has_prefix_on(0, 1), "GPU 0's replica must survive");
+    assert_eq!(m.stats_on(1).evicted_blocks, 2);
+    assert_eq!(m.stats_on(0).evicted_blocks, 0);
+    // the live sequence's blocks are untouched
+    assert_eq!(m.seq_table(10).unwrap(), live_table.as_slice());
+    m.validate().unwrap();
+
+    // GPU 1 exhausted with everything referenced: admission there fails
+    // rather than stealing from GPU 0
+    assert!(m.admit_on(1, 22, 32).is_err());
+    // GPU 0 still holds exactly its replica, shared refcount-style with
+    // the fork (no extra blocks)
+    assert_eq!(m.pool(0).used_blocks(), 2);
+    m.validate().unwrap();
+}
