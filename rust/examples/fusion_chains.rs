@@ -1,0 +1,89 @@
+//! Fusion-algebra walkthrough: build a memory-bound kernel as a chain
+//! of stages, plan it against the register/LDS budget, and price the
+//! fused plan against the per-stage split baseline.
+//!
+//! Covers the three behaviours the algebra guarantees:
+//!   1. a legal chain fuses to ONE global-memory pass and beats every
+//!      split of itself (intermediates never round-trip through HBM);
+//!   2. an over-budget chain is force-split at the cheapest legal cuts
+//!      instead of reporting impossible register residency;
+//!   3. the registry dispatches the same chains as `Op::FusedChain`,
+//!      with `Query::unfused()` as the split-baseline override.
+//!
+//! Run: `cargo run --release --example fusion_chains`
+
+use hipkittens::hk::regalloc;
+use hipkittens::kernels::fusion::{FusionChain, StageKind};
+use hipkittens::kernels::registry::{ArchId, Query};
+
+fn main() {
+    let arch = ArchId::Mi355x;
+    let a = arch.arch();
+
+    println!("== 1. Add+RMSNorm as a chain (rows 65536, d 2048) ==");
+    let chain = FusionChain::add_rmsnorm(16 * 4096, 2048);
+    let ev = chain.evaluate(&a);
+    println!(
+        "fused plan: {} pass(es), {:.1} us, {:.2} TB/s effective",
+        ev.plan.passes.len(),
+        ev.perf.time_s * 1e6,
+        ev.perf.eff_bw_tbps
+    );
+    for p in &ev.per_pass {
+        println!("  pass {:<28} {:>8.1} us", p.name, p.time_s * 1e6);
+    }
+    let split = chain.clone().split_all().evaluate(&a);
+    println!(
+        "split baseline: {} passes, {:.1} us -> fusion wins {:.2}x",
+        split.plan.passes.len(),
+        split.perf.time_s * 1e6,
+        split.perf.time_s / ev.perf.time_s
+    );
+    for p in &split.per_pass {
+        println!("  pass {:<28} {:>8.1} us", p.name, p.time_s * 1e6);
+    }
+
+    println!("\n== 2. an over-budget chain is force-split ==");
+    // five stages over d=8192 rows: the fused live set (x, a, b, c)
+    // wants more registers than one wave owns, so the planner must cut
+    let wide = FusionChain::new("wide-tree", 16 * 1024, 8192)
+        .stage(StageKind::Elementwise { passes: 1 }, &["x"], &["a"])
+        .stage(StageKind::Elementwise { passes: 1 }, &["x"], &["b"])
+        .stage(StageKind::Elementwise { passes: 1 }, &["x"], &["c"])
+        .stage(StageKind::Gate, &["a", "b"], &["ab"])
+        .stage(StageKind::Gate, &["ab", "c"], &["out"])
+        .with_outputs(&["out"]);
+    let n = wide.stages.len();
+    println!(
+        "fused residency: {} regs/lane vs wave budget {}",
+        wide.segment_regs(0, n),
+        regalloc::wave_budget(&a, 1)
+    );
+    let wev = wide.evaluate(&a);
+    println!(
+        "planned: forced_split={}, {} passes, {:.1} us",
+        wev.plan.forced_split,
+        wev.plan.passes.len(),
+        wev.perf.time_s * 1e6
+    );
+    for p in &wev.per_pass {
+        println!("  pass {:<28} {:>8.1} us", p.name, p.time_s * 1e6);
+    }
+
+    println!("\n== 3. the same chains through the registry ==");
+    for (label, q) in [
+        ("add-rmsnorm", Query::add_rmsnorm(arch, 16 * 4096, 2048)),
+        ("silu-mul", Query::silu_mul(arch, 16 * 4096, 2048)),
+        ("qkv-rope", Query::qkv_rope(arch, 16, 16, 4096, 128)),
+        ("gemm-epilogue", Query::gemm_epilogue(arch, 16 * 4096, 2048)),
+    ] {
+        let fused = q.dispatch().simulate();
+        let split = q.unfused().dispatch().simulate();
+        println!(
+            "{label:<14} fused {:>8.1} us, split {:>8.1} us ({:.2}x)",
+            fused.time_s * 1e6,
+            split.time_s * 1e6,
+            split.time_s / fused.time_s
+        );
+    }
+}

@@ -145,6 +145,7 @@ impl<'rt> Trainer<'rt> {
             moe_experts: 0,
             moe_top_k: 0,
             n_gpus: 1,
+            fuse_membound: true,
         };
         kernel_plan(arch, &shape)
     }
@@ -165,6 +166,10 @@ pub struct TrainShape {
     /// Data-parallel replicas: above 1 the plan carries a gradient
     /// all-reduce entry priced by the node link model.
     pub n_gpus: u32,
+    /// Run the step's memory-bound entries (fused-ln, rope, the MLP
+    /// gate) as fused chains; `false` forces the per-stage split — the
+    /// pre-fusion baseline the step-time delta is measured against.
+    pub fuse_membound: bool,
 }
 
 impl Default for TrainShape {
@@ -180,6 +185,7 @@ impl Default for TrainShape {
             moe_experts: 0,
             moe_top_k: 0,
             n_gpus: 1,
+            fuse_membound: true,
         }
     }
 }
@@ -200,6 +206,13 @@ impl TrainShape {
     /// all-reduce joins the backward plan).
     pub fn data_parallel(mut self, n: u32) -> Self {
         self.n_gpus = n.max(1);
+        self
+    }
+
+    /// Force the step's memory-bound entries onto the per-stage split
+    /// lowering (the unfused baseline).
+    pub fn unfused_membound(mut self) -> Self {
+        self.fuse_membound = false;
         self
     }
 }
@@ -247,13 +260,20 @@ pub fn kernel_plan(arch: ArchId, s: &TrainShape) -> Vec<(String, KernelPerf)> {
             Query::gemm(arch, Dtype::Bf16, tokens, 4 * s.d_model, s.d_model),
         ));
     }
+    // the memory-bound entries honor the shape's fusion toggle: fused
+    // chains by default, per-stage splits for the ablation baseline
+    let mb = |q: Query| if s.fuse_membound { q } else { q.unfused() };
     queries.extend([
         (
             "proj-gemm",
             Query::gemm(arch, Dtype::Bf16, tokens, s.d_model, s.d_model),
         ),
-        ("fused-ln", Query::fused_ln(arch, tokens, s.d_model)),
-        ("rope", Query::rope(arch, s.batch, s.heads, s.seq, s.d_head)),
+        ("fused-ln", mb(Query::fused_ln(arch, tokens, s.d_model))),
+        ("rope", mb(Query::rope(arch, s.batch, s.heads, s.seq, s.d_head))),
+        (
+            "mlp-silu-mul",
+            mb(Query::silu_mul(arch, tokens, s.d_model)),
+        ),
     ]);
     // Backward is priced separately, not as a forward multiple: the
     // attention entry above dispatches the dQ/dK/dV recomputation
@@ -393,6 +413,25 @@ mod tests {
             kernel_plan(ArchId::Mi355x, &TrainShape::default().data_parallel(8));
         let ar8 = &dp8.iter().find(|(n, _)| n == "grads-allreduce-bwd").unwrap().1;
         assert!(ar8.time_s > ar.1.time_s);
+    }
+
+    #[test]
+    fn unfused_membound_baseline_is_slower() {
+        let fused = kernel_plan(ArchId::Mi355x, &TrainShape::default());
+        let split = kernel_plan(
+            ArchId::Mi355x,
+            &TrainShape::default().unfused_membound(),
+        );
+        // same plan shape — only the membound lowerings differ
+        assert_eq!(fused.len(), split.len());
+        assert!(fused.iter().any(|(n, _)| n == "mlp-silu-mul"));
+        let t = |plan: &[(String, KernelPerf)], n: &str| {
+            plan.iter().find(|(name, _)| name == n).unwrap().1.time_s
+        };
+        assert!(t(&split, "fused-ln") > t(&fused, "fused-ln"));
+        assert!(t(&split, "mlp-silu-mul") > t(&fused, "mlp-silu-mul"));
+        // the delta is visible in the predicted step time
+        assert!(predicted_step_s(&split) > predicted_step_s(&fused));
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! Whole-kernel cost model: engine (compute side) x cache model (memory
 //! side) -> TFLOPS, the combination rule of Eq. (1) + roofline.
 
-use super::schedule::{BuiltSchedule, ScheduleInfo};
+use super::schedule::{BuiltSchedule, Cluster, LoopSpec, ScheduleInfo};
 use super::topology::NodeTopology;
 use crate::sim::arch::Arch;
 use crate::sim::cache::{simulate_gemm_schedule, CacheStats, GemmGrid};
 use crate::sim::engine::{run_block, EngineConfig};
+use crate::sim::instr::Instr;
 
 /// Performance estimate for one kernel configuration.
 #[derive(Debug, Clone)]
@@ -20,6 +21,15 @@ pub struct KernelPerf {
     pub llc_hit: f64,
     pub eff_bw_tbps: f64,
     pub info: ScheduleInfo,
+}
+
+impl KernelPerf {
+    /// Effective bandwidth in TB/s. For the memory-bound kernel family
+    /// the "tflops" slot carries bytes (see [`evaluate_chain`]), so this
+    /// accessor is the figure-of-merit the paper's Fig. 9 reports.
+    pub fn eff_bw_tbps(&self) -> f64 {
+        self.eff_bw_tbps
+    }
 }
 
 /// Effective VMEM latency under a cache hit mix.
@@ -109,6 +119,126 @@ pub fn evaluate_streaming(
         eff_bw_tbps: total_bytes / time_s / 1e12,
         info: built.info.clone(),
     }
+}
+
+/// One global-memory pass of a memory-bound fusion chain, in the
+/// representation the cost model prices: `rows` independent rows of `d`
+/// bf16 elements, swept `passes` VALU passes per lane, reading `reads`
+/// distinct row-tensors from global memory and writing `writes` back.
+///
+/// A fused chain is a single `ChainPass` whose `passes` is the sum of
+/// its stages (intermediates stay in registers/LDS and never appear in
+/// `reads`/`writes`); a split chain is one `ChainPass` per segment, each
+/// paying its own load/store traffic. Built by
+/// [`crate::kernels::fusion::FusionChain`].
+#[derive(Debug, Clone)]
+pub struct ChainPass {
+    pub name: String,
+    pub rows: u64,
+    pub d: u32,
+    /// VALU passes over the d/64 elements each lane owns.
+    pub passes: u64,
+    /// Distinct row-tensors read from global memory this pass.
+    pub reads: u32,
+    /// Distinct row-tensors written back to global memory this pass.
+    pub writes: u32,
+    /// Vectorized (dwordx4) global access vs scalar dword loads.
+    pub vectorized: bool,
+}
+
+/// The chain evaluation: the combined estimate plus each pass on its
+/// own (one entry when fused, N when split).
+#[derive(Debug, Clone)]
+pub struct ChainEval {
+    pub perf: KernelPerf,
+    pub passes: Vec<KernelPerf>,
+}
+
+/// Lower one chain pass to the streaming model. This is the exact
+/// lowering `kernels::membound` used for the fused layernorm and RoPE
+/// streams, generalized over (passes, reads, writes) — a single-segment
+/// `FusionChain::fused_ln(..)` / `::rope(..)` reproduces the legacy
+/// `KernelPerf` numbers bit-for-bit (pinned in `tests/fusion.rs`).
+fn evaluate_chain_pass(arch: &Arch, p: &ChainPass) -> KernelPerf {
+    let per_lane = (p.d as u64).div_ceil(64);
+    let valu = p.passes * per_lane;
+    let row_bytes = (p.d as u64) * 2;
+    let issues = if p.vectorized {
+        ((row_bytes / 64 / 16).max(1)) as u32
+    } else {
+        ((row_bytes / 64 / 4).max(1)) as u32 // dword loads: 4x the issues
+    };
+    let spec = LoopSpec {
+        name: p.name.clone(),
+        prologue: vec![],
+        compute: vec![Cluster::new("chain", vec![Instr::Valu { cycles: valu }])],
+        memory: vec![Cluster::new(
+            "io",
+            vec![
+                Instr::VMemLoad {
+                    bytes: p.reads as u64 * row_bytes,
+                    to_lds: false,
+                    issues: p.reads * issues,
+                },
+                Instr::VMemStore {
+                    bytes: p.writes as u64 * row_bytes,
+                    issues: p.writes * issues,
+                },
+            ],
+        )],
+        // each wave processes 8 rows per block residency
+        iters: 8,
+        epilogue: vec![],
+    };
+    let built = super::interleave::build(&spec);
+    let blocks = p.rows as f64 / (4.0 * 8.0);
+    let bytes = (p.reads + p.writes) as f64 * p.rows as f64 * row_bytes as f64;
+    evaluate_streaming(
+        arch,
+        &p.name,
+        &built,
+        blocks,
+        // elementwise flops are negligible; the "flops" slot carries
+        // bytes so tflops stays on the eff-bandwidth scale
+        bytes,
+        bytes,
+        bytes,
+        None,
+    )
+}
+
+/// Evaluate a memory-bound fusion chain as a sequence of global-memory
+/// passes. One pass = the fused kernel (one read of the inputs, one
+/// write of the outputs, all stages applied in registers); N passes =
+/// the split decomposition, each pass paying its own intermediate
+/// traffic. Pass times combine serially — separate kernel launches.
+pub fn evaluate_chain(arch: &Arch, name: &str, passes: &[ChainPass]) -> ChainEval {
+    assert!(!passes.is_empty(), "chain with no passes");
+    let evals: Vec<KernelPerf> =
+        passes.iter().map(|p| evaluate_chain_pass(arch, p)).collect();
+    if evals.len() == 1 {
+        return ChainEval { perf: evals[0].clone(), passes: evals };
+    }
+    let time_s: f64 = evals.iter().map(|p| p.time_s).sum();
+    let compute_s: f64 = evals.iter().map(|p| p.compute_s).sum();
+    let mem_s: f64 = evals.iter().map(|p| p.mem_s).sum();
+    let bytes: f64 = passes
+        .iter()
+        .map(|p| (p.reads + p.writes) as f64 * p.rows as f64 * (p.d as f64 * 2.0))
+        .sum();
+    let perf = KernelPerf {
+        name: name.to_string(),
+        tflops: bytes / time_s / 1e12,
+        time_s,
+        compute_s,
+        mem_s,
+        mfma_util: 0.0,
+        l2_hit: 0.0,
+        llc_hit: 0.0,
+        eff_bw_tbps: bytes / time_s / 1e12,
+        info: evals[0].info.clone(),
+    };
+    ChainEval { perf, passes: evals }
 }
 
 /// Evaluate a paged-gather kernel (decode attention over a block-table

@@ -24,7 +24,7 @@ use crate::hk::costmodel::KernelPerf;
 use crate::hk::regalloc::RegMode;
 use crate::kernels::attention::{self, AttnConfig};
 use crate::kernels::gemm::{self, GemmConfig, GridOrder, Pattern};
-use crate::kernels::membound::{self, FusedLnConfig, RopeConfig};
+use crate::kernels::membound::{FusedLnConfig, RopeConfig};
 use crate::sim::arch::Arch;
 
 /// Baseline identities, matching the paper's legend names.
@@ -239,36 +239,33 @@ pub fn attn_bwd(arch: &Arch, base: &AttnConfig, who: Baseline) -> KernelPerf {
     }
 }
 
-/// Memory-bound baselines (Fig. 9).
+/// Memory-bound baselines (Fig. 9). HK's path is the fusion chain;
+/// the chain lowering is bit-equal to the pre-algebra numbers.
 pub fn fused_ln(arch: &Arch, base: &FusedLnConfig, who: Baseline) -> KernelPerf {
     match who {
-        Baseline::HK => membound::simulate_fused_ln(arch, base),
+        Baseline::HK => base.chain().simulate(arch),
         Baseline::Aiter => {
             // AITER's fused kernel is good but not chunked per-CU as well
-            scaled(membound::simulate_fused_ln(arch, base), 0.85, "AITER")
+            scaled(base.chain().simulate(arch), 0.85, "AITER")
         }
         Baseline::TorchCompile | Baseline::PyTorch => {
             // torch.compile fuses but misses vectorized intrinsics and has
             // a lower L2 hit rate (App. B.2: 23% lower than HK)
             let cfg = FusedLnConfig { vectorized: false, ..*base };
-            scaled(
-                membound::simulate_fused_ln(arch, &cfg),
-                0.75,
-                "torch.compile",
-            )
+            scaled(cfg.chain().simulate(arch), 0.75, "torch.compile")
         }
-        _ => scaled(membound::simulate_fused_ln(arch, base), 0.7, who.name()),
+        _ => scaled(base.chain().simulate(arch), 0.7, who.name()),
     }
 }
 
 pub fn rope(arch: &Arch, base: &RopeConfig, who: Baseline) -> KernelPerf {
     match who {
-        Baseline::HK => membound::simulate_rope(arch, base),
-        Baseline::Aiter => scaled(membound::simulate_rope(arch, base), 0.9, "AITER"),
+        Baseline::HK => base.chain().simulate(arch),
+        Baseline::Aiter => scaled(base.chain().simulate(arch), 0.9, "AITER"),
         Baseline::TorchCompile | Baseline::PyTorch => {
-            scaled(membound::simulate_rope(arch, base), 0.55, "torch.compile")
+            scaled(base.chain().simulate(arch), 0.55, "torch.compile")
         }
-        _ => scaled(membound::simulate_rope(arch, base), 0.6, who.name()),
+        _ => scaled(base.chain().simulate(arch), 0.6, who.name()),
     }
 }
 

@@ -1,0 +1,553 @@
+//! Composable fusion algebra for the memory-bound kernel family.
+//!
+//! The paper's strongest wins (1.2-2.4x over every baseline) are on
+//! memory-bound kernels, and the exemplar repo's biggest wins there are
+//! *fusions*: Fused Add+RMSNorm, gated SiLU+Mul, fused QKV+RoPE,
+//! GEMM-epilogue activations. Instead of modelling each fusion as its
+//! own monolithic `simulate_*` function, a kernel here is a
+//! [`FusionChain`]: a sequence of elementwise/reduction [`Stage`]s over
+//! named row-tensors.
+//!
+//! - **Fused**, the chain is priced as **one global-memory pass**
+//!   ([`crate::hk::costmodel::evaluate_chain`]): external inputs are
+//!   read once, outputs written once, and every intermediate tensor
+//!   lives in registers/LDS.
+//! - **Split**, each segment is its own pass and the intermediates
+//!   round-trip through HBM — which is exactly why fusion wins on a
+//!   bandwidth-bound kernel.
+//!
+//! Fusion is not always legal: a fused segment must keep its live
+//! tensors resident, and the register file
+//! ([`crate::hk::regalloc::wave_budget`]) plus the LDS staging budget
+//! bound how much a segment may carry. [`FusionChain::plan`] checks the
+//! budget and, when the whole chain does not fit, splits it at the
+//! cheapest legal cut points (exhaustive over chains of practical
+//! length). A fused chain never costs more than any split of it, and
+//! chains over budget split instead of reporting impossible residency —
+//! both properties are pinned in `tests/fusion.rs`.
+
+use crate::hk::costmodel::{evaluate_chain, ChainEval, ChainPass, KernelPerf};
+use crate::hk::regalloc;
+use crate::sim::arch::Arch;
+
+/// What a stage computes, which fixes its VALU cost (passes over the
+/// d/64 elements each lane owns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Generic pointwise map (activation, scale, ...): caller-specified
+    /// VALU passes (SiLU ~ 4: sigmoid polynomial + multiply).
+    Elementwise { passes: u32 },
+    /// Row-wise reduction (sum / max over d).
+    RowReduce,
+    /// Normalize against row statistics (mean/var or rms + affine).
+    Normalize,
+    /// Gating multiply of two streams (the `* up` of SiLU+Mul).
+    Gate,
+    /// Rotary embedding: sin/cos + 4 mul/add per element pair.
+    RopeRotate,
+    /// Dropout mask generate + apply.
+    Dropout,
+    /// Residual add.
+    Residual,
+    /// Quantize to a low-precision output (scale + round + pack).
+    Quantize,
+}
+
+impl StageKind {
+    /// VALU passes per lane-owned element chunk. The fused
+    /// dropout-residual-layernorm decomposition (Dropout 3 + Residual 1
+    /// + Normalize 6) reproduces `membound`'s 10-pass (7 without
+    /// dropout) VALU cost exactly; RopeRotate reproduces its 8.
+    pub fn valu_passes(self) -> u32 {
+        match self {
+            StageKind::Elementwise { passes } => passes,
+            StageKind::RowReduce => 2,
+            StageKind::Normalize => 6,
+            StageKind::Gate => 1,
+            StageKind::RopeRotate => 8,
+            StageKind::Dropout => 3,
+            StageKind::Residual => 1,
+            StageKind::Quantize => 2,
+        }
+    }
+
+    /// Reduction-class stages stage a row through LDS for the cross-lane
+    /// tree (the fused kernel's only LDS demand).
+    pub fn uses_lds(self) -> bool {
+        matches!(self, StageKind::RowReduce | StageKind::Normalize)
+    }
+}
+
+/// One stage of a chain: a kind plus the named row-tensors it consumes
+/// and produces. Names are chain-local; a tensor produced by one stage
+/// and read by a later one is an *intermediate* — free when the two
+/// stages share a fused segment, a full HBM round-trip when they don't.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub kind: StageKind,
+    pub reads: Vec<String>,
+    pub writes: Vec<String>,
+}
+
+impl Stage {
+    pub fn new(kind: StageKind, reads: &[&str], writes: &[&str]) -> Self {
+        Stage {
+            kind,
+            reads: reads.iter().map(|s| s.to_string()).collect(),
+            writes: writes.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// A memory-bound kernel as a chain of stages over (rows, d) bf16
+/// row-tensors.
+#[derive(Debug, Clone)]
+pub struct FusionChain {
+    pub name: String,
+    pub rows: u32,
+    pub d: u32,
+    pub stages: Vec<Stage>,
+    /// Tensors that must reach global memory even when their producer
+    /// fuses with every consumer (the kernel's declared results).
+    pub outputs: Vec<String>,
+    /// Vectorized (dwordx4) global access vs the scalar-load lowering.
+    pub vectorized: bool,
+    /// Force stage-granularity splitting — the unfused baseline every
+    /// fused chain is measured against.
+    pub split_all: bool,
+}
+
+/// A planned execution: where the chain was cut and the resulting
+/// global-memory passes.
+#[derive(Debug, Clone)]
+pub struct ChainPlan {
+    /// `cuts[i]` = the chain is split between stage i and i+1.
+    pub cuts: Vec<bool>,
+    pub passes: Vec<ChainPass>,
+    /// The fully fused form exceeded the register/LDS budget, so the
+    /// planner was forced to split.
+    pub forced_split: bool,
+}
+
+/// A priced plan: combined estimate, per-pass estimates, and the plan.
+#[derive(Debug, Clone)]
+pub struct FusionEval {
+    pub perf: KernelPerf,
+    pub per_pass: Vec<KernelPerf>,
+    pub plan: ChainPlan,
+}
+
+fn push_unique<'a>(set: &mut Vec<&'a str>, t: &'a str) {
+    if !set.contains(&t) {
+        set.push(t);
+    }
+}
+
+impl FusionChain {
+    pub fn new(name: &str, rows: u32, d: u32) -> Self {
+        FusionChain {
+            name: name.to_string(),
+            rows,
+            d,
+            stages: Vec::new(),
+            outputs: Vec::new(),
+            vectorized: true,
+            split_all: false,
+        }
+    }
+
+    /// Append a stage (builder style).
+    pub fn stage(mut self, kind: StageKind, reads: &[&str], writes: &[&str]) -> Self {
+        self.stages.push(Stage::new(kind, reads, writes));
+        self
+    }
+
+    /// Declare the chain's result tensors.
+    pub fn with_outputs(mut self, outputs: &[&str]) -> Self {
+        self.outputs = outputs.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Force the unfused (one pass per stage) baseline.
+    pub fn split_all(mut self) -> Self {
+        self.split_all = true;
+        self
+    }
+
+    /// Model the Triton-style scalar-load lowering.
+    pub fn with_vectorized(mut self, v: bool) -> Self {
+        self.vectorized = v;
+        self
+    }
+
+    // ---------------------------------------------- exemplar chains
+
+    /// The legacy fused dropout-residual-layernorm stream
+    /// (`membound::FusedLnConfig`), as a chain. Fused, this reproduces
+    /// `simulate_fused_ln`'s numbers bit-for-bit: 2 reads (x, resid),
+    /// 2 writes (resid_out, out), 10 VALU passes (7 without dropout).
+    pub fn fused_ln(rows: u32, d: u32, dropout: bool) -> Self {
+        let base = FusionChain::new(&format!("fused-ln rows={rows} d={d}"), rows, d);
+        let chain = if dropout {
+            base.stage(StageKind::Dropout, &["x"], &["xd"])
+                .stage(StageKind::Residual, &["xd", "resid"], &["resid_out"])
+        } else {
+            base.stage(StageKind::Residual, &["x", "resid"], &["resid_out"])
+        };
+        chain
+            .stage(StageKind::Normalize, &["resid_out"], &["out"])
+            .with_outputs(&["resid_out", "out"])
+    }
+
+    /// The legacy RoPE stream (`membound::RopeConfig`) as a one-stage
+    /// chain over (batch*heads*seq) rows of d: bit-equal fused.
+    pub fn rope(batch: u32, heads: u32, seq: u32, d: u32) -> Self {
+        let rows = batch
+            .saturating_mul(heads)
+            .saturating_mul(seq);
+        FusionChain::new("rope", rows, d)
+            .stage(StageKind::RopeRotate, &["x"], &["out"])
+            .with_outputs(&["out"])
+    }
+
+    /// Fused Add+RMSNorm (the exemplar repo's 3-6x-vs-Triton headline):
+    /// residual add, then normalize — fused, the residual sum never
+    /// round-trips through HBM between the two stages.
+    pub fn add_rmsnorm(rows: u32, d: u32) -> Self {
+        FusionChain::new(&format!("add-rmsnorm rows={rows} d={d}"), rows, d)
+            .stage(StageKind::Residual, &["x", "resid"], &["resid_out"])
+            .stage(StageKind::Normalize, &["resid_out"], &["out"])
+            .with_outputs(&["resid_out", "out"])
+    }
+
+    /// Gated SiLU * up-projection (the MLP gate fusion).
+    pub fn silu_mul(rows: u32, d: u32) -> Self {
+        FusionChain::new(&format!("silu-mul rows={rows} d={d}"), rows, d)
+            .stage(StageKind::Elementwise { passes: 4 }, &["gate"], &["act"])
+            .stage(StageKind::Gate, &["act", "up"], &["out"])
+            .with_outputs(&["out"])
+    }
+
+    /// Fused QKV RoPE: rotate Q and K in one pass over the projection
+    /// output instead of two standalone RoPE launches.
+    pub fn qkv_rope(batch: u32, heads: u32, seq: u32, d_head: u32) -> Self {
+        Self::qkv_rope_rows(
+            batch.saturating_mul(heads).saturating_mul(seq),
+            d_head,
+        )
+    }
+
+    /// [`FusionChain::qkv_rope`] with the row count precomputed (the
+    /// registry's `Problem` carries rows, not (batch, heads, seq)).
+    pub fn qkv_rope_rows(rows: u32, d_head: u32) -> Self {
+        FusionChain::new(&format!("qkv-rope rows={rows} d={d_head}"), rows, d_head)
+            .stage(StageKind::RopeRotate, &["q"], &["q_out"])
+            .stage(StageKind::RopeRotate, &["k"], &["k_out"])
+            .with_outputs(&["q_out", "k_out"])
+    }
+
+    /// GEMM epilogue: bias add + activation applied to the accumulator
+    /// before it ever leaves the CU (vs a separate elementwise kernel).
+    pub fn gemm_epilogue(rows: u32, d: u32) -> Self {
+        FusionChain::new(&format!("gemm-epilogue rows={rows} d={d}"), rows, d)
+            .stage(StageKind::Residual, &["acc", "bias"], &["h"])
+            .stage(StageKind::Elementwise { passes: 4 }, &["h"], &["out"])
+            .with_outputs(&["out"])
+    }
+
+    // ---------------------------------------------- legality budget
+
+    /// Per-lane registers one resident row-tensor costs: the d/64
+    /// elements each of the 64 lanes owns (bf16 pairs packed, but the
+    /// working copy is f32).
+    fn per_lane_regs(&self) -> u32 {
+        (self.d as u64).div_ceil(64).min(u32::MAX as u64) as u32
+    }
+
+    /// Address/scratch registers every kernel burns regardless of the
+    /// chain (descriptors, row index, loop counters).
+    const BASE_REGS: u32 = 16;
+
+    /// Register demand of fusing stages [lo, hi): the peak live-tensor
+    /// count across the segment, times the per-lane cost of a resident
+    /// row. Live at stage i = the tensors stage i touches, plus any
+    /// tensor materialized earlier in the segment that a later stage of
+    /// the segment still reads (external inputs are loaded once and
+    /// held; produced outputs stream out when last used).
+    pub fn segment_regs(&self, lo: usize, hi: usize) -> u32 {
+        let mut max_live = 0usize;
+        for i in lo..hi {
+            let mut live: Vec<&str> = Vec::new();
+            let s = &self.stages[i];
+            for t in s.reads.iter().chain(s.writes.iter()) {
+                push_unique(&mut live, t);
+            }
+            for j in lo..i {
+                let sj = &self.stages[j];
+                for t in sj.reads.iter().chain(sj.writes.iter()) {
+                    let needed_later = self.stages[i + 1..hi]
+                        .iter()
+                        .any(|l| l.reads.iter().any(|r| r == t));
+                    if needed_later {
+                        push_unique(&mut live, t);
+                    }
+                }
+            }
+            max_live = max_live.max(live.len());
+        }
+        max_live as u32 * self.per_lane_regs() + Self::BASE_REGS
+    }
+
+    /// LDS demand of fusing stages [lo, hi): each reduction-class stage
+    /// stages one row per wave (8 waves per block) for its cross-lane
+    /// tree.
+    pub fn segment_lds_bytes(&self, lo: usize, hi: usize) -> u32 {
+        let reduces = self.stages[lo..hi]
+            .iter()
+            .filter(|s| s.kind.uses_lds())
+            .count() as u32;
+        reduces.saturating_mul(self.d.saturating_mul(2)).saturating_mul(8)
+    }
+
+    /// The fusion-legality rule: a segment fits if its live tensors fit
+    /// the one-wave-per-SIMD register file and its reduction staging
+    /// fits LDS.
+    pub fn segment_fits(&self, arch: &Arch, lo: usize, hi: usize) -> bool {
+        self.segment_regs(lo, hi) <= regalloc::wave_budget(arch, 1)
+            && self.segment_lds_bytes(lo, hi) <= arch.lds_bytes
+    }
+
+    // ---------------------------------------------------- planning
+
+    /// Distinct external reads / kept writes / summed VALU passes of
+    /// segment [lo, hi), as a priceable [`ChainPass`].
+    fn segment_pass(&self, lo: usize, hi: usize, idx: usize) -> ChainPass {
+        let mut produced: Vec<&str> = Vec::new();
+        let mut reads: Vec<&str> = Vec::new();
+        for s in &self.stages[lo..hi] {
+            for r in &s.reads {
+                if !produced.contains(&r.as_str()) {
+                    push_unique(&mut reads, r);
+                }
+            }
+            for w in &s.writes {
+                push_unique(&mut produced, w);
+            }
+        }
+        let mut writes: Vec<&str> = Vec::new();
+        for w in &produced {
+            let external = self.outputs.iter().any(|o| o == w)
+                || self.stages[hi..]
+                    .iter()
+                    .any(|s| s.reads.iter().any(|r| r == w));
+            if external {
+                push_unique(&mut writes, w);
+            }
+        }
+        let passes: u64 = self.stages[lo..hi]
+            .iter()
+            .map(|s| s.kind.valu_passes() as u64)
+            .sum();
+        let name = if lo == 0 && hi == self.stages.len() {
+            self.name.clone()
+        } else {
+            format!("{}#{idx}", self.name)
+        };
+        ChainPass {
+            name,
+            rows: self.rows as u64,
+            d: self.d,
+            passes,
+            reads: reads.len() as u32,
+            writes: writes.len() as u32,
+            vectorized: self.vectorized,
+        }
+    }
+
+    /// Materialize a cut mask into passes.
+    fn passes_for_cuts(&self, cuts: &[bool]) -> Vec<ChainPass> {
+        assert_eq!(cuts.len() + 1, self.stages.len().max(1), "cut mask length");
+        let mut passes = Vec::new();
+        let mut lo = 0usize;
+        for i in 0..self.stages.len() {
+            let cut_here = i + 1 < self.stages.len() && cuts[i];
+            if cut_here {
+                passes.push(self.segment_pass(lo, i + 1, passes.len()));
+                lo = i + 1;
+            }
+        }
+        passes.push(self.segment_pass(lo, self.stages.len(), passes.len()));
+        passes
+    }
+
+    fn cuts_fit(&self, arch: &Arch, cuts: &[bool]) -> bool {
+        let mut lo = 0usize;
+        for i in 0..self.stages.len() {
+            let cut_here = i + 1 < self.stages.len() && cuts[i];
+            if cut_here {
+                if !self.segment_fits(arch, lo, i + 1) {
+                    return false;
+                }
+                lo = i + 1;
+            }
+        }
+        self.segment_fits(arch, lo, self.stages.len())
+    }
+
+    /// Plan the chain on `arch`: fully fused when the budget allows
+    /// (a fused chain never costs more than any split of it — pinned in
+    /// `tests/fusion.rs` — so no search is needed); otherwise the
+    /// cheapest *legal* segmentation, exhaustive over all cut subsets,
+    /// ties broken toward fewer cuts. If even stage granularity
+    /// overflows (a single stage touching more tensors than the file
+    /// holds), the all-cuts floor is returned with `forced_split` set —
+    /// the model never reports an impossible fused residency.
+    pub fn plan(&self, arch: &Arch) -> ChainPlan {
+        assert!(!self.stages.is_empty(), "empty chain {}", self.name);
+        let n_cuts = self.stages.len() - 1;
+        let all_cuts = vec![true; n_cuts];
+        if self.split_all {
+            return ChainPlan {
+                passes: self.passes_for_cuts(&all_cuts),
+                cuts: all_cuts,
+                forced_split: false,
+            };
+        }
+        let fused = vec![false; n_cuts];
+        if self.cuts_fit(arch, &fused) {
+            return ChainPlan {
+                passes: self.passes_for_cuts(&fused),
+                cuts: fused,
+                forced_split: false,
+            };
+        }
+        assert!(
+            n_cuts <= 16,
+            "chain {} too long to plan exhaustively",
+            self.name
+        );
+        let mut best: Option<(Vec<bool>, f64, u32)> = None;
+        for mask in 1u32..(1u32 << n_cuts) {
+            let cuts: Vec<bool> =
+                (0..n_cuts).map(|i| mask & (1 << i) != 0).collect();
+            if !self.cuts_fit(arch, &cuts) {
+                continue;
+            }
+            let passes = self.passes_for_cuts(&cuts);
+            let t = evaluate_chain(arch, &self.name, &passes).perf.time_s;
+            let n = mask.count_ones();
+            let better = match &best {
+                Some((_, bt, bn)) => t < *bt || (t == *bt && n < *bn),
+                None => true,
+            };
+            if better {
+                best = Some((cuts, t, n));
+            }
+        }
+        match best {
+            Some((cuts, _, _)) => ChainPlan {
+                passes: self.passes_for_cuts(&cuts),
+                cuts,
+                forced_split: true,
+            },
+            None => ChainPlan {
+                passes: self.passes_for_cuts(&all_cuts),
+                cuts: all_cuts,
+                forced_split: true,
+            },
+        }
+    }
+
+    /// Plan and price the chain.
+    pub fn evaluate(&self, arch: &Arch) -> FusionEval {
+        let plan = self.plan(arch);
+        let eval: ChainEval = evaluate_chain(arch, &self.name, &plan.passes);
+        FusionEval { perf: eval.perf, per_pass: eval.passes, plan }
+    }
+
+    /// Price an explicit cut mask, legality aside (property tests and
+    /// the fused-vs-split ablation sweep).
+    pub fn evaluate_with_cuts(&self, arch: &Arch, cuts: &[bool]) -> KernelPerf {
+        evaluate_chain(arch, &self.name, &self.passes_for_cuts(cuts)).perf
+    }
+
+    /// The planned estimate (the chain's `KernelPerf`; `tflops` carries
+    /// the bandwidth scale, see `costmodel::evaluate_chain`).
+    pub fn simulate(&self, arch: &Arch) -> KernelPerf {
+        self.evaluate(arch).perf
+    }
+
+    /// Count of global-memory passes the plan takes on `arch`.
+    pub fn planned_passes(&self, arch: &Arch) -> usize {
+        self.plan(arch).passes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> Arch {
+        Arch::mi355x()
+    }
+
+    #[test]
+    fn exemplar_chains_fuse_to_one_pass() {
+        let a = arch();
+        for chain in [
+            FusionChain::fused_ln(16 * 4096, 2048, true),
+            FusionChain::add_rmsnorm(16 * 4096, 2048),
+            FusionChain::silu_mul(16 * 4096, 2048),
+            FusionChain::qkv_rope(16, 16, 4096, 128),
+            FusionChain::gemm_epilogue(16 * 4096, 2048),
+        ] {
+            let plan = chain.plan(&a);
+            assert_eq!(plan.passes.len(), 1, "{} did not fuse", chain.name);
+            assert!(!plan.forced_split);
+        }
+    }
+
+    #[test]
+    fn split_all_pays_stage_granularity() {
+        let a = arch();
+        let chain = FusionChain::add_rmsnorm(16 * 4096, 2048);
+        let split = chain.clone().split_all();
+        let plan = split.plan(&a);
+        assert_eq!(plan.passes.len(), 2);
+        // the intermediate residual sum round-trips: pass 0 writes it,
+        // pass 1 reads it back
+        assert_eq!(plan.passes[0].writes, 1);
+        assert_eq!(plan.passes[1].reads, 1);
+        let fused = chain.simulate(&a);
+        let unfused = split.simulate(&a);
+        assert!(
+            fused.time_s < unfused.time_s,
+            "fused {} !< split {}",
+            fused.time_s,
+            unfused.time_s
+        );
+    }
+
+    #[test]
+    fn fused_segment_accounting_matches_hand_count() {
+        // Add+RMSNorm fused: reads {x, resid}, writes {resid_out, out},
+        // 1 + 6 VALU passes.
+        let chain = FusionChain::add_rmsnorm(1024, 2048);
+        let p = chain.segment_pass(0, 2, 0);
+        assert_eq!((p.reads, p.writes, p.passes), (2, 2, 7));
+        // SiLU+Mul fused: reads {gate, up}, writes {out}, 4 + 1 passes.
+        let c2 = FusionChain::silu_mul(1024, 2048);
+        let p2 = c2.segment_pass(0, 2, 0);
+        assert_eq!((p2.reads, p2.writes, p2.passes), (2, 1, 5));
+    }
+
+    #[test]
+    fn legality_rule_uses_the_register_budget() {
+        let a = arch();
+        let chain = FusionChain::add_rmsnorm(1024, 2048);
+        let regs = chain.segment_regs(0, 2);
+        assert!(regs <= regalloc::wave_budget(&a, 1));
+        // 3 live tensors at the residual stage x 32 regs/row + base
+        assert_eq!(regs, 3 * 32 + 16);
+    }
+}

@@ -1,11 +1,22 @@
-//! Memory-bound kernels (paper Fig. 9): fused dropout-residual-layernorm
-//! and rotary positional embedding. These are bandwidth-limited; the
-//! paper's metric is effective bandwidth (we also report the ms runtime
-//! used for the figure's relative comparisons).
+//! Memory-bound kernels (paper Fig. 9) — **back-compat facade**.
+//!
+//! The fused dropout-residual-layernorm and RoPE streams that used to be
+//! modelled here as standalone monoliths are now chains in the fusion
+//! algebra ([`crate::kernels::fusion::FusionChain`]): `fused_ln` is
+//! Dropout -> Residual -> Normalize, `rope` is a single RopeRotate
+//! stage, both priced by `hk::costmodel::evaluate_chain`. The chain
+//! lowering reproduces the legacy numbers bit-for-bit (pinned against
+//! the retained [`legacy_simulate_fused_ln`] / [`legacy_simulate_rope`]
+//! oracles in `tests/fusion.rs`).
+//!
+//! The config structs stay — they are the registry's `Problem`
+//! vocabulary and now implement `registry::KernelOp` — but the
+//! `simulate_*` free functions are deprecated shims over the chains.
 
 use crate::hk::costmodel::{evaluate_streaming, KernelPerf};
-use crate::hk::schedule::{Cluster, LoopSpec};
 use crate::hk::interleave;
+use crate::hk::schedule::{Cluster, LoopSpec};
+use crate::kernels::fusion::FusionChain;
 use crate::sim::arch::Arch;
 use crate::sim::instr::Instr;
 
@@ -32,9 +43,67 @@ impl FusedLnConfig {
     pub fn bytes(&self) -> f64 {
         4.0 * self.rows as f64 * self.d as f64 * 2.0
     }
+
+    /// This stream as a fusion chain (Dropout -> Residual -> Normalize).
+    pub fn chain(&self) -> FusionChain {
+        FusionChain::fused_ln(self.rows, self.d, self.dropout)
+            .with_vectorized(self.vectorized)
+    }
 }
 
+/// RoPE over (B, H, N, D) bf16.
+#[derive(Debug, Clone, Copy)]
+pub struct RopeConfig {
+    pub batch: u32,
+    pub heads: u32,
+    pub seq: u32,
+    pub d: u32,
+}
+
+impl RopeConfig {
+    pub fn paper(seq: u32) -> Self {
+        RopeConfig { batch: 16, heads: 16, seq, d: 128 }
+    }
+
+    pub fn bytes(&self) -> f64 {
+        // read x, write out
+        2.0 * self.batch as f64 * self.heads as f64 * self.seq as f64
+            * self.d as f64 * 2.0
+    }
+
+    /// This stream as a one-stage fusion chain.
+    pub fn chain(&self) -> FusionChain {
+        FusionChain::rope(self.batch, self.heads, self.seq, self.d)
+    }
+}
+
+#[deprecated(
+    note = "use FusedLnConfig::chain() / registry::KernelOp::simulate; \
+            the fused-ln stream is a fusion chain now"
+)]
 pub fn simulate_fused_ln(arch: &Arch, cfg: &FusedLnConfig) -> KernelPerf {
+    cfg.chain().simulate(arch)
+}
+
+#[deprecated(
+    note = "use RopeConfig::chain() / registry::KernelOp::simulate; \
+            the RoPE stream is a fusion chain now"
+)]
+pub fn simulate_rope(arch: &Arch, cfg: &RopeConfig) -> KernelPerf {
+    cfg.chain().simulate(arch)
+}
+
+/// Effective bandwidth in TB/s for a membound result.
+#[deprecated(note = "use KernelPerf::eff_bw_tbps()")]
+pub fn eff_bw_tbps(perf: &KernelPerf) -> f64 {
+    perf.eff_bw_tbps()
+}
+
+/// The pre-fusion-algebra lowering, retained verbatim as the
+/// bit-equality oracle: `tests/fusion.rs` and the `fusion` report pin
+/// the chain-based [`FusedLnConfig`] numbers against this.
+#[doc(hidden)]
+pub fn legacy_simulate_fused_ln(arch: &Arch, cfg: &FusedLnConfig) -> KernelPerf {
     // per wave: one row-chunk of d elements; VALU: dropout mask + mean +
     // var + normalize + affine ~ 8 passes over d/64 elems per lane
     let per_lane = (cfg.d as u64).div_ceil(64);
@@ -75,28 +144,9 @@ pub fn simulate_fused_ln(arch: &Arch, cfg: &FusedLnConfig) -> KernelPerf {
     )
 }
 
-/// RoPE over (B, H, N, D) bf16.
-#[derive(Debug, Clone, Copy)]
-pub struct RopeConfig {
-    pub batch: u32,
-    pub heads: u32,
-    pub seq: u32,
-    pub d: u32,
-}
-
-impl RopeConfig {
-    pub fn paper(seq: u32) -> Self {
-        RopeConfig { batch: 16, heads: 16, seq, d: 128 }
-    }
-
-    pub fn bytes(&self) -> f64 {
-        // read x, write out
-        2.0 * self.batch as f64 * self.heads as f64 * self.seq as f64
-            * self.d as f64 * 2.0
-    }
-}
-
-pub fn simulate_rope(arch: &Arch, cfg: &RopeConfig) -> KernelPerf {
+/// Pre-fusion-algebra RoPE lowering (see [`legacy_simulate_fused_ln`]).
+#[doc(hidden)]
+pub fn legacy_simulate_rope(arch: &Arch, cfg: &RopeConfig) -> KernelPerf {
     let per_lane = (cfg.d as u64).div_ceil(64);
     // sin/cos + 4 mul/add per pair
     let valu = 8 * per_lane;
@@ -130,12 +180,6 @@ pub fn simulate_rope(arch: &Arch, cfg: &RopeConfig) -> KernelPerf {
     )
 }
 
-/// Effective bandwidth in TB/s for a membound result (the "tflops" slot
-/// carries bytes; see simulate_fused_ln).
-pub fn eff_bw_tbps(perf: &KernelPerf) -> f64 {
-    perf.eff_bw_tbps
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,7 +187,7 @@ mod tests {
     #[test]
     fn fused_ln_is_bandwidth_bound() {
         let a = Arch::mi355x();
-        let p = simulate_fused_ln(&a, &FusedLnConfig::paper(4096));
+        let p = FusedLnConfig::paper(4096).chain().simulate(&a);
         // must run within ~60-100% of HBM bandwidth
         assert!(
             p.eff_bw_tbps > 0.5 * a.hbm_tbps && p.eff_bw_tbps <= a.hbm_tbps * 1.01,
@@ -155,18 +199,35 @@ mod tests {
     #[test]
     fn scalar_loads_slow_it_down() {
         let a = Arch::mi355x();
-        let v = simulate_fused_ln(&a, &FusedLnConfig::paper(4096));
-        let s = simulate_fused_ln(
-            &a,
-            &FusedLnConfig { vectorized: false, ..FusedLnConfig::paper(4096) },
-        );
+        let v = FusedLnConfig::paper(4096).chain().simulate(&a);
+        let s = FusedLnConfig { vectorized: false, ..FusedLnConfig::paper(4096) }
+            .chain()
+            .simulate(&a);
         assert!(s.time_s >= v.time_s, "{} vs {}", s.time_s, v.time_s);
     }
 
     #[test]
     fn rope_near_hbm_bw() {
         let a = Arch::mi355x();
-        let p = simulate_rope(&a, &RopeConfig::paper(8192));
+        let p = RopeConfig::paper(8192).chain().simulate(&a);
         assert!(p.eff_bw_tbps > 0.4 * a.hbm_tbps, "{}", p.eff_bw_tbps);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_stay_bit_equal() {
+        // external call sites migrating through the shims must see the
+        // numbers they always saw
+        let a = Arch::mi355x();
+        let ln = FusedLnConfig::paper(2048);
+        let shim = simulate_fused_ln(&a, &ln);
+        let legacy = legacy_simulate_fused_ln(&a, &ln);
+        assert_eq!(shim.time_s, legacy.time_s);
+        assert_eq!(shim.eff_bw_tbps, legacy.eff_bw_tbps);
+        let rp = RopeConfig::paper(2048);
+        let shim_r = simulate_rope(&a, &rp);
+        let legacy_r = legacy_simulate_rope(&a, &rp);
+        assert_eq!(shim_r.time_s, legacy_r.time_s);
+        assert_eq!(shim_r.tflops, legacy_r.tflops);
     }
 }

@@ -10,16 +10,22 @@
 //! - [`moe`] — grouped GEMM over ragged per-expert batches (the MoE
 //!   FFN), costed by the max-over-shards law at both topology levels
 //!   (XCDs within a GPU, GPUs within a node) with LPT expert placement.
+//! - [`fusion`] — the composable fusion algebra for the memory-bound
+//!   family: chains of elementwise/reduction stages priced as one
+//!   global-memory pass when the register/LDS budget admits the fused
+//!   residency, split at the cheapest cut otherwise.
 //! - [`membound`] — fused dropout-residual-layernorm + RoPE (Fig. 9,
-//!   listing E.2).
+//!   listing E.2); now a back-compat facade over [`fusion`] chains.
 //! - [`baselines`] — AITER/CK/hipBLASLt/Triton/PyTorch/Mojo models.
 //! - [`registry`] — the unified dispatch surface: `KernelKey` ->
-//!   autotuned variant, memoized in the persistent tune cache. All
+//!   autotuned variant, memoized in the persistent tune cache, with
+//!   every config simulated through the `KernelOp` trait. All
 //!   report/coordinator/bench launches route through it.
 
 pub mod attention;
 pub mod baselines;
 pub mod decode;
+pub mod fusion;
 pub mod gemm;
 pub mod membound;
 pub mod moe;
@@ -28,7 +34,10 @@ pub mod registry;
 pub use attention::{AttnConfig, DqMode};
 pub use decode::AttnDecodeConfig;
 pub use baselines::Baseline;
+pub use fusion::{FusionChain, Stage, StageKind};
 pub use gemm::{GemmConfig, GridOrder, Pattern};
 pub use membound::{FusedLnConfig, RopeConfig};
 pub use moe::MoeGemmConfig;
-pub use registry::{ArchId, Dispatch, KernelKey, Op, Query, ShapeClass};
+pub use registry::{
+    ArchId, ChainKind, Dispatch, KernelKey, KernelOp, Op, Query, ShapeClass,
+};

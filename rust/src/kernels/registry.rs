@@ -33,8 +33,9 @@ use crate::hk::regalloc::RegMode;
 use crate::hk::tunecache::{self, TuneCache, TuneRecord};
 use crate::kernels::attention::{self, AttnConfig, DqMode};
 use crate::kernels::decode::{self, AttnDecodeConfig};
+use crate::kernels::fusion::FusionChain;
 use crate::kernels::gemm::{self, GemmConfig, GridOrder, Pattern};
-use crate::kernels::membound::{self, FusedLnConfig, RopeConfig};
+use crate::kernels::membound::{FusedLnConfig, RopeConfig};
 use crate::kernels::moe::{self, MoeGemmConfig};
 use crate::sim::arch::{Arch, Dtype};
 
@@ -51,10 +52,14 @@ pub enum Op {
     MoeGemm,
     FusedLn,
     Rope,
+    /// A memory-bound fusion chain (`kernels::fusion`): Add+RMSNorm,
+    /// SiLU+Mul, QKV+RoPE, GEMM-epilogue and friends, planned against
+    /// the register/LDS fusion-legality budget.
+    FusedChain,
 }
 
 impl Op {
-    pub const ALL: [Op; 7] = [
+    pub const ALL: [Op; 8] = [
         Op::Gemm,
         Op::AttnFwd,
         Op::AttnBwd,
@@ -62,6 +67,7 @@ impl Op {
         Op::MoeGemm,
         Op::FusedLn,
         Op::Rope,
+        Op::FusedChain,
     ];
 
     pub fn tag(self) -> &'static str {
@@ -73,6 +79,7 @@ impl Op {
             Op::MoeGemm => "moe-gemm",
             Op::FusedLn => "fused-ln",
             Op::Rope => "rope",
+            Op::FusedChain => "fused-chain",
         }
     }
 
@@ -220,6 +227,47 @@ pub enum Problem {
         seq: u32,
         d: u32,
     },
+    FusedChain {
+        kind: ChainKind,
+        rows: u32,
+        d: u32,
+    },
+}
+
+/// The exemplar fusion chains the registry can dispatch by name
+/// (`Problem::FusedChain`). Ad-hoc chains go through
+/// [`crate::kernels::fusion::FusionChain`] directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ChainKind {
+    /// Residual add + RMSNorm (the exemplar repo's headline fusion).
+    AddRmsNorm,
+    /// Gated SiLU * up-projection (the MLP gate).
+    SiluMul,
+    /// Q and K rotary embedding fused into one pass.
+    QkvRope,
+    /// GEMM epilogue: bias + activation on the accumulator.
+    GemmEpilogue,
+}
+
+impl ChainKind {
+    pub fn tag(self) -> &'static str {
+        match self {
+            ChainKind::AddRmsNorm => "add-rmsnorm",
+            ChainKind::SiluMul => "silu-mul",
+            ChainKind::QkvRope => "qkv-rope",
+            ChainKind::GemmEpilogue => "gemm-epilogue",
+        }
+    }
+
+    /// Build the chain at a shape.
+    pub fn chain(self, rows: u32, d: u32) -> FusionChain {
+        match self {
+            ChainKind::AddRmsNorm => FusionChain::add_rmsnorm(rows, d),
+            ChainKind::SiluMul => FusionChain::silu_mul(rows, d),
+            ChainKind::QkvRope => FusionChain::qkv_rope_rows(rows, d),
+            ChainKind::GemmEpilogue => FusionChain::gemm_epilogue(rows, d),
+        }
+    }
 }
 
 impl Problem {
@@ -242,6 +290,7 @@ impl Problem {
             }
             Problem::FusedLn { rows, .. } => (rows / 16).max(1) as u64,
             Problem::Rope { seq, .. } => seq as u64,
+            Problem::FusedChain { rows, .. } => (rows / 16).max(1) as u64,
         }
     }
 }
@@ -476,6 +525,16 @@ pub fn variants(key: &KernelKey) -> Vec<Variant> {
             block_n: 0,
             swizzled: false,
         }],
+        // Fusion chains stream like the other memory-bound kernels: 4
+        // waves, one per SIMD, full register file for the fused
+        // residency (the legality budget `fusion::plan` checks).
+        Op::FusedChain => vec![Variant {
+            name: "chain-il4",
+            pattern: Pattern::Interleave4,
+            block_m: 0,
+            block_n: 0,
+            swizzled: false,
+        }],
     }
 }
 
@@ -526,6 +585,11 @@ pub struct Overrides {
     pub dq_kv_tile: Option<u32>,
     /// Node-level GPU count for shardable ops (None = single GPU).
     pub n_gpus: Option<u32>,
+    /// Fusion toggle for the memory-bound chain family: `Some(false)`
+    /// forces the stage-granularity split (the unfused baseline every
+    /// fused chain is measured against); None/`Some(true)` lets the
+    /// fusion planner fuse up to the register/LDS budget.
+    pub fuse: Option<bool>,
 }
 
 /// A dispatch request: key ingredients + concrete problem + overrides.
@@ -678,6 +742,56 @@ impl Query {
         Self::rope(arch, 16, 16, seq, 128)
     }
 
+    /// A named fusion chain at (rows, d).
+    pub fn fused_chain(arch: ArchId, kind: ChainKind, rows: u32, d: u32) -> Self {
+        Query {
+            op: Op::FusedChain,
+            dtype: Dtype::Bf16,
+            arch,
+            problem: Problem::FusedChain { kind, rows, d },
+            ov: Overrides::default(),
+        }
+    }
+
+    /// Fused Add+RMSNorm over `rows` rows of width `d`.
+    pub fn add_rmsnorm(arch: ArchId, rows: u32, d: u32) -> Self {
+        Self::fused_chain(arch, ChainKind::AddRmsNorm, rows, d)
+    }
+
+    /// Gated SiLU+Mul over `rows` rows of width `d`.
+    pub fn silu_mul(arch: ArchId, rows: u32, d: u32) -> Self {
+        Self::fused_chain(arch, ChainKind::SiluMul, rows, d)
+    }
+
+    /// Fused Q/K RoPE over (batch, heads, seq) rows of `d_head`.
+    pub fn qkv_rope(
+        arch: ArchId,
+        batch: u32,
+        heads: u32,
+        seq: u32,
+        d_head: u32,
+    ) -> Self {
+        Self::fused_chain(
+            arch,
+            ChainKind::QkvRope,
+            batch.saturating_mul(heads).saturating_mul(seq),
+            d_head,
+        )
+    }
+
+    /// GEMM-epilogue activation over `rows` rows of width `d`.
+    pub fn gemm_epilogue(arch: ArchId, rows: u32, d: u32) -> Self {
+        Self::fused_chain(arch, ChainKind::GemmEpilogue, rows, d)
+    }
+
+    /// Force the unfused (one pass per stage) lowering of a
+    /// memory-bound chain — the split baseline. Honored by
+    /// `Op::FusedChain`, `Op::FusedLn` and `Op::Rope`.
+    pub fn unfused(mut self) -> Self {
+        self.ov.fuse = Some(false);
+        self
+    }
+
     /// Switch an attention query to the backward pass.
     pub fn bwd(mut self) -> Self {
         self.op = Op::AttnBwd;
@@ -773,7 +887,7 @@ impl Query {
                     && self.ov.block_m.is_some()
                     && self.ov.block_n.is_some()
             }
-            Op::FusedLn | Op::Rope => true,
+            Op::FusedLn | Op::Rope | Op::FusedChain => true,
         }
     }
 
@@ -795,6 +909,7 @@ impl Query {
             || ov.dq_mode.is_some()
             || ov.dq_kv_tile.is_some()
             || ov.n_gpus.is_some()
+            || ov.fuse.is_some()
     }
 
     /// Dispatch against the process-wide persistent tune cache.
@@ -1033,15 +1148,42 @@ impl Query {
                 KernelConfig::MoeGemm(cfg)
             }
             Problem::FusedLn { rows, d, dropout } => {
-                KernelConfig::FusedLn(FusedLnConfig {
-                    rows,
-                    d,
-                    dropout,
-                    vectorized: self.ov.vectorized.unwrap_or(true),
-                })
+                // the fused (default) path keeps the legacy config so
+                // warm numbers stay bit-identical; the unfused override
+                // reroutes through the chain planner's split form
+                if self.ov.fuse == Some(false) {
+                    KernelConfig::FusedChain(
+                        FusionChain::fused_ln(rows, d, dropout)
+                            .with_vectorized(self.ov.vectorized.unwrap_or(true))
+                            .split_all(),
+                    )
+                } else {
+                    KernelConfig::FusedLn(FusedLnConfig {
+                        rows,
+                        d,
+                        dropout,
+                        vectorized: self.ov.vectorized.unwrap_or(true),
+                    })
+                }
             }
             Problem::Rope { batch, heads, seq, d } => {
-                KernelConfig::Rope(RopeConfig { batch, heads, seq, d })
+                if self.ov.fuse == Some(false) {
+                    KernelConfig::FusedChain(
+                        FusionChain::rope(batch, heads, seq, d).split_all(),
+                    )
+                } else {
+                    KernelConfig::Rope(RopeConfig { batch, heads, seq, d })
+                }
+            }
+            Problem::FusedChain { kind, rows, d } => {
+                let mut chain = kind.chain(rows, d);
+                if let Some(vec) = self.ov.vectorized {
+                    chain.vectorized = vec;
+                }
+                if self.ov.fuse == Some(false) {
+                    chain.split_all = true;
+                }
+                KernelConfig::FusedChain(chain)
             }
         }
     }
@@ -1056,6 +1198,196 @@ pub enum KernelConfig {
     MoeGemm(MoeGemmConfig),
     FusedLn(FusedLnConfig),
     Rope(RopeConfig),
+    FusedChain(FusionChain),
+}
+
+/// The one simulation surface every kernel config implements — the
+/// trait-object path `registry` dispatches through instead of a per-op
+/// match, and the public API replacing the ad-hoc `simulate_*` free
+/// functions (now deprecated shims in `kernels::membound`).
+///
+/// `key` derives the registry key the config would dispatch under;
+/// `simulate` prices the config on an arch. Variant resolution happens
+/// *before* a config exists (the registry constructs configs from
+/// variants), so unlike the legacy free functions no variant parameter
+/// appears here — a config is already a resolved variant.
+pub trait KernelOp {
+    /// The op family this config belongs to.
+    fn op(&self) -> Op;
+
+    fn dtype(&self) -> Dtype {
+        Dtype::Bf16
+    }
+
+    /// The magnitude [`ShapeClass::of`] buckets.
+    fn magnitude(&self) -> u64;
+
+    /// The registry key this config dispatches under on `arch`.
+    fn key(&self, arch: ArchId) -> KernelKey {
+        KernelKey {
+            op: self.op(),
+            dtype: self.dtype(),
+            shape: ShapeClass::of(self.magnitude()),
+            arch,
+        }
+    }
+
+    /// Price this config through the cost model.
+    fn simulate(&self, arch: &Arch) -> KernelPerf;
+}
+
+impl<T: KernelOp + ?Sized> KernelOp for &T {
+    fn op(&self) -> Op {
+        (**self).op()
+    }
+    fn dtype(&self) -> Dtype {
+        (**self).dtype()
+    }
+    fn magnitude(&self) -> u64 {
+        (**self).magnitude()
+    }
+    fn key(&self, arch: ArchId) -> KernelKey {
+        (**self).key(arch)
+    }
+    fn simulate(&self, arch: &Arch) -> KernelPerf {
+        (**self).simulate(arch)
+    }
+}
+
+impl KernelOp for GemmConfig {
+    fn op(&self) -> Op {
+        Op::Gemm
+    }
+    fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+    fn magnitude(&self) -> u64 {
+        self.m.max(self.n).max(self.k) as u64
+    }
+    fn simulate(&self, arch: &Arch) -> KernelPerf {
+        gemm::simulate(arch, self)
+    }
+}
+
+/// `AttnConfig` simulates the forward pass; the backward pass of the
+/// same config is a distinct op, so it gets a newtype.
+impl KernelOp for AttnConfig {
+    fn op(&self) -> Op {
+        Op::AttnFwd
+    }
+    fn magnitude(&self) -> u64 {
+        self.seq as u64
+    }
+    fn simulate(&self, arch: &Arch) -> KernelPerf {
+        attention::simulate_fwd(arch, self)
+    }
+}
+
+/// The backward pass of an [`AttnConfig`] as a [`KernelOp`].
+pub struct AttnBwdOp<'a>(pub &'a AttnConfig);
+
+impl KernelOp for AttnBwdOp<'_> {
+    fn op(&self) -> Op {
+        Op::AttnBwd
+    }
+    fn magnitude(&self) -> u64 {
+        self.0.seq as u64
+    }
+    fn simulate(&self, arch: &Arch) -> KernelPerf {
+        attention::simulate_bwd(arch, self.0)
+    }
+}
+
+impl KernelOp for AttnDecodeConfig {
+    fn op(&self) -> Op {
+        Op::AttnDecode
+    }
+    fn magnitude(&self) -> u64 {
+        self.context as u64
+    }
+    fn simulate(&self, arch: &Arch) -> KernelPerf {
+        decode::simulate_decode(arch, self)
+    }
+}
+
+impl KernelOp for MoeGemmConfig {
+    fn op(&self) -> Op {
+        Op::MoeGemm
+    }
+    fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+    fn magnitude(&self) -> u64 {
+        // the hot expert's batch — the shard the max-over-shards law
+        // prices (mirrors Problem::MoeGemm's bucketing intent)
+        self.expert_tokens.iter().copied().max().unwrap_or(1).max(1) as u64
+    }
+    fn simulate(&self, arch: &Arch) -> KernelPerf {
+        moe::simulate_grouped(arch, self)
+    }
+}
+
+impl KernelOp for FusedLnConfig {
+    fn op(&self) -> Op {
+        Op::FusedLn
+    }
+    fn magnitude(&self) -> u64 {
+        (self.rows / 16).max(1) as u64
+    }
+    fn simulate(&self, arch: &Arch) -> KernelPerf {
+        // priced as a fusion chain; bit-equal to the legacy lowering
+        // (pinned in tests/fusion.rs)
+        self.chain().simulate(arch)
+    }
+}
+
+impl KernelOp for RopeConfig {
+    fn op(&self) -> Op {
+        Op::Rope
+    }
+    fn magnitude(&self) -> u64 {
+        self.seq as u64
+    }
+    fn simulate(&self, arch: &Arch) -> KernelPerf {
+        self.chain().simulate(arch)
+    }
+}
+
+impl KernelOp for FusionChain {
+    fn op(&self) -> Op {
+        Op::FusedChain
+    }
+    fn magnitude(&self) -> u64 {
+        (self.rows / 16).max(1) as u64
+    }
+    fn simulate(&self, arch: &Arch) -> KernelPerf {
+        FusionChain::simulate(self, arch)
+    }
+}
+
+impl KernelConfig {
+    /// View this config as the [`KernelOp`] implementing `op` — the
+    /// single trait-object path [`simulate_config`] dispatches through.
+    /// Panics when the op and the config shape disagree, exactly like
+    /// the per-op match it replaced.
+    pub fn kernel_op(&self, op: Op) -> Box<dyn KernelOp + '_> {
+        match (op, self) {
+            (Op::Gemm, KernelConfig::Gemm(c)) => Box::new(c),
+            (Op::AttnFwd, KernelConfig::Attn(c)) => Box::new(c),
+            (Op::AttnBwd, KernelConfig::Attn(c)) => Box::new(AttnBwdOp(c)),
+            (Op::AttnDecode, KernelConfig::AttnDecode(c)) => Box::new(c),
+            (Op::MoeGemm, KernelConfig::MoeGemm(c)) => Box::new(c),
+            (Op::FusedLn, KernelConfig::FusedLn(c)) => Box::new(c),
+            (Op::Rope, KernelConfig::Rope(c)) => Box::new(c),
+            // the unfused override reroutes FusedLn/Rope queries onto
+            // their chain form, so those keys accept a chain config too
+            (
+                Op::FusedChain | Op::FusedLn | Op::Rope,
+                KernelConfig::FusedChain(c),
+            ) => Box::new(c),
+            (op, cfg) => panic!("op {op:?} does not match config {cfg:?}"),
+        }
+    }
 }
 
 /// The dispatch result: which variant won, whether the decision came
@@ -1115,25 +1447,20 @@ impl Dispatch {
             other => panic!("dispatch is not RoPE: {other:?}"),
         }
     }
+
+    pub fn chain_config(&self) -> &FusionChain {
+        match &self.config {
+            KernelConfig::FusedChain(c) => c,
+            other => panic!("dispatch is not a fusion chain: {other:?}"),
+        }
+    }
 }
 
-/// Simulate a resolved config under its key's op and arch.
+/// Simulate a resolved config under its key's op and arch — one line
+/// through the [`KernelOp`] trait object instead of the old per-op
+/// match over `simulate_*` free functions.
 pub fn simulate_config(key: &KernelKey, cfg: &KernelConfig) -> KernelPerf {
-    let arch = key.arch.arch();
-    match (key.op, cfg) {
-        (Op::Gemm, KernelConfig::Gemm(c)) => gemm::simulate(&arch, c),
-        (Op::AttnFwd, KernelConfig::Attn(c)) => attention::simulate_fwd(&arch, c),
-        (Op::AttnBwd, KernelConfig::Attn(c)) => attention::simulate_bwd(&arch, c),
-        (Op::AttnDecode, KernelConfig::AttnDecode(c)) => {
-            decode::simulate_decode(&arch, c)
-        }
-        (Op::MoeGemm, KernelConfig::MoeGemm(c)) => moe::simulate_grouped(&arch, c),
-        (Op::FusedLn, KernelConfig::FusedLn(c)) => {
-            membound::simulate_fused_ln(&arch, c)
-        }
-        (Op::Rope, KernelConfig::Rope(c)) => membound::simulate_rope(&arch, c),
-        (op, cfg) => panic!("op {op:?} does not match config {cfg:?}"),
-    }
+    cfg.kernel_op(key.op).simulate(&key.arch.arch())
 }
 
 #[cfg(test)]
@@ -1276,6 +1603,49 @@ mod tests {
         let single = Query::moe_ffn(ArchId::Mi355x, 4096, 8, 2)
             .dispatch_with(&mut TuneCache::new());
         assert_eq!(single.moe_config().n_gpus, 1);
+    }
+
+    #[test]
+    fn chain_dispatch_resolves_and_simulates() {
+        let q = Query::add_rmsnorm(ArchId::Mi355x, 16 * 4096, 2048);
+        let d = q.dispatch_with(&mut TuneCache::new());
+        assert_eq!(d.key.op, Op::FusedChain);
+        assert_eq!(d.variant, "chain-il4");
+        let chain = d.chain_config();
+        assert_eq!((chain.rows, chain.d), (16 * 4096, 2048));
+        let p = d.simulate();
+        assert!(p.time_s > 0.0 && p.time_s.is_finite());
+    }
+
+    #[test]
+    fn unfused_override_routes_fused_ln_to_chain_split() {
+        // the unfused baseline of a FusedLn query is the stage-split
+        // chain — and like any override it must stay out of the cache
+        let q = Query::fused_ln_paper(ArchId::Mi355x, 4096).unfused();
+        let mut cache = TuneCache::new();
+        let d = q.dispatch_with(&mut cache);
+        let chain = d.chain_config();
+        assert!(chain.split_all);
+        let split = d.simulate();
+        let fused = Query::fused_ln_paper(ArchId::Mi355x, 4096)
+            .dispatch_with(&mut cache)
+            .simulate();
+        assert!(split.time_s > fused.time_s, "{} vs {}", split.time_s, fused.time_s);
+    }
+
+    #[test]
+    fn kernel_op_trait_matches_free_functions() {
+        // the trait-object path is a pure re-plumbing: same numbers as
+        // calling the kernel modules directly
+        let a = Arch::mi355x();
+        let cfg = GemmConfig::bf16(8192, 8192, 8192);
+        let via_trait = cfg.simulate(&a);
+        let direct = gemm::simulate(&a, &cfg);
+        assert_eq!(via_trait.time_s, direct.time_s);
+        assert_eq!(via_trait.tflops, direct.tflops);
+        // and the derived key agrees with the Problem-based bucketing
+        let key = cfg.key(ArchId::Mi355x);
+        assert_eq!(key.id(), "gemm/bf16/medium/mi355x");
     }
 
     #[test]

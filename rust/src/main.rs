@@ -18,6 +18,10 @@
 //!   moe                   MoE walkthrough: router load-balance table +
 //!                         grouped-GEMM vs dense-FFN sweep; writes
 //!                         BENCH_moe.json (override with HK_MOE_OUT)
+//!   fusion                fusion-algebra walkthrough: exemplar chains
+//!                         fused vs stage-split, the register-budget
+//!                         forced split, serve/train step deltas;
+//!                         writes BENCH_fusion.json (HK_FUSION_OUT)
 //!   multi-gpu             node-level sharding report: MoE expert
 //!                         parallelism across simulated GPUs + the
 //!                         per-GPU-KV-pool serving engine; writes
@@ -67,11 +71,12 @@ fn main() -> Result<()> {
             let exp = args.get(1).map(String::as_str).unwrap_or("all");
             if !report::run(exp) {
                 bail!(
-                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, multi-gpu, attn-bwd, all"
+                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, fusion, multi-gpu, attn-bwd, all"
                 );
             }
         }
         Some("moe") => report::moe(),
+        Some("fusion") => report::fusion(),
         Some("multi-gpu") => report::multi_gpu(),
         Some("attn-bwd") => report::attn_bwd(),
         Some("serve") => {
@@ -225,6 +230,7 @@ fn main() -> Result<()> {
             eprintln!("       {exe} serve [--paged|--mixed] [--requests N] [--rate R]");
             eprintln!("       {exe} train [--steps N] [--path kernels|reference]");
             eprintln!("       {exe} moe");
+            eprintln!("       {exe} fusion");
             eprintln!("       {exe} multi-gpu");
             eprintln!("       {exe} attn-bwd");
             eprintln!("       {exe} tune [--arch mi355x|mi350x|mi325x|b200|h100]");

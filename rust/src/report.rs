@@ -674,6 +674,263 @@ pub fn moe_bench_json(
     ])
 }
 
+/// One cell of the fused-vs-split fusion sweep: a chain kind at a
+/// sequence length (rows = 16 * seq, the bench batch), priced through
+/// the registry's `Op::FusedChain` dispatch both ways.
+pub struct FusionBenchRow {
+    pub chain: String,
+    pub seq: u32,
+    pub rows: u32,
+    pub d: u32,
+    pub fused_time_s: f64,
+    pub fused_bw_tbps: f64,
+    /// Global-memory passes the fused plan takes (1 when legal).
+    pub fused_passes: u32,
+    pub split_time_s: f64,
+    /// Passes of the stage-granularity baseline (= stage count).
+    pub split_passes: u32,
+}
+
+impl FusionBenchRow {
+    pub fn speedup(&self) -> f64 {
+        self.split_time_s / self.fused_time_s
+    }
+}
+
+/// The fused-vs-split sweep behind `Fusion A` and `BENCH_fusion.json`:
+/// every exemplar chain at seq {1k, 4k, 16k}, D 2048 (d_head 128 for
+/// the RoPE chain), dispatched fused and with the `unfused()` override.
+pub fn fusion_bench_rows(arch: ArchId) -> Vec<FusionBenchRow> {
+    use crate::kernels::registry::ChainKind;
+    let a = arch.arch();
+    let mut rows = Vec::new();
+    for kind in [
+        ChainKind::AddRmsNorm,
+        ChainKind::SiluMul,
+        ChainKind::QkvRope,
+        ChainKind::GemmEpilogue,
+    ] {
+        for seq in [1024u32, 4096, 16384] {
+            let n = 16 * seq;
+            let d = match kind {
+                ChainKind::QkvRope => 128,
+                _ => 2048,
+            };
+            let fused =
+                Query::fused_chain(arch, kind, n, d).dispatch().simulate();
+            let split = Query::fused_chain(arch, kind, n, d)
+                .unfused()
+                .dispatch()
+                .simulate();
+            let chain = kind.chain(n, d);
+            rows.push(FusionBenchRow {
+                chain: kind.tag().to_string(),
+                seq,
+                rows: n,
+                d,
+                fused_time_s: fused.time_s,
+                fused_bw_tbps: fused.eff_bw_tbps,
+                fused_passes: chain.planned_passes(&a) as u32,
+                split_time_s: split.time_s,
+                split_passes: chain.stages.len() as u32,
+            });
+        }
+    }
+    rows
+}
+
+/// Fusion algebra: the memory-bound family as composable stage chains
+/// (`kernels::fusion`), priced fused — one global-memory pass — vs
+/// stage-split through `Op::FusedChain`. Also shows the register-budget
+/// forced split, the serve/train step-clock deltas, and the
+/// bit-equality of the migrated legacy membound kernels. Writes the
+/// `BENCH_fusion.json` artifact (override the path with
+/// `HK_FUSION_OUT`).
+pub fn fusion() {
+    use crate::coordinator::train::{kernel_plan, predicted_step_s, TrainShape};
+    use crate::hk::regalloc;
+    use crate::kernels::fusion::{FusionChain, StageKind};
+    use crate::kernels::membound::{self, FusedLnConfig, RopeConfig};
+    use crate::serve::{serve_trace, MbFusion, ServeConfig, ServeEngine};
+
+    let a = M355.arch();
+
+    hr("Fusion A — exemplar chains fused vs stage-split (D 2048, MI355X)");
+    println!(
+        "{:<14} {:>6} {:>10} {:>7} {:>10} {:>7} {:>11} {:>9}",
+        "chain", "seq", "fused us", "passes", "split us", "passes", "fused TB/s", "speedup"
+    );
+    let rows = fusion_bench_rows(M355);
+    for r in &rows {
+        println!(
+            "{:<14} {:>6} {:>10.1} {:>7} {:>10.1} {:>7} {:>11.2} {:>8.2}x",
+            r.chain,
+            r.seq,
+            r.fused_time_s * 1e6,
+            r.fused_passes,
+            r.split_time_s * 1e6,
+            r.split_passes,
+            r.fused_bw_tbps,
+            r.speedup()
+        );
+    }
+    println!("  (fused: intermediates stay in registers/LDS, one HBM pass;");
+    println!("   split: every stage boundary round-trips through HBM)");
+
+    hr("Fusion B — register budget forces a split (5-stage tree, d 8192)");
+    let wide = FusionChain::new("wide-tree", 16 * 1024, 8192)
+        .stage(StageKind::Elementwise { passes: 1 }, &["x"], &["a"])
+        .stage(StageKind::Elementwise { passes: 1 }, &["x"], &["b"])
+        .stage(StageKind::Elementwise { passes: 1 }, &["x"], &["c"])
+        .stage(StageKind::Gate, &["a", "b"], &["ab"])
+        .stage(StageKind::Gate, &["ab", "c"], &["out"])
+        .with_outputs(&["out"]);
+    let n_stages = wide.stages.len();
+    let ev = wide.evaluate(&a);
+    println!(
+        "fully fused live set wants {} regs/lane, budget {} -> forced_split={}",
+        wide.segment_regs(0, n_stages),
+        regalloc::wave_budget(&a, 1),
+        ev.plan.forced_split
+    );
+    println!(
+        "planner cut {}/{} boundaries -> {} passes, {:.1} us \
+         (stage-split floor {:.1} us)",
+        ev.plan.cuts.iter().filter(|&&c| c).count(),
+        n_stages - 1,
+        ev.plan.passes.len(),
+        ev.perf.time_s * 1e6,
+        wide.clone().split_all().simulate(&a).time_s * 1e6
+    );
+
+    hr("Fusion C — serve: membound plane fused vs split (64-req trace)");
+    let trace = serve_trace(64, 250.0, 11);
+    let run_mode = |mb_fusion| {
+        ServeEngine::new(ServeConfig { mb_fusion, ..ServeConfig::default() })
+            .expect("serve config is valid")
+            .run_trace(&trace)
+            .expect("serve trace")
+    };
+    let sf = run_mode(MbFusion::Fused);
+    let ss = run_mode(MbFusion::Split);
+    let (mf, ms) = (
+        sf.membound.as_ref().expect("membound stats"),
+        ss.membound.as_ref().expect("membound stats"),
+    );
+    println!(
+        "fused: makespan {:.3}s, membound {:.1} ms over {} steps",
+        sf.makespan_s,
+        mf.time_s * 1e3,
+        mf.steps
+    );
+    println!(
+        "split: makespan {:.3}s, membound {:.1} ms over {} steps \
+         (+{:.1} ms on the step clock)",
+        ss.makespan_s,
+        ms.time_s * 1e3,
+        ms.steps,
+        (ms.time_s - mf.time_s) * 1e3
+    );
+
+    hr("Fusion D — train: fused chains vs per-stage baseline step");
+    let fused_plan = kernel_plan(M355, &TrainShape::default());
+    let split_plan =
+        kernel_plan(M355, &TrainShape::default().unfused_membound());
+    for ((name, f), (_, s)) in fused_plan.iter().zip(split_plan.iter()) {
+        if f.time_s != s.time_s {
+            println!(
+                "{name:<14} fused {:>8.1} us, split {:>8.1} us ({:.2}x)",
+                f.time_s * 1e6,
+                s.time_s * 1e6,
+                s.time_s / f.time_s
+            );
+        }
+    }
+    println!(
+        "predicted step: fused {:.3} ms, split {:.3} ms",
+        predicted_step_s(&fused_plan) * 1e3,
+        predicted_step_s(&split_plan) * 1e3
+    );
+
+    hr("Fusion E — migrated legacy kernels stay bit-equal (paper shapes)");
+    let ln = FusedLnConfig::paper(8192);
+    let ln_new = ln.chain().simulate(&a);
+    let ln_old = membound::legacy_simulate_fused_ln(&a, &ln);
+    let rope = RopeConfig::paper(8192);
+    let rope_new = rope.chain().simulate(&a);
+    let rope_old = membound::legacy_simulate_rope(&a, &rope);
+    let ln_eq = ln_new.time_s == ln_old.time_s
+        && ln_new.compute_s == ln_old.compute_s
+        && ln_new.mem_s == ln_old.mem_s
+        && ln_new.eff_bw_tbps == ln_old.eff_bw_tbps;
+    let rope_eq = rope_new.time_s == rope_old.time_s
+        && rope_new.compute_s == rope_old.compute_s
+        && rope_new.mem_s == rope_old.mem_s
+        && rope_new.eff_bw_tbps == rope_old.eff_bw_tbps;
+    println!(
+        "fused-ln  seq 8192: chain {:.1} us vs legacy {:.1} us, bit-equal={ln_eq}",
+        ln_new.time_s * 1e6,
+        ln_old.time_s * 1e6
+    );
+    println!(
+        "rope      seq 8192: chain {:.1} us vs legacy {:.1} us, bit-equal={rope_eq}",
+        rope_new.time_s * 1e6,
+        rope_old.time_s * 1e6
+    );
+
+    let doc = fusion_bench_json(M355, &rows, ln_eq && rope_eq);
+    let out = std::env::var("HK_FUSION_OUT")
+        .unwrap_or_else(|_| "BENCH_fusion.json".to_string());
+    std::fs::write(&out, doc.dump()).expect("write BENCH_fusion.json");
+    println!("\nwrote {out}");
+}
+
+/// The `BENCH_fusion.json` document: one row per (chain, seq) cell of
+/// the fused-vs-split sweep, plus the legacy bit-equality verdict.
+/// Every number is a deterministic cost-model product, so the dump is
+/// byte-stable across runs.
+pub fn fusion_bench_json(
+    arch: ArchId,
+    rows: &[FusionBenchRow],
+    legacy_bit_equal: bool,
+) -> crate::runtime::json::Json {
+    use crate::runtime::json::Json;
+    Json::obj(vec![
+        ("bench", Json::Str("fusion_chains".into())),
+        ("arch", Json::Str(arch.tag().into())),
+        (
+            "shape",
+            Json::obj(vec![
+                ("d_model", Json::Num(2048.0)),
+                ("d_head", Json::Num(128.0)),
+                ("rows_per_seq", Json::Num(16.0)),
+            ]),
+        ),
+        ("legacy_bit_equal", Json::Bool(legacy_bit_equal)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("chain", Json::Str(r.chain.clone())),
+                            ("seq", Json::Num(r.seq as f64)),
+                            ("rows", Json::Num(r.rows as f64)),
+                            ("d", Json::Num(r.d as f64)),
+                            ("fused_time_s", Json::Num(r.fused_time_s)),
+                            ("fused_bw_tbps", Json::Num(r.fused_bw_tbps)),
+                            ("fused_passes", Json::Num(r.fused_passes as f64)),
+                            ("split_time_s", Json::Num(r.split_time_s)),
+                            ("split_passes", Json::Num(r.split_passes as f64)),
+                            ("speedup", Json::Num(r.speedup())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// Multi-GPU sharding: the node-level projection of the chiplet
 /// max-shard law — MoE expert parallelism across simulated GPUs
 /// (`hk::topology` link model) and the per-GPU-KV-pool serving engine.
@@ -1191,6 +1448,7 @@ pub fn all() {
     registry();
     serve();
     moe();
+    fusion();
     multi_gpu();
     attn_bwd();
     ablations();
@@ -1215,6 +1473,7 @@ pub fn run(name: &str) -> bool {
         "registry" => registry(),
         "serve" => serve(),
         "moe" => moe(),
+        "fusion" => fusion(),
         "multi-gpu" | "multi_gpu" => multi_gpu(),
         "attn-bwd" | "attn_bwd" => attn_bwd(),
         "ablate" | "ablations" => ablations(),

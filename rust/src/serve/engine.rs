@@ -69,6 +69,34 @@ pub struct ServeConfig {
     /// headroom, eviction, preemption) is untouched — MoE only adds
     /// FFN time to the step clock.
     pub moe: Option<MoeServeConfig>,
+    /// Memory-bound layer plane: when not [`MbFusion::Off`], every
+    /// prefill/decode step additionally pays the Add+RMSNorm and
+    /// SiLU+Mul fusion chains over the step's token batch — fused
+    /// (one global-memory pass each) or force-split (the per-stage
+    /// baseline), so the serving-level win of fusion is measurable.
+    pub mb_fusion: MbFusion,
+    /// Row width of the membound chains (the model dimension).
+    pub mb_d_model: u32,
+}
+
+/// How the engine runs the per-step memory-bound chains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MbFusion {
+    /// No membound plane on the step clock (the pre-fusion default).
+    Off,
+    /// Chains fused up to the register/LDS budget.
+    Fused,
+    /// Chains force-split into one pass per stage (the baseline).
+    Split,
+}
+
+/// Accounting of the membound-chain plane over a serving run.
+#[derive(Debug, Clone, Default)]
+pub struct MbServeStats {
+    /// Steps that paid the chain plane.
+    pub steps: u64,
+    /// Total chain time added to the step clock.
+    pub time_s: f64,
 }
 
 /// MoE layer shape served per step.
@@ -109,6 +137,8 @@ impl Default for ServeConfig {
             d_head: 128,
             shared_prefix_tokens: 128,
             moe: None,
+            mb_fusion: MbFusion::Off,
+            mb_d_model: 2048,
         }
     }
 }
@@ -162,6 +192,8 @@ pub struct ServeReport {
     pub kv: KvCacheStats,
     /// MoE-side accounting (present when the engine serves an MoE model).
     pub moe: Option<MoeServeStats>,
+    /// Membound-chain accounting (present when the plane is enabled).
+    pub membound: Option<MbServeStats>,
     /// GPUs the engine served across (one KV pool + decode lane each).
     pub n_gpus: u32,
     /// Per-GPU lane statistics.
@@ -283,6 +315,16 @@ impl ServeReport {
                 ]),
             );
         }
+        if let Some(m) = &self.membound {
+            let Json::Obj(map) = &mut doc else { unreachable!() };
+            map.insert(
+                "membound".to_string(),
+                Json::obj(vec![
+                    ("steps", Json::Num(m.steps as f64)),
+                    ("time_s", Json::Num(m.time_s)),
+                ]),
+            );
+        }
         doc
     }
 }
@@ -303,6 +345,8 @@ pub struct ServeEngine {
     decode_memo: HashMap<(u32, u32), f64>,
     /// MoE FFN step time memo, keyed by routed token count.
     moe_memo: HashMap<u32, f64>,
+    /// Membound-chain step time memo, keyed by step token count.
+    mb_memo: HashMap<u32, f64>,
 }
 
 impl ServeEngine {
@@ -325,6 +369,7 @@ impl ServeEngine {
             prefill_memo: HashMap::new(),
             decode_memo: HashMap::new(),
             moe_memo: HashMap::new(),
+            mb_memo: HashMap::new(),
         })
     }
 
@@ -409,6 +454,35 @@ impl ServeEngine {
         t
     }
 
+    /// Simulated wall time of the membound chains (Add+RMSNorm +
+    /// SiLU+Mul) over `tokens` step tokens, fused or force-split per
+    /// the config (0.0 when the plane is off). Memoized by token
+    /// count, like the MoE FFN.
+    fn mb_step_s(&mut self, tokens: u32) -> f64 {
+        if self.cfg.mb_fusion == MbFusion::Off || tokens == 0 {
+            return 0.0;
+        }
+        if let Some(&t) = self.mb_memo.get(&tokens) {
+            return t;
+        }
+        let d = self.cfg.mb_d_model;
+        let mut qs = [
+            Query::add_rmsnorm(self.cfg.arch, tokens, d),
+            Query::silu_mul(self.cfg.arch, tokens, d),
+        ];
+        if self.cfg.mb_fusion == MbFusion::Split {
+            for q in &mut qs {
+                *q = q.unfused();
+            }
+        }
+        let t = qs
+            .iter()
+            .map(|q| q.dispatch_with(&mut self.cache).simulate().time_s)
+            .sum();
+        self.mb_memo.insert(tokens, t);
+        t
+    }
+
     /// One router pass over the step's token batch, folded into the
     /// run's MoE statistics. Seeded by the step ordinal so a replayed
     /// trace routes identically.
@@ -474,6 +548,7 @@ impl ServeEngine {
         // work must not inflate delivered throughput
         let mut delivered_tokens = 0u64;
         let mut moe_stats = MoeServeStats::default();
+        let mut mb_stats = MbServeStats::default();
         let n_gpus = self.cfg.n_gpus.max(1) as usize;
         let mut lanes: Vec<GpuLaneStats> =
             (0..n_gpus).map(|_| GpuLaneStats::default()).collect();
@@ -615,6 +690,13 @@ impl ServeEngine {
                         moe_stats.ffn_time_s += ffn;
                         dt_g += ffn;
                     }
+                    // membound chains over every prompt token
+                    let mb = self.mb_step_s(step_tokens);
+                    if mb > 0.0 {
+                        mb_stats.steps += 1;
+                        mb_stats.time_s += mb;
+                        dt_g += mb;
+                    }
                     dt = dt.max(dt_g);
                 }
                 now += dt;
@@ -685,6 +767,13 @@ impl ServeEngine {
                     moe_stats.ffn_time_s += ffn;
                     dt_g += ffn;
                 }
+                // membound chains over the lane's emitted tokens
+                let mb = self.mb_step_s(batch);
+                if mb > 0.0 {
+                    mb_stats.steps += 1;
+                    mb_stats.time_s += mb;
+                    dt_g += mb;
+                }
                 dt = dt.max(dt_g);
             }
             now += dt;
@@ -748,6 +837,8 @@ impl ServeEngine {
                 }
                 m
             }),
+            membound: (self.cfg.mb_fusion != MbFusion::Off)
+                .then_some(mb_stats),
             n_gpus: self.cfg.n_gpus,
             per_gpu: lanes,
         })
@@ -837,6 +928,43 @@ mod tests {
         .unwrap();
         let rep2 = again.run_trace(&trace).unwrap();
         assert_eq!(mr.to_json().dump(), rep2.to_json().dump());
+    }
+
+    #[test]
+    fn fused_membound_plane_beats_split_on_the_step_clock() {
+        let trace = serve_trace(12, 300.0, 17);
+        let mk = |mb_fusion| ServeConfig {
+            mb_fusion,
+            max_batch: 8,
+            ..ServeConfig::default()
+        };
+        let off = ServeEngine::new(mk(MbFusion::Off))
+            .unwrap()
+            .run_trace(&trace)
+            .unwrap();
+        let fused = ServeEngine::new(mk(MbFusion::Fused))
+            .unwrap()
+            .run_trace(&trace)
+            .unwrap();
+        let split = ServeEngine::new(mk(MbFusion::Split))
+            .unwrap()
+            .run_trace(&trace)
+            .unwrap();
+        // the plane costs time, and fusing it back wins some of it
+        assert!(off.membound.is_none());
+        assert!(fused.makespan_s > off.makespan_s);
+        assert!(
+            split.makespan_s > fused.makespan_s,
+            "{} !> {}",
+            split.makespan_s,
+            fused.makespan_s
+        );
+        let f = fused.membound.as_ref().expect("membound stats");
+        let s = split.membound.as_ref().expect("membound stats");
+        assert!(f.steps > 0 && s.time_s > f.time_s);
+        // the off-path json is byte-identical to the pre-plane engine
+        assert!(!off.to_json().dump().contains("membound"));
+        assert!(fused.to_json().dump().contains("membound"));
     }
 
     #[test]

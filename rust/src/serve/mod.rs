@@ -15,7 +15,7 @@ pub mod engine;
 pub mod kvcache;
 
 pub use engine::{
-    serve_trace, GpuLaneStats, MoeServeConfig, MoeServeStats, ServeConfig,
-    ServeEngine, ServeReport, ServeRequest,
+    serve_trace, GpuLaneStats, MbFusion, MbServeStats, MoeServeConfig,
+    MoeServeStats, ServeConfig, ServeEngine, ServeReport, ServeRequest,
 };
 pub use kvcache::{KvCacheConfig, KvCacheManager, KvCacheStats, KvPool};

@@ -1,0 +1,203 @@
+//! Fusion-algebra properties and goldens.
+//!
+//! Pins the three guarantees the algebra makes (fused never costs more
+//! than any split, over-budget chains split instead of reporting
+//! impossible residency, forced splits are cost-minimal among legal
+//! cuts), the bit-equality of the migrated legacy membound kernels,
+//! the headline fused-beats-split acceptance shapes, and the
+//! determinism of the `BENCH_fusion.json` artifact.
+
+use hipkittens::hk::regalloc;
+use hipkittens::kernels::fusion::{FusionChain, StageKind};
+use hipkittens::kernels::membound::{
+    legacy_simulate_fused_ln, legacy_simulate_rope, FusedLnConfig, RopeConfig,
+};
+use hipkittens::kernels::registry::{ArchId, Query};
+use hipkittens::report::{fusion_bench_json, fusion_bench_rows};
+use hipkittens::sim::Arch;
+
+/// The exemplar family at a bench shape.
+fn exemplars() -> Vec<FusionChain> {
+    vec![
+        FusionChain::fused_ln(16 * 4096, 2048, true),
+        FusionChain::add_rmsnorm(16 * 4096, 2048),
+        FusionChain::silu_mul(16 * 4096, 2048),
+        FusionChain::qkv_rope(16, 16, 4096, 128),
+        FusionChain::gemm_epilogue(16 * 4096, 2048),
+    ]
+}
+
+/// A 5-stage fan-in tree: three maps off `x`, then two gates joining
+/// them. At d=8192 its fused live set (x, a, b, c) overflows the wave
+/// register file; at small d it fuses whole.
+fn wide_tree(d: u32) -> FusionChain {
+    FusionChain::new("wide-tree", 16 * 1024, d)
+        .stage(StageKind::Elementwise { passes: 1 }, &["x"], &["a"])
+        .stage(StageKind::Elementwise { passes: 1 }, &["x"], &["b"])
+        .stage(StageKind::Elementwise { passes: 1 }, &["x"], &["c"])
+        .stage(StageKind::Gate, &["a", "b"], &["ab"])
+        .stage(StageKind::Gate, &["ab", "c"], &["out"])
+        .with_outputs(&["out"])
+}
+
+fn mask_to_cuts(mask: u32, n_cuts: usize) -> Vec<bool> {
+    (0..n_cuts).map(|i| mask & (1 << i) != 0).collect()
+}
+
+/// Segment-wise legality of an explicit cut mask (re-derived from the
+/// public `segment_fits`, independent of the planner).
+fn cuts_are_legal(c: &FusionChain, a: &Arch, cuts: &[bool]) -> bool {
+    let mut lo = 0usize;
+    for i in 0..c.stages.len() {
+        if i + 1 < c.stages.len() && cuts[i] {
+            if !c.segment_fits(a, lo, i + 1) {
+                return false;
+            }
+            lo = i + 1;
+        }
+    }
+    c.segment_fits(a, lo, c.stages.len())
+}
+
+#[test]
+fn fused_never_costs_more_than_any_split() {
+    let a = Arch::mi355x();
+    let mut chains = exemplars();
+    // a deeper chain exercises more of the mask space; d=512 keeps the
+    // fully fused form legal
+    chains.push(wide_tree(512));
+    for chain in chains {
+        let n_cuts = chain.stages.len() - 1;
+        let fused = chain.evaluate_with_cuts(&a, &vec![false; n_cuts]);
+        for mask in 1u32..(1 << n_cuts) {
+            let cuts = mask_to_cuts(mask, n_cuts);
+            let split = chain.evaluate_with_cuts(&a, &cuts);
+            assert!(
+                fused.time_s <= split.time_s,
+                "{}: fused {} > split {} at mask {mask:b}",
+                chain.name,
+                fused.time_s,
+                split.time_s
+            );
+        }
+    }
+}
+
+#[test]
+fn over_budget_chain_splits_instead_of_impossible_residency() {
+    let a = Arch::mi355x();
+    let wide = wide_tree(8192);
+    let n = wide.stages.len();
+    assert!(
+        wide.segment_regs(0, n) > regalloc::wave_budget(&a, 1),
+        "the demo chain must actually be over budget"
+    );
+    let plan = wide.plan(&a);
+    assert!(plan.forced_split, "planner must report the forced split");
+    assert!(plan.passes.len() > 1);
+    assert!(
+        cuts_are_legal(&wide, &a, &plan.cuts),
+        "every planned segment must fit the register/LDS budget"
+    );
+}
+
+#[test]
+fn forced_split_is_cost_minimal_among_legal_cuts() {
+    let a = Arch::mi355x();
+    let wide = wide_tree(8192);
+    let planned = wide.evaluate(&a).perf.time_s;
+    let n_cuts = wide.stages.len() - 1;
+    let mut best = f64::INFINITY;
+    for mask in 1u32..(1 << n_cuts) {
+        let cuts = mask_to_cuts(mask, n_cuts);
+        if cuts_are_legal(&wide, &a, &cuts) {
+            best = best.min(wide.evaluate_with_cuts(&a, &cuts).time_s);
+        }
+    }
+    assert!(best.is_finite(), "some legal segmentation must exist");
+    assert_eq!(planned, best, "planner missed a cheaper legal cut");
+}
+
+#[test]
+fn migrated_legacy_kernels_are_bit_equal() {
+    // the chain lowering must reproduce the pre-redesign numbers
+    // exactly, on every modelled AMD part, across the config surface
+    for a in [Arch::mi355x(), Arch::mi350x(), Arch::mi325x()] {
+        for seq in [1024u32, 4096, 8192, 16384] {
+            for dropout in [true, false] {
+                for vectorized in [true, false] {
+                    let cfg = FusedLnConfig {
+                        dropout,
+                        vectorized,
+                        ..FusedLnConfig::paper(seq)
+                    };
+                    let new = cfg.chain().simulate(&a);
+                    let old = legacy_simulate_fused_ln(&a, &cfg);
+                    let tag = format!(
+                        "fused-ln seq={seq} dropout={dropout} \
+                         vectorized={vectorized} on {}",
+                        a.name
+                    );
+                    assert_eq!(new.time_s, old.time_s, "{tag}");
+                    assert_eq!(new.compute_s, old.compute_s, "{tag}");
+                    assert_eq!(new.mem_s, old.mem_s, "{tag}");
+                    assert_eq!(new.tflops, old.tflops, "{tag}");
+                    assert_eq!(new.eff_bw_tbps, old.eff_bw_tbps, "{tag}");
+                }
+            }
+            let rp = RopeConfig::paper(seq);
+            let new = rp.chain().simulate(&a);
+            let old = legacy_simulate_rope(&a, &rp);
+            assert_eq!(new.time_s, old.time_s, "rope seq={seq} on {}", a.name);
+            assert_eq!(new.compute_s, old.compute_s);
+            assert_eq!(new.mem_s, old.mem_s);
+            assert_eq!(new.tflops, old.tflops);
+            assert_eq!(new.eff_bw_tbps, old.eff_bw_tbps);
+        }
+    }
+}
+
+#[test]
+fn add_rmsnorm_fused_beats_split_at_acceptance_shapes() {
+    // the ISSUE acceptance grid: D=2048, seq in {1k, 4k, 16k}, fused
+    // strictly beats the unfused 2-pass split through the registry
+    for seq in [1024u32, 4096, 16384] {
+        let rows = 16 * seq;
+        let q = Query::add_rmsnorm(ArchId::Mi355x, rows, 2048);
+        let fused = q.dispatch().simulate();
+        let split = q.unfused().dispatch().simulate();
+        assert!(
+            fused.time_s < split.time_s,
+            "seq {seq}: fused {} !< split {}",
+            fused.time_s,
+            split.time_s
+        );
+    }
+}
+
+#[test]
+fn bench_fusion_artifact_is_deterministic_and_fused_wins() {
+    let rows = fusion_bench_rows(ArchId::Mi355x);
+    // 4 chains x 3 sequence lengths
+    assert_eq!(rows.len(), 12);
+    for r in &rows {
+        assert!(
+            r.fused_time_s <= r.split_time_s,
+            "{} seq {}: fused {} > split {}",
+            r.chain,
+            r.seq,
+            r.fused_time_s,
+            r.split_time_s
+        );
+        assert_eq!(r.fused_passes, 1, "{} did not fuse", r.chain);
+        assert!(r.split_passes >= 2);
+        assert!(r.fused_bw_tbps > 0.0);
+    }
+    let doc = fusion_bench_json(ArchId::Mi355x, &rows, true).dump();
+    let again =
+        fusion_bench_json(ArchId::Mi355x, &fusion_bench_rows(ArchId::Mi355x), true)
+            .dump();
+    assert_eq!(doc, again, "BENCH_fusion.json must be byte-stable");
+    assert!(doc.contains("\"bench\""));
+    assert!(doc.contains("add-rmsnorm"));
+}

@@ -7,7 +7,7 @@ use hipkittens::hk::regalloc::RegMode;
 use hipkittens::kernels::attention::{self, AttnConfig};
 use hipkittens::kernels::baselines::{self, Baseline};
 use hipkittens::kernels::gemm::{self, GemmConfig, GridOrder, Pattern};
-use hipkittens::kernels::membound::{self, FusedLnConfig, RopeConfig};
+use hipkittens::kernels::membound::{FusedLnConfig, RopeConfig};
 use hipkittens::sim::arch::{Arch, Dtype};
 
 fn arch() -> Arch {
@@ -268,7 +268,7 @@ fn fig9_membound_hk_beats_torch_compile() {
 #[test]
 fn fig9_membound_near_hbm_roofline() {
     let a = arch();
-    let p = membound::simulate_fused_ln(&a, &FusedLnConfig::paper(8192));
+    let p = FusedLnConfig::paper(8192).chain().simulate(&a);
     assert!(p.eff_bw_tbps > 0.5 * a.hbm_tbps);
 }
 

@@ -305,7 +305,7 @@ fn mixed_service_batches_bursts_per_op() {
 #[test]
 fn trainer_kernel_plan_routes_through_registry() {
     let plan = kernel_plan(ArchId::Mi355x, &TrainShape::default());
-    assert_eq!(plan.len(), 8);
+    assert_eq!(plan.len(), 9);
     for (name, perf) in &plan {
         assert!(perf.time_s > 0.0, "{name} has zero time");
         assert!(perf.time_s.is_finite(), "{name}");
