@@ -26,14 +26,41 @@ impl LatencyStats {
         self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
     }
 
+    /// Nearest-rank percentile over the recorded samples. `p` outside
+    /// [0, 100] clamps (p<0 = min, p>100 = max) instead of indexing out
+    /// of range; zero samples return 0 and one sample is every
+    /// percentile.
     pub fn percentile_us(&self, p: f64) -> f64 {
         if self.samples_us.is_empty() {
             return 0.0;
         }
         let mut v = self.samples_us.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
+        if v.len() == 1 {
+            return v[0];
+        }
+        let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 100.0) };
         let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
         v[idx.min(v.len() - 1)]
+    }
+
+    /// Log2-bucketed histogram of the samples: bucket `i` counts
+    /// samples in `[2^i, 2^(i+1))` microseconds, bucket 0 additionally
+    /// holds everything below 1 us. Returned as (upper_edge_us, count)
+    /// pairs for non-empty buckets only, in edge order — the serve
+    /// report exports these so tail shape survives into the JSON, not
+    /// just two percentile points.
+    pub fn histogram_us(&self) -> Vec<(f64, u64)> {
+        let mut counts: std::collections::BTreeMap<i32, u64> =
+            std::collections::BTreeMap::new();
+        for &s in &self.samples_us {
+            let bucket = if s < 1.0 { 0 } else { s.log2().floor() as i32 };
+            *counts.entry(bucket.max(0)).or_insert(0) += 1;
+        }
+        counts
+            .into_iter()
+            .map(|(b, n)| (2f64.powi(b + 1), n))
+            .collect()
     }
 
     pub fn p50_us(&self) -> f64 {
@@ -170,6 +197,43 @@ mod tests {
         assert!((s.p99_us() - 10.0).abs() < 1e-9);
         // the tail is only visible beyond it
         assert!((s.percentile_us(99.95) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn out_of_range_percentiles_clamp() {
+        let mut s = LatencyStats::default();
+        for i in 1..=10 {
+            s.record_s(i as f64 * 1e-6);
+        }
+        assert_eq!(s.percentile_us(-5.0), 1.0);
+        assert_eq!(s.percentile_us(250.0), 10.0);
+        assert_eq!(s.percentile_us(f64::NAN), 1.0);
+        // empty stats stay 0 for any p
+        let e = LatencyStats::default();
+        assert_eq!(e.percentile_us(-5.0), 0.0);
+        assert_eq!(e.percentile_us(250.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_log2_and_conserve_counts() {
+        let mut s = LatencyStats::default();
+        // 3 samples in [1,2)us, 2 in [4,8)us, 1 sub-us, 1 at 1000us
+        for v in [1.0e-6, 1.5e-6, 1.9e-6, 4.0e-6, 7.0e-6, 0.25e-6, 1000e-6] {
+            s.record_s(v);
+        }
+        let h = s.histogram_us();
+        let total: u64 = h.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, s.count() as u64);
+        // sub-us merges into the first bucket [0, 2)
+        assert_eq!(h[0], (2.0, 4));
+        assert!(h.contains(&(8.0, 2)));
+        // 1000us lands in [512, 1024)
+        assert!(h.contains(&(1024.0, 1)));
+        // edges strictly increase
+        for w in h.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        assert!(LatencyStats::default().histogram_us().is_empty());
     }
 
     #[test]

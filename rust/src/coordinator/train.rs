@@ -345,12 +345,59 @@ pub fn allreduce_perf(arch: ArchId, s: &TrainShape) -> KernelPerf {
             waves: 0,
             waves_per_simd: 0,
         },
+        // ring all-reduce: each GPU sends 2(n-1)/n of the gradient
+        // buffer over its link, and reads/writes the buffer locally
+        counters: crate::obs::KernelCounters {
+            hbm_read_bytes: grad_bytes,
+            hbm_write_bytes: grad_bytes,
+            cross_gpu_bytes: 2.0 * grad_bytes
+                * (s.n_gpus.max(1) - 1) as f64
+                / s.n_gpus.max(1) as f64,
+            kernels: 1,
+            ..crate::obs::KernelCounters::default()
+        },
     }
 }
 
 /// Predicted step time: the sum of the plan's kernel times.
 pub fn predicted_step_s(plan: &[(String, KernelPerf)]) -> f64 {
     plan.iter().map(|(_, p)| p.time_s).sum()
+}
+
+/// Lay a kernel plan out on the deterministic sim clock as one train
+/// step's timeline: the entries run serially in plan order (exactly how
+/// [`predicted_step_s`] prices them), forward entries under the
+/// `train-fwd` category and `-bwd`-suffixed ones (the all-reduce
+/// included) under `train-bwd`, so the fwd/bwd split is visible as two
+/// colour bands in Perfetto.
+pub fn plan_trace(plan: &[(String, KernelPerf)], trace: &mut crate::obs::Trace, pid: u32) {
+    use crate::runtime::json::Json;
+    trace.meta_process(pid, "train");
+    trace.meta_thread(pid, 0, "step");
+    let mut t = 0.0f64;
+    for (name, perf) in plan {
+        let cat = if name.ends_with("bwd") { "train-bwd" } else { "train-fwd" };
+        trace.span(
+            pid,
+            0,
+            cat,
+            name,
+            t,
+            perf.time_s,
+            vec![
+                ("tflops".to_string(), Json::Num(perf.tflops)),
+                (
+                    "hbm_bytes".to_string(),
+                    Json::Num(perf.counters.hbm_total_bytes()),
+                ),
+                (
+                    "cross_gpu_bytes".to_string(),
+                    Json::Num(perf.counters.cross_gpu_bytes),
+                ),
+            ],
+        );
+        t += perf.time_s;
+    }
 }
 
 /// Split a plan into (forward, backward) predicted seconds — the

@@ -3,6 +3,7 @@
 
 use super::schedule::{BuiltSchedule, Cluster, LoopSpec, ScheduleInfo};
 use super::topology::NodeTopology;
+use crate::obs::KernelCounters;
 use crate::sim::arch::Arch;
 use crate::sim::cache::{simulate_gemm_schedule, CacheStats, GemmGrid};
 use crate::sim::engine::{run_block, EngineConfig};
@@ -21,6 +22,11 @@ pub struct KernelPerf {
     pub llc_hit: f64,
     pub eff_bw_tbps: f64,
     pub info: ScheduleInfo,
+    /// Hardware-style counters: the priced byte/flop/wave quantities
+    /// themselves, exposed for the observability plane. Evaluators fill
+    /// the generic stream view; op-level callers (attention, decode,
+    /// fusion) refine direction splits and op-specific terms.
+    pub counters: KernelCounters,
 }
 
 impl KernelPerf {
@@ -81,6 +87,18 @@ pub fn evaluate_gemm(
         llc_hit: cache.llc_hit,
         eff_bw_tbps: cache.eff_bw_tbps,
         info: built.info.clone(),
+        counters: KernelCounters {
+            hbm_read_bytes: cache.hbm_bytes,
+            hbm_write_bytes: store_bytes,
+            // demand bytes the L2 absorbed before they reached HBM
+            l2_bytes: cache.total_bytes * cache.l2_hit,
+            // every A/B tile round-trips through LDS on its way to MFMA
+            lds_bytes: cache.total_bytes,
+            mfma_flops: total_flops,
+            issued_waves: blocks * built.info.waves as f64,
+            kernels: 1,
+            ..KernelCounters::default()
+        },
     }
 }
 
@@ -118,6 +136,15 @@ pub fn evaluate_streaming(
         llc_hit: 0.0,
         eff_bw_tbps: total_bytes / time_s / 1e12,
         info: built.info.clone(),
+        // generic stream view: all traffic counted as HBM reads; the
+        // op-level caller splits out its store/atomic/LDS shares
+        counters: KernelCounters {
+            hbm_read_bytes: total_bytes,
+            mfma_flops: total_flops,
+            issued_waves: blocks * built.info.waves as f64,
+            kernels: 1,
+            ..KernelCounters::default()
+        },
     }
 }
 
@@ -193,7 +220,7 @@ fn evaluate_chain_pass(arch: &Arch, p: &ChainPass) -> KernelPerf {
     let built = super::interleave::build(&spec);
     let blocks = p.rows as f64 / (4.0 * 8.0);
     let bytes = (p.reads + p.writes) as f64 * p.rows as f64 * row_bytes as f64;
-    evaluate_streaming(
+    let mut perf = evaluate_streaming(
         arch,
         &p.name,
         &built,
@@ -204,7 +231,19 @@ fn evaluate_chain_pass(arch: &Arch, p: &ChainPass) -> KernelPerf {
         bytes,
         bytes,
         None,
-    )
+    );
+    // the streaming view put the bytes in the flops slot too; counters
+    // keep the real split — a chain pass issues no MFMA, and its
+    // traffic divides exactly into read and written row-tensors
+    perf.counters = KernelCounters {
+        hbm_read_bytes: p.reads as f64 * p.rows as f64 * row_bytes as f64,
+        hbm_write_bytes: p.writes as f64 * p.rows as f64 * row_bytes as f64,
+        issued_waves: perf.counters.issued_waves,
+        fused_passes: 1,
+        kernels: 1,
+        ..KernelCounters::default()
+    };
+    perf
 }
 
 /// Evaluate a memory-bound fusion chain as a sequence of global-memory
@@ -226,6 +265,10 @@ pub fn evaluate_chain(arch: &Arch, name: &str, passes: &[ChainPass]) -> ChainEva
         .iter()
         .map(|p| (p.reads + p.writes) as f64 * p.rows as f64 * (p.d as f64 * 2.0))
         .sum();
+    let mut counters = KernelCounters::default();
+    for e in &evals {
+        counters.merge(&e.counters);
+    }
     let perf = KernelPerf {
         name: name.to_string(),
         tflops: bytes / time_s / 1e12,
@@ -237,6 +280,7 @@ pub fn evaluate_chain(arch: &Arch, name: &str, passes: &[ChainPass]) -> ChainEva
         llc_hit: 0.0,
         eff_bw_tbps: bytes / time_s / 1e12,
         info: evals[0].info.clone(),
+        counters,
     };
     ChainEval { perf, passes: evals }
 }
@@ -304,6 +348,12 @@ pub struct GroupedEval {
     pub per_gpu_s: Vec<f64>,
     /// All-to-all dispatch/combine time on the node link (0 at 1 GPU).
     pub comms_s: f64,
+    /// Each GPU's share of the traffic counters (activation stream =
+    /// HBM reads, resident expert weights = LLC re-reads). The node
+    /// record in `perf.counters` is their in-order sum plus the
+    /// node-level terms (flops, waves, cross-GPU bytes) — the shard-sum
+    /// conservation invariant asserted in `tests/obs.rs`.
+    pub per_gpu_counters: Vec<KernelCounters>,
 }
 
 /// Evaluate a grouped kernel (the `Op::MoeGemm` class) over the node
@@ -349,8 +399,10 @@ pub fn evaluate_grouped(
     let mut time_s = 0.0f64;
     let mut weight_total = 0.0f64;
     let mut per_gpu_s = Vec::with_capacity(gpu_shards.len());
+    let mut per_gpu_counters = Vec::with_capacity(gpu_shards.len());
     for shards in gpu_shards {
         let mut gpu_s = 0.0f64;
+        let mut gpu_c = KernelCounters::default();
         for s in shards {
             let c = s.compute_cycles / cus * arch.cycle_s();
             let m = s.stream_bytes / hbm_share + s.weight_bytes / llc_share;
@@ -358,9 +410,12 @@ pub fn evaluate_grouped(
             mem_s = mem_s.max(m);
             gpu_s = gpu_s.max(c.max(m));
             weight_total += s.weight_bytes;
+            gpu_c.hbm_read_bytes += s.stream_bytes;
+            gpu_c.l2_bytes += s.weight_bytes;
         }
         time_s = time_s.max(gpu_s);
         per_gpu_s.push(gpu_s);
+        per_gpu_counters.push(gpu_c);
     }
     // degenerate (no routed tokens): charge one engine pass, and keep
     // the per-GPU breakdown consistent with the combined wall-clock
@@ -373,6 +428,18 @@ pub fn evaluate_grouped(
     }
     let comms_s = topo.all_to_all_s(cross_bytes);
     time_s += comms_s;
+
+    // node counters = in-order sum of the per-GPU shard counters plus
+    // the node-level terms; the same left-to-right merge the shard-sum
+    // invariant test recomputes, so the equality is bit-exact
+    let mut counters = KernelCounters::default();
+    for gc in &per_gpu_counters {
+        counters.merge(gc);
+    }
+    counters.mfma_flops = total_flops;
+    counters.issued_waves = info.waves as f64;
+    counters.cross_gpu_bytes = cross_bytes;
+    counters.kernels = 1;
 
     let perf = KernelPerf {
         name: name.to_string(),
@@ -389,8 +456,9 @@ pub fn evaluate_grouped(
         },
         eff_bw_tbps: total_bytes / time_s / 1e12,
         info,
+        counters,
     };
-    GroupedEval { perf, per_gpu_s, comms_s }
+    GroupedEval { perf, per_gpu_s, comms_s, per_gpu_counters }
 }
 
 /// Register-pressure summary of the backward kernel's hot loop, fed to
@@ -489,6 +557,17 @@ pub fn evaluate_bwd(
         + dq.map(|p| p.compute_s).unwrap_or(0.0)
         + spill_s;
     let mem_s = pre.mem_s + main.mem_s + dq.map(|p| p.mem_s).unwrap_or(0.0);
+    // passes merge additively; the register-pressure term lands as the
+    // spill-cycle and peak-demand counters of the combined kernel
+    let mut counters = pre.counters;
+    counters.merge(&main.counters);
+    if let Some(p) = dq {
+        counters.merge(&p.counters);
+    }
+    counters.spill_cycles +=
+        iter_rounds * spill_penalty_cycles(pressure.spilled) as f64;
+    counters.reg_demand = counters.reg_demand.max(pressure.demand);
+    counters.kernels = 1;
     let perf = KernelPerf {
         name: name.to_string(),
         tflops: alg_flops / time_s / 1e12,
@@ -500,6 +579,7 @@ pub fn evaluate_bwd(
         llc_hit: 0.0,
         eff_bw_tbps: total_bytes / time_s / 1e12,
         info: main.info.clone(),
+        counters,
     };
     BwdEval {
         perf,

@@ -697,7 +697,7 @@ pub fn simulate_fwd(arch: &Arch, cfg: &AttnConfig) -> KernelPerf {
         * cfg.seq as f64
         * cfg.d_head as f64
         * 2.0;
-    evaluate_streaming(
+    let mut perf = evaluate_streaming(
         arch,
         &format!("attn-fwd {:?}", cfg),
         &built,
@@ -706,7 +706,15 @@ pub fn simulate_fwd(arch: &Arch, cfg: &AttnConfig) -> KernelPerf {
         cfg.fwd_bytes(),
         resident,
         Some(arch.llc_lat),
-    )
+    );
+    // split the stream into its directions: fwd_bytes = Q read + O
+    // store + K/V reads; K/V tiles are staged through LDS on their way
+    // to the MFMA operands
+    let o_store = cfg.q_plane() * 2.0;
+    perf.counters.hbm_write_bytes = o_store;
+    perf.counters.hbm_read_bytes = cfg.fwd_bytes() - o_store;
+    perf.counters.lds_bytes = 2.0 * cfg.kv_plane() * 2.0;
+    perf
 }
 
 /// Simulate the backward pass (Fig. 8 / Table 1).
@@ -723,7 +731,7 @@ pub fn simulate_bwd_detailed(arch: &Arch, cfg: &AttnConfig) -> BwdEval {
     // dO*O preprocess: one block per (batch, head), waves stripe rows.
     let pre_spec = build_bwd_preprocess_spec(cfg);
     let pre_built = build(arch, cfg, &pre_spec);
-    let pre = evaluate_streaming(
+    let mut pre = evaluate_streaming(
         arch,
         &format!("attn-bwd-pre d{} n{}", cfg.d_head, cfg.seq),
         &pre_built,
@@ -733,6 +741,10 @@ pub fn simulate_bwd_detailed(arch: &Arch, cfg: &AttnConfig) -> BwdEval {
         cfg.vector_bytes(),
         Some(arch.llc_lat),
     );
+    // preprocess streams O and dO in, writes the delta rowsum vector
+    pre.counters.hbm_write_bytes = cfg.vector_bytes() / 2.0;
+    pre.counters.hbm_read_bytes =
+        cfg.bwd_preprocess_bytes() - pre.counters.hbm_write_bytes;
 
     // Main pass: each wave owns a resident kv tile; the block covers
     // waves x kv_blk rows of one (batch, query-head) slice.
@@ -752,7 +764,7 @@ pub fn simulate_bwd_detailed(arch: &Arch, cfg: &AttnConfig) -> BwdEval {
         DqMode::Atomic => cfg.bwd_flops(),
         DqMode::Split => 2.0 * cfg.fwd_flops(), // 4 of the 5 matmuls
     };
-    let main = evaluate_streaming(
+    let mut main = evaluate_streaming(
         arch,
         &format!("attn-bwd {:?}", cfg),
         &built,
@@ -762,6 +774,19 @@ pub fn simulate_bwd_detailed(arch: &Arch, cfg: &AttnConfig) -> BwdEval {
         resident,
         Some(arch.llc_lat),
     );
+    // the main pass writes dK/dV in f32; under atomic accumulation the
+    // contention-priced dQ read-modify-write stream is its own counter
+    // (exactly the `dq_rmw_factor` term of `bwd_main_bytes`)
+    let dkv_store = 2.0 * cfg.kv_plane() * 4.0;
+    let dq_rmw = match cfg.dq_mode {
+        DqMode::Atomic => cfg.dq_rmw_factor() * cfg.q_plane() * 4.0,
+        DqMode::Split => 0.0,
+    };
+    main.counters.hbm_write_bytes = dkv_store;
+    main.counters.atomic_rmw_bytes = dq_rmw;
+    main.counters.hbm_read_bytes = cfg.bwd_main_bytes() - dkv_store - dq_rmw;
+    main.counters.lds_bytes = 2.0 * cfg.kv_plane() * 2.0;
+    main.counters.reg_demand = alloc.total_demand;
 
     // The spill term is charged per executed hot-loop iteration across
     // every register-heavy pass (the preprocess pass holds no tiles).
@@ -780,7 +805,7 @@ pub fn simulate_bwd_detailed(arch: &Arch, cfg: &AttnConfig) -> BwdEval {
                 * (cfg.seq as f64 / q_rows_per_block as f64).max(1.0);
             let dq_rounds = (dq_blocks / arch.total_cus() as f64).ceil();
             spill_iter_rounds += dq_rounds * dq_spec.iters as f64;
-            Some(evaluate_streaming(
+            let mut p = evaluate_streaming(
                 arch,
                 &format!("attn-bwd-dq d{} n{}", cfg.d_head, cfg.seq),
                 &dq_built,
@@ -789,7 +814,12 @@ pub fn simulate_bwd_detailed(arch: &Arch, cfg: &AttnConfig) -> BwdEval {
                 cfg.bwd_dq_bytes(),
                 2.0 * cfg.kv_plane() * 2.0,
                 Some(arch.llc_lat),
-            ))
+            );
+            // q-stationary pass: dQ written once in f32, no atomics
+            p.counters.hbm_write_bytes = cfg.q_plane() * 4.0;
+            p.counters.hbm_read_bytes =
+                cfg.bwd_dq_bytes() - p.counters.hbm_write_bytes;
+            Some(p)
         }
     };
 

@@ -229,7 +229,7 @@ pub fn simulate_decode(arch: &Arch, cfg: &AttnDecodeConfig) -> KernelPerf {
     // one block per (sequence, KV head): the query heads of a group
     // share the gather, which is exactly GQA's decode advantage
     let blocks = cfg.batch as f64 * cfg.heads_kv as f64;
-    evaluate_paged(
+    let mut perf = evaluate_paged(
         arch,
         &format!(
             "attn-decode b{} hq{} hkv{} ctx{} blk{}",
@@ -241,7 +241,15 @@ pub fn simulate_decode(arch: &Arch, cfg: &AttnDecodeConfig) -> KernelPerf {
         cfg.bytes(),
         cfg.kv_bytes(),
         cfg.indirection(),
-    )
+    );
+    // direction split: the single new token's O row is the only store;
+    // the block table is pointer metadata served from L2 after the
+    // first touch of each page entry
+    let o_store = cfg.qo_bytes() / 2.0;
+    perf.counters.hbm_write_bytes = o_store;
+    perf.counters.hbm_read_bytes = cfg.bytes() - o_store;
+    perf.counters.l2_bytes = cfg.table_bytes();
+    perf
 }
 
 /// The canonical block-size ablation (report "Serve B" and the

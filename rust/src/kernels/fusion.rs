@@ -461,8 +461,77 @@ impl FusionChain {
     /// Plan and price the chain.
     pub fn evaluate(&self, arch: &Arch) -> FusionEval {
         let plan = self.plan(arch);
-        let eval: ChainEval = evaluate_chain(arch, &self.name, &plan.passes);
+        let mut eval: ChainEval = evaluate_chain(arch, &self.name, &plan.passes);
+        // surface the planner's decision as a counter: a forced split is
+        // the register/LDS budget overriding the fusion request
+        eval.perf.counters.forced_splits = u64::from(plan.forced_split);
         FusionEval { perf: eval.perf, per_pass: eval.passes, plan }
+    }
+
+    /// Interned-intermediate traffic a cut mask adds relative to the
+    /// fully fused chain, in bytes: every chain-internal tensor that a
+    /// cut forces through HBM costs one write (unless it was an output
+    /// anyway) plus one read per later segment that consumes it, and an
+    /// external input re-read by several segments costs each extra
+    /// segment a read. Derived from the tensor graph per tensor —
+    /// independently of [`Self::segment_pass`]'s per-segment scan — so
+    /// `tests/obs.rs` can assert the chain-byte conservation law
+    /// `split_bytes == fused_bytes + cut_traffic_bytes(cuts)` exactly.
+    pub fn cut_traffic_bytes(&self, cuts: &[bool]) -> f64 {
+        assert_eq!(cuts.len() + 1, self.stages.len().max(1), "cut mask length");
+        let mut seg_of = Vec::with_capacity(self.stages.len());
+        let mut seg = 0usize;
+        for i in 0..self.stages.len() {
+            seg_of.push(seg);
+            if i + 1 < self.stages.len() && cuts[i] {
+                seg += 1;
+            }
+        }
+        let mut tensors: Vec<&str> = Vec::new();
+        for s in &self.stages {
+            for t in s.reads.iter().chain(s.writes.iter()) {
+                push_unique(&mut tensors, t);
+            }
+        }
+        let mut extra = 0i64; // extra row-tensor traffics vs fused
+        for t in tensors {
+            let produced = self
+                .stages
+                .iter()
+                .position(|s| s.writes.iter().any(|w| w == t));
+            // segments that load t from HBM: a stage reads it and no
+            // earlier stage of the same segment produced it
+            let mut reading_segs: Vec<usize> = Vec::new();
+            for (i, s) in self.stages.iter().enumerate() {
+                if !s.reads.iter().any(|r| r == t) {
+                    continue;
+                }
+                let internal = (0..i).any(|j| {
+                    seg_of[j] == seg_of[i]
+                        && self.stages[j].writes.iter().any(|w| w == t)
+                });
+                if !internal && !reading_segs.contains(&seg_of[i]) {
+                    reading_segs.push(seg_of[i]);
+                }
+            }
+            // fused, an external input is read once; an internal tensor
+            // never is
+            let fused_reads =
+                i64::from(produced.is_none() && !reading_segs.is_empty());
+            extra += reading_segs.len() as i64 - fused_reads;
+            if let Some(p) = produced {
+                let is_output = self.outputs.iter().any(|o| o == t);
+                // split keeps the write when t is an output or a later
+                // segment reads it back; fused only writes outputs
+                let kept = is_output
+                    || self.stages.iter().enumerate().any(|(i, s)| {
+                        seg_of[i] > seg_of[p]
+                            && s.reads.iter().any(|r| r == t)
+                    });
+                extra += i64::from(kept) - i64::from(is_output);
+            }
+        }
+        extra as f64 * self.rows as f64 * self.d as f64 * 2.0
     }
 
     /// Price an explicit cut mask, legality aside (property tests and

@@ -342,7 +342,24 @@ pub fn simulate(arch: &Arch, cfg: &GemmConfig) -> KernelPerf {
         "gemm {:?} {}^3 {:?}",
         cfg.dtype, cfg.m, cfg.pattern
     );
-    evaluate_gemm(arch, &name, &built, &grid, &order, cfg.flops())
+    let mut perf =
+        evaluate_gemm(arch, &name, &built, &grid, &order, cfg.flops());
+    // counter refinement: register pressure from the same allocation the
+    // schedule was built under, and the scratch RMW traffic spills cost
+    let (_, alloc) = reg_demand(arch, cfg);
+    perf.counters.reg_demand = alloc.total_demand;
+    if alloc.spilled > 0 {
+        let iters = (cfg.k / cfg.block_k).max(1) as f64;
+        let blocks = cfg.tiles_m() as f64 * cfg.tiles_n() as f64;
+        // 4 B x 64 lanes per spilled register, load + store per iter
+        perf.counters.atomic_rmw_bytes =
+            2.0 * alloc.spilled as f64 * 256.0 * iters * blocks;
+        perf.counters.spill_cycles = iters
+            * blocks
+            * crate::hk::costmodel::spill_penalty_cycles(alloc.spilled)
+                as f64;
+    }
+    perf
 }
 
 #[cfg(test)]

@@ -287,6 +287,7 @@ pub fn dense_ffn_baseline(
         llc_hit: (up.llc_hit + down.llc_hit) / 2.0,
         eff_bw_tbps: (up.eff_bw_tbps + down.eff_bw_tbps) / 2.0,
         info: up.info.clone(),
+        counters: up.counters.merged(&down.counters),
     }
 }
 

@@ -550,18 +550,19 @@ pub fn variants_or_fallback(key: &KernelKey) -> (Vec<Variant>, bool) {
         return (vs, false);
     }
     let fallback = KernelKey { arch: ArchId::Mi325x, ..*key };
-    static WARNED: std::sync::Mutex<Vec<(Op, ArchId)>> =
-        std::sync::Mutex::new(Vec::new());
-    let mut warned = WARNED.lock().unwrap_or_else(|e| e.into_inner());
-    if !warned.contains(&(key.op, key.arch)) {
-        warned.push((key.op, key.arch));
-        eprintln!(
-            "warning: no {} variants for arch {}; dispatching against \
-             the CDNA3 ({}) table",
-            key.op.tag(),
-            key.arch.tag(),
-            fallback.arch.tag()
-        );
+    let event_key =
+        format!("fallback/{}/{}", key.op.tag(), key.arch.tag());
+    let message = format!(
+        "no {} variants for arch {}; dispatching against the CDNA3 ({}) \
+         table",
+        key.op.tag(),
+        key.arch.tag(),
+        fallback.arch.tag()
+    );
+    // the structured event log dedups per (op, arch) process-wide; only
+    // the first emission reaches stderr
+    if crate::obs::profiler::emit_once(&event_key, &message) {
+        eprintln!("warning: {message}");
     }
     (variants(&fallback), true)
 }
@@ -1234,6 +1235,20 @@ pub trait KernelOp {
 
     /// Price this config through the cost model.
     fn simulate(&self, arch: &Arch) -> KernelPerf;
+
+    /// [`Self::simulate`] with the result recorded into a profiler sink
+    /// under the op's tag — the one hook every counter rollup flows
+    /// through (`serve::engine`, `coordinator::train`, `report::profile`
+    /// all funnel here rather than re-implementing attribution).
+    fn simulate_into(
+        &self,
+        arch: &Arch,
+        prof: &mut crate::obs::Profiler,
+    ) -> KernelPerf {
+        let perf = self.simulate(arch);
+        prof.record(self.op().tag(), &perf);
+        perf
+    }
 }
 
 impl<T: KernelOp + ?Sized> KernelOp for &T {
@@ -1404,6 +1419,17 @@ impl Dispatch {
     /// Run the dispatched kernel through the cost model.
     pub fn simulate(&self) -> KernelPerf {
         simulate_config(&self.key, &self.config)
+    }
+
+    /// [`Self::simulate`], recording the result (counters + time) into
+    /// `prof` under the dispatched op's tag.
+    pub fn simulate_profiled(
+        &self,
+        prof: &mut crate::obs::Profiler,
+    ) -> KernelPerf {
+        self.config
+            .kernel_op(self.key.op)
+            .simulate_into(&self.key.arch.arch(), prof)
     }
 
     pub fn gemm_config(&self) -> &GemmConfig {

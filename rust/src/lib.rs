@@ -32,6 +32,7 @@ pub mod error;
 pub mod hk;
 pub mod kernels;
 pub mod moe;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serve;

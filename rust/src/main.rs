@@ -29,6 +29,14 @@
 //!   attn-bwd              attention-backwards grid (dQ/dK/dV recompute
 //!                         subsystem vs baselines, Table 3 re-check);
 //!                         writes BENCH_attn_bwd.json (HK_ATTN_BWD_OUT)
+//!   profile               roofline attribution over the paper-shapes
+//!                         grid + a traced serve run and train step;
+//!                         writes BENCH_profile.json (HK_PROFILE_OUT)
+//!                         and trace.perfetto.json (HK_TRACE_OUT).
+//!                         --check-golden F diffs the hand-derivable
+//!                         counter payload against a checked-in golden
+//!                         (exact; CI drift gate), --write-golden F
+//!                         regenerates it
 //!   tune [--arch A]       warm the persistent registry tune cache for
 //!                         the headline kernel keys and save it
 //!   artifacts             list artifact entries + shapes
@@ -71,7 +79,7 @@ fn main() -> Result<()> {
             let exp = args.get(1).map(String::as_str).unwrap_or("all");
             if !report::run(exp) {
                 bail!(
-                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, fusion, multi-gpu, attn-bwd, all"
+                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, fusion, multi-gpu, attn-bwd, profile, all"
                 );
             }
         }
@@ -79,6 +87,19 @@ fn main() -> Result<()> {
         Some("fusion") => report::fusion(),
         Some("multi-gpu") => report::multi_gpu(),
         Some("attn-bwd") => report::attn_bwd(),
+        Some("profile") => {
+            if let Some(path) = flag(&args, "--write-golden") {
+                report::profile_write_golden(&path);
+            } else {
+                let arch = arch_flag(&args)?;
+                report::profile(arch);
+                if let Some(path) = flag(&args, "--check-golden") {
+                    if !report::profile_check(&path) {
+                        bail!("counter-golden drift (diff above)");
+                    }
+                }
+            }
+        }
         Some("serve") => {
             let n: u64 = flag(&args, "--requests")
                 .map(|v| v.parse())
@@ -233,6 +254,9 @@ fn main() -> Result<()> {
             eprintln!("       {exe} fusion");
             eprintln!("       {exe} multi-gpu");
             eprintln!("       {exe} attn-bwd");
+            eprintln!(
+                "       {exe} profile [--arch A] [--check-golden F | --write-golden F]"
+            );
             eprintln!("       {exe} tune [--arch mi355x|mi350x|mi325x|b200|h100]");
             eprintln!("       {exe} artifacts | solve | arch");
             if other.is_some() {

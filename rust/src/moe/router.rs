@@ -25,7 +25,47 @@
 //!   *slot* (the residual free capacity can sit entirely on experts it
 //!   already keeps), never its last assignment.
 
+use crate::obs::KernelCounters;
 use crate::runtime::Rng;
+
+/// Largest `top_k` whose running selection heap fits the gate kernel's
+/// register file (one wave per SIMD, 8 B per (weight, index) entry).
+/// Past this window the heap spills to scratch and every extra slot
+/// re-scans half the logit line — the KERNEL_STATUS degradation knee
+/// pinned in [`router_softmax_bytes_per_token`].
+pub const ROUTER_REGISTER_TOPK: u32 = 10;
+
+/// HBM bytes per token of the top-k softmax gate: read the bf16 logit
+/// line (`2E`), write the surviving (f32 weight, u32 index) pairs
+/// (`8k`). Each slot beyond [`ROUTER_REGISTER_TOPK`] additionally pays
+/// an 8 B scratch round-trip for the spilled heap entry plus a re-scan
+/// of half the byte-wide rank-tag array (`E/2`).
+pub fn router_softmax_bytes_per_token(experts: u32, top_k: u32) -> f64 {
+    let e = experts.max(1) as f64;
+    let k = top_k.max(1);
+    let base = 2.0 * e + 8.0 * k as f64;
+    let over = k.saturating_sub(ROUTER_REGISTER_TOPK) as f64;
+    base + over * (8.0 + e / 2.0)
+}
+
+/// The gate kernel's counter record for a routed batch — the
+/// counter-level form of the bytes/token law, so profile rollups carry
+/// the router's (tiny but knee-shaped) traffic alongside the expert
+/// GEMMs.
+pub fn router_softmax_counters(cfg: &MoeConfig, tokens: u32) -> KernelCounters {
+    let e = cfg.experts.max(1);
+    let k = cfg.top_k.clamp(1, e);
+    let t = tokens as f64;
+    let over = k.saturating_sub(ROUTER_REGISTER_TOPK) as f64;
+    KernelCounters {
+        hbm_read_bytes: t * (2.0 * e as f64 + over * (e as f64 / 2.0)),
+        hbm_write_bytes: t * 8.0 * k as f64,
+        atomic_rmw_bytes: t * over * 8.0,
+        reg_demand: 16 + 2 * k.min(ROUTER_REGISTER_TOPK),
+        kernels: 1,
+        ..KernelCounters::default()
+    }
+}
 
 /// MoE layer configuration: model shape + routing policy.
 #[derive(Debug, Clone, Copy)]
@@ -305,6 +345,43 @@ mod tests {
         }
         for (t, s) in sums.iter().enumerate() {
             assert!((s - 1.0).abs() < 1e-9, "token {t} weights sum to {s}");
+        }
+    }
+
+    #[test]
+    fn softmax_bytes_per_token_goldens() {
+        // KERNEL_STATUS pins, E = 64: flat 8 B/slot inside the register
+        // window, 48 B/slot past it
+        let bpt = |k| router_softmax_bytes_per_token(64, k);
+        assert_eq!(bpt(2), 144.0);
+        assert_eq!(bpt(8), 192.0);
+        assert_eq!(bpt(10), 208.0);
+        assert_eq!(bpt(12), 304.0);
+        assert_eq!(bpt(16), 496.0);
+        assert_eq!(bpt(32), 1264.0);
+    }
+
+    #[test]
+    fn softmax_bytes_knee_sits_at_register_topk() {
+        // marginal bytes/slot jump exactly past ROUTER_REGISTER_TOPK
+        let bpt = |k| router_softmax_bytes_per_token(64, k);
+        let inside = bpt(ROUTER_REGISTER_TOPK) - bpt(ROUTER_REGISTER_TOPK - 1);
+        let outside = bpt(ROUTER_REGISTER_TOPK + 1) - bpt(ROUTER_REGISTER_TOPK);
+        assert_eq!(inside, 8.0);
+        assert_eq!(outside, 48.0);
+        assert!(outside > 5.0 * inside);
+    }
+
+    #[test]
+    fn softmax_counters_match_bytes_per_token() {
+        for &k in &[2u32, 8, 10, 16, 32] {
+            let cfg = MoeConfig::new(64, k);
+            let c = router_softmax_counters(&cfg, 1024);
+            let total = c.hbm_total_bytes() + c.atomic_rmw_bytes;
+            assert_eq!(total, 1024.0 * router_softmax_bytes_per_token(64, k));
+            assert_eq!(c.kernels, 1);
+            // spill traffic only exists past the register window
+            assert_eq!(c.atomic_rmw_bytes > 0.0, k > ROUTER_REGISTER_TOPK);
         }
     }
 

@@ -1,0 +1,158 @@
+//! Hardware-style per-kernel counters.
+//!
+//! One [`KernelCounters`] record rides on every
+//! [`crate::hk::costmodel::KernelPerf`]: the cost-model evaluators fill
+//! it from the same terms they price, so a counter is never a second
+//! opinion — it is the priced quantity itself, exposed. Records merge
+//! additively (max for register demand), which is what makes the scoped
+//! rollups in [`crate::obs::profiler`] and the conservation invariants
+//! in `tests/obs.rs` exact equalities rather than tolerances.
+
+use crate::runtime::json::Json;
+
+/// The counter record of one kernel launch (or a rollup of many).
+///
+/// Byte counters are f64 because the cost model prices f64 byte counts;
+/// all arithmetic on them is exact for the integral values the models
+/// produce (well below 2^53).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KernelCounters {
+    /// Bytes read from HBM (demand misses + streamed input traffic).
+    pub hbm_read_bytes: f64,
+    /// Bytes written to HBM (output stores).
+    pub hbm_write_bytes: f64,
+    /// Demand bytes served by the on-chip cache hierarchy (L2/LLC hits
+    /// that never reached HBM; for grouped MoE kernels, the expert
+    /// weights re-read through the LLC slice).
+    pub l2_bytes: f64,
+    /// Bytes staged through LDS (shared-memory tile traffic).
+    pub lds_bytes: f64,
+    /// MFMA flops issued (0 for the pure memory-bound chain family).
+    pub mfma_flops: f64,
+    /// Waves issued across the grid (blocks x waves per block).
+    pub issued_waves: f64,
+    /// Peak per-wave 32-bit register demand (max-merged, not summed).
+    pub reg_demand: u32,
+    /// Scratch round-trip cycles charged for spilled registers.
+    pub spill_cycles: f64,
+    /// Atomic read-modify-write traffic (the backward pass's
+    /// `global_atomic_add` dQ stream, contention factor included).
+    pub atomic_rmw_bytes: f64,
+    /// Activation bytes moved across GPU boundaries (expert-parallel
+    /// all-to-all, gradient all-reduce).
+    pub cross_gpu_bytes: f64,
+    /// Global-memory passes a fusion-chain plan executed (1 when fully
+    /// fused, one per segment when split).
+    pub fused_passes: u64,
+    /// Chains the fusion planner *had* to split (register/LDS budget
+    /// exceeded) — the `forced_split` decision, countable in CI.
+    pub forced_splits: u64,
+    /// Kernel launches folded into this record.
+    pub kernels: u64,
+}
+
+impl KernelCounters {
+    /// Total HBM traffic, both directions.
+    pub fn hbm_total_bytes(&self) -> f64 {
+        self.hbm_read_bytes + self.hbm_write_bytes
+    }
+
+    /// Fold another record into this one. Additive except for
+    /// `reg_demand`, which is a peak (max-merged).
+    pub fn merge(&mut self, o: &KernelCounters) {
+        self.hbm_read_bytes += o.hbm_read_bytes;
+        self.hbm_write_bytes += o.hbm_write_bytes;
+        self.l2_bytes += o.l2_bytes;
+        self.lds_bytes += o.lds_bytes;
+        self.mfma_flops += o.mfma_flops;
+        self.issued_waves += o.issued_waves;
+        self.reg_demand = self.reg_demand.max(o.reg_demand);
+        self.spill_cycles += o.spill_cycles;
+        self.atomic_rmw_bytes += o.atomic_rmw_bytes;
+        self.cross_gpu_bytes += o.cross_gpu_bytes;
+        self.fused_passes += o.fused_passes;
+        self.forced_splits += o.forced_splits;
+        self.kernels += o.kernels;
+    }
+
+    /// Merged copy (non-mutating [`KernelCounters::merge`]).
+    pub fn merged(mut self, o: &KernelCounters) -> KernelCounters {
+        self.merge(o);
+        self
+    }
+
+    /// Deterministic JSON object (BTreeMap key order).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hbm_read_bytes", Json::Num(self.hbm_read_bytes)),
+            ("hbm_write_bytes", Json::Num(self.hbm_write_bytes)),
+            ("l2_bytes", Json::Num(self.l2_bytes)),
+            ("lds_bytes", Json::Num(self.lds_bytes)),
+            ("mfma_flops", Json::Num(self.mfma_flops)),
+            ("issued_waves", Json::Num(self.issued_waves)),
+            ("reg_demand", Json::Num(self.reg_demand as f64)),
+            ("spill_cycles", Json::Num(self.spill_cycles)),
+            ("atomic_rmw_bytes", Json::Num(self.atomic_rmw_bytes)),
+            ("cross_gpu_bytes", Json::Num(self.cross_gpu_bytes)),
+            ("fused_passes", Json::Num(self.fused_passes as f64)),
+            ("forced_splits", Json::Num(self.forced_splits as f64)),
+            ("kernels", Json::Num(self.kernels as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_is_additive_except_reg_demand() {
+        let a = KernelCounters {
+            hbm_read_bytes: 100.0,
+            hbm_write_bytes: 10.0,
+            reg_demand: 200,
+            fused_passes: 1,
+            kernels: 1,
+            ..KernelCounters::default()
+        };
+        let b = KernelCounters {
+            hbm_read_bytes: 50.0,
+            reg_demand: 300,
+            spill_cycles: 12.0,
+            kernels: 2,
+            ..KernelCounters::default()
+        };
+        let m = a.merged(&b);
+        assert_eq!(m.hbm_read_bytes, 150.0);
+        assert_eq!(m.hbm_write_bytes, 10.0);
+        assert_eq!(m.hbm_total_bytes(), 160.0);
+        assert_eq!(m.reg_demand, 300);
+        assert_eq!(m.spill_cycles, 12.0);
+        assert_eq!(m.fused_passes, 1);
+        assert_eq!(m.kernels, 3);
+    }
+
+    #[test]
+    fn json_round_trips_all_fields() {
+        let c = KernelCounters {
+            hbm_read_bytes: 1.5e9,
+            hbm_write_bytes: 2.0e8,
+            l2_bytes: 3.0e9,
+            lds_bytes: 4.0e9,
+            mfma_flops: 1e12,
+            issued_waves: 2048.0,
+            reg_demand: 256,
+            spill_cycles: 96.0,
+            atomic_rmw_bytes: 7.0e7,
+            cross_gpu_bytes: 1.0e6,
+            fused_passes: 3,
+            forced_splits: 1,
+            kernels: 4,
+        };
+        let j = c.to_json();
+        let back = crate::runtime::json::parse(&j.dump()).unwrap();
+        assert_eq!(back, j);
+        assert_eq!(back.get("reg_demand").unwrap().as_u64(), Some(256));
+        assert_eq!(back.get("forced_splits").unwrap().as_u64(), Some(1));
+    }
+}

@@ -1,0 +1,27 @@
+//! Observability plane: hardware-style kernel counters, scoped rollup
+//! profiling, a structured event log, and a Chrome-trace/Perfetto
+//! timeline exporter.
+//!
+//! The cost model is deterministic, so everything here is too: counters
+//! are exact f64/integer sums (no sampling), traces sit on the sim
+//! clock, and two identical runs dump byte-identical JSON. That is what
+//! makes the counter-golden CI gate exact — a cost-model change shows
+//! up as a reviewable counter diff, never as noise.
+//!
+//! - [`counters::KernelCounters`]: the per-kernel record every
+//!   `hk::costmodel` evaluator emits (HBM/L2/LDS bytes by direction,
+//!   MFMA flops, waves, register demand + spill cycles, fusion
+//!   decisions, atomic-RMW and cross-GPU traffic).
+//! - [`profiler::Profiler`]: a scoped rollup sink (op → serve step →
+//!   lane → run); [`profiler`] also hosts the deduped structured event
+//!   log that replaced the registry's raw `eprintln!` fallback warning.
+//! - [`trace::Trace`]: the `trace.perfetto.json` exporter (Chrome
+//!   trace-event format, loadable in Perfetto or `chrome://tracing`).
+
+pub mod counters;
+pub mod profiler;
+pub mod trace;
+
+pub use counters::KernelCounters;
+pub use profiler::{Profiler, ProfilerEntry};
+pub use trace::Trace;

@@ -1,0 +1,211 @@
+//! Scoped counter rollups + the structured event log.
+//!
+//! [`Profiler`] is the explicit sink `registry::KernelOp::simulate_into`
+//! and the serve engine record into: each record lands on a leaf path
+//! (`serve/lane0/decode/attn-decode`) *and* every ancestor scope, so
+//! the rollup invariant "a scope's counters equal the sum of what was
+//! recorded under it" holds by construction and is asserted in
+//! `tests/obs.rs`. Paths are BTreeMap-ordered, so [`Profiler::to_json`]
+//! is deterministic.
+//!
+//! The event log is the structured replacement for ad-hoc `eprintln!`
+//! warnings: [`emit_once`] dedups by key (first emission returns true,
+//! the rest only bump the seen count), so a serving loop re-dispatching
+//! a fallback key thousands of times still logs exactly one event.
+
+use crate::obs::counters::KernelCounters;
+use crate::runtime::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Aggregated record at one rollup path.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProfilerEntry {
+    pub counters: KernelCounters,
+    /// Summed kernel time attributed to this path.
+    pub time_s: f64,
+    /// Leaf records that landed on or under this path.
+    pub records: u64,
+}
+
+/// A scoped rollup sink for kernel counters.
+#[derive(Debug, Default)]
+pub struct Profiler {
+    stack: Vec<String>,
+    entries: BTreeMap<String, ProfilerEntry>,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Profiler::default()
+    }
+
+    /// Enter a rollup scope; records accumulate under it until [`pop`].
+    ///
+    /// [`pop`]: Profiler::pop
+    pub fn push(&mut self, scope: &str) {
+        self.stack.push(scope.to_string());
+    }
+
+    pub fn pop(&mut self) {
+        self.stack.pop();
+    }
+
+    /// Record one priced kernel under the current scope.
+    pub fn record(&mut self, tag: &str, perf: &crate::hk::costmodel::KernelPerf) {
+        self.record_counters(tag, &perf.counters, perf.time_s);
+    }
+
+    /// Record a raw counter bundle (serve steps merge several kernels
+    /// into one step-level record before attributing it to a lane).
+    pub fn record_counters(&mut self, tag: &str, c: &KernelCounters, time_s: f64) {
+        let mut path = String::new();
+        self.bump(&path, c, time_s); // the "" root: the whole-run total
+        for scope in &self.stack {
+            if !path.is_empty() {
+                path.push('/');
+            }
+            path.push_str(scope);
+            let p = path.clone();
+            self.bump(&p, c, time_s);
+        }
+        if !path.is_empty() {
+            path.push('/');
+        }
+        path.push_str(tag);
+        self.bump(&path, c, time_s);
+    }
+
+    fn bump(&mut self, path: &str, c: &KernelCounters, time_s: f64) {
+        let e = self.entries.entry(path.to_string()).or_default();
+        e.counters.merge(c);
+        e.time_s += time_s;
+        e.records += 1;
+    }
+
+    /// The rollup at `path` ("" is the whole-run total).
+    pub fn entry(&self, path: &str) -> Option<&ProfilerEntry> {
+        self.entries.get(path)
+    }
+
+    /// All rollup paths and entries, in path order.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &ProfilerEntry)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Deterministic JSON: path → {counters, records, time_s}.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.entries
+                .iter()
+                .map(|(path, e)| {
+                    (
+                        path.clone(),
+                        Json::obj(vec![
+                            ("counters", e.counters.to_json()),
+                            ("records", Json::Num(e.records as f64)),
+                            ("time_s", Json::Num(e.time_s)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+/// One deduped structured event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub key: String,
+    pub message: String,
+    /// Times the key was emitted (the event itself fired once).
+    pub seen: u64,
+}
+
+static EVENTS: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+
+/// Emit a structured event, deduped by `key`: the first emission
+/// records the event and returns true (callers gate their one-time
+/// side effects — e.g. a stderr warning — on it); repeats only bump
+/// the seen count and return false.
+pub fn emit_once(key: &str, message: &str) -> bool {
+    let mut events = EVENTS.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(e) = events.iter_mut().find(|e| e.key == key) {
+        e.seen += 1;
+        return false;
+    }
+    events.push(Event {
+        key: key.to_string(),
+        message: message.to_string(),
+        seen: 1,
+    });
+    true
+}
+
+/// How many times the event keyed `key` was *recorded* — 0 (never
+/// emitted) or 1 (dedup holds whatever the emit count was).
+pub fn fired(key: &str) -> u64 {
+    let events = EVENTS.lock().unwrap_or_else(|e| e.into_inner());
+    u64::from(events.iter().any(|e| e.key == key))
+}
+
+/// Total [`emit_once`] calls for `key` (the dedup-suppressed repeats).
+pub fn seen(key: &str) -> u64 {
+    let events = EVENTS.lock().unwrap_or_else(|e| e.into_inner());
+    events.iter().find(|e| e.key == key).map_or(0, |e| e.seen)
+}
+
+/// Snapshot of the event log, in emission order.
+pub fn events() -> Vec<Event> {
+    EVENTS.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rollup_paths_accumulate_up_the_stack() {
+        let mut p = Profiler::new();
+        let c = KernelCounters {
+            hbm_read_bytes: 10.0,
+            kernels: 1,
+            ..KernelCounters::default()
+        };
+        p.push("serve");
+        p.push("lane0");
+        p.record_counters("attn", &c, 1.0);
+        p.record_counters("attn", &c, 1.0);
+        p.pop();
+        p.push("lane1");
+        p.record_counters("attn", &c, 2.0);
+        p.pop();
+        p.pop();
+        assert_eq!(p.entry("serve/lane0/attn").unwrap().records, 2);
+        assert_eq!(p.entry("serve/lane0").unwrap().counters.hbm_read_bytes, 20.0);
+        assert_eq!(p.entry("serve/lane1").unwrap().time_s, 2.0);
+        let total = p.entry("").unwrap();
+        assert_eq!(total.counters.hbm_read_bytes, 30.0);
+        assert_eq!(total.counters.kernels, 3);
+        assert_eq!(total.time_s, 4.0);
+        let serve = p.entry("serve").unwrap();
+        assert_eq!(serve.counters.hbm_read_bytes, total.counters.hbm_read_bytes);
+    }
+
+    #[test]
+    fn emit_once_dedups_by_key() {
+        // keys are namespaced to this test: the log is process-global
+        assert!(emit_once("test/profiler/dedup", "first"));
+        assert!(!emit_once("test/profiler/dedup", "second"));
+        assert!(!emit_once("test/profiler/dedup", "third"));
+        assert_eq!(fired("test/profiler/dedup"), 1);
+        assert_eq!(seen("test/profiler/dedup"), 3);
+        assert_eq!(fired("test/profiler/never"), 0);
+        assert_eq!(seen("test/profiler/never"), 0);
+        let ev = events()
+            .into_iter()
+            .find(|e| e.key == "test/profiler/dedup")
+            .unwrap();
+        assert_eq!(ev.message, "first"); // the recorded message is the first one
+    }
+}

@@ -1430,6 +1430,298 @@ pub fn ablations() {
     }
 }
 
+/// The `profile` roofline grid: one paper-shape query per kernel class,
+/// dispatched through a fresh tune cache so the payload never depends
+/// on tuner state left on disk.
+fn profile_grid(arch: ArchId) -> Vec<(&'static str, Dtype, Query)> {
+    vec![
+        (
+            "gemm-bf16-4096",
+            Dtype::Bf16,
+            Query::gemm(arch, Dtype::Bf16, 4096, 4096, 4096),
+        ),
+        (
+            "gemm-bf16-8192",
+            Dtype::Bf16,
+            Query::gemm(arch, Dtype::Bf16, 8192, 8192, 8192),
+        ),
+        (
+            "gemm-fp8-8192",
+            Dtype::Fp8,
+            Query::gemm(arch, Dtype::Fp8, 8192, 8192, 8192),
+        ),
+        ("attn-gqa-4096", Dtype::Bf16, Query::attn_gqa(arch, 4096, 128, true)),
+        ("attn-gqa-8192", Dtype::Bf16, Query::attn_gqa(arch, 8192, 128, true)),
+        (
+            "attn-bwd-8192",
+            Dtype::Bf16,
+            Query::attn_gqa(arch, 8192, 128, true).bwd(),
+        ),
+        (
+            "decode-b32-ctx8192",
+            Dtype::Bf16,
+            Query::decode_gqa(arch, 32, 8192, 16),
+        ),
+        ("moe-ffn-e8-k2", Dtype::Bf16, Query::moe_ffn(arch, 4096, 8, 2)),
+        (
+            "add-rmsnorm-4096x8192",
+            Dtype::Bf16,
+            Query::add_rmsnorm(arch, 4096, 8192),
+        ),
+        ("silu-mul-4096x4096", Dtype::Bf16, Query::silu_mul(arch, 4096, 4096)),
+        ("rope-8192", Dtype::Bf16, Query::rope_paper(arch, 8192)),
+    ]
+}
+
+/// Build the full profile payload: per-kernel roofline rows over the
+/// paper-shapes grid, the scoped counter rollup, a traced serve run
+/// (2 GPUs, MoE + fused membound planes on), and one 2-GPU train step
+/// laid on the same timeline. A pure function of `arch` on the sim
+/// clock — two calls dump byte-identical JSON, which is what the CI
+/// determinism gate diffs.
+pub fn profile_payload(
+    arch: ArchId,
+) -> (crate::obs::Profiler, crate::obs::Trace, crate::runtime::json::Json) {
+    use crate::coordinator::train;
+    use crate::runtime::json::Json;
+    use crate::serve::{serve_trace, MbFusion, MoeServeConfig, ServeConfig, ServeEngine};
+
+    let a = arch.arch();
+    let mut cache = TuneCache::new();
+    let mut prof = crate::obs::Profiler::new();
+    let mut rows: Vec<Json> = Vec::new();
+    prof.push("kernels");
+    for (label, dtype, q) in profile_grid(arch) {
+        let d = q.dispatch_with(&mut cache);
+        let perf = d.simulate_profiled(&mut prof);
+        let c = perf.counters;
+        let peak_tf = a.peak_tflops(dtype);
+        let achieved_tf = c.mfma_flops / perf.time_s / 1e12;
+        let achieved_tbps = c.hbm_total_bytes() / perf.time_s / 1e12;
+        let spill_s = c.spill_cycles * a.cycle_s();
+        let mut terms = vec![
+            ("compute", perf.compute_s),
+            ("memory", perf.mem_s),
+            ("spill", spill_s),
+        ];
+        terms.sort_by(|x, y| y.1.total_cmp(&x.1));
+        let bound = if perf.compute_s >= perf.mem_s { "compute" } else { "memory" };
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(label.to_string())),
+            ("op", Json::Str(d.key.op.tag().to_string())),
+            ("variant", Json::Str(d.variant.clone())),
+            ("time_s", Json::Num(perf.time_s)),
+            ("achieved_tflops", Json::Num(achieved_tf)),
+            ("peak_tflops", Json::Num(peak_tf)),
+            ("flops_frac", Json::Num(achieved_tf / peak_tf)),
+            ("achieved_tbps", Json::Num(achieved_tbps)),
+            ("peak_tbps", Json::Num(a.hbm_tbps)),
+            ("bw_frac", Json::Num(achieved_tbps / a.hbm_tbps)),
+            ("bound", Json::Str(bound.to_string())),
+            (
+                "top_terms",
+                Json::Arr(
+                    terms
+                        .iter()
+                        .map(|(n, s)| Json::obj(vec![(*n, Json::Num(*s))]))
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    prof.pop();
+
+    // traced serve run: the lane rollup under the `serve` scope is the
+    // shard-sum side of the conservation invariant (lane counters add
+    // to the run total by construction)
+    let serve_gpus = 2u32;
+    let mut eng = ServeEngine::new(ServeConfig {
+        arch,
+        n_gpus: serve_gpus,
+        moe: Some(MoeServeConfig::default()),
+        mb_fusion: MbFusion::Fused,
+        ..ServeConfig::default()
+    })
+    .expect("profile serve engine");
+    eng.enable_trace();
+    let rep = eng.run_trace(&serve_trace(24, 300.0, 7)).expect("profile serve run");
+    prof.push("serve");
+    for (g, lane) in rep.per_gpu.iter().enumerate() {
+        prof.record_counters(&format!("gpu{g}"), &lane.counters, 0.0);
+    }
+    prof.pop();
+    let mut timeline = eng.take_trace().expect("trace was enabled");
+
+    // one train step appended to the right of the serve processes
+    // (serve owns pids 0..n_gpus plus the KV process at pid n_gpus)
+    let shape = train::TrainShape { n_gpus: 2, ..train::TrainShape::default() };
+    let plan = train::kernel_plan(arch, &shape);
+    train::plan_trace(&plan, &mut timeline, serve_gpus + 1);
+    prof.push("train");
+    for (name, perf) in &plan {
+        prof.record(name, perf);
+    }
+    prof.pop();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("profile".into())),
+        ("arch", Json::Str(arch.tag().into())),
+        ("rows", Json::Arr(rows)),
+        ("rollup", prof.to_json()),
+        ("serve", rep.to_json()),
+        ("train_step_s", Json::Num(train::predicted_step_s(&plan))),
+    ]);
+    (prof, timeline, doc)
+}
+
+/// The counter-golden payload. Every number here is an exact integral
+/// f64 by construction — chain bytes are `reads x rows x d x 2` and the
+/// router model is closed-form — so the checked-in golden is derivable
+/// by hand and the CI gate diffs it exactly, with no tolerance.
+pub fn profile_golden_json() -> crate::runtime::json::Json {
+    use crate::kernels::fusion::FusionChain;
+    use crate::moe::router::router_softmax_bytes_per_token;
+    use crate::runtime::json::Json;
+
+    let a = M355.arch();
+    let chains = [
+        ("add_rmsnorm_4096x8192", FusionChain::add_rmsnorm(4096, 8192)),
+        ("fused_ln_dropout_8192x4096", FusionChain::fused_ln(8192, 4096, true)),
+        ("silu_mul_4096x4096", FusionChain::silu_mul(4096, 4096)),
+        ("qkv_rope_16384x128", FusionChain::qkv_rope_rows(16384, 128)),
+        ("gemm_epilogue_4096x4096", FusionChain::gemm_epilogue(4096, 4096)),
+    ];
+    let mut entries: Vec<(String, Json)> = Vec::new();
+    for (key, c) in chains {
+        let n = c.stages.len() - 1;
+        let fused = c.evaluate_with_cuts(&a, &vec![false; n]);
+        let split = c.evaluate_with_cuts(&a, &vec![true; n]);
+        entries.push((
+            key.to_string(),
+            Json::obj(vec![
+                ("cut_traffic_bytes", Json::Num(c.cut_traffic_bytes(&vec![true; n]))),
+                ("fused_read_bytes", Json::Num(fused.counters.hbm_read_bytes)),
+                ("fused_write_bytes", Json::Num(fused.counters.hbm_write_bytes)),
+                ("split_total_bytes", Json::Num(split.counters.hbm_total_bytes())),
+            ]),
+        ));
+    }
+    let router: Vec<(String, Json)> = [2u32, 8, 10, 12, 16, 32]
+        .iter()
+        .map(|&k| (format!("k{k:02}"), Json::Num(router_softmax_bytes_per_token(64, k))))
+        .collect();
+    Json::obj(vec![
+        ("chains", Json::obj(entries)),
+        ("router_bytes_per_token_e64", Json::obj(router)),
+    ])
+}
+
+/// `profile` — roofline attribution over the paper-shapes grid plus the
+/// traced serve run and train step. Writes `BENCH_profile.json`
+/// (override with `HK_PROFILE_OUT`) and `trace.perfetto.json`
+/// (`HK_TRACE_OUT`; open in Perfetto or `chrome://tracing`).
+pub fn profile(arch: ArchId) {
+    use crate::runtime::json::Json;
+    hr(&format!("profile — counters, roofline attribution, timeline ({})", arch.tag()));
+    let (prof, timeline, doc) = profile_payload(arch);
+    println!(
+        "{:<22} {:>9} {:>8} {:>6} {:>7} {:>6}  {:<8} top cost terms",
+        "kernel", "time ms", "TFLOPS", "%peak", "TB/s", "%peak", "bound"
+    );
+    if let Some(rows) = doc.get("rows").and_then(Json::as_arr) {
+        for row in rows {
+            let f = |k: &str| row.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            let s = |k: &str| row.get(k).and_then(Json::as_str).unwrap_or("");
+            let terms = row
+                .get("top_terms")
+                .and_then(Json::as_arr)
+                .map(|ts| {
+                    ts.iter()
+                        .filter_map(|t| match t {
+                            Json::Obj(m) => m.iter().next().map(|(k, v)| {
+                                format!("{k} {:.3}ms", v.as_f64().unwrap_or(0.0) * 1e3)
+                            }),
+                            _ => None,
+                        })
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                })
+                .unwrap_or_default();
+            println!(
+                "{:<22} {:>9.3} {:>8.0} {:>5.0}% {:>7.2} {:>5.0}%  {:<8} {terms}",
+                s("name"),
+                f("time_s") * 1e3,
+                f("achieved_tflops"),
+                f("flops_frac") * 100.0,
+                f("achieved_tbps"),
+                f("bw_frac") * 100.0,
+                s("bound"),
+            );
+        }
+    }
+    if let Some(root) = prof.entry("") {
+        let c = &root.counters;
+        println!(
+            "\ntotals: {:.3} GB HBM ({:.3} read / {:.3} write), {:.1} GFLOP MFMA, \
+             {} kernels, {} fused passes, {} forced splits",
+            c.hbm_total_bytes() / 1e9,
+            c.hbm_read_bytes / 1e9,
+            c.hbm_write_bytes / 1e9,
+            c.mfma_flops / 1e9,
+            c.kernels,
+            c.fused_passes,
+            c.forced_splits
+        );
+    }
+    let out = std::env::var("HK_PROFILE_OUT")
+        .unwrap_or_else(|_| "BENCH_profile.json".to_string());
+    std::fs::write(&out, doc.dump()).expect("write BENCH_profile.json");
+    let tout = std::env::var("HK_TRACE_OUT")
+        .unwrap_or_else(|_| "trace.perfetto.json".to_string());
+    std::fs::write(&tout, timeline.dump()).expect("write trace.perfetto.json");
+    println!("wrote {out} (profile) + {tout} (perfetto timeline)");
+}
+
+/// The exact counter-golden gate: recompute the hand-derivable counter
+/// payload and diff it against the checked-in golden (compared through
+/// parse→dump so formatting is free but every value is exact). Returns
+/// false on drift — CI fails the build and prints both documents.
+pub fn profile_check(golden_path: &str) -> bool {
+    let computed = profile_golden_json();
+    let text = match std::fs::read_to_string(golden_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("counter golden {golden_path} unreadable: {e}");
+            return false;
+        }
+    };
+    let golden = match crate::runtime::json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("counter golden {golden_path} does not parse: {e:?}");
+            return false;
+        }
+    };
+    if golden.dump() == computed.dump() {
+        println!("counter goldens match {golden_path}");
+        true
+    } else {
+        eprintln!("counter-golden drift vs {golden_path}");
+        eprintln!("  golden:   {}", golden.dump());
+        eprintln!("  computed: {}", computed.dump());
+        eprintln!(
+            "  intentional? regenerate with `hipkittens profile --write-golden {golden_path}`"
+        );
+        false
+    }
+}
+
+/// Regenerate the counter golden in place (`profile --write-golden`).
+pub fn profile_write_golden(path: &str) {
+    std::fs::write(path, profile_golden_json().dump()).expect("write counter golden");
+    println!("wrote counter golden {path}");
+}
+
 /// Everything.
 pub fn all() {
     table1();
@@ -1452,6 +1744,7 @@ pub fn all() {
     multi_gpu();
     attn_bwd();
     ablations();
+    profile(M355);
 }
 
 /// Dispatch by experiment name.
@@ -1476,6 +1769,7 @@ pub fn run(name: &str) -> bool {
         "fusion" => fusion(),
         "multi-gpu" | "multi_gpu" => multi_gpu(),
         "attn-bwd" | "attn_bwd" => attn_bwd(),
+        "profile" => profile(M355),
         "ablate" | "ablations" => ablations(),
         "all" => all(),
         _ => return false,

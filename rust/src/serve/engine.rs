@@ -28,12 +28,22 @@ use crate::coordinator::metrics::LatencyStats;
 use crate::error::Result;
 use crate::hk::tunecache::TuneCache;
 use crate::kernels::registry::{ArchId, Query};
-use crate::moe::router::{route, MoeConfig};
+use crate::moe::router::{route, router_softmax_counters, MoeConfig};
+use crate::obs::{KernelCounters, Trace};
 use crate::runtime::json::Json;
 use crate::runtime::Rng;
 use crate::bail;
 use crate::serve::kvcache::{KvCacheConfig, KvCacheManager, KvCacheStats};
 use std::collections::{HashMap, VecDeque};
+
+/// A memoized step price: simulated wall time plus the hardware-style
+/// counter record of the dispatched kernel(s). The engine's rollups
+/// (per-lane, per-run) are exact sums of these.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepCost {
+    pub time_s: f64,
+    pub counters: KernelCounters,
+}
 
 /// Reserved prefix id for the engine's shared system prompt.
 const SYSTEM_PREFIX: u64 = u64::MAX;
@@ -189,6 +199,10 @@ pub struct ServeReport {
     pub e2e: LatencyStats,
     /// Peak aggregate KV occupancy over the run (all pools), 0..=1.
     pub peak_occupancy: f64,
+    /// Run-level counter rollup: the in-order sum of the per-lane
+    /// counters (`per_gpu[i].counters`), so the lane-sum invariant is
+    /// checkable from the report alone.
+    pub counters: KernelCounters,
     pub kv: KvCacheStats,
     /// MoE-side accounting (present when the engine serves an MoE model).
     pub moe: Option<MoeServeStats>,
@@ -209,6 +223,9 @@ pub struct GpuLaneStats {
     pub decode_tokens: u64,
     /// Peak occupancy of this GPU's KV pool, 0..=1.
     pub peak_occupancy: f64,
+    /// Counter rollup of every step this lane paid (attention + MoE
+    /// FFN + membound chains).
+    pub counters: KernelCounters,
 }
 
 /// Aggregated router/grouped-GEMM statistics of an MoE serving run.
@@ -257,7 +274,21 @@ impl ServeReport {
     /// every number is a deterministic cost-model product, so the dump
     /// is byte-stable across runs.
     pub fn to_json(&self) -> Json {
+        let hist = |s: &LatencyStats| {
+            Json::Arr(
+                s.histogram_us()
+                    .into_iter()
+                    .map(|(edge, n)| {
+                        Json::Arr(vec![Json::Num(edge), Json::Num(n as f64)])
+                    })
+                    .collect(),
+            )
+        };
         let mut doc = Json::obj(vec![
+            ("counters", self.counters.to_json()),
+            ("ttft_hist_us", hist(&self.ttft)),
+            ("itl_hist_us", hist(&self.itl)),
+            ("e2e_hist_us", hist(&self.e2e)),
             ("served", Json::Num(self.served as f64)),
             ("preemptions", Json::Num(self.preemptions as f64)),
             ("prefill_steps", Json::Num(self.prefill_steps as f64)),
@@ -296,6 +327,7 @@ impl ServeReport {
                                     "peak_occupancy",
                                     Json::Num(g.peak_occupancy),
                                 ),
+                                ("counters", g.counters.to_json()),
                             ])
                         })
                         .collect(),
@@ -336,17 +368,47 @@ struct Running {
     gpu: u32,
 }
 
+/// Emit KV-plane instants for whatever changed between two stats
+/// snapshots (CoW copies, evictions) at trace time `now`.
+fn kv_delta_instants(
+    t: &mut Trace,
+    pid: u32,
+    now: f64,
+    prev: &KvCacheStats,
+    cur: &KvCacheStats,
+) {
+    let cow = cur.cow_copies - prev.cow_copies;
+    if cow > 0 {
+        t.instant(pid, 0, "kv", "kv-cow", now, vec![(
+            "count".to_string(),
+            Json::Num(cow as f64),
+        )]);
+    }
+    let evicted = cur.evicted_blocks - prev.evicted_blocks;
+    if evicted > 0 {
+        t.instant(pid, 0, "kv", "kv-evict", now, vec![(
+            "blocks".to_string(),
+            Json::Num(evicted as f64),
+        )]);
+    }
+}
+
 /// The continuous-batching engine.
 pub struct ServeEngine {
     cfg: ServeConfig,
     kv: KvCacheManager,
     cache: TuneCache,
-    prefill_memo: HashMap<(u32, u32), f64>,
-    decode_memo: HashMap<(u32, u32), f64>,
-    /// MoE FFN step time memo, keyed by routed token count.
-    moe_memo: HashMap<u32, f64>,
-    /// Membound-chain step time memo, keyed by step token count.
-    mb_memo: HashMap<u32, f64>,
+    prefill_memo: HashMap<(u32, u32), StepCost>,
+    decode_memo: HashMap<(u32, u32), StepCost>,
+    /// MoE FFN step cost memo, keyed by routed token count.
+    moe_memo: HashMap<u32, StepCost>,
+    /// Membound-chain step cost memo, keyed by step token count: one
+    /// (chain name, cost) entry per chain so the timeline can render
+    /// the sub-spans individually.
+    mb_memo: HashMap<u32, Vec<(&'static str, StepCost)>>,
+    /// Timeline under construction when tracing is enabled
+    /// ([`Self::enable_trace`]); taken by [`Self::take_trace`].
+    timeline: Option<Trace>,
 }
 
 impl ServeEngine {
@@ -370,6 +432,7 @@ impl ServeEngine {
             decode_memo: HashMap::new(),
             moe_memo: HashMap::new(),
             mb_memo: HashMap::new(),
+            timeline: None,
         })
     }
 
@@ -377,15 +440,26 @@ impl ServeEngine {
         &self.kv
     }
 
+    /// Record a Chrome-trace timeline during the next [`Self::run_trace`]
+    /// (lane spans, KV/preemption/router instants on the sim clock).
+    pub fn enable_trace(&mut self) {
+        self.timeline = Some(Trace::new());
+    }
+
+    /// Take the recorded timeline (None when tracing was never enabled).
+    pub fn take_trace(&mut self) -> Option<Trace> {
+        self.timeline.take()
+    }
+
     fn bucket(n: u32) -> u32 {
         n.div_ceil(CTX_BUCKET).max(1) * CTX_BUCKET
     }
 
-    /// Simulated wall time of one prefill step (batch x longest prompt).
-    fn prefill_step_s(&mut self, batch: u32, seq: u32) -> f64 {
+    /// Simulated cost of one prefill step (batch x longest prompt).
+    fn prefill_step(&mut self, batch: u32, seq: u32) -> StepCost {
         let key = (batch, Self::bucket(seq));
-        if let Some(&t) = self.prefill_memo.get(&key) {
-            return t;
+        if let Some(&c) = self.prefill_memo.get(&key) {
+            return c;
         }
         let q = Query::attn(
             self.cfg.arch,
@@ -396,16 +470,17 @@ impl ServeEngine {
             self.cfg.d_head,
             true,
         );
-        let t = q.dispatch_with(&mut self.cache).simulate().time_s;
-        self.prefill_memo.insert(key, t);
-        t
+        let perf = q.dispatch_with(&mut self.cache).simulate();
+        let c = StepCost { time_s: perf.time_s, counters: perf.counters };
+        self.prefill_memo.insert(key, c);
+        c
     }
 
-    /// Simulated wall time of one decode step (batch x longest context).
-    fn decode_step_s(&mut self, batch: u32, context: u32) -> f64 {
+    /// Simulated cost of one decode step (batch x longest context).
+    fn decode_step(&mut self, batch: u32, context: u32) -> StepCost {
         let key = (batch, Self::bucket(context));
-        if let Some(&t) = self.decode_memo.get(&key) {
-            return t;
+        if let Some(&c) = self.decode_memo.get(&key) {
+            return c;
         }
         let q = Query::attn_decode(
             self.cfg.arch,
@@ -416,9 +491,10 @@ impl ServeEngine {
             self.cfg.d_head,
             self.cfg.block_size,
         );
-        let t = q.dispatch_with(&mut self.cache).simulate().time_s;
-        self.decode_memo.insert(key, t);
-        t
+        let perf = q.dispatch_with(&mut self.cache).simulate();
+        let c = StepCost { time_s: perf.time_s, counters: perf.counters };
+        self.decode_memo.insert(key, c);
+        c
     }
 
     /// KV context a request occupies once prefilled + `decoded` tokens.
@@ -426,19 +502,20 @@ impl ServeEngine {
         self.cfg.shared_prefix_tokens + req.prompt_tokens + decoded
     }
 
-    /// Simulated wall time of the MoE FFN over `tokens` step tokens
-    /// (0.0 when the engine serves a dense model). Memoized by token
-    /// count — the grouped dispatch itself is tuned once per shape
-    /// bucket in the engine's tune cache.
-    fn moe_ffn_step_s(&mut self, tokens: u32) -> f64 {
+    /// Simulated cost of the MoE FFN over `tokens` step tokens (zero
+    /// when the engine serves a dense model). Memoized by token count —
+    /// the grouped dispatch itself is tuned once per shape bucket in
+    /// the engine's tune cache. The counter record carries the gate
+    /// kernel's top-k softmax traffic on top of the grouped GEMM's.
+    fn moe_ffn_step(&mut self, tokens: u32) -> StepCost {
         let Some(m) = self.cfg.moe else {
-            return 0.0;
+            return StepCost::default();
         };
         if tokens == 0 {
-            return 0.0;
+            return StepCost::default();
         }
-        if let Some(&t) = self.moe_memo.get(&tokens) {
-            return t;
+        if let Some(&c) = self.moe_memo.get(&tokens) {
+            return c;
         }
         let q = Query::moe_gemm(
             self.cfg.arch,
@@ -449,52 +526,74 @@ impl ServeEngine {
             m.top_k,
             m.skew_pct,
         );
-        let t = q.dispatch_with(&mut self.cache).simulate().time_s;
-        self.moe_memo.insert(tokens, t);
-        t
+        let perf = q.dispatch_with(&mut self.cache).simulate();
+        let gate = router_softmax_counters(
+            &MoeConfig::new(m.experts, m.top_k),
+            tokens,
+        );
+        let c = StepCost {
+            time_s: perf.time_s,
+            counters: perf.counters.merged(&gate),
+        };
+        self.moe_memo.insert(tokens, c);
+        c
     }
 
-    /// Simulated wall time of the membound chains (Add+RMSNorm +
+    /// Simulated per-chain costs of the membound plane (Add+RMSNorm +
     /// SiLU+Mul) over `tokens` step tokens, fused or force-split per
-    /// the config (0.0 when the plane is off). Memoized by token
-    /// count, like the MoE FFN.
-    fn mb_step_s(&mut self, tokens: u32) -> f64 {
+    /// the config (empty when the plane is off). Memoized by token
+    /// count, like the MoE FFN; per-chain so the timeline renders each
+    /// chain as its own sub-span.
+    fn mb_step(&mut self, tokens: u32) -> Vec<(&'static str, StepCost)> {
         if self.cfg.mb_fusion == MbFusion::Off || tokens == 0 {
-            return 0.0;
+            return Vec::new();
         }
-        if let Some(&t) = self.mb_memo.get(&tokens) {
-            return t;
+        if let Some(c) = self.mb_memo.get(&tokens) {
+            return c.clone();
         }
         let d = self.cfg.mb_d_model;
         let mut qs = [
-            Query::add_rmsnorm(self.cfg.arch, tokens, d),
-            Query::silu_mul(self.cfg.arch, tokens, d),
+            ("add-rmsnorm", Query::add_rmsnorm(self.cfg.arch, tokens, d)),
+            ("silu-mul", Query::silu_mul(self.cfg.arch, tokens, d)),
         ];
         if self.cfg.mb_fusion == MbFusion::Split {
-            for q in &mut qs {
+            for (_, q) in &mut qs {
                 *q = q.unfused();
             }
         }
-        let t = qs
+        let costs: Vec<(&'static str, StepCost)> = qs
             .iter()
-            .map(|q| q.dispatch_with(&mut self.cache).simulate().time_s)
-            .sum();
-        self.mb_memo.insert(tokens, t);
-        t
+            .map(|(name, q)| {
+                let perf = q.dispatch_with(&mut self.cache).simulate();
+                (
+                    *name,
+                    StepCost { time_s: perf.time_s, counters: perf.counters },
+                )
+            })
+            .collect();
+        self.mb_memo.insert(tokens, costs.clone());
+        costs
     }
 
     /// One router pass over the step's token batch, folded into the
     /// run's MoE statistics. Seeded by the step ordinal so a replayed
-    /// trace routes identically.
-    fn moe_route_step(&mut self, tokens: u32, step: u64, stats: &mut MoeServeStats) {
+    /// trace routes identically. Returns the assignments this pass
+    /// rerouted by capacity overflow (the timeline's router-overflow
+    /// instant).
+    fn moe_route_step(
+        &mut self,
+        tokens: u32,
+        step: u64,
+        stats: &mut MoeServeStats,
+    ) -> u32 {
         let Some(m) = self.cfg.moe else {
-            return;
+            return 0;
         };
         if tokens == 0 {
-            return;
+            return 0;
         }
         // only the routing policy matters here: the FFN's width/cost is
-        // priced separately by `moe_ffn_step_s`
+        // priced separately by `moe_ffn_step`
         let rc = MoeConfig::new(m.experts, m.top_k)
             .with_skew(m.skew_pct as f64 / 100.0)
             .with_seed(0x5EED ^ step);
@@ -503,6 +602,7 @@ impl ServeEngine {
         stats.mean_imbalance += r.stats.aux_imbalance;
         stats.rerouted += u64::from(r.stats.rerouted);
         stats.dropped_slots += u64::from(r.stats.dropped_slots);
+        r.stats.rerouted
     }
 
     /// Serve a trace to completion on the trace clock.
@@ -552,6 +652,19 @@ impl ServeEngine {
         let n_gpus = self.cfg.n_gpus.max(1) as usize;
         let mut lanes: Vec<GpuLaneStats> =
             (0..n_gpus).map(|_| GpuLaneStats::default()).collect();
+        // the timeline is taken out of `self` for the duration of the
+        // run so step-cost methods can borrow `self` mutably alongside it
+        let mut tl = self.timeline.take();
+        let kv_pid = n_gpus as u32;
+        if let Some(t) = tl.as_mut() {
+            for g in 0..n_gpus as u32 {
+                t.meta_process(g, &format!("gpu{g}"));
+                t.meta_thread(g, 0, "attn");
+                t.meta_thread(g, 1, "ffn+membound");
+            }
+            t.meta_process(kv_pid, "kv");
+        }
+        let mut kv_prev = self.kv.stats();
 
         while finished < trace.len() {
             // fold in everything that has arrived by `now`
@@ -657,6 +770,17 @@ impl ServeEngine {
                 active[g] += 1;
                 lanes[g].admitted += 1;
                 newly[g].push(idx);
+                if let Some(t) = tl.as_mut() {
+                    t.instant(gq, 0, "serve", "admit", now, vec![(
+                        "req".to_string(),
+                        Json::Num(req.id as f64),
+                    )]);
+                }
+            }
+            if let Some(t) = tl.as_mut() {
+                let ks = self.kv.stats();
+                kv_delta_instants(t, kv_pid, now, &kv_prev, &ks);
+                kv_prev = ks;
             }
             peak_occ = peak_occ.max(self.kv.occupancy());
             for (g, lane) in lanes.iter_mut().enumerate() {
@@ -669,7 +793,7 @@ impl ServeEngine {
                 // own batch in parallel, so the step costs the slowest
                 // lane; completion = each request's first token
                 let mut dt = 0.0f64;
-                for lane_newly in newly.iter() {
+                for (g, lane_newly) in newly.iter().enumerate() {
                     if lane_newly.is_empty() {
                         continue;
                     }
@@ -679,23 +803,81 @@ impl ServeEngine {
                         .map(|&i| self.context_of(&trace[i], 0))
                         .max()
                         .expect("non-empty batch");
-                    let mut dt_g = self.prefill_step_s(batch, seq);
+                    let attn = self.prefill_step(batch, seq);
+                    let mut dt_g = attn.time_s;
+                    lanes[g].counters.merge(&attn.counters);
                     // the MoE FFN processes every prompt token of the
                     // lane's batch
                     let step_tokens = batch.saturating_mul(seq);
-                    let ffn = self.moe_ffn_step_s(step_tokens);
-                    if ffn > 0.0 {
+                    let ffn = self.moe_ffn_step(step_tokens);
+                    if ffn.time_s > 0.0 {
                         let ordinal = moe_stats.steps;
-                        self.moe_route_step(step_tokens, ordinal, &mut moe_stats);
-                        moe_stats.ffn_time_s += ffn;
-                        dt_g += ffn;
+                        let overflow = self.moe_route_step(
+                            step_tokens,
+                            ordinal,
+                            &mut moe_stats,
+                        );
+                        moe_stats.ffn_time_s += ffn.time_s;
+                        lanes[g].counters.merge(&ffn.counters);
+                        if let Some(t) = tl.as_mut() {
+                            t.span(
+                                g as u32,
+                                1,
+                                "moe",
+                                "moe-ffn",
+                                now + dt_g,
+                                ffn.time_s,
+                                vec![(
+                                    "tokens".to_string(),
+                                    Json::Num(step_tokens as f64),
+                                )],
+                            );
+                            if overflow > 0 {
+                                t.instant(
+                                    g as u32,
+                                    1,
+                                    "moe",
+                                    "router-overflow",
+                                    now + dt_g,
+                                    vec![(
+                                        "rerouted".to_string(),
+                                        Json::Num(overflow as f64),
+                                    )],
+                                );
+                            }
+                        }
+                        dt_g += ffn.time_s;
                     }
                     // membound chains over every prompt token
-                    let mb = self.mb_step_s(step_tokens);
-                    if mb > 0.0 {
+                    let mb = self.mb_step(step_tokens);
+                    if !mb.is_empty() {
+                        let mb_total: f64 =
+                            mb.iter().map(|(_, c)| c.time_s).sum();
                         mb_stats.steps += 1;
-                        mb_stats.time_s += mb;
-                        dt_g += mb;
+                        mb_stats.time_s += mb_total;
+                        let mut cursor = now + dt_g;
+                        for (name, c) in &mb {
+                            lanes[g].counters.merge(&c.counters);
+                            if let Some(t) = tl.as_mut() {
+                                t.span(
+                                    g as u32,
+                                    1,
+                                    "membound",
+                                    name,
+                                    cursor,
+                                    c.time_s,
+                                    vec![],
+                                );
+                            }
+                            cursor += c.time_s;
+                        }
+                        dt_g += mb_total;
+                    }
+                    if let Some(t) = tl.as_mut() {
+                        t.span(g as u32, 0, "serve", "prefill", now, dt_g, vec![
+                            ("batch".to_string(), Json::Num(batch as f64)),
+                            ("seq".to_string(), Json::Num(seq as f64)),
+                        ]);
                     }
                     dt = dt.max(dt_g);
                 }
@@ -757,22 +939,76 @@ impl ServeEngine {
                     .map(|r| self.context_of(&trace[r.idx], r.decoded))
                     .max()
                     .expect("non-empty lane");
-                let mut dt_g = self.decode_step_s(batch, ctx);
+                let attn = self.decode_step(batch, ctx);
+                let mut dt_g = attn.time_s;
+                lanes[g].counters.merge(&attn.counters);
                 // decode emits one token per running sequence: route the
                 // lane's batch and pay the grouped FFN on the step clock
-                let ffn = self.moe_ffn_step_s(batch);
-                if ffn > 0.0 {
+                let ffn = self.moe_ffn_step(batch);
+                if ffn.time_s > 0.0 {
                     let ordinal = moe_stats.steps;
-                    self.moe_route_step(batch, ordinal, &mut moe_stats);
-                    moe_stats.ffn_time_s += ffn;
-                    dt_g += ffn;
+                    let overflow =
+                        self.moe_route_step(batch, ordinal, &mut moe_stats);
+                    moe_stats.ffn_time_s += ffn.time_s;
+                    lanes[g].counters.merge(&ffn.counters);
+                    if let Some(t) = tl.as_mut() {
+                        t.span(
+                            g as u32,
+                            1,
+                            "moe",
+                            "moe-ffn",
+                            now + dt_g,
+                            ffn.time_s,
+                            vec![(
+                                "tokens".to_string(),
+                                Json::Num(batch as f64),
+                            )],
+                        );
+                        if overflow > 0 {
+                            t.instant(
+                                g as u32,
+                                1,
+                                "moe",
+                                "router-overflow",
+                                now + dt_g,
+                                vec![(
+                                    "rerouted".to_string(),
+                                    Json::Num(overflow as f64),
+                                )],
+                            );
+                        }
+                    }
+                    dt_g += ffn.time_s;
                 }
                 // membound chains over the lane's emitted tokens
-                let mb = self.mb_step_s(batch);
-                if mb > 0.0 {
+                let mb = self.mb_step(batch);
+                if !mb.is_empty() {
+                    let mb_total: f64 = mb.iter().map(|(_, c)| c.time_s).sum();
                     mb_stats.steps += 1;
-                    mb_stats.time_s += mb;
-                    dt_g += mb;
+                    mb_stats.time_s += mb_total;
+                    let mut cursor = now + dt_g;
+                    for (name, c) in &mb {
+                        lanes[g].counters.merge(&c.counters);
+                        if let Some(t) = tl.as_mut() {
+                            t.span(
+                                g as u32,
+                                1,
+                                "membound",
+                                name,
+                                cursor,
+                                c.time_s,
+                                vec![],
+                            );
+                        }
+                        cursor += c.time_s;
+                    }
+                    dt_g += mb_total;
+                }
+                if let Some(t) = tl.as_mut() {
+                    t.span(g as u32, 0, "serve", "decode", now, dt_g, vec![
+                        ("batch".to_string(), Json::Num(batch as f64)),
+                        ("ctx".to_string(), Json::Num(ctx as f64)),
+                    ]);
                 }
                 dt = dt.max(dt_g);
             }
@@ -805,11 +1041,21 @@ impl ServeEngine {
                         // pool exhausted: preempt and recompute later
                         self.kv.free_seq(req.id)?;
                         preemptions += 1;
+                        if let Some(t) = tl.as_mut() {
+                            t.instant(r.gpu, 0, "serve", "preempt", now, vec![
+                                ("req".to_string(), Json::Num(req.id as f64)),
+                            ]);
+                        }
                         waiting.push_front(r.idx);
                     }
                 }
             }
             running = still;
+            if let Some(t) = tl.as_mut() {
+                let ks = self.kv.stats();
+                kv_delta_instants(t, kv_pid, now, &kv_prev, &ks);
+                kv_prev = ks;
+            }
             peak_occ = peak_occ.max(self.kv.occupancy());
             for (g, lane) in lanes.iter_mut().enumerate() {
                 lane.peak_occupancy =
@@ -817,6 +1063,13 @@ impl ServeEngine {
             }
         }
 
+        self.timeline = tl;
+        // run counters = the in-order sum of the lane counters, so the
+        // lane-sum invariant holds bit-exactly by construction
+        let mut run_counters = KernelCounters::default();
+        for lane in &lanes {
+            run_counters.merge(&lane.counters);
+        }
         let makespan = now - trace[0].arrival_s;
         Ok(ServeReport {
             served: trace.len() as u64,
@@ -829,6 +1082,7 @@ impl ServeEngine {
             itl,
             e2e,
             peak_occupancy: peak_occ,
+            counters: run_counters,
             kv: self.kv.stats().since(&kv_base),
             moe: self.cfg.moe.map(|_| {
                 let mut m = moe_stats;

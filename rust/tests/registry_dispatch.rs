@@ -61,6 +61,23 @@ fn uncovered_arch_dispatch_warns_and_uses_cdna3_table() {
 }
 
 #[test]
+fn fallback_warning_is_a_deduped_structured_event() {
+    use hipkittens::obs::profiler::{fired, seen};
+    // Resolving an uncovered key twice logs two occurrences in the
+    // structured event log but emits the user-facing warning exactly
+    // once — the raw per-call eprintln is gone.
+    let key = Query::attn_gqa(ArchId::H100Like, 2048, 128, false).bwd().key();
+    let event_key = format!("fallback/{}/{}", key.op.tag(), key.arch.tag());
+    let before = seen(&event_key);
+    let (_, fell_back) = variants_or_fallback(&key);
+    assert!(fell_back);
+    let (_, fell_back_again) = variants_or_fallback(&key);
+    assert!(fell_back_again);
+    assert!(seen(&event_key) >= before + 2, "both occurrences logged");
+    assert_eq!(fired(&event_key), 1, "{event_key} emitted more than once");
+}
+
+#[test]
 fn nvidia_moe_keys_no_longer_ride_the_fallback() {
     // ROADMAP registry-coverage item: grouped-MoE keys on the
     // NVIDIA-like archs resolve against their own native table now.
