@@ -36,6 +36,22 @@ impl KernelPerf {
     pub fn eff_bw_tbps(&self) -> f64 {
         self.eff_bw_tbps
     }
+
+    /// A copy with every time term uniformly scaled (rates rescale to
+    /// match). This is the calibration perturbation hook: scaling the
+    /// surrogate simulates cost-model drift, which is how the
+    /// `calibration_bounds.json` CI gate's trip wire is tested without
+    /// editing model constants (`obs::calib::run_calibration`).
+    pub fn scaled(&self, factor: f64) -> KernelPerf {
+        let f = factor.max(1e-18);
+        let mut p = self.clone();
+        p.time_s *= f;
+        p.compute_s *= f;
+        p.mem_s *= f;
+        p.tflops /= f;
+        p.eff_bw_tbps /= f;
+        p
+    }
 }
 
 /// Effective VMEM latency under a cache hit mix.

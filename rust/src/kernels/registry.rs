@@ -87,6 +87,21 @@ impl Op {
     pub fn from_tag(tag: &str) -> Option<Op> {
         Self::ALL.into_iter().find(|o| o.tag() == tag)
     }
+
+    /// Calibration class: the bucket `obs::calib` aggregates error
+    /// quantiles over. Coarser than [`Op::tag`] — the whole memory-bound
+    /// chain family shares one surrogate (`evaluate_chain`), so it
+    /// calibrates as one class.
+    pub fn class_tag(self) -> &'static str {
+        match self {
+            Op::Gemm => "gemm",
+            Op::AttnFwd => "attn-fwd",
+            Op::AttnBwd => "attn-bwd",
+            Op::AttnDecode => "decode",
+            Op::MoeGemm => "moe",
+            Op::FusedLn | Op::Rope | Op::FusedChain => "fused-chain",
+        }
+    }
 }
 
 /// Named architectures (the simulated fleet of `sim::Arch` presets).

@@ -36,7 +36,17 @@
 //!                         --check-golden F diffs the hand-derivable
 //!                         counter payload against a checked-in golden
 //!                         (exact; CI drift gate), --write-golden F
-//!                         regenerates it
+//!                         regenerates it, --diff OLD NEW renders the
+//!                         per-kernel counter deltas between two
+//!                         BENCH_profile.json payloads
+//!   calibrate             run the calibration grid through both the
+//!                         analytic cost model (surrogate) and the
+//!                         sectored/MSHR cycle sim (oracle); prints
+//!                         per-class error quantiles + the worst
+//!                         configs and writes BENCH_calibration.json
+//!                         (HK_CALIB_OUT). --check-golden F gates the
+//!                         per-class p90 |error| against checked-in
+//!                         bounds, --write-golden F regenerates them
 //!   tune [--arch A]       warm the persistent registry tune cache for
 //!                         the headline kernel keys and save it
 //!   artifacts             list artifact entries + shapes
@@ -64,6 +74,12 @@ fn flag(args: &[String], name: &str) -> Option<String> {
         .cloned()
 }
 
+/// A flag taking two positional values (`--diff <old> <new>`).
+fn flag2(args: &[String], name: &str) -> Option<(String, String)> {
+    let i = args.iter().position(|a| a == name)?;
+    Some((args.get(i + 1)?.clone(), args.get(i + 2)?.clone()))
+}
+
 fn has_flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
 }
@@ -79,7 +95,7 @@ fn main() -> Result<()> {
             let exp = args.get(1).map(String::as_str).unwrap_or("all");
             if !report::run(exp) {
                 bail!(
-                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, fusion, multi-gpu, attn-bwd, profile, all"
+                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, fusion, multi-gpu, attn-bwd, profile, calibrate, all"
                 );
             }
         }
@@ -88,7 +104,11 @@ fn main() -> Result<()> {
         Some("multi-gpu") => report::multi_gpu(),
         Some("attn-bwd") => report::attn_bwd(),
         Some("profile") => {
-            if let Some(path) = flag(&args, "--write-golden") {
+            if let Some((old, new)) = flag2(&args, "--diff") {
+                if !report::profile_diff(&old, &new) {
+                    bail!("profile diff failed (details above)");
+                }
+            } else if let Some(path) = flag(&args, "--write-golden") {
                 report::profile_write_golden(&path);
             } else {
                 let arch = arch_flag(&args)?;
@@ -96,6 +116,19 @@ fn main() -> Result<()> {
                 if let Some(path) = flag(&args, "--check-golden") {
                     if !report::profile_check(&path) {
                         bail!("counter-golden drift (diff above)");
+                    }
+                }
+            }
+        }
+        Some("calibrate") => {
+            let arch = arch_flag(&args)?;
+            if let Some(path) = flag(&args, "--write-golden") {
+                report::calibrate_write_golden(arch, &path);
+            } else {
+                let rep = report::calibrate(arch);
+                if let Some(path) = flag(&args, "--check-golden") {
+                    if !report::calibrate_check(&rep, &path) {
+                        bail!("calibration drift (details above)");
                     }
                 }
             }
@@ -255,7 +288,10 @@ fn main() -> Result<()> {
             eprintln!("       {exe} multi-gpu");
             eprintln!("       {exe} attn-bwd");
             eprintln!(
-                "       {exe} profile [--arch A] [--check-golden F | --write-golden F]"
+                "       {exe} profile [--arch A] [--check-golden F | --write-golden F | --diff OLD NEW]"
+            );
+            eprintln!(
+                "       {exe} calibrate [--arch A] [--check-golden F | --write-golden F]"
             );
             eprintln!("       {exe} tune [--arch mi355x|mi350x|mi325x|b200|h100]");
             eprintln!("       {exe} artifacts | solve | arch");

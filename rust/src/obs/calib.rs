@@ -1,0 +1,536 @@
+//! Calibration observability: how wrong is the analytic cost model?
+//!
+//! `hk::costmodel` is the *surrogate* every autotuner and registry
+//! decision trusts; the sectored/MSHR cache hierarchy in `sim::cache`
+//! plus the cycle engine form the *oracle*. This module runs the same
+//! kernel configs through both and turns the disagreement into an
+//! observable: per-kernel signed relative error
+//! `(surrogate - oracle) / oracle`, rolled into per-class p50/p90/max
+//! quantiles, per-counter deltas, and a ranked worst-calibrated table —
+//! all deterministic, so `BENCH_calibration.json` is byte-stable and
+//! the p90 bounds in `rust/goldens/calibration_bounds.json` gate drift
+//! in CI exactly like the counter golden does.
+//!
+//! The two sides share the compute model (the per-CU cycle engine); the
+//! calibration signal is the *memory* story. The surrogate prices
+//! Eq. (1)'s hit-weighted bandwidth mix over fully-associative LRUs and
+//! a 30/70 streaming heuristic; the oracle replays the same grid
+//! schedules through set-associative sectored tag arrays with MSHR
+//! merge/stall tracking, split data/fill port occupancy, dirty-line
+//! writeback, and a little's-law cap on latency-bound streams.
+
+use crate::bail;
+use crate::error::Result;
+use crate::hk::costmodel::KernelPerf;
+use crate::kernels::gemm;
+use crate::kernels::registry::{ArchId, Dispatch, Query};
+use crate::obs::counters::KernelCounters;
+use crate::obs::Profiler;
+use crate::runtime::json::Json;
+use crate::sim::arch::Arch;
+use crate::sim::cache::{
+    simulate_gemm_hierarchy, simulate_stream_hierarchy, GemmGrid, HierStats,
+    CU_MSHR_LINES,
+};
+use crate::sim::engine::{run_block, EngineConfig};
+
+/// Latency multiplier the decode oracle applies to HBM round-trips:
+/// every KV read chases the block table, so fills arrive a dependent
+/// lookup late and little's law caps the sustainable rate below HBM.
+pub const DECODE_LATENCY_FACTOR: f64 = 1.5;
+
+/// One oracle execution: cycle-engine compute side + hierarchy memory
+/// side, with the counters the hierarchy actually observed.
+#[derive(Debug, Clone)]
+pub struct OracleRun {
+    pub time_s: f64,
+    pub compute_s: f64,
+    pub mem_s: f64,
+    pub counters: KernelCounters,
+    pub hier: HierStats,
+}
+
+/// Oracle for a dispatched GEMM: replay the dispatch-order grid
+/// schedule through the sectored/MSHR hierarchy, feed the resulting
+/// effective latency (and the per-wave MSHR share as the VMEM inflight
+/// cap) into the cycle engine, and roofline the two sides.
+pub fn oracle_gemm(arch: &Arch, d: &Dispatch) -> OracleRun {
+    let cfg = d.gemm_config();
+    let built = gemm::build(arch, cfg);
+    let grid = GemmGrid {
+        m: cfg.m,
+        n: cfg.n,
+        k: cfg.k,
+        block_m: cfg.block_m,
+        block_n: cfg.block_n,
+        block_k: cfg.block_k,
+        elem_bytes: cfg.traffic_bytes(),
+    };
+    let order = gemm::grid_order(arch, cfg);
+    let hier = simulate_gemm_hierarchy(arch, &grid, &order);
+    let lat = hier.effective_latency(arch);
+    let inflight =
+        (CU_MSHR_LINES as u32 / built.info.waves.max(1)).max(1);
+    let ecfg = EngineConfig::for_arch(arch)
+        .with_vmem_latency(lat)
+        .with_vmem_inflight(inflight);
+    let stats = run_block(arch, &ecfg, &built.block);
+
+    let blocks = order.len() as f64;
+    let rounds = (blocks / arch.total_cus().max(1) as f64).ceil();
+    let compute_s = rounds * stats.cycles as f64 * arch.cycle_s();
+    // C stores ride inside the hierarchy as write-allocate + writeback,
+    // so mem_time_s already carries them — no separate store term
+    let mem_s = hier.mem_time_s;
+    let time_s = compute_s.max(mem_s);
+    OracleRun {
+        time_s,
+        compute_s,
+        mem_s,
+        counters: KernelCounters {
+            hbm_read_bytes: hier.hbm_bytes,
+            hbm_write_bytes: hier.writeback_bytes,
+            l2_bytes: hier.total_bytes * hier.l2_hit,
+            lds_bytes: hier.total_bytes,
+            mfma_flops: cfg.flops(),
+            issued_waves: blocks * built.info.waves as f64,
+            kernels: 1,
+            ..KernelCounters::default()
+        },
+        hier,
+    }
+}
+
+/// Oracle for the streaming kernel families (attention fwd/bwd, paged
+/// decode, grouped MoE, fusion chains): re-derive the memory side from
+/// the surrogate's own byte counters — unique footprint
+/// (`hbm_read_bytes`) fills once, on-chip re-reads (`l2_bytes`) come
+/// back through the LLC only when the footprint actually fits, writes
+/// owe writeback — while the compute side is shared with the surrogate.
+pub fn oracle_stream(
+    arch: &Arch,
+    class: &str,
+    perf: &KernelPerf,
+) -> OracleRun {
+    let c = &perf.counters;
+    let read = c.hbm_read_bytes + c.l2_bytes;
+    let write = c.hbm_write_bytes + c.atomic_rmw_bytes;
+    let resident = c.hbm_read_bytes.max(1.0);
+    let latency_factor =
+        if class == "decode" { DECODE_LATENCY_FACTOR } else { 1.0 };
+    let hier =
+        simulate_stream_hierarchy(arch, read, write, resident, latency_factor);
+    let compute_s = perf.compute_s;
+    // the oracle rooflines compute against memory even where the
+    // surrogate serializes passes (attn-bwd): that gap is calibration
+    // signal, not a bug
+    let time_s = compute_s.max(hier.mem_time_s);
+    OracleRun {
+        time_s,
+        compute_s,
+        mem_s: hier.mem_time_s,
+        counters: KernelCounters {
+            hbm_read_bytes: hier.hbm_bytes,
+            hbm_write_bytes: hier.writeback_bytes,
+            l2_bytes: (hier.total_bytes
+                - hier.hbm_bytes
+                - hier.writeback_bytes)
+                .max(0.0),
+            lds_bytes: c.lds_bytes,
+            mfma_flops: c.mfma_flops,
+            issued_waves: c.issued_waves,
+            kernels: 1,
+            ..KernelCounters::default()
+        },
+        hier,
+    }
+}
+
+/// Run the right oracle for a dispatch + its surrogate result.
+pub fn oracle_run(arch: &Arch, d: &Dispatch, perf: &KernelPerf) -> OracleRun {
+    let class = d.key.op.class_tag();
+    if class == "gemm" {
+        oracle_gemm(arch, d)
+    } else {
+        oracle_stream(arch, class, perf)
+    }
+}
+
+/// One calibrated config: both model outputs and the signed error.
+#[derive(Debug, Clone)]
+pub struct CalibRow {
+    pub name: String,
+    pub class: &'static str,
+    pub key: String,
+    pub surrogate_s: f64,
+    pub oracle_s: f64,
+    /// Signed relative error: `(surrogate_s - oracle_s) / oracle_s`.
+    /// Positive = the analytic model is pessimistic (predicts slower
+    /// than the oracle), negative = optimistic.
+    pub err: f64,
+    pub surrogate: KernelCounters,
+    pub oracle: KernelCounters,
+    pub hier: HierStats,
+}
+
+impl CalibRow {
+    /// Per-counter `(name, surrogate, oracle)` triples where the two
+    /// sides disagree, in counter declaration order.
+    pub fn counter_deltas(&self) -> Vec<(&'static str, f64, f64)> {
+        self.surrogate
+            .fields()
+            .into_iter()
+            .zip(self.oracle.fields())
+            .filter(|((_, s), (_, o))| s != o)
+            .map(|((name, s), (_, o))| (name, s, o))
+            .collect()
+    }
+}
+
+/// Error quantiles over one kernel class.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassStats {
+    pub class: &'static str,
+    pub n: usize,
+    /// Median *signed* error (bias direction).
+    pub p50: f64,
+    /// 90th percentile of |error| (the CI-gated quantity).
+    pub p90_abs: f64,
+    /// Worst |error|.
+    pub max_abs: f64,
+}
+
+/// The full calibration result for one arch.
+#[derive(Debug, Clone)]
+pub struct CalibReport {
+    pub arch: ArchId,
+    pub rows: Vec<CalibRow>,
+    pub classes: Vec<ClassStats>,
+}
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize)
+        .clamp(1, sorted.len())
+        - 1;
+    sorted[idx]
+}
+
+fn class_stats(class: &'static str, errs: &[f64]) -> ClassStats {
+    let mut signed: Vec<f64> = errs.to_vec();
+    signed.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut abs: Vec<f64> = errs.iter().map(|e| e.abs()).collect();
+    abs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ClassStats {
+        class,
+        n: errs.len(),
+        p50: quantile(&signed, 0.5),
+        p90_abs: quantile(&abs, 0.9),
+        max_abs: abs.last().copied().unwrap_or(0.0),
+    }
+}
+
+/// The calibration grid: every kernel class at its paper-bench shapes.
+/// Labels are stable — they key the rows in `BENCH_calibration.json`.
+pub fn calib_grid(arch: ArchId) -> Vec<(&'static str, Query)> {
+    use crate::sim::arch::Dtype;
+    vec![
+        ("gemm-bf16-2048", Query::gemm(arch, Dtype::Bf16, 2048, 2048, 2048)),
+        ("gemm-bf16-4096", Query::gemm(arch, Dtype::Bf16, 4096, 4096, 4096)),
+        ("gemm-bf16-8192", Query::gemm(arch, Dtype::Bf16, 8192, 8192, 8192)),
+        ("gemm-fp8-8192", Query::gemm(arch, Dtype::Fp8, 8192, 8192, 8192)),
+        ("attn-gqa-4096", Query::attn_gqa(arch, 4096, 128, true)),
+        ("attn-gqa-8192", Query::attn_gqa(arch, 8192, 128, true)),
+        ("attn-bwd-4096", Query::attn_gqa(arch, 4096, 128, true).bwd()),
+        ("attn-bwd-8192", Query::attn_gqa(arch, 8192, 128, true).bwd()),
+        ("decode-b32-ctx8192", Query::decode_gqa(arch, 32, 8192, 16)),
+        ("decode-b64-ctx4096", Query::decode_gqa(arch, 64, 4096, 16)),
+        ("moe-ffn-e8-k2", Query::moe_ffn(arch, 4096, 8, 2)),
+        ("moe-ffn-e16-k2", Query::moe_ffn(arch, 8192, 16, 2)),
+        ("add-rmsnorm-4096x8192", Query::add_rmsnorm(arch, 4096, 8192)),
+        ("silu-mul-4096x4096", Query::silu_mul(arch, 4096, 4096)),
+        ("rope-8192", Query::rope_paper(arch, 8192)),
+    ]
+}
+
+/// Run the calibration grid through both models.
+///
+/// `surrogate_scale` is the perturbation hook the drift-gate test uses:
+/// it multiplies every surrogate time before the error is taken, so
+/// `1.0` is the real model and anything else simulates cost-model
+/// drift. Oracle and surrogate runs both land in `prof` (scopes
+/// `calibrate/surrogate/...` and `calibrate/oracle/...`), so the
+/// rollup shows what each side priced.
+pub fn run_calibration(
+    arch_id: ArchId,
+    prof: &mut Profiler,
+    surrogate_scale: f64,
+) -> CalibReport {
+    let arch = arch_id.arch();
+    let mut rows = Vec::new();
+    prof.push("calibrate");
+    for (label, q) in calib_grid(arch_id) {
+        let d = q.dispatch();
+        let class = d.key.op.class_tag();
+        let perf = d.simulate();
+        prof.push("surrogate");
+        prof.record(label, &perf);
+        prof.pop();
+        let orun = oracle_run(&arch, &d, &perf);
+        prof.push("oracle");
+        prof.record_counters(label, &orun.counters, orun.time_s);
+        prof.pop();
+        let surrogate_s = perf.scaled(surrogate_scale).time_s;
+        let err = (surrogate_s - orun.time_s) / orun.time_s.max(1e-18);
+        rows.push(CalibRow {
+            name: label.to_string(),
+            class,
+            key: d.key.id(),
+            surrogate_s,
+            oracle_s: orun.time_s,
+            err,
+            surrogate: perf.counters,
+            oracle: orun.counters,
+            hier: orun.hier,
+        });
+    }
+    prof.pop();
+
+    // classes in first-appearance (grid) order
+    let mut classes: Vec<ClassStats> = Vec::new();
+    for row in &rows {
+        if classes.iter().any(|c| c.class == row.class) {
+            continue;
+        }
+        let errs: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.class == row.class)
+            .map(|r| r.err)
+            .collect();
+        classes.push(class_stats(row.class, &errs));
+    }
+    CalibReport { arch: arch_id, rows, classes }
+}
+
+impl CalibReport {
+    /// Rows ranked worst-calibrated first (by |err|, name tiebreak so
+    /// the order is total and deterministic).
+    pub fn worst(&self) -> Vec<&CalibRow> {
+        let mut v: Vec<&CalibRow> = self.rows.iter().collect();
+        v.sort_by(|a, b| {
+            b.err
+                .abs()
+                .partial_cmp(&a.err.abs())
+                .unwrap()
+                .then_with(|| a.name.cmp(&b.name))
+        });
+        v
+    }
+
+    pub fn class(&self, class: &str) -> Option<&ClassStats> {
+        self.classes.iter().find(|c| c.class == class)
+    }
+
+    /// Deterministic JSON body (the `BENCH_calibration.json` payload
+    /// minus the profiler rollup, which `report::calibration_payload`
+    /// attaches).
+    pub fn to_json(&self) -> Json {
+        let classes = Json::Obj(
+            self.classes
+                .iter()
+                .map(|c| {
+                    (
+                        c.class.to_string(),
+                        Json::obj(vec![
+                            ("n", Json::Num(c.n as f64)),
+                            ("p50", Json::Num(c.p50)),
+                            ("p90_abs", Json::Num(c.p90_abs)),
+                            ("max_abs", Json::Num(c.max_abs)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let rows = Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    let deltas = Json::Obj(
+                        r.counter_deltas()
+                            .into_iter()
+                            .map(|(name, s, o)| {
+                                (
+                                    name.to_string(),
+                                    Json::obj(vec![
+                                        ("surrogate", Json::Num(s)),
+                                        ("oracle", Json::Num(o)),
+                                        ("delta", Json::Num(s - o)),
+                                    ]),
+                                )
+                            })
+                            .collect(),
+                    );
+                    Json::obj(vec![
+                        ("name", Json::Str(r.name.clone())),
+                        ("class", Json::Str(r.class.to_string())),
+                        ("key", Json::Str(r.key.clone())),
+                        ("surrogate_s", Json::Num(r.surrogate_s)),
+                        ("oracle_s", Json::Num(r.oracle_s)),
+                        ("err", Json::Num(r.err)),
+                        ("counter_deltas", deltas),
+                        (
+                            "oracle_detail",
+                            Json::obj(vec![
+                                ("l2_hit", Json::Num(r.hier.l2_hit)),
+                                ("llc_hit", Json::Num(r.hier.llc_hit)),
+                                (
+                                    "mshr_merges",
+                                    Json::Num(r.hier.mshr_merges as f64),
+                                ),
+                                (
+                                    "mshr_stalls",
+                                    Json::Num(r.hier.mshr_stalls as f64),
+                                ),
+                                (
+                                    "writeback_bytes",
+                                    Json::Num(r.hier.writeback_bytes),
+                                ),
+                                (
+                                    "eff_bw_tbps",
+                                    Json::Num(r.hier.eff_bw_tbps),
+                                ),
+                            ]),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let worst = Json::Arr(
+            self.worst()
+                .into_iter()
+                .take(5)
+                .map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::Str(r.name.clone())),
+                        ("class", Json::Str(r.class.to_string())),
+                        ("err", Json::Num(r.err)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch.tag().to_string())),
+            ("classes", classes),
+            ("rows", rows),
+            ("worst", worst),
+        ])
+    }
+
+    /// Derive a bounds golden from this run: per-class p90 ceiling with
+    /// headroom (`p90 x 1.5 + 0.02`, rounded up to 3 decimals) so the
+    /// gate catches drift, not noise.
+    pub fn bounds_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch.tag().to_string())),
+            (
+                "p90_bounds",
+                Json::Obj(
+                    self.classes
+                        .iter()
+                        .map(|c| {
+                            let bound = ((c.p90_abs * 1.5 + 0.02) * 1000.0)
+                                .ceil()
+                                / 1000.0;
+                            (c.class.to_string(), Json::Num(bound))
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// The CI drift gate: every class's p90 |error| must stay within
+    /// the checked-in bound, and every class must *have* a bound.
+    pub fn check_bounds(&self, golden: &Json) -> Result<()> {
+        let Some(bounds) = golden.get("p90_bounds") else {
+            bail!("calibration golden has no p90_bounds object");
+        };
+        for c in &self.classes {
+            let Some(bound) = bounds.get(c.class).and_then(|b| b.as_f64())
+            else {
+                bail!(
+                    "class {} has no bound in the calibration golden — \
+                     regenerate with `calibrate --write-golden`",
+                    c.class
+                );
+            };
+            if c.p90_abs > bound {
+                bail!(
+                    "calibration drift: class {} p90 |err| {:.4} exceeds \
+                     bound {:.4} (p50 {:+.4}, max {:.4} over {} configs)",
+                    c.class,
+                    c.p90_abs,
+                    bound,
+                    c.p50,
+                    c.max_abs,
+                    c.n
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_on_known_distributions() {
+        let s = class_stats("t", &[0.1, -0.2, 0.3, -0.4, 0.05]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.p50, 0.05); // median of signed errors
+        assert_eq!(s.p90_abs, 0.4); // ceil(0.9*5)=5th of |err|
+        assert_eq!(s.max_abs, 0.4);
+        let one = class_stats("t", &[-0.07]);
+        assert_eq!(one.p50, -0.07);
+        assert_eq!(one.p90_abs, 0.07);
+        let empty = class_stats("t", &[]);
+        assert_eq!(empty.p90_abs, 0.0);
+    }
+
+    #[test]
+    fn grid_covers_at_least_five_classes() {
+        let grid = calib_grid(ArchId::Mi355x);
+        let mut classes: Vec<&str> = grid
+            .iter()
+            .map(|(_, q)| q.key().op.class_tag())
+            .collect();
+        classes.sort_unstable();
+        classes.dedup();
+        assert!(classes.len() >= 5, "classes: {classes:?}");
+    }
+
+    #[test]
+    fn bounds_check_passes_on_own_bounds_and_trips_on_tight_ones() {
+        let report = CalibReport {
+            arch: ArchId::Mi355x,
+            rows: Vec::new(),
+            classes: vec![class_stats("gemm", &[0.1, -0.05, 0.2])],
+        };
+        report.check_bounds(&report.bounds_json()).unwrap();
+        let tight = Json::obj(vec![(
+            "p90_bounds",
+            Json::obj(vec![("gemm", Json::Num(0.01))]),
+        )]);
+        assert!(report.check_bounds(&tight).is_err());
+        let missing = Json::obj(vec![(
+            "p90_bounds",
+            Json::obj(vec![("attn-fwd", Json::Num(0.5))]),
+        )]);
+        assert!(report.check_bounds(&missing).is_err());
+        assert!(report.check_bounds(&Json::obj::<&str>(vec![])).is_err());
+    }
+}

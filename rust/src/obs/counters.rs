@@ -81,6 +81,28 @@ impl KernelCounters {
         self
     }
 
+    /// The counter fields as `(name, value)` pairs in declaration
+    /// order — the single source the diff renderer
+    /// (`profile --diff`) and the calibration per-counter deltas walk,
+    /// so a new counter shows up in both without touching either.
+    pub fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("hbm_read_bytes", self.hbm_read_bytes),
+            ("hbm_write_bytes", self.hbm_write_bytes),
+            ("l2_bytes", self.l2_bytes),
+            ("lds_bytes", self.lds_bytes),
+            ("mfma_flops", self.mfma_flops),
+            ("issued_waves", self.issued_waves),
+            ("reg_demand", self.reg_demand as f64),
+            ("spill_cycles", self.spill_cycles),
+            ("atomic_rmw_bytes", self.atomic_rmw_bytes),
+            ("cross_gpu_bytes", self.cross_gpu_bytes),
+            ("fused_passes", self.fused_passes as f64),
+            ("forced_splits", self.forced_splits as f64),
+            ("kernels", self.kernels as f64),
+        ]
+    }
+
     /// Deterministic JSON object (BTreeMap key order).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![

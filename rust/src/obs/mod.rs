@@ -16,12 +16,19 @@
 //!   lane → run); [`profiler`] also hosts the deduped structured event
 //!   log that replaced the registry's raw `eprintln!` fallback warning.
 //! - [`trace::Trace`]: the `trace.perfetto.json` exporter (Chrome
-//!   trace-event format, loadable in Perfetto or `chrome://tracing`).
+//!   trace-event format, loadable in Perfetto or `chrome://tracing`),
+//!   including flow events linking each serve request's admit →
+//!   prefill → decode spans across lanes.
+//! - [`calib`]: calibration observability — the cycle-sim oracle vs
+//!   `hk::costmodel` surrogate error telemetry behind the `calibrate`
+//!   CLI and the `calibration_bounds.json` CI drift gate.
 
+pub mod calib;
 pub mod counters;
 pub mod profiler;
 pub mod trace;
 
+pub use calib::{run_calibration, CalibReport, CalibRow, ClassStats};
 pub use counters::KernelCounters;
 pub use profiler::{Profiler, ProfilerEntry};
 pub use trace::Trace;

@@ -106,6 +106,71 @@ impl Trace {
         self.events.push(Json::obj(e));
     }
 
+    fn flow(
+        &mut self,
+        ph: &str,
+        pid: u32,
+        tid: u32,
+        cat: &str,
+        name: &str,
+        ts_s: f64,
+        id: u64,
+    ) {
+        let mut e = Self::base(ph, pid, tid, cat, name, ts_s);
+        e.push(("id".to_string(), Json::Num(id as f64)));
+        if ph == "f" {
+            // bind the arrow head to the enclosing slice, not the next
+            e.push(("bp".to_string(), Json::Str("e".to_string())));
+        }
+        self.events.push(Json::obj(e));
+    }
+
+    /// Start a flow (`ph:"s"`): anchors arrow `id` at (pid, tid, ts).
+    /// Perfetto draws the arrow chain s → t… → f across tracks; the
+    /// serve engine uses one flow per request to link its admit instant
+    /// to the prefill and decode spans that serve it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn flow_start(
+        &mut self,
+        pid: u32,
+        tid: u32,
+        cat: &str,
+        name: &str,
+        ts_s: f64,
+        id: u64,
+    ) {
+        self.flow("s", pid, tid, cat, name, ts_s, id);
+    }
+
+    /// A flow waypoint (`ph:"t"`) — must follow the flow's start.
+    #[allow(clippy::too_many_arguments)]
+    pub fn flow_step(
+        &mut self,
+        pid: u32,
+        tid: u32,
+        cat: &str,
+        name: &str,
+        ts_s: f64,
+        id: u64,
+    ) {
+        self.flow("t", pid, tid, cat, name, ts_s, id);
+    }
+
+    /// End a flow (`ph:"f"`, binding point `e`) — exactly one per
+    /// started flow, after which the id is closed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn flow_end(
+        &mut self,
+        pid: u32,
+        tid: u32,
+        cat: &str,
+        name: &str,
+        ts_s: f64,
+        id: u64,
+    ) {
+        self.flow("f", pid, tid, cat, name, ts_s, id);
+    }
+
     /// The full Chrome-trace document.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -123,11 +188,25 @@ impl Trace {
 /// Validate a document against the subset of the Chrome trace-event
 /// schema this exporter emits (what the `profile` test gates on):
 /// a `traceEvents` array whose entries carry `name`/`ph`/`pid`/`tid`/
-/// `ts`, with `dur >= 0` on complete spans and a scope on instants.
+/// `ts`, with `dur >= 0` on complete spans, a scope on instants,
+/// balanced `B`/`E` nesting per track, per-track non-decreasing
+/// timestamps (metadata exempt), and paired flow events — every flow
+/// id opens with exactly one `s`, may carry `t` waypoints, and closes
+/// with exactly one `f` after which the id is dead.
 pub fn validate_chrome_trace(doc: &Json) -> std::result::Result<(), String> {
+    use std::collections::HashMap;
     let Some(events) = doc.get("traceEvents").and_then(|e| e.as_arr()) else {
         return Err("missing traceEvents array".to_string());
     };
+    // flow id → Started / Ended
+    #[derive(PartialEq)]
+    enum FlowState {
+        Started,
+        Ended,
+    }
+    let mut flows: HashMap<u64, FlowState> = HashMap::new();
+    let mut depth: HashMap<(u64, u64), i64> = HashMap::new();
+    let mut last_ts: HashMap<(u64, u64), f64> = HashMap::new();
     for (i, e) in events.iter().enumerate() {
         let ph = e
             .get("ph")
@@ -138,6 +217,10 @@ pub fn validate_chrome_trace(doc: &Json) -> std::result::Result<(), String> {
                 return Err(format!("event {i}: missing {field}"));
             }
         }
+        let track = (
+            e.get("pid").and_then(|p| p.as_u64()).unwrap_or(0),
+            e.get("tid").and_then(|t| t.as_u64()).unwrap_or(0),
+        );
         match ph {
             "X" => {
                 let dur = e
@@ -148,10 +231,58 @@ pub fn validate_chrome_trace(doc: &Json) -> std::result::Result<(), String> {
                     return Err(format!("event {i}: negative dur {dur}"));
                 }
             }
+            "B" => {
+                *depth.entry(track).or_insert(0) += 1;
+            }
+            "E" => {
+                let d = depth.entry(track).or_insert(0);
+                if *d == 0 {
+                    return Err(format!(
+                        "event {i}: E without matching B on track {track:?}"
+                    ));
+                }
+                *d -= 1;
+            }
             "i" => {
                 let s = e.get("s").and_then(|s| s.as_str()).unwrap_or("t");
                 if !matches!(s, "g" | "p" | "t") {
                     return Err(format!("event {i}: bad instant scope {s:?}"));
+                }
+            }
+            "s" | "t" | "f" => {
+                let id = e
+                    .get("id")
+                    .and_then(|d| d.as_u64())
+                    .ok_or_else(|| format!("event {i}: flow without id"))?;
+                let state = flows.get(&id);
+                match ph {
+                    "s" => {
+                        if state.is_some() {
+                            return Err(format!(
+                                "event {i}: duplicate flow start for id {id}"
+                            ));
+                        }
+                        flows.insert(id, FlowState::Started);
+                    }
+                    "t" | "f" => {
+                        match state {
+                            Some(FlowState::Started) => {}
+                            Some(FlowState::Ended) => {
+                                return Err(format!(
+                                    "event {i}: flow {ph:?} after end of id {id}"
+                                ));
+                            }
+                            None => {
+                                return Err(format!(
+                                    "event {i}: flow {ph:?} before start of id {id}"
+                                ));
+                            }
+                        }
+                        if ph == "f" {
+                            flows.insert(id, FlowState::Ended);
+                        }
+                    }
+                    _ => unreachable!(),
                 }
             }
             "M" => {
@@ -165,6 +296,26 @@ pub fn validate_chrome_trace(doc: &Json) -> std::result::Result<(), String> {
             if ts < 0.0 {
                 return Err(format!("event {i}: negative ts {ts}"));
             }
+            // metadata records sit at ts 0 regardless of emission time
+            if ph != "M" {
+                let prev = last_ts.entry(track).or_insert(ts);
+                if ts < *prev {
+                    return Err(format!(
+                        "event {i}: ts {ts} before {prev} on track {track:?}"
+                    ));
+                }
+                *prev = ts;
+            }
+        }
+    }
+    for (track, d) in &depth {
+        if *d != 0 {
+            return Err(format!("unclosed B span(s) on track {track:?}"));
+        }
+    }
+    for (id, state) in &flows {
+        if *state != FlowState::Ended {
+            return Err(format!("flow id {id} started but never ended"));
         }
     }
     Ok(())
@@ -220,5 +371,133 @@ mod tests {
             ])]),
         )]);
         assert!(validate_chrome_trace(&x_without_dur).is_err());
+    }
+
+    fn raw(ph: &str, tid: u32, ts: f64) -> Json {
+        Json::obj(vec![
+            ("ph", Json::Str(ph.to_string())),
+            ("name", Json::Str("x".to_string())),
+            ("pid", Json::Num(0.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("ts", Json::Num(ts)),
+        ])
+    }
+
+    fn doc_of(events: Vec<Json>) -> Json {
+        Json::obj(vec![("traceEvents", Json::Arr(events))])
+    }
+
+    #[test]
+    fn validator_rejects_missing_ph_and_unpaired_b_e() {
+        let no_ph = Json::obj(vec![
+            ("name", Json::Str("x".to_string())),
+            ("pid", Json::Num(0.0)),
+            ("tid", Json::Num(0.0)),
+            ("ts", Json::Num(0.0)),
+        ]);
+        let err = validate_chrome_trace(&doc_of(vec![no_ph])).unwrap_err();
+        assert!(err.contains("missing ph"), "{err}");
+        // E before any B on the track
+        let err = validate_chrome_trace(&doc_of(vec![raw("E", 0, 0.0)]))
+            .unwrap_err();
+        assert!(err.contains("E without matching B"), "{err}");
+        // B left open at end of trace
+        let err = validate_chrome_trace(&doc_of(vec![raw("B", 0, 0.0)]))
+            .unwrap_err();
+        assert!(err.contains("unclosed B"), "{err}");
+        // balanced pair on one track passes; nesting depth is per
+        // (pid, tid), so another track's B does not close it
+        validate_chrome_trace(&doc_of(vec![
+            raw("B", 0, 0.0),
+            raw("B", 1, 0.0),
+            raw("E", 0, 1.0),
+            raw("E", 1, 1.0),
+        ]))
+        .unwrap();
+        let err = validate_chrome_trace(&doc_of(vec![
+            raw("B", 0, 0.0),
+            raw("E", 1, 1.0),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("without matching B"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_non_monotone_ts_per_track() {
+        // going backwards on one track fails…
+        let err = validate_chrome_trace(&doc_of(vec![
+            raw("i", 0, 10.0),
+            raw("i", 0, 5.0),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("before"), "{err}");
+        // …but interleaved tracks each advancing are fine, as are ties
+        validate_chrome_trace(&doc_of(vec![
+            raw("i", 0, 10.0),
+            raw("i", 1, 0.0),
+            raw("i", 0, 10.0),
+            raw("i", 1, 4.0),
+        ]))
+        .unwrap();
+        // metadata is exempt: it sits at ts 0 whenever it is emitted
+        let mut t = Trace::new();
+        t.instant(0, 0, "c", "late", 1.0, vec![]);
+        t.meta_thread(0, 0, "named-after-the-fact");
+        validate_chrome_trace(&t.to_json()).unwrap();
+    }
+
+    #[test]
+    fn validator_checks_flow_pairing() {
+        let flow = |ph: &str, id: f64, ts: f64| {
+            Json::obj(vec![
+                ("ph", Json::Str(ph.to_string())),
+                ("name", Json::Str("req".to_string())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(0.0)),
+                ("ts", Json::Num(ts)),
+                ("id", Json::Num(id)),
+            ])
+        };
+        // the happy path: s → t → f
+        validate_chrome_trace(&doc_of(vec![
+            flow("s", 7.0, 0.0),
+            flow("t", 7.0, 1.0),
+            flow("f", 7.0, 2.0),
+        ]))
+        .unwrap();
+        // step before start
+        let err = validate_chrome_trace(&doc_of(vec![flow("t", 7.0, 0.0)]))
+            .unwrap_err();
+        assert!(err.contains("before start"), "{err}");
+        // start never ended
+        let err = validate_chrome_trace(&doc_of(vec![flow("s", 7.0, 0.0)]))
+            .unwrap_err();
+        assert!(err.contains("never ended"), "{err}");
+        // duplicate start
+        let err = validate_chrome_trace(&doc_of(vec![
+            flow("s", 7.0, 0.0),
+            flow("s", 7.0, 1.0),
+            flow("f", 7.0, 2.0),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("duplicate flow start"), "{err}");
+        // traffic after the end
+        let err = validate_chrome_trace(&doc_of(vec![
+            flow("s", 7.0, 0.0),
+            flow("f", 7.0, 1.0),
+            flow("t", 7.0, 2.0),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("after end"), "{err}");
+        // flows need ids
+        let err = validate_chrome_trace(&doc_of(vec![raw("s", 0, 0.0)]))
+            .unwrap_err();
+        assert!(err.contains("without id"), "{err}");
+        // the emitter's own flow methods produce a valid chain
+        let mut t = Trace::new();
+        t.flow_start(0, 0, "serve", "req", 0.0, 42);
+        t.flow_step(0, 1, "serve", "req", 1.0, 42);
+        t.flow_end(0, 1, "serve", "req", 2.0, 42);
+        validate_chrome_trace(&t.to_json()).unwrap();
     }
 }

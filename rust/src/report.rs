@@ -1489,6 +1489,10 @@ pub fn profile_payload(
     let a = arch.arch();
     let mut cache = TuneCache::new();
     let mut prof = crate::obs::Profiler::new();
+    // the event log is process-global; snapshot it so the payload
+    // carries only the events *this* run produced (deterministic even
+    // when the payload is built twice in one process)
+    let ev_base = crate::obs::profiler::seen_snapshot();
     let mut rows: Vec<Json> = Vec::new();
     prof.push("kernels");
     for (label, dtype, q) in profile_grid(arch) {
@@ -1563,11 +1567,13 @@ pub fn profile_payload(
     }
     prof.pop();
 
+    let events = crate::obs::profiler::events_since(&ev_base);
     let doc = Json::obj(vec![
         ("bench", Json::Str("profile".into())),
         ("arch", Json::Str(arch.tag().into())),
         ("rows", Json::Arr(rows)),
         ("rollup", prof.to_json()),
+        ("events", crate::obs::profiler::events_json(&events)),
         ("serve", rep.to_json()),
         ("train_step_s", Json::Num(train::predicted_step_s(&plan))),
     ]);
@@ -1722,6 +1728,228 @@ pub fn profile_write_golden(path: &str) {
     println!("wrote counter golden {path}");
 }
 
+/// Build the `BENCH_calibration.json` payload: the oracle-vs-surrogate
+/// calibration body (`obs::calib`) plus the profiler rollup that saw
+/// both sides run. A pure function of `arch` on the sim clock — two
+/// calls dump byte-identical JSON.
+pub fn calibration_payload(
+    arch: ArchId,
+) -> (crate::obs::CalibReport, crate::runtime::json::Json) {
+    use crate::runtime::json::Json;
+    let mut prof = crate::obs::Profiler::new();
+    let rep = crate::obs::run_calibration(arch, &mut prof, 1.0);
+    let body = rep.to_json();
+    let field = |k: &str| body.get(k).cloned().unwrap_or(Json::Null);
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("calibration".into())),
+        ("arch", Json::Str(arch.tag().into())),
+        ("classes", field("classes")),
+        ("rows", field("rows")),
+        ("worst", field("worst")),
+        ("rollup", prof.to_json()),
+    ]);
+    (rep, doc)
+}
+
+/// `calibrate` — run every calibration-grid config through both the
+/// analytic surrogate and the cycle-sim oracle, print the per-class
+/// signed-error quantiles and the ranked worst-calibrated configs, and
+/// write `BENCH_calibration.json` (override with `HK_CALIB_OUT`).
+/// Returns the report so `--check-golden` can gate on it.
+pub fn calibrate(arch: ArchId) -> crate::obs::CalibReport {
+    hr(&format!(
+        "calibrate — analytic surrogate vs cycle-sim oracle ({})",
+        arch.tag()
+    ));
+    let (rep, doc) = calibration_payload(arch);
+    println!(
+        "{:<12} {:>3} {:>9} {:>9} {:>9}",
+        "class", "n", "p50", "p90 |e|", "max |e|"
+    );
+    for c in &rep.classes {
+        println!(
+            "{:<12} {:>3} {:>+8.1}% {:>8.1}% {:>8.1}%",
+            c.class,
+            c.n,
+            c.p50 * 100.0,
+            c.p90_abs * 100.0,
+            c.max_abs * 100.0
+        );
+    }
+    println!("\nworst-calibrated configs:");
+    println!(
+        "{:<24} {:<12} {:>12} {:>12} {:>8}",
+        "config", "class", "surrogate", "oracle", "err"
+    );
+    for r in rep.worst().into_iter().take(8) {
+        println!(
+            "{:<24} {:<12} {:>9.3} ms {:>9.3} ms {:>+7.1}%",
+            r.name,
+            r.class,
+            r.surrogate_s * 1e3,
+            r.oracle_s * 1e3,
+            r.err * 100.0
+        );
+    }
+    println!("  (err = (surrogate - oracle) / oracle; positive = the");
+    println!("   analytic model is pessimistic at that config)");
+    let out = std::env::var("HK_CALIB_OUT")
+        .unwrap_or_else(|_| "BENCH_calibration.json".to_string());
+    std::fs::write(&out, doc.dump()).expect("write BENCH_calibration.json");
+    println!("\nwrote {out}");
+    rep
+}
+
+/// The calibration drift gate (`calibrate --check-golden`): every
+/// class's p90 |error| must stay within the checked-in bound. Returns
+/// false on drift or an unreadable golden — CI fails the build.
+pub fn calibrate_check(
+    rep: &crate::obs::CalibReport,
+    golden_path: &str,
+) -> bool {
+    let text = match std::fs::read_to_string(golden_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("calibration golden {golden_path} unreadable: {e}");
+            return false;
+        }
+    };
+    let golden = match crate::runtime::json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("calibration golden {golden_path} does not parse: {e:?}");
+            return false;
+        }
+    };
+    match rep.check_bounds(&golden) {
+        Ok(()) => {
+            println!("calibration within bounds {golden_path}");
+            true
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            eprintln!(
+                "  intentional? regenerate with `hipkittens calibrate \
+                 --write-golden {golden_path}`"
+            );
+            false
+        }
+    }
+}
+
+/// Regenerate the calibration bounds golden in place
+/// (`calibrate --write-golden`).
+pub fn calibrate_write_golden(arch: ArchId, path: &str) {
+    let mut prof = crate::obs::Profiler::new();
+    let rep = crate::obs::run_calibration(arch, &mut prof, 1.0);
+    std::fs::write(path, rep.bounds_json().dump())
+        .expect("write calibration bounds golden");
+    println!("wrote calibration bounds {path}");
+}
+
+/// Flatten a profile payload's rollup into `(path, field) -> value` for
+/// the diff renderer: every counter field plus the `records` and
+/// `time_s` sums at each rollup path.
+fn rollup_values(
+    doc: &crate::runtime::json::Json,
+) -> std::collections::BTreeMap<(String, String), f64> {
+    use crate::runtime::json::Json;
+    let mut out = std::collections::BTreeMap::new();
+    let Some(Json::Obj(rollup)) = doc.get("rollup") else {
+        return out;
+    };
+    for (path, entry) in rollup {
+        if let Some(Json::Obj(counters)) = entry.get("counters") {
+            for (field, v) in counters {
+                if let Some(x) = v.as_f64() {
+                    out.insert((path.clone(), field.clone()), x);
+                }
+            }
+        }
+        for field in ["records", "time_s"] {
+            if let Some(x) = entry.get(field).and_then(Json::as_f64) {
+                out.insert((path.clone(), field.to_string()), x);
+            }
+        }
+    }
+    out
+}
+
+/// `profile --diff <old> <new>` — render the counter deltas between two
+/// `BENCH_profile.json` payloads: absolute and percent change per
+/// rollup path and counter, nonzero rows only, sorted by |delta|
+/// descending (path/field tiebreak, so the order is total). Returns
+/// false when either payload is missing or unparseable; an empty diff
+/// is success.
+pub fn profile_diff(old_path: &str, new_path: &str) -> bool {
+    let load = |path: &str| {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("profile payload {path} unreadable: {e}");
+                return None;
+            }
+        };
+        match crate::runtime::json::parse(&text) {
+            Ok(j) => Some(j),
+            Err(e) => {
+                eprintln!("profile payload {path} does not parse: {e:?}");
+                None
+            }
+        }
+    };
+    let (Some(old), Some(new)) = (load(old_path), load(new_path)) else {
+        return false;
+    };
+    let a = rollup_values(&old);
+    let b = rollup_values(&new);
+    let keys: std::collections::BTreeSet<&(String, String)> =
+        a.keys().chain(b.keys()).collect();
+    let mut rows: Vec<(f64, f64, f64, &(String, String))> = Vec::new();
+    for k in keys {
+        let x = a.get(k).copied().unwrap_or(0.0);
+        let y = b.get(k).copied().unwrap_or(0.0);
+        if x != y {
+            rows.push((y - x, x, y, k));
+        }
+    }
+    rows.sort_by(|p, q| {
+        q.0.abs()
+            .partial_cmp(&p.0.abs())
+            .unwrap()
+            .then_with(|| p.3.cmp(q.3))
+    });
+    hr(&format!("profile diff — {old_path} -> {new_path}"));
+    if rows.is_empty() {
+        println!("no counter drift: payload rollups are identical");
+        return true;
+    }
+    println!(
+        "{:<34} {:<16} {:>13} {:>13} {:>13} {:>9}",
+        "path", "counter", "old", "new", "delta", "pct"
+    );
+    const MAX_ROWS: usize = 40;
+    for &(delta, x, y, k) in rows.iter().take(MAX_ROWS) {
+        let pct = if x != 0.0 {
+            format!("{:+.1}%", delta / x * 100.0)
+        } else {
+            "new".to_string()
+        };
+        println!(
+            "{:<34} {:<16} {:>13.4e} {:>13.4e} {:>+13.4e} {:>9}",
+            k.0, k.1, x, y, delta, pct
+        );
+    }
+    if rows.len() > MAX_ROWS {
+        println!(
+            "  ... and {} more differing counters",
+            rows.len() - MAX_ROWS
+        );
+    }
+    println!("{} differing counters", rows.len());
+    true
+}
+
 /// Everything.
 pub fn all() {
     table1();
@@ -1745,6 +1973,7 @@ pub fn all() {
     attn_bwd();
     ablations();
     profile(M355);
+    calibrate(M355);
 }
 
 /// Dispatch by experiment name.
@@ -1770,6 +1999,9 @@ pub fn run(name: &str) -> bool {
         "multi-gpu" | "multi_gpu" => multi_gpu(),
         "attn-bwd" | "attn_bwd" => attn_bwd(),
         "profile" => profile(M355),
+        "calibrate" => {
+            calibrate(M355);
+        }
         "ablate" | "ablations" => ablations(),
         "all" => all(),
         _ => return false,

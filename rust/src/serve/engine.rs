@@ -631,6 +631,11 @@ impl ServeEngine {
         // highest token index each request has *delivered*; recomputed
         // tokens after a preemption must not re-enter the latency stats
         let mut reached: Vec<u32> = vec![0; trace.len()];
+        // per-request Perfetto flow arrows (id = request id): "s" at
+        // first admission, "t" at re-admissions / prefill / first
+        // decoded token, "f" at completion — so the viewer links each
+        // request's journey across lanes and preemptions
+        let mut flow_started: Vec<bool> = vec![false; trace.len()];
         // trace time of each request's latest delivered token — ITL for
         // the next one spans prefills and preemption stalls in between
         let mut last_emit: Vec<f64> = vec![0.0; trace.len()];
@@ -775,6 +780,14 @@ impl ServeEngine {
                         "req".to_string(),
                         Json::Num(req.id as f64),
                     )]);
+                    if flow_started[idx] {
+                        // re-admission after a preemption continues the
+                        // request's existing arrow
+                        t.flow_step(gq, 0, "serve", "req", now, req.id);
+                    } else {
+                        flow_started[idx] = true;
+                        t.flow_start(gq, 0, "serve", "req", now, req.id);
+                    }
                 }
             }
             if let Some(t) = tl.as_mut() {
@@ -878,6 +891,16 @@ impl ServeEngine {
                             ("batch".to_string(), Json::Num(batch as f64)),
                             ("seq".to_string(), Json::Num(seq as f64)),
                         ]);
+                        for &idx in lane_newly {
+                            t.flow_step(
+                                g as u32,
+                                0,
+                                "serve",
+                                "req",
+                                now,
+                                trace[idx].id,
+                            );
+                        }
                     }
                     dt = dt.max(dt_g);
                 }
@@ -899,6 +922,16 @@ impl ServeEngine {
                             delivered_tokens +=
                                 u64::from(req.output_tokens.max(1));
                             finished += 1;
+                            if let Some(t) = tl.as_mut() {
+                                t.flow_end(
+                                    g as u32,
+                                    0,
+                                    "serve",
+                                    "req",
+                                    now,
+                                    req.id,
+                                );
+                            }
                         } else {
                             running.push(Running {
                                 idx,
@@ -1028,11 +1061,21 @@ impl ServeEngine {
                     reached[r.idx] = r.decoded;
                     last_emit[r.idx] = now;
                 }
+                if r.decoded == 2 {
+                    // first decoded token (again after each preemption):
+                    // route the request's arrow through the decode lane
+                    if let Some(t) = tl.as_mut() {
+                        t.flow_step(r.gpu, 0, "serve", "req", now, req.id);
+                    }
+                }
                 if r.decoded >= req.output_tokens.max(1) {
                     self.kv.free_seq(req.id)?;
                     e2e.record_s(now - req.arrival_s);
                     delivered_tokens += u64::from(req.output_tokens.max(1));
                     finished += 1;
+                    if let Some(t) = tl.as_mut() {
+                        t.flow_end(r.gpu, 0, "serve", "req", now, req.id);
+                    }
                     continue;
                 }
                 match self.kv.append_token(req.id) {

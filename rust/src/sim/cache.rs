@@ -247,6 +247,488 @@ pub fn streaming_time_s(arch: &Arch, bytes: f64, resident_bytes: f64) -> f64 {
     }
 }
 
+// ---------------------------------------------------------------------------
+// High-fidelity hierarchy: sectored tag arrays, MSHRs, port occupancy,
+// writeback. This is the calibration oracle's memory side (gpucachesim
+// idiom): where [`simulate_gemm_schedule`] prices Eq. (1)'s hit-weighted
+// bandwidth mix over fully-associative LRUs, this layer tracks
+// set-associative sectored lines, merges concurrent misses in MSHRs,
+// charges data/fill port occupancy separately, and writes dirty output
+// lines back. `obs::calib` diffs the analytic surrogate against it.
+// ---------------------------------------------------------------------------
+
+/// Sector granularity of a cache line (bytes) — fills move sectors.
+pub const SECTOR_BYTES: f64 = 32.0;
+/// Sectors per line: lines allocate whole, fill sector by sector.
+pub const SECTORS_PER_LINE: u32 = 4;
+/// Set-associativity of the per-XCD L2 tag array.
+pub const L2_WAYS: usize = 8;
+/// Set-associativity of the shared LLC tag array.
+pub const LLC_WAYS: usize = 16;
+/// Per-XCD MSHR entries (sector-granular fills in flight before
+/// allocation stalls the requesting wave).
+pub const L2_MSHR_ENTRIES: usize = 128;
+/// Per-CU outstanding 128 B fills for the streaming little's-law bound:
+/// sustainable bandwidth = entries x line / latency per CU.
+pub const CU_MSHR_LINES: f64 = 128.0;
+/// Line size the streaming MSHR bound fills at (bytes).
+pub const STREAM_LINE_BYTES: f64 = 128.0;
+
+/// Outcome of one sectored tag-array access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Probe {
+    /// Line present, sector filled.
+    Hit,
+    /// Line present but the sector has not been filled yet (half miss:
+    /// no new line allocation, one sector fill).
+    SectorMiss,
+    /// Line absent: allocate (possibly evicting a dirty victim).
+    LineMiss,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct TagLine {
+    key: u64,
+    /// Bitmask of filled sectors.
+    filled: u32,
+    dirty: bool,
+    last_use: u64,
+    valid: bool,
+}
+
+const EMPTY_LINE: TagLine =
+    TagLine { key: 0, filled: 0, dirty: false, last_use: 0, valid: false };
+
+/// A set-associative sectored tag array with LRU replacement per set and
+/// dirty-bit writeback accounting.
+#[derive(Debug)]
+pub struct TagArray {
+    sets: usize,
+    ways: usize,
+    lines: Vec<TagLine>,
+    stamp: u64,
+    /// Dirty lines evicted (each owes one line of writeback traffic).
+    pub writebacks: u64,
+    /// Sector fills performed (misses at sector granularity).
+    pub sector_fills: u64,
+}
+
+impl TagArray {
+    /// A tag array holding `capacity_lines` lines at `ways` associativity.
+    pub fn new(capacity_lines: usize, ways: usize) -> Self {
+        let ways = ways.max(1);
+        let sets = (capacity_lines / ways).max(1);
+        TagArray {
+            sets,
+            ways,
+            lines: vec![EMPTY_LINE; sets * ways],
+            stamp: 0,
+            writebacks: 0,
+            sector_fills: 0,
+        }
+    }
+
+    fn set_of(&self, key: u64) -> usize {
+        // multiplicative hash: tile keys are structured (tensor|row|k)
+        (key.wrapping_mul(0x9E3779B97F4A7C15) >> 32) as usize % self.sets
+    }
+
+    /// Access `sector` (0..[`SECTORS_PER_LINE`]) of line `key`. Returns
+    /// the probe outcome; on a `LineMiss` the line is allocated (LRU
+    /// victim in the set, counting a writeback if it was dirty) and on
+    /// any miss the sector is filled. `write` marks the line dirty.
+    pub fn access(&mut self, key: u64, sector: u32, write: bool) -> Probe {
+        self.stamp += 1;
+        let set = self.set_of(key);
+        let base = set * self.ways;
+        let bit = 1u32 << (sector % SECTORS_PER_LINE);
+        let mut victim = base;
+        let mut victim_use = u64::MAX;
+        for i in base..base + self.ways {
+            let l = &mut self.lines[i];
+            if l.valid && l.key == key {
+                l.last_use = self.stamp;
+                l.dirty |= write;
+                if l.filled & bit != 0 {
+                    return Probe::Hit;
+                }
+                l.filled |= bit;
+                self.sector_fills += 1;
+                return Probe::SectorMiss;
+            }
+            let use_rank = if l.valid { l.last_use } else { 0 };
+            if use_rank < victim_use {
+                victim_use = use_rank;
+                victim = i;
+            }
+        }
+        let v = &mut self.lines[victim];
+        if v.valid && v.dirty {
+            self.writebacks += 1;
+        }
+        *v = TagLine {
+            key,
+            filled: bit,
+            dirty: write,
+            last_use: self.stamp,
+            valid: true,
+        };
+        self.sector_fills += 1;
+        Probe::LineMiss
+    }
+
+    /// Flush: count every remaining dirty line as a writeback.
+    pub fn flush_dirty(&mut self) -> u64 {
+        let mut n = 0;
+        for l in &mut self.lines {
+            if l.valid && l.dirty {
+                n += 1;
+                l.dirty = false;
+            }
+        }
+        self.writebacks += n;
+        n
+    }
+}
+
+/// Miss-status holding registers: distinct in-flight sector fills, with
+/// requests for a pending sector merged onto the entry instead of
+/// re-fetching. A full table stalls the requester (counted; the oldest
+/// entry retires to make room, so the walk always proceeds).
+#[derive(Debug, Default)]
+pub struct Mshr {
+    entries: usize,
+    inflight: TileMap<()>,
+    fifo: VecDeque<u64>,
+    /// Requests merged onto an already-pending fill.
+    pub merges: u64,
+    /// Allocation attempts that found the table full.
+    pub stalls: u64,
+}
+
+impl Mshr {
+    pub fn new(entries: usize) -> Self {
+        Mshr { entries: entries.max(1), ..Mshr::default() }
+    }
+
+    /// Register a new miss on `key` (the tag array already allocated
+    /// the sector; this tracks the fill in flight).
+    pub fn allocate(&mut self, key: u64) {
+        if self.inflight.len() >= self.entries {
+            self.stalls += 1;
+            // retire the oldest pending fill: from the stalled wave's
+            // point of view that fill just completed
+            if let Some(old) = self.fifo.pop_front() {
+                self.inflight.remove(&old);
+            }
+        }
+        if self.inflight.insert(key, ()).is_none() {
+            self.fifo.push_back(key);
+        }
+    }
+
+    /// A tag-array hit landed on a sector whose fill is still pending:
+    /// count the merge. Returns true when `key` was in flight.
+    pub fn merge_if_pending(&mut self, key: u64) -> bool {
+        if self.inflight.contains_key(&key) {
+            self.merges += 1;
+            return true;
+        }
+        false
+    }
+
+    /// All pending fills complete (a k-step boundary in the lockstep
+    /// grid walk).
+    pub fn drain(&mut self) {
+        self.inflight.clear();
+        self.fifo.clear();
+    }
+
+    pub fn pending(&self) -> usize {
+        self.inflight.len()
+    }
+}
+
+/// Result of a hierarchy (oracle) simulation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HierStats {
+    /// Fraction of demand accesses served by the L2 tag arrays.
+    pub l2_hit: f64,
+    /// Fraction of L2 misses (net of MSHR merges) served by the LLC.
+    pub llc_hit: f64,
+    /// Demand bytes requested by the kernel.
+    pub total_bytes: f64,
+    /// Fill bytes that reached HBM.
+    pub hbm_bytes: f64,
+    /// Dirty-line writeback bytes to HBM.
+    pub writeback_bytes: f64,
+    /// Misses that merged onto an in-flight MSHR entry.
+    pub mshr_merges: u64,
+    /// MSHR-full allocation stalls.
+    pub mshr_stalls: u64,
+    /// Sector fills across both levels.
+    pub sector_fills: u64,
+    /// Data-port time (all demand through the L2 data path), seconds.
+    pub data_s: f64,
+    /// Fill-port time (LLC + HBM fills + writebacks), seconds.
+    pub fill_s: f64,
+    /// MSHR stall serialization, seconds.
+    pub stall_s: f64,
+    /// Memory-side kernel time: ports pipeline, stalls serialize.
+    pub mem_time_s: f64,
+    /// Demand bytes / memory time, TB/s.
+    pub eff_bw_tbps: f64,
+}
+
+impl HierStats {
+    /// Effective VMEM latency under this hierarchy's hit mix (the
+    /// oracle-side analog of [`crate::hk::costmodel::effective_latency`]),
+    /// with MSHR-full stalls amortized onto every access.
+    pub fn effective_latency(&self, arch: &Arch) -> u64 {
+        let accesses = (self.total_bytes / SECTOR_BYTES).max(1.0);
+        // HIT_RESERVED accesses sit inside l2_hit but wait on the fill
+        // in flight — charge them LLC-class, not L2-class, latency
+        let merge = (self.mshr_merges as f64 / accesses).min(self.l2_hit);
+        let l2 = self.l2_hit - merge;
+        let llc = (1.0 - self.l2_hit) * self.llc_hit + merge;
+        let hbm = (1.0 - self.l2_hit) * (1.0 - self.llc_hit);
+        let base = l2 * arch.l2_lat as f64
+            + llc * arch.llc_lat as f64
+            + hbm * arch.hbm_lat as f64;
+        let stall =
+            self.mshr_stalls as f64 * arch.hbm_lat as f64 / accesses;
+        (base + stall).round() as u64
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish_hier(
+    arch: &Arch,
+    total_bytes: f64,
+    llc_served: f64,
+    hbm_bytes: f64,
+    writeback_bytes: f64,
+    merges: u64,
+    stalls: u64,
+    sector_fills: u64,
+    l2_hit: f64,
+    llc_hit: f64,
+    hbm_rate_tbps: f64,
+) -> HierStats {
+    // data port: every demand byte crosses the L2 data path once
+    let data_s = total_bytes / (arch.l2_tbps * 1e12);
+    // fill port: LLC-served fills at LLC bandwidth, HBM fills and
+    // writebacks at (possibly MSHR-capped) HBM bandwidth
+    let fill_s = llc_served / (arch.llc_tbps * 1e12)
+        + (hbm_bytes + writeback_bytes) / (hbm_rate_tbps * 1e12);
+    // each MSHR-full stall holds one wave for an HBM round-trip; the
+    // grid's concurrency hides all but the per-CU share
+    let stall_s = stalls as f64 * arch.hbm_lat as f64 * arch.cycle_s()
+        / arch.total_cus().max(1) as f64;
+    let mem_time_s = data_s.max(fill_s) + stall_s;
+    HierStats {
+        l2_hit,
+        llc_hit,
+        total_bytes,
+        hbm_bytes,
+        writeback_bytes,
+        mshr_merges: merges,
+        mshr_stalls: stalls,
+        sector_fills,
+        data_s,
+        fill_s,
+        stall_s,
+        mem_time_s,
+        eff_bw_tbps: total_bytes / mem_time_s.max(1e-18) / 1e12,
+    }
+}
+
+/// Simulate a GEMM grid schedule through the sectored/MSHR hierarchy —
+/// the oracle-side counterpart of [`simulate_gemm_schedule`].
+///
+/// Same demand stream (per-XCD round-robin block assignment, lockstep
+/// k-steps), different machinery: tile-granular sectored lines in
+/// set-associative tag arrays, per-XCD MSHRs merging concurrent
+/// same-tile misses within a k-step, a shared sectored LLC, and the
+/// C-tile store stream write-allocated into L2 so dirty evictions pay
+/// writeback traffic. Deterministic: same inputs, same stats.
+pub fn simulate_gemm_hierarchy(
+    arch: &Arch,
+    grid: &GemmGrid,
+    order: &[(u32, u32)],
+) -> HierStats {
+    let n_xcds = arch.n_xcds.max(1) as usize;
+    let a_bytes = grid.a_tile_bytes();
+    let b_bytes = grid.b_tile_bytes();
+    let tile_bytes = f64::midpoint(a_bytes, b_bytes);
+    let sector_bytes = tile_bytes / SECTORS_PER_LINE as f64;
+    let l2_lines = (arch.l2_bytes as f64 / tile_bytes).floor().max(1.0) as usize;
+    let llc_lines =
+        (arch.llc_bytes as f64 / tile_bytes).floor().max(1.0) as usize;
+
+    let mut l2: Vec<TagArray> =
+        (0..n_xcds).map(|_| TagArray::new(l2_lines, L2_WAYS)).collect();
+    let mut llc = TagArray::new(llc_lines, LLC_WAYS);
+    let mut mshr: Vec<Mshr> =
+        (0..n_xcds).map(|_| Mshr::new(L2_MSHR_ENTRIES)).collect();
+
+    let concurrency = arch.total_cus().max(1) as usize;
+    let mut requests = 0u64;
+    let mut l2_hits = 0u64;
+    let mut llc_probes = 0u64;
+    let mut llc_hits = 0u64;
+    let mut llc_served = 0.0f64;
+    let mut hbm_fill = 0.0f64;
+
+    // C-tile stores write-allocate at tile-line granularity
+    let c_bytes = grid.block_m as f64 * grid.block_n as f64 * grid.elem_bytes;
+    let c_lines = (c_bytes / tile_bytes).ceil().max(1.0) as u64;
+
+    let mut idx = 0usize;
+    while idx < order.len() {
+        let round = &order[idx..(idx + concurrency).min(order.len())];
+        for ks in 0..grid.k_steps() {
+            for (j, &(row, col)) in round.iter().enumerate() {
+                let xcd = (idx + j) % n_xcds;
+                for key in [a_key(row, ks), b_key(col, ks)] {
+                    // a tile request streams every sector of its line
+                    for sector in 0..SECTORS_PER_LINE {
+                        requests += 1;
+                        // bits 56..58 are free in the tile keys (tag is
+                        // 62..63, row/col/k sit below 56)
+                        let skey = key | ((sector as u64) << 56);
+                        match l2[xcd].access(key, sector, false) {
+                            Probe::Hit => {
+                                // served at the L2 level either way: a
+                                // filled sector, or HIT_RESERVED — a
+                                // merge onto the fill still in flight,
+                                // which never leaves the XCD but waits
+                                // miss-class latency (see
+                                // [`HierStats::effective_latency`])
+                                mshr[xcd].merge_if_pending(skey);
+                                l2_hits += 1;
+                            }
+                            Probe::SectorMiss | Probe::LineMiss => {
+                                mshr[xcd].allocate(skey);
+                                llc_probes += 1;
+                                match llc.access(key, sector, false) {
+                                    Probe::Hit => {
+                                        llc_hits += 1;
+                                        llc_served += sector_bytes;
+                                    }
+                                    _ => hbm_fill += sector_bytes,
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            for m in mshr.iter_mut() {
+                m.drain();
+            }
+        }
+        // epilogue: each block of the round stores its C tile —
+        // write-allocated dirty lines, evicted as writebacks later
+        for (j, &(row, col)) in round.iter().enumerate() {
+            let xcd = (idx + j) % n_xcds;
+            for line in 0..c_lines {
+                let key = (3u64 << 62)
+                    | ((row as u64) << 34)
+                    | ((col as u64) << 10)
+                    | line;
+                for sector in 0..SECTORS_PER_LINE {
+                    l2[xcd].access(key, sector, true);
+                }
+            }
+        }
+        idx += concurrency;
+    }
+    let mut writebacks: u64 = l2.iter().map(|t| t.writebacks).sum();
+    for t in l2.iter_mut() {
+        writebacks += t.flush_dirty();
+    }
+
+    let per_block_bytes = (a_bytes + b_bytes) * grid.k_steps() as f64;
+    let store_bytes =
+        grid.m as f64 * grid.n as f64 * grid.elem_bytes;
+    let total_bytes = per_block_bytes * order.len() as f64 + store_bytes;
+    // dirty C lines write back once each; re-dirtied lines (evicted and
+    // re-allocated) add the extra round-trips the flat model ignores
+    let writeback_bytes = writebacks as f64 * tile_bytes;
+    let merges: u64 = mshr.iter().map(|m| m.merges).sum();
+    let stalls: u64 = mshr.iter().map(|m| m.stalls).sum();
+    let sector_fills: u64 = l2.iter().map(|t| t.sector_fills).sum::<u64>()
+        + llc.sector_fills;
+    let l2_hit = l2_hits as f64 / requests.max(1) as f64;
+    let llc_hit = llc_hits as f64 / llc_probes.max(1) as f64;
+
+    finish_hier(
+        arch,
+        total_bytes,
+        llc_served,
+        hbm_fill,
+        writeback_bytes,
+        merges,
+        stalls,
+        sector_fills,
+        l2_hit,
+        llc_hit,
+        arch.hbm_tbps,
+    )
+}
+
+/// Streaming-kernel hierarchy oracle: the structural counterpart of the
+/// analytic [`streaming_time_s`] heuristic.
+///
+/// First pass over the `resident_bytes` working set fills from HBM;
+/// re-reads hit the LLC only when the working set actually fits.
+/// Writes are write-allocated and owe their bytes back to HBM. The HBM
+/// rate is capped by the MSHR little's-law bound — each CU can keep at
+/// most [`CU_MSHR_LINES`] line fills in flight, so sustainable
+/// bandwidth is `lines x line_bytes / (latency x latency_factor)` per
+/// CU — which is what puts the pointer-chased decode gather in a
+/// latency-bound regime (`latency_factor > 1`) the analytic model
+/// cannot see.
+pub fn simulate_stream_hierarchy(
+    arch: &Arch,
+    read_bytes: f64,
+    write_bytes: f64,
+    resident_bytes: f64,
+    latency_factor: f64,
+) -> HierStats {
+    let read_bytes = read_bytes.max(0.0);
+    let write_bytes = write_bytes.max(0.0);
+    let resident = resident_bytes.max(1.0);
+    // little's law: outstanding bytes / round-trip latency, per CU
+    let lat_s =
+        arch.hbm_lat as f64 * latency_factor.max(1.0) * arch.cycle_s();
+    let per_cu = CU_MSHR_LINES * STREAM_LINE_BYTES / lat_s.max(1e-18);
+    let hbm_rate_tbps =
+        arch.hbm_tbps.min(per_cu * arch.total_cus().max(1) as f64 / 1e12);
+
+    let first_pass = read_bytes.min(resident);
+    let re_reads = (read_bytes - first_pass).max(0.0);
+    let fits_llc = resident <= arch.llc_bytes as f64;
+    let (llc_served, hbm_extra) =
+        if fits_llc { (re_reads, 0.0) } else { (0.0, re_reads) };
+    let hbm_fill = first_pass + hbm_extra;
+    let total_bytes = read_bytes + write_bytes;
+    let llc_hit = if read_bytes > 0.0 { llc_served / read_bytes } else { 0.0 };
+    finish_hier(
+        arch,
+        total_bytes,
+        llc_served,
+        hbm_fill,
+        write_bytes,
+        0,
+        0,
+        (total_bytes / SECTOR_BYTES).round() as u64,
+        0.0,
+        llc_hit,
+        hbm_rate_tbps,
+    )
+}
+
 /// Row-major block order for a grid (the paper's naive baseline).
 pub fn row_major_order(tiles_m: u32, tiles_n: u32) -> Vec<(u32, u32)> {
     let mut v = Vec::with_capacity((tiles_m * tiles_n) as usize);
@@ -322,5 +804,89 @@ mod tests {
         let arch = Arch::mi355x();
         let t = streaming_time_s(&arch, 8e12, 1e12);
         assert!((t - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tag_array_is_sectored_and_writes_back() {
+        let mut t = TagArray::new(4, 2);
+        assert_eq!(t.access(10, 0, false), Probe::LineMiss);
+        assert_eq!(t.access(10, 0, false), Probe::Hit);
+        // same line, new sector: no allocation, one sector fill
+        assert_eq!(t.access(10, 1, false), Probe::SectorMiss);
+        assert_eq!(t.sector_fills, 2);
+        // dirty a line, then evict it by filling its set's ways with
+        // fresh keys: the eviction owes a writeback
+        t.access(10, 0, true);
+        let mut evicted = false;
+        for k in 0..64u64 {
+            t.access(1000 + k, 0, false);
+            if t.writebacks > 0 {
+                evicted = true;
+                break;
+            }
+        }
+        assert!(evicted, "dirty line never wrote back");
+    }
+
+    #[test]
+    fn mshr_merges_and_stalls() {
+        let mut m = Mshr::new(2);
+        m.allocate(1);
+        assert!(m.merge_if_pending(1));
+        assert!(!m.merge_if_pending(2));
+        m.allocate(2);
+        assert_eq!(m.stalls, 0);
+        m.allocate(3); // table full: oldest retires, stall counted
+        assert_eq!(m.stalls, 1);
+        assert!(!m.merge_if_pending(1), "oldest entry should have retired");
+        assert_eq!(m.merges, 1);
+        m.drain();
+        assert_eq!(m.pending(), 0);
+    }
+
+    #[test]
+    fn gemm_hierarchy_agrees_with_flat_model_in_shape() {
+        let arch = Arch::mi355x();
+        let g = small_grid();
+        let order = row_major_order(g.tiles_m(), g.tiles_n());
+        let flat = simulate_gemm_schedule(&arch, &g, &order);
+        let hier = simulate_gemm_hierarchy(&arch, &g, &order);
+        // both models must see substantial (but not total) L2 reuse on
+        // the row-major schedule
+        assert!(hier.l2_hit > 0.1 && hier.l2_hit < 0.9, "l2={}", hier.l2_hit);
+        assert!(hier.llc_hit > 0.5, "llc={}", hier.llc_hit);
+        assert!(hier.mem_time_s > 0.0);
+        // the hierarchy carries the C store + writebacks the flat model
+        // prices separately, so demand totals differ by exactly that
+        let store = g.m as f64 * g.n as f64 * g.elem_bytes;
+        assert_eq!(hier.total_bytes, flat.total_bytes + store);
+        // every C line written becomes a writeback eventually
+        assert!(hier.writeback_bytes >= store, "wb={}", hier.writeback_bytes);
+        // within-k-step duplicate tile requests merge in the MSHRs
+        assert!(hier.mshr_merges > 0);
+        // effective latency interpolates between L2 and HBM
+        let lat = hier.effective_latency(&arch);
+        assert!(lat >= arch.l2_lat && lat <= 2 * arch.hbm_lat, "{lat}");
+    }
+
+    #[test]
+    fn stream_hierarchy_latency_bound_caps_bandwidth() {
+        let arch = Arch::mi355x();
+        // plain streaming at factor 1.0: MSHR cap sits at or above HBM,
+        // so a huge working set runs at HBM speed like the flat model
+        let plain = simulate_stream_hierarchy(&arch, 8e12, 0.0, 8e12, 1.0);
+        assert!(plain.eff_bw_tbps <= arch.hbm_tbps + 1e-9);
+        assert!(plain.eff_bw_tbps > arch.hbm_tbps * 0.8, "{}", plain.eff_bw_tbps);
+        // pointer-chased gather (decode): little's law bites and the
+        // sustainable rate drops below HBM
+        let chased = simulate_stream_hierarchy(&arch, 8e12, 0.0, 8e12, 2.0);
+        assert!(chased.mem_time_s > plain.mem_time_s);
+        assert!(chased.eff_bw_tbps < arch.hbm_tbps * 0.9);
+        // a resident working set re-reads through the LLC
+        let warm = simulate_stream_hierarchy(&arch, 1e10, 0.0, 1e8, 1.0);
+        assert!(warm.llc_hit > 0.9, "{}", warm.llc_hit);
+        // writes owe writeback traffic
+        let wr = simulate_stream_hierarchy(&arch, 1e9, 1e9, 2e9, 1.0);
+        assert_eq!(wr.writeback_bytes, 1e9);
     }
 }

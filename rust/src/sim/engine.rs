@@ -51,6 +51,15 @@ impl EngineConfig {
         self.vmem_latency = lat;
         self
     }
+
+    /// Cap in-flight VMEM per wave — the calibration oracle sets this
+    /// from the cache hierarchy's MSHR capacity so the engine's issue
+    /// stalls and the memory model's fill tracking agree on how much
+    /// memory-level parallelism a wave can actually sustain.
+    pub fn with_vmem_inflight(mut self, n: u32) -> Self {
+        self.vmem_max_inflight = n.max(1);
+        self
+    }
 }
 
 /// Per-run statistics.

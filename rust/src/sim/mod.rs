@@ -14,7 +14,9 @@
 //! - [`engine`] — a per-CU cycle engine modelling MFMA/VALU/LDS/VMEM
 //!   pipes, waitcnts, barriers and wave-priority arbitration.
 //! - [`cache`] — the disaggregated L2 (per XCD) + LLC hierarchy driven by
-//!   grid schedules (paper §3.4, Eq. (1)).
+//!   grid schedules (paper §3.4, Eq. (1)), plus the sectored/MSHR
+//!   tag-array hierarchy the calibration oracle ([`crate::obs::calib`])
+//!   replays the same schedules through.
 
 pub mod arch;
 pub mod cache;
@@ -23,5 +25,8 @@ pub mod instr;
 pub mod lds;
 
 pub use arch::{Arch, Dtype, MfmaShape};
+pub use cache::{
+    simulate_gemm_hierarchy, simulate_stream_hierarchy, HierStats,
+};
 pub use engine::{run_block, EngineConfig, EngineStats};
 pub use instr::{BlockProgram, Instr, WaveProgram};

@@ -1,0 +1,130 @@
+//! Calibration-observability contracts: the oracle-vs-surrogate payload
+//! is deterministic and covers every kernel class with error quantiles,
+//! the drift gate passes on bounds derived from the real cost model and
+//! trips when the cost model is perturbed, and the checked-in bounds
+//! golden carries a bound for every class the grid produces.
+
+use hipkittens::kernels::registry::ArchId;
+use hipkittens::obs::calib::calib_grid;
+use hipkittens::obs::{run_calibration, Profiler};
+use hipkittens::report::calibration_payload;
+use hipkittens::runtime::json::{parse, Json};
+
+const ARCH: ArchId = ArchId::Mi355x;
+
+/// The distinct class tags the calibration grid dispatches, sorted.
+fn grid_classes() -> Vec<&'static str> {
+    let mut classes: Vec<&'static str> = calib_grid(ARCH)
+        .iter()
+        .map(|(_, q)| q.key().op.class_tag())
+        .collect();
+    classes.sort_unstable();
+    classes.dedup();
+    classes
+}
+
+#[test]
+fn calibration_payload_is_deterministic_and_covers_classes() {
+    let (rep, doc) = calibration_payload(ARCH);
+    let (_, doc2) = calibration_payload(ARCH);
+    assert_eq!(
+        doc.dump(),
+        doc2.dump(),
+        "BENCH_calibration.json must be byte-stable"
+    );
+    // every kernel class appears with its quantile block
+    let Some(Json::Obj(classes)) = doc.get("classes") else {
+        panic!("payload has no classes object");
+    };
+    assert!(classes.len() >= 5, "classes: {:?}", classes.keys());
+    for (class, stats) in classes {
+        for k in ["n", "p50", "p90_abs", "max_abs"] {
+            assert!(
+                stats.get(k).and_then(Json::as_f64).is_some(),
+                "class {class} missing {k}"
+            );
+        }
+    }
+    // both sides priced every config, and the errors are well-formed
+    assert_eq!(rep.rows.len(), calib_grid(ARCH).len());
+    for r in &rep.rows {
+        assert!(r.oracle_s > 0.0, "{}: oracle time must be positive", r.name);
+        assert!(r.surrogate_s > 0.0, "{}: surrogate time", r.name);
+        assert!(r.err.is_finite(), "{}: err {}", r.name, r.err);
+    }
+    // the ranked worst table leads with the largest |err|
+    let worst = rep.worst();
+    for pair in worst.windows(2) {
+        assert!(pair[0].err.abs() >= pair[1].err.abs());
+    }
+    // the profiler rollup saw the oracle and surrogate scopes
+    let rollup = doc.get("rollup").expect("rollup");
+    assert!(rollup.get("calibrate/oracle").is_some());
+    assert!(rollup.get("calibrate/surrogate").is_some());
+}
+
+#[test]
+fn gate_passes_on_derived_bounds_and_trips_on_perturbed_model() {
+    let mut prof = Profiler::new();
+    let base = run_calibration(ARCH, &mut prof, 1.0);
+    let golden = base.bounds_json();
+    base.check_bounds(&golden)
+        .expect("the real cost model is within its own derived bounds");
+    // perturb the surrogate hard enough that every row's error lands
+    // past every bound: the smallest surrogate/oracle ratio is pushed
+    // above 1 + the largest bound
+    let min_ratio = base
+        .rows
+        .iter()
+        .map(|r| 1.0 + r.err)
+        .fold(f64::INFINITY, f64::min);
+    let max_bound = base
+        .classes
+        .iter()
+        .map(|c| ((c.p90_abs * 1.5 + 0.02) * 1000.0).ceil() / 1000.0)
+        .fold(0.0, f64::max);
+    let scale = (2.0 + max_bound) / min_ratio.max(1e-9);
+    let mut prof2 = Profiler::new();
+    let drifted = run_calibration(ARCH, &mut prof2, scale);
+    assert!(
+        drifted.check_bounds(&golden).is_err(),
+        "perturbed cost model (x{scale:.2}) must trip the drift gate"
+    );
+}
+
+#[test]
+fn checked_in_bounds_golden_covers_every_grid_class() {
+    let text = include_str!("../goldens/calibration_bounds.json");
+    let golden = parse(text).expect("calibration bounds golden parses");
+    assert_eq!(golden.get("arch").and_then(Json::as_str), Some("mi355x"));
+    let bounds = golden.get("p90_bounds").expect("p90_bounds object");
+    let classes = grid_classes();
+    assert!(classes.len() >= 5, "classes: {classes:?}");
+    for class in classes {
+        assert!(
+            bounds.get(class).and_then(Json::as_f64).is_some_and(|b| b > 0.0),
+            "class {class} has no positive bound in the golden"
+        );
+    }
+}
+
+#[test]
+fn oracle_and_surrogate_rollups_are_structurally_comparable() {
+    // per-config leaf paths exist under both scopes with one record
+    // each, so a profile --diff between two calibration-era payloads
+    // lines up path-for-path
+    let mut prof = Profiler::new();
+    let rep = run_calibration(ARCH, &mut prof, 1.0);
+    for r in &rep.rows {
+        let s = prof
+            .entry(&format!("calibrate/surrogate/{}", r.name))
+            .unwrap_or_else(|| panic!("surrogate leaf for {}", r.name));
+        let o = prof
+            .entry(&format!("calibrate/oracle/{}", r.name))
+            .unwrap_or_else(|| panic!("oracle leaf for {}", r.name));
+        assert_eq!(s.records, 1);
+        assert_eq!(o.records, 1);
+        assert_eq!(s.counters.kernels, 1);
+        assert_eq!(o.counters.kernels, 1);
+    }
+}

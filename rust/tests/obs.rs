@@ -181,7 +181,19 @@ fn serve_timeline_is_deterministic_and_schema_valid() {
     let d1 = t1.dump();
     assert_eq!(d1, t2.dump(), "two identical runs must dump byte-identically");
     validate_chrome_trace(&t1.to_json()).expect("chrome-trace schema");
-    for needle in ["prefill", "decode", "moe-ffn", "membound", "\"ph\":\"X\""] {
+    for needle in [
+        "prefill",
+        "decode",
+        "moe-ffn",
+        "membound",
+        "\"ph\":\"X\"",
+        // request flow arrows: start, step, and end all survive, and
+        // the finish carries the enclosing-slice binding point
+        "\"ph\":\"s\"",
+        "\"ph\":\"t\"",
+        "\"ph\":\"f\"",
+        "\"bp\":\"e\"",
+    ] {
         assert!(d1.contains(needle), "timeline lost its {needle} events");
     }
 }
@@ -203,4 +215,8 @@ fn profile_payload_is_deterministic_and_schema_valid() {
     // the train process made it onto the same timeline as serve
     let dump = timeline.dump();
     assert!(dump.contains("train-fwd") && dump.contains("train-bwd"));
+    // the structured event log rides in the payload as per-run deltas
+    // (raw process-global counts would break the determinism assert
+    // above)
+    assert!(doc.get("events").is_some(), "payload lost its events key");
 }
