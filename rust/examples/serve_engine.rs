@@ -13,6 +13,7 @@ use hipkittens::error::Result;
 use hipkittens::kernels::decode::block_ablation;
 use hipkittens::runtime::json::Json;
 use hipkittens::serve::{serve_trace, ServeConfig, ServeEngine};
+use hipkittens::sim::arch::Dtype;
 
 const REQUESTS: u64 = 512;
 const RATE: f64 = 200.0;
@@ -57,8 +58,39 @@ fn main() -> Result<()> {
         ]));
     }
 
+    // KV dtype ablation: the same trace at an equal (deliberately
+    // tight) per-GPU HBM budget — FP8 KV halves the bytes per block, so
+    // the budget buys 2x the blocks and the admission/preemption
+    // pressure drops accordingly
+    println!("\n== KV dtype ablation (equal HBM budget, 1024 bf16 blocks) ==");
+    let budget = 1024.0 * ServeConfig::default().kv_block_bytes();
+    let mut kv_rows = Vec::new();
+    for (label, dtype) in [("bf16", Dtype::Bf16), ("fp8", Dtype::Fp8)] {
+        let kcfg = ServeConfig { kv_dtype: dtype, ..ServeConfig::default() }
+            .with_kv_budget(budget);
+        let mut e = ServeEngine::new(kcfg.clone())?;
+        let r = e.run_trace(&trace)?;
+        println!(
+            "{label:<6} {:>6} blocks  preempt {:>4}  ttft p99 {:>9.2} ms  \
+             {:>7.0} tok/s",
+            kcfg.num_blocks,
+            r.preemptions,
+            r.ttft.p99_us() / 1e3,
+            r.throughput_tok_s
+        );
+        kv_rows.push(Json::obj(vec![
+            ("kv_dtype", Json::Str(label.into())),
+            ("num_blocks", Json::Num(kcfg.num_blocks as f64)),
+            ("preemptions", Json::Num(r.preemptions as f64)),
+            ("ttft_p99_us", Json::Num(r.ttft.p99_us())),
+            ("throughput_tok_s", Json::Num(r.throughput_tok_s)),
+            ("peak_occupancy", Json::Num(r.peak_occupancy)),
+        ]));
+    }
+
     let doc = Json::obj(vec![
         ("bench", Json::Str("serve_engine".into())),
+        ("kv_dtype_ablation", Json::Arr(kv_rows)),
         ("arch", Json::Str(cfg.arch.tag().into())),
         (
             "trace",

@@ -166,8 +166,9 @@ pub fn evaluate_streaming(
 
 /// One global-memory pass of a memory-bound fusion chain, in the
 /// representation the cost model prices: `rows` independent rows of `d`
-/// bf16 elements, swept `passes` VALU passes per lane, reading `reads`
-/// distinct row-tensors from global memory and writing `writes` back.
+/// elements of `elem_bytes` each, swept `passes` VALU passes per lane,
+/// reading `reads` distinct row-tensors from global memory and writing
+/// `writes` back.
 ///
 /// A fused chain is a single `ChainPass` whose `passes` is the sum of
 /// its stages (intermediates stay in registers/LDS and never appear in
@@ -187,6 +188,10 @@ pub struct ChainPass {
     pub writes: u32,
     /// Vectorized (dwordx4) global access vs scalar dword loads.
     pub vectorized: bool,
+    /// Bytes per element of each row tensor in global memory — the
+    /// chain's *storage* dtype (block-scale overhead included, see
+    /// `Dtype::bytes_with_scales_f`). 2.0 is the legacy bf16 pricing.
+    pub elem_bytes: f64,
 }
 
 /// The chain evaluation: the combined estimate plus each pass on its
@@ -205,7 +210,11 @@ pub struct ChainEval {
 fn evaluate_chain_pass(arch: &Arch, p: &ChainPass) -> KernelPerf {
     let per_lane = (p.d as u64).div_ceil(64);
     let valu = p.passes * per_lane;
-    let row_bytes = (p.d as u64) * 2;
+    // exact f64 row footprint (the byte-law currency) and its integral
+    // truncation for the engine's instruction stream; at bf16 (2 B) the
+    // two coincide with the legacy `d * 2` pricing bit-for-bit
+    let row_bytes_f = p.d as f64 * p.elem_bytes;
+    let row_bytes = row_bytes_f as u64;
     let issues = if p.vectorized {
         ((row_bytes / 64 / 16).max(1)) as u32
     } else {
@@ -235,7 +244,7 @@ fn evaluate_chain_pass(arch: &Arch, p: &ChainPass) -> KernelPerf {
     };
     let built = super::interleave::build(&spec);
     let blocks = p.rows as f64 / (4.0 * 8.0);
-    let bytes = (p.reads + p.writes) as f64 * p.rows as f64 * row_bytes as f64;
+    let bytes = (p.reads + p.writes) as f64 * p.rows as f64 * row_bytes_f;
     let mut perf = evaluate_streaming(
         arch,
         &p.name,
@@ -252,8 +261,8 @@ fn evaluate_chain_pass(arch: &Arch, p: &ChainPass) -> KernelPerf {
     // keep the real split — a chain pass issues no MFMA, and its
     // traffic divides exactly into read and written row-tensors
     perf.counters = KernelCounters {
-        hbm_read_bytes: p.reads as f64 * p.rows as f64 * row_bytes as f64,
-        hbm_write_bytes: p.writes as f64 * p.rows as f64 * row_bytes as f64,
+        hbm_read_bytes: p.reads as f64 * p.rows as f64 * row_bytes_f,
+        hbm_write_bytes: p.writes as f64 * p.rows as f64 * row_bytes_f,
         issued_waves: perf.counters.issued_waves,
         fused_passes: 1,
         kernels: 1,
@@ -279,7 +288,10 @@ pub fn evaluate_chain(arch: &Arch, name: &str, passes: &[ChainPass]) -> ChainEva
     let mem_s: f64 = evals.iter().map(|p| p.mem_s).sum();
     let bytes: f64 = passes
         .iter()
-        .map(|p| (p.reads + p.writes) as f64 * p.rows as f64 * (p.d as f64 * 2.0))
+        .map(|p| {
+            (p.reads + p.writes) as f64 * p.rows as f64
+                * (p.d as f64 * p.elem_bytes)
+        })
         .sum();
     let mut counters = KernelCounters::default();
     for e in &evals {

@@ -10,6 +10,12 @@
 //!
 //! The cache file defaults to `.hk-tunecache.json` in the working
 //! directory and can be pointed elsewhere with `HK_TUNECACHE`.
+//!
+//! On-disk documents carry a schema version ([`SCHEMA_VERSION`]) that
+//! must match exactly on load. Version 1 predates dtype-aware keys
+//! (every non-GEMM query tuned as BF16), so a v1 file's records could
+//! be served verbatim for FP8/FP4 queries — stale caches are therefore
+//! *invalidated* (cold start), never silently reused.
 
 use crate::error::{Context, Result};
 use crate::runtime::json::{parse, Json};
@@ -17,6 +23,11 @@ use crate::{bail, err};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
+
+/// On-disk schema version. Bumped to 2 when dtype became a first-class
+/// axis of every cache key (v1 caches hold records tuned under an
+/// implicit BF16 assumption and must not answer low-precision queries).
+pub const SCHEMA_VERSION: f64 = 2.0;
 
 /// The tuned decision for one kernel key.
 #[derive(Debug, Clone, PartialEq)]
@@ -109,7 +120,7 @@ impl TuneCache {
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("version", Json::Num(1.0)),
+            ("version", Json::Num(SCHEMA_VERSION)),
             (
                 "entries",
                 Json::Obj(
@@ -123,6 +134,14 @@ impl TuneCache {
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
+        match j.get("version").and_then(Json::as_f64) {
+            Some(v) if v == SCHEMA_VERSION => {}
+            Some(v) => bail!(
+                "tune cache schema version {v} != {SCHEMA_VERSION} \
+                 (stale pre-dtype cache; re-tuning)"
+            ),
+            None => bail!("tune cache missing schema version"),
+        }
         let Some(Json::Obj(entries)) = j.get("entries") else {
             bail!("tune cache missing entries object");
         };
@@ -240,8 +259,30 @@ mod tests {
     #[test]
     fn rejects_malformed_documents() {
         assert!(TuneCache::from_json(&parse("{}").unwrap()).is_err());
-        let no_variant = parse(r#"{"entries": {"k": {"window": 1}}}"#).unwrap();
+        let no_variant =
+            parse(r#"{"version": 2, "entries": {"k": {"window": 1}}}"#).unwrap();
         assert!(TuneCache::from_json(&no_variant).is_err());
+    }
+
+    #[test]
+    fn stale_schema_versions_are_invalidated_not_reused() {
+        // a v1 file (pre-dtype keys) holds BF16-tuned records under ids
+        // that a dtype-aware process would also generate — it must be
+        // rejected outright, and load_or_cold must turn that into a
+        // cold start rather than serving the stale records
+        let v1 = parse(
+            r#"{"version": 1, "entries": {"gemm/bf16/large/mi355x":
+                {"variant": "pp-256x256", "window": 8, "chunk": 64}}}"#,
+        )
+        .unwrap();
+        assert!(TuneCache::from_json(&v1).is_err());
+        let unversioned =
+            parse(r#"{"entries": {"k": {"variant": "v"}}}"#).unwrap();
+        assert!(TuneCache::from_json(&unversioned).is_err());
+
+        let path = std::env::temp_dir().join("hk_tunecache_v1.json");
+        std::fs::write(&path, v1.dump()).unwrap();
+        assert!(TuneCache::load_or_cold(&path).is_empty());
     }
 
     #[test]

@@ -28,7 +28,7 @@
 
 use crate::hk::costmodel::{evaluate_chain, ChainEval, ChainPass, KernelPerf};
 use crate::hk::regalloc;
-use crate::sim::arch::Arch;
+use crate::sim::arch::{Arch, Dtype};
 
 /// What a stage computes, which fixes its VALU cost (passes over the
 /// d/64 elements each lane owns).
@@ -51,6 +51,8 @@ pub enum StageKind {
     Residual,
     /// Quantize to a low-precision output (scale + round + pack).
     Quantize,
+    /// Dequantize a low-precision input (unpack + scale-expand).
+    Dequantize,
 }
 
 impl StageKind {
@@ -68,6 +70,7 @@ impl StageKind {
             StageKind::Dropout => 3,
             StageKind::Residual => 1,
             StageKind::Quantize => 2,
+            StageKind::Dequantize => 2,
         }
     }
 
@@ -99,8 +102,15 @@ impl Stage {
     }
 }
 
-/// A memory-bound kernel as a chain of stages over (rows, d) bf16
+/// A memory-bound kernel as a chain of stages over (rows, d)
 /// row-tensors.
+///
+/// Every row tensor of a chain shares one *storage* dtype
+/// ([`FusionChain::elem_bytes`], default bf16): quantize/dequantize
+/// stages convert working precision in registers (their VALU cost),
+/// while global traffic is priced at the storage footprint. LDS
+/// reduction staging stays at working precision (2 B rows) regardless
+/// of storage dtype — the cross-lane tree runs on expanded values.
 #[derive(Debug, Clone)]
 pub struct FusionChain {
     pub name: String,
@@ -115,6 +125,10 @@ pub struct FusionChain {
     /// Force stage-granularity splitting — the unfused baseline every
     /// fused chain is measured against.
     pub split_all: bool,
+    /// Bytes per element of each row tensor in HBM (the storage dtype,
+    /// block-scale overhead included). Exactly 2.0 by default — the
+    /// legacy bf16 pricing every pinned chain number was derived under.
+    pub elem_bytes: f64,
 }
 
 /// A planned execution: where the chain was cut and the resulting
@@ -153,6 +167,7 @@ impl FusionChain {
             outputs: Vec::new(),
             vectorized: true,
             split_all: false,
+            elem_bytes: 2.0,
         }
     }
 
@@ -177,6 +192,15 @@ impl FusionChain {
     /// Model the Triton-style scalar-load lowering.
     pub fn with_vectorized(mut self, v: bool) -> Self {
         self.vectorized = v;
+        self
+    }
+
+    /// Price the chain's row tensors at `dtype`'s storage footprint
+    /// (block-scale bytes included). `Dtype::Bf16` reproduces the
+    /// default 2.0 B/elem pricing exactly, so routing every chain
+    /// through this builder is a no-op on the legacy paths.
+    pub fn with_dtype(mut self, dtype: Dtype) -> Self {
+        self.elem_bytes = dtype.bytes_with_scales_f();
         self
     }
 
@@ -253,6 +277,33 @@ impl FusionChain {
             .stage(StageKind::Residual, &["acc", "bias"], &["h"])
             .stage(StageKind::Elementwise { passes: 4 }, &["h"], &["out"])
             .with_outputs(&["out"])
+    }
+
+    /// Quantizing GEMM epilogue: bias add + activation + quantize on
+    /// the accumulator, streaming the low-precision activations for the
+    /// next layer straight to HBM. Fused, the full-precision `h`/`act`
+    /// intermediates never leave registers; split, each one round-trips
+    /// at the storage dtype — the byte law holds with the Quantize
+    /// stage in the mask sweep (`tests/hk_properties.rs`).
+    pub fn quant_epilogue(rows: u32, d: u32, dtype: Dtype) -> Self {
+        FusionChain::new(&format!("quant-epilogue rows={rows} d={d}"), rows, d)
+            .stage(StageKind::Residual, &["acc", "bias"], &["h"])
+            .stage(StageKind::Elementwise { passes: 4 }, &["h"], &["act"])
+            .stage(StageKind::Quantize, &["act"], &["out"])
+            .with_outputs(&["out"])
+            .with_dtype(dtype)
+    }
+
+    /// Dequantize + Add+RMSNorm over a low-precision residual stream:
+    /// unpack/scale-expand the quantized activations, add the residual,
+    /// normalize — the low-precision mirror of [`Self::add_rmsnorm`].
+    pub fn dequant_rmsnorm(rows: u32, d: u32, dtype: Dtype) -> Self {
+        FusionChain::new(&format!("dequant-rmsnorm rows={rows} d={d}"), rows, d)
+            .stage(StageKind::Dequantize, &["xq"], &["x"])
+            .stage(StageKind::Residual, &["x", "resid"], &["resid_out"])
+            .stage(StageKind::Normalize, &["resid_out"], &["out"])
+            .with_outputs(&["resid_out", "out"])
+            .with_dtype(dtype)
     }
 
     // ---------------------------------------------- legality budget
@@ -361,6 +412,7 @@ impl FusionChain {
             reads: reads.len() as u32,
             writes: writes.len() as u32,
             vectorized: self.vectorized,
+            elem_bytes: self.elem_bytes,
         }
     }
 
@@ -531,7 +583,7 @@ impl FusionChain {
                 extra += i64::from(kept) - i64::from(is_output);
             }
         }
-        extra as f64 * self.rows as f64 * self.d as f64 * 2.0
+        extra as f64 * self.rows as f64 * self.d as f64 * self.elem_bytes
     }
 
     /// Price an explicit cut mask, legality aside (property tests and
@@ -608,6 +660,32 @@ mod tests {
         let c2 = FusionChain::silu_mul(1024, 2048);
         let p2 = c2.segment_pass(0, 2, 0);
         assert_eq!((p2.reads, p2.writes, p2.passes), (2, 1, 5));
+    }
+
+    #[test]
+    fn quantized_chains_price_the_storage_dtype() {
+        use crate::sim::arch::Dtype;
+        let a = arch();
+        let bf16 = FusionChain::quant_epilogue(16 * 4096, 2048, Dtype::Bf16);
+        let fp8 = FusionChain::quant_epilogue(16 * 4096, 2048, Dtype::Fp8);
+        assert_eq!(bf16.elem_bytes, 2.0);
+        assert_eq!(fp8.elem_bytes, 1.0);
+        assert_eq!(bf16.plan(&a).passes.len(), 1, "quant epilogue fuses");
+        assert_eq!(fp8.plan(&a).passes.len(), 1);
+        let eb = bf16.simulate(&a);
+        let ef = fp8.simulate(&a);
+        // half the bytes per element -> exactly half the HBM traffic,
+        // and a bandwidth-bound chain never gets slower from it
+        assert_eq!(
+            ef.counters.hbm_total_bytes() * 2.0,
+            eb.counters.hbm_total_bytes()
+        );
+        assert!(ef.time_s <= eb.time_s);
+        // the dequant prologue fuses too, and MXFP4 storage carries its
+        // per-32-element scale overhead in the chain pricing
+        let mx = FusionChain::dequant_rmsnorm(1024, 2048, Dtype::Mxfp4);
+        assert_eq!(mx.elem_bytes, 0.5 + 1.0 / 32.0);
+        assert_eq!(mx.plan(&a).passes.len(), 1, "dequant chain fuses");
     }
 
     #[test]

@@ -119,6 +119,20 @@ impl GemmConfig {
         }
     }
 
+    /// MXFP4 GEMM: 4-bit block-scale elements (OCP MX, one FP8 scale per
+    /// 32 elements) on the f8f6f4 pipe. The scale tensor rides the load
+    /// path — +1/32 B/elem of memory traffic — and a short per-block
+    /// dequant shuffle sits on the operand staging chain.
+    pub fn mxfp4(m: u32, n: u32, k: u32) -> Self {
+        GemmConfig {
+            dtype: Dtype::Mxfp4,
+            block_k: 256,
+            shuffle_cycles: 8,
+            traffic_elem_bytes: Some(Dtype::Mxfp4.bytes_with_scales_f()),
+            ..Self::bf16(m, n, k)
+        }
+    }
+
     pub fn elem_bytes(&self) -> f64 {
         self.dtype.bytes_f()
     }
@@ -359,6 +373,14 @@ pub fn simulate(arch: &Arch, cfg: &GemmConfig) -> KernelPerf {
             * crate::hk::costmodel::spill_penalty_cycles(alloc.spilled)
                 as f64;
     }
+    // block-scale formats: attribute the compulsory scale-tensor
+    // footprint (A and B scales, read once) — a sub-counter of the HBM
+    // read bytes, exactly 0 for every non-block-scaled dtype
+    let scale_b = cfg.dtype.scale_bytes_per_elem();
+    if scale_b > 0.0 {
+        let elems = cfg.m as f64 * cfg.k as f64 + cfg.k as f64 * cfg.n as f64;
+        perf.counters.scale_bytes = elems * scale_b;
+    }
     perf
 }
 
@@ -477,6 +499,44 @@ mod tests {
             with_p.tflops,
             zero_p.tflops
         );
+    }
+
+    #[test]
+    fn mxfp4_outruns_fp8_and_carries_scale_bytes() {
+        let m = 8192;
+        let f8 = simulate(&a(), &GemmConfig::fp8(m, m, m));
+        let mx = simulate(&a(), &GemmConfig::mxfp4(m, m, m));
+        // double the MFMA rate of FP8 on CDNA4, minus dequant overhead
+        assert!(
+            mx.tflops > f8.tflops * 1.2,
+            "mxfp4 {} !> 1.2x fp8 {}",
+            mx.tflops,
+            f8.tflops
+        );
+        // scale tensors: (m*k + k*n) / 32 bytes of compulsory reads
+        let want = 2.0 * (m as f64) * (m as f64) / 32.0;
+        assert_eq!(mx.counters.scale_bytes, want);
+        assert_eq!(f8.counters.scale_bytes, 0.0);
+    }
+
+    #[test]
+    fn narrower_dtypes_never_read_more_hbm() {
+        // bytes monotone non-increasing as the dtype narrows (FP6's
+        // dwordx3 padding makes it match FP8's 1 B/elem, not beat it)
+        let m = 4096;
+        let cfgs = [
+            GemmConfig::bf16(m, m, m),
+            GemmConfig::fp8(m, m, m),
+            GemmConfig::fp6(m, m, m),
+            GemmConfig::mxfp4(m, m, m),
+        ];
+        let bytes: Vec<f64> = cfgs
+            .iter()
+            .map(|c| simulate(&a(), c).counters.hbm_read_bytes)
+            .collect();
+        assert!(bytes[1] < bytes[0], "fp8 {} !< bf16 {}", bytes[1], bytes[0]);
+        assert!(bytes[2] <= bytes[1], "fp6 {} !<= fp8 {}", bytes[2], bytes[1]);
+        assert!(bytes[3] < bytes[2], "mxfp4 {} !< fp6 {}", bytes[3], bytes[2]);
     }
 
     #[test]

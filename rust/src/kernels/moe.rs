@@ -234,7 +234,7 @@ pub fn simulate_grouped_node(arch: &Arch, cfg: &MoeGemmConfig) -> GroupedEval {
         }
     }
 
-    evaluate_grouped(
+    let mut eval = evaluate_grouped(
         arch,
         &topo,
         &format!(
@@ -252,7 +252,23 @@ pub fn simulate_grouped_node(arch: &Arch, cfg: &MoeGemmConfig) -> GroupedEval {
         cfg.cross_bytes(&topo),
         cfg.flops(),
         cfg.bytes(),
-    )
+    );
+    // block-scaled dtypes stream a separate scale tensor (one FP8 scale
+    // per MX_BLOCK elements) alongside activations and weights.
+    // Attributed per GPU from that GPU's element traffic so the shard
+    // sum stays bit-exact with the node total; plain dtypes carry 0.
+    let scale_b = cfg.dtype.scale_bytes_per_elem();
+    if scale_b > 0.0 {
+        let per_elem = cfg.dtype.bytes_f();
+        let mut total = 0.0;
+        for gc in &mut eval.per_gpu_counters {
+            gc.scale_bytes =
+                (gc.hbm_read_bytes + gc.l2_bytes) / per_elem * scale_b;
+            total += gc.scale_bytes;
+        }
+        eval.perf.counters.scale_bytes = total;
+    }
+    eval
 }
 
 /// [`simulate_grouped_node`]'s combined estimate — the registry's

@@ -344,6 +344,7 @@ fn dtype_tag(d: Dtype) -> &'static str {
         Dtype::Fp8 => "fp8",
         Dtype::Fp6 => "fp6",
         Dtype::Fp4 => "fp4",
+        Dtype::Mxfp4 => "mxfp4",
     }
 }
 
@@ -383,37 +384,93 @@ pub fn variants(key: &KernelKey) -> Vec<Variant> {
                     swizzled: true,
                 },
             ],
-            // CDNA: the paper's Table 2/3 candidate set.
-            _ => vec![
-                Variant {
-                    name: "pp-256x256",
-                    pattern: Pattern::PingPong8,
-                    block_m: 256,
-                    block_n: 256,
-                    swizzled: true,
-                },
-                Variant {
-                    name: "pp-192x256",
-                    pattern: Pattern::PingPong8,
-                    block_m: 192,
-                    block_n: 256,
-                    swizzled: true,
-                },
-                Variant {
-                    name: "il-192x256",
-                    pattern: Pattern::Interleave4,
-                    block_m: 192,
-                    block_n: 256,
-                    swizzled: true,
-                },
-                Variant {
-                    name: "ws-4p12c-192x256",
-                    pattern: Pattern::WaveSpec { producers: 4, consumers: 12 },
-                    block_m: 192,
-                    block_n: 256,
-                    swizzled: true,
-                },
-            ],
+            // CDNA: per-dtype candidate sets. BF16/FP16/F32 keep the
+            // paper's Table 2/3 table verbatim; the low-precision
+            // families (exemplar amd-kernels naming) carry their own
+            // block-scale / packed-load variants tuned per dtype.
+            _ => match key.dtype {
+                Dtype::Fp8 => vec![
+                    Variant {
+                        name: "gemm-fp8-bs128",
+                        pattern: Pattern::PingPong8,
+                        block_m: 256,
+                        block_n: 256,
+                        swizzled: true,
+                    },
+                    Variant {
+                        name: "gemm-fp8-il4",
+                        pattern: Pattern::Interleave4,
+                        block_m: 192,
+                        block_n: 256,
+                        swizzled: true,
+                    },
+                ],
+                Dtype::Fp6 => vec![
+                    Variant {
+                        name: "gemm-fp6-b96",
+                        pattern: Pattern::PingPong8,
+                        block_m: 256,
+                        block_n: 256,
+                        swizzled: true,
+                    },
+                    Variant {
+                        name: "gemm-fp6-il4",
+                        pattern: Pattern::Interleave4,
+                        block_m: 192,
+                        block_n: 256,
+                        swizzled: true,
+                    },
+                ],
+                Dtype::Fp4 | Dtype::Mxfp4 => vec![
+                    Variant {
+                        name: "gemm-mxfp4-bs32",
+                        pattern: Pattern::PingPong8,
+                        block_m: 256,
+                        block_n: 256,
+                        swizzled: true,
+                    },
+                    Variant {
+                        name: "gemm-mxfp4-il4",
+                        pattern: Pattern::Interleave4,
+                        block_m: 192,
+                        block_n: 256,
+                        swizzled: true,
+                    },
+                ],
+                _ => vec![
+                    Variant {
+                        name: "pp-256x256",
+                        pattern: Pattern::PingPong8,
+                        block_m: 256,
+                        block_n: 256,
+                        swizzled: true,
+                    },
+                    Variant {
+                        name: "pp-192x256",
+                        pattern: Pattern::PingPong8,
+                        block_m: 192,
+                        block_n: 256,
+                        swizzled: true,
+                    },
+                    Variant {
+                        name: "il-192x256",
+                        pattern: Pattern::Interleave4,
+                        block_m: 192,
+                        block_n: 256,
+                        swizzled: true,
+                    },
+                    Variant {
+                        name: "ws-4p12c-192x256",
+                        pattern: Pattern::WaveSpec {
+                            producers: 4,
+                            consumers: 12,
+                        },
+                        block_m: 192,
+                        block_n: 256,
+                        swizzled: true,
+                    },
+                ],
+            },
         },
         Op::AttnFwd => vec![
             Variant {
@@ -509,22 +566,59 @@ pub fn variants(key: &KernelKey) -> Vec<Variant> {
                     swizzled: false,
                 },
             ],
-            _ => vec![
-                Variant {
-                    name: "moe-ep-pp8",
-                    pattern: Pattern::PingPong8,
-                    block_m: 256,
-                    block_n: 256,
-                    swizzled: false,
-                },
-                Variant {
-                    name: "moe-il4-ragged",
-                    pattern: Pattern::Interleave4,
-                    block_m: 128,
-                    block_n: 256,
-                    swizzled: false,
-                },
-            ],
+            // CDNA: the quantized MoE families (A8W8 / MXFP4, exemplar
+            // amd-kernels naming) get their own tables; BF16 keeps the
+            // original pair verbatim.
+            _ => match key.dtype {
+                Dtype::Fp8 => vec![
+                    Variant {
+                        name: "moe-a8w8",
+                        pattern: Pattern::PingPong8,
+                        block_m: 256,
+                        block_n: 256,
+                        swizzled: false,
+                    },
+                    Variant {
+                        name: "moe-a8w8-ragged",
+                        pattern: Pattern::Interleave4,
+                        block_m: 128,
+                        block_n: 256,
+                        swizzled: false,
+                    },
+                ],
+                Dtype::Fp4 | Dtype::Mxfp4 => vec![
+                    Variant {
+                        name: "moe-mxfp4",
+                        pattern: Pattern::PingPong8,
+                        block_m: 256,
+                        block_n: 256,
+                        swizzled: false,
+                    },
+                    Variant {
+                        name: "moe-mxfp4-ragged",
+                        pattern: Pattern::Interleave4,
+                        block_m: 128,
+                        block_n: 256,
+                        swizzled: false,
+                    },
+                ],
+                _ => vec![
+                    Variant {
+                        name: "moe-ep-pp8",
+                        pattern: Pattern::PingPong8,
+                        block_m: 256,
+                        block_n: 256,
+                        swizzled: false,
+                    },
+                    Variant {
+                        name: "moe-il4-ragged",
+                        pattern: Pattern::Interleave4,
+                        block_m: 128,
+                        block_n: 256,
+                        swizzled: false,
+                    },
+                ],
+            },
         },
         Op::FusedLn => vec![Variant {
             name: "ln-il4",
@@ -800,6 +894,18 @@ impl Query {
         Self::fused_chain(arch, ChainKind::GemmEpilogue, rows, d)
     }
 
+    /// Re-key the query to a different element dtype. This is a true
+    /// cache-key axis — it changes [`Query::key`], NOT an override —
+    /// so each dtype tunes, caches, and dispatches independently (a
+    /// warm BF16 record can never answer an FP8 query; see
+    /// `tests/registry_dispatch.rs`). Constructors that hardcode BF16
+    /// (`moe_ffn`, `attn_decode`, the chain family) route low-precision
+    /// problems through this.
+    pub fn with_dtype(mut self, d: Dtype) -> Self {
+        self.dtype = d;
+        self
+    }
+
     /// Force the unfused (one pass per stage) lowering of a
     /// memory-bound chain — the split baseline. Honored by
     /// `Op::FusedChain`, `Op::FusedLn` and `Op::Rope`.
@@ -1051,6 +1157,7 @@ impl Query {
                 let mut cfg = match self.dtype {
                     Dtype::Fp8 => GemmConfig::fp8(m, n, k),
                     Dtype::Fp6 => GemmConfig::fp6(m, n, k),
+                    Dtype::Fp4 | Dtype::Mxfp4 => GemmConfig::mxfp4(m, n, k),
                     _ => GemmConfig::bf16(m, n, k),
                 };
                 cfg.dtype = self.dtype;
@@ -1192,7 +1299,9 @@ impl Query {
                 }
             }
             Problem::FusedChain { kind, rows, d } => {
-                let mut chain = kind.chain(rows, d);
+                // storage dtype is a key axis, not an override: Bf16
+                // resolves to the legacy 2.0 B/elem pricing exactly
+                let mut chain = kind.chain(rows, d).with_dtype(self.dtype);
                 if let Some(vec) = self.ov.vectorized {
                     chain.vectorized = vec;
                 }
@@ -1687,6 +1796,73 @@ mod tests {
         // and the derived key agrees with the Problem-based bucketing
         let key = cfg.key(ArchId::Mi355x);
         assert_eq!(key.id(), "gemm/bf16/medium/mi355x");
+    }
+
+    #[test]
+    fn warm_bf16_cache_never_answers_a_low_precision_query() {
+        // the satellite-1 regression: dtype is a cache-key axis, so a
+        // cache warmed entirely by BF16 dispatches must cold-sweep (not
+        // hit) when the same problem arrives re-keyed to FP8/MXFP4
+        let mut cache = TuneCache::new();
+        let bf16 = Query::moe_ffn(ArchId::Mi355x, 8192, 8, 2);
+        bf16.dispatch_with(&mut cache);
+        assert!(bf16.dispatch_with(&mut cache).from_cache, "bf16 warm");
+        for d in [Dtype::Fp8, Dtype::Mxfp4] {
+            let q = Query::moe_ffn(ArchId::Mi355x, 8192, 8, 2).with_dtype(d);
+            assert_ne!(q.key().id(), bf16.key().id());
+            let disp = q.dispatch_with(&mut cache);
+            assert!(!disp.from_cache, "{:?} answered from a bf16 record", d);
+            assert_eq!(disp.moe_config().dtype, d);
+        }
+        // the same holds for GEMM keys
+        let g16 = Query::gemm(ArchId::Mi355x, Dtype::Bf16, 8192, 8192, 8192);
+        g16.dispatch_with(&mut cache);
+        let g8 = Query::gemm(ArchId::Mi355x, Dtype::Fp8, 8192, 8192, 8192)
+            .dispatch_with(&mut cache);
+        assert!(!g8.from_cache);
+        assert_eq!(g8.gemm_config().dtype, Dtype::Fp8);
+    }
+
+    #[test]
+    fn low_precision_variant_tables_are_per_dtype() {
+        let p = Problem::Gemm { m: 8192, n: 8192, k: 8192 };
+        let fp8 = KernelKey::of(Op::Gemm, Dtype::Fp8, &p, ArchId::Mi355x);
+        assert!(variants(&fp8).iter().any(|v| v.name == "gemm-fp8-bs128"));
+        let mx = KernelKey::of(Op::Gemm, Dtype::Mxfp4, &p, ArchId::Mi355x);
+        assert!(variants(&mx).iter().any(|v| v.name == "gemm-mxfp4-bs32"));
+        // BF16 keeps the paper's original candidate set verbatim
+        let bf = KernelKey::of(Op::Gemm, Dtype::Bf16, &p, ArchId::Mi355x);
+        let names: Vec<&str> = variants(&bf).iter().map(|v| v.name).collect();
+        assert_eq!(
+            names,
+            ["pp-256x256", "pp-192x256", "il-192x256", "ws-4p12c-192x256"]
+        );
+        let moe = Problem::MoeGemm {
+            tokens: 4096,
+            d_model: 2048,
+            d_ff: 1024,
+            experts: 8,
+            top_k: 2,
+            skew_pct: 0,
+        };
+        let k8 = KernelKey::of(Op::MoeGemm, Dtype::Fp8, &moe, ArchId::Mi325x);
+        assert!(variants(&k8).iter().any(|v| v.name == "moe-a8w8"));
+        let k4 = KernelKey::of(Op::MoeGemm, Dtype::Mxfp4, &moe, ArchId::Mi325x);
+        assert!(variants(&k4).iter().any(|v| v.name == "moe-mxfp4"));
+        // totality: every dtype resolves on the CDNA3 fallback arch
+        for d in [Dtype::Fp8, Dtype::Fp6, Dtype::Fp4, Dtype::Mxfp4] {
+            for op in Op::ALL {
+                for shape in ShapeClass::ALL {
+                    let key = KernelKey {
+                        op,
+                        dtype: d,
+                        shape,
+                        arch: ArchId::Mi325x,
+                    };
+                    assert!(!variants(&key).is_empty(), "{} empty", key.id());
+                }
+            }
+        }
     }
 
     #[test]

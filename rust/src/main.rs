@@ -29,6 +29,11 @@
 //!   attn-bwd              attention-backwards grid (dQ/dK/dV recompute
 //!                         subsystem vs baselines, Table 3 re-check);
 //!                         writes BENCH_attn_bwd.json (HK_ATTN_BWD_OUT)
+//!   lowprec               low-precision dtype axis: GEMM 8192^3 +
+//!                         grouped MoE across {bf16, fp8, fp6, mxfp4}
+//!                         on both parts via the per-dtype registry
+//!                         tables; writes BENCH_lowprec.json
+//!                         (HK_LOWPREC_OUT)
 //!   profile               roofline attribution over the paper-shapes
 //!                         grid + a traced serve run and train step;
 //!                         writes BENCH_profile.json (HK_PROFILE_OUT)
@@ -95,7 +100,7 @@ fn main() -> Result<()> {
             let exp = args.get(1).map(String::as_str).unwrap_or("all");
             if !report::run(exp) {
                 bail!(
-                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, fusion, multi-gpu, attn-bwd, profile, calibrate, all"
+                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, fusion, multi-gpu, attn-bwd, lowprec, profile, calibrate, all"
                 );
             }
         }
@@ -103,6 +108,7 @@ fn main() -> Result<()> {
         Some("fusion") => report::fusion(),
         Some("multi-gpu") => report::multi_gpu(),
         Some("attn-bwd") => report::attn_bwd(),
+        Some("lowprec") => report::lowprec(),
         Some("profile") => {
             if let Some((old, new)) = flag2(&args, "--diff") {
                 if !report::profile_diff(&old, &new) {
@@ -287,6 +293,7 @@ fn main() -> Result<()> {
             eprintln!("       {exe} fusion");
             eprintln!("       {exe} multi-gpu");
             eprintln!("       {exe} attn-bwd");
+            eprintln!("       {exe} lowprec");
             eprintln!(
                 "       {exe} profile [--arch A] [--check-golden F | --write-golden F | --diff OLD NEW]"
             );

@@ -241,6 +241,11 @@ pub fn calib_grid(arch: ArchId) -> Vec<(&'static str, Query)> {
         ("gemm-bf16-4096", Query::gemm(arch, Dtype::Bf16, 4096, 4096, 4096)),
         ("gemm-bf16-8192", Query::gemm(arch, Dtype::Bf16, 8192, 8192, 8192)),
         ("gemm-fp8-8192", Query::gemm(arch, Dtype::Fp8, 8192, 8192, 8192)),
+        ("gemm-fp6-8192", Query::gemm(arch, Dtype::Fp6, 8192, 8192, 8192)),
+        (
+            "gemm-mxfp4-8192",
+            Query::gemm(arch, Dtype::Mxfp4, 8192, 8192, 8192),
+        ),
         ("attn-gqa-4096", Query::attn_gqa(arch, 4096, 128, true)),
         ("attn-gqa-8192", Query::attn_gqa(arch, 8192, 128, true)),
         ("attn-bwd-4096", Query::attn_gqa(arch, 4096, 128, true).bwd()),
@@ -249,6 +254,10 @@ pub fn calib_grid(arch: ArchId) -> Vec<(&'static str, Query)> {
         ("decode-b64-ctx4096", Query::decode_gqa(arch, 64, 4096, 16)),
         ("moe-ffn-e8-k2", Query::moe_ffn(arch, 4096, 8, 2)),
         ("moe-ffn-e16-k2", Query::moe_ffn(arch, 8192, 16, 2)),
+        (
+            "moe-a8w8-e8-k2",
+            Query::moe_ffn(arch, 4096, 8, 2).with_dtype(Dtype::Fp8),
+        ),
         ("add-rmsnorm-4096x8192", Query::add_rmsnorm(arch, 4096, 8192)),
         ("silu-mul-4096x4096", Query::silu_mul(arch, 4096, 4096)),
         ("rope-8192", Query::rope_paper(arch, 8192)),

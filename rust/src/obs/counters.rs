@@ -41,6 +41,10 @@ pub struct KernelCounters {
     /// Activation bytes moved across GPU boundaries (expert-parallel
     /// all-to-all, gradient all-reduce).
     pub cross_gpu_bytes: f64,
+    /// Scale-tensor bytes read for block-scaled dtypes (MXFP4: one FP8
+    /// scale per 32 elements). A sub-counter of `hbm_read_bytes` —
+    /// exactly 0 on every non-block-scaled path.
+    pub scale_bytes: f64,
     /// Global-memory passes a fusion-chain plan executed (1 when fully
     /// fused, one per segment when split).
     pub fused_passes: u64,
@@ -70,6 +74,7 @@ impl KernelCounters {
         self.spill_cycles += o.spill_cycles;
         self.atomic_rmw_bytes += o.atomic_rmw_bytes;
         self.cross_gpu_bytes += o.cross_gpu_bytes;
+        self.scale_bytes += o.scale_bytes;
         self.fused_passes += o.fused_passes;
         self.forced_splits += o.forced_splits;
         self.kernels += o.kernels;
@@ -97,6 +102,7 @@ impl KernelCounters {
             ("spill_cycles", self.spill_cycles),
             ("atomic_rmw_bytes", self.atomic_rmw_bytes),
             ("cross_gpu_bytes", self.cross_gpu_bytes),
+            ("scale_bytes", self.scale_bytes),
             ("fused_passes", self.fused_passes as f64),
             ("forced_splits", self.forced_splits as f64),
             ("kernels", self.kernels as f64),
@@ -116,6 +122,7 @@ impl KernelCounters {
             ("spill_cycles", Json::Num(self.spill_cycles)),
             ("atomic_rmw_bytes", Json::Num(self.atomic_rmw_bytes)),
             ("cross_gpu_bytes", Json::Num(self.cross_gpu_bytes)),
+            ("scale_bytes", Json::Num(self.scale_bytes)),
             ("fused_passes", Json::Num(self.fused_passes as f64)),
             ("forced_splits", Json::Num(self.forced_splits as f64)),
             ("kernels", Json::Num(self.kernels as f64)),
@@ -167,6 +174,7 @@ mod tests {
             spill_cycles: 96.0,
             atomic_rmw_bytes: 7.0e7,
             cross_gpu_bytes: 1.0e6,
+            scale_bytes: 5.0e5,
             fused_passes: 3,
             forced_splits: 1,
             kernels: 4,

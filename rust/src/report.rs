@@ -1430,6 +1430,81 @@ pub fn ablations() {
     }
 }
 
+/// `lowprec` — the storage-dtype axis as a first-class sweep: the same
+/// compute-bound GEMM (8192^3) and grouped MoE FFN (8 experts, top-2)
+/// dispatched through the registry's per-dtype variant tables across
+/// {BF16, FP8, FP6, MXFP4} on both evaluated parts. Every row carries
+/// achieved and peak TFLOPs plus the speedup over the BF16 row of the
+/// same (arch, op) group — FP8 must come out >= BF16 at these
+/// compute-bound shapes or the dtype axis is mis-priced. Writes
+/// `BENCH_lowprec.json` (override the path with `HK_LOWPREC_OUT`).
+pub fn lowprec() {
+    use crate::runtime::json::Json;
+    hr("lowprec — dtype axis: GEMM 8192^3 + grouped MoE across {bf16, fp8, fp6, mxfp4}");
+    let dtypes = [Dtype::Bf16, Dtype::Fp8, Dtype::Fp6, Dtype::Mxfp4];
+    let mut rows: Vec<Json> = Vec::new();
+    println!(
+        "{:<8} {:<14} {:<7} {:<18} {:>9} {:>9} {:>6} {:>9}",
+        "arch", "op", "dtype", "variant", "TFLOPS", "peak", "%peak", "vs bf16"
+    );
+    for arch in [ArchId::Mi325x, ArchId::Mi355x] {
+        let a = arch.arch();
+        for op_label in ["gemm-8192", "moe-ffn-e8-k2"] {
+            let mut bf16_tf = 0.0_f64;
+            for dtype in dtypes {
+                let q = if op_label == "gemm-8192" {
+                    Query::gemm(arch, dtype, 8192, 8192, 8192)
+                } else {
+                    Query::moe_ffn(arch, 4096, 8, 2).with_dtype(dtype)
+                };
+                let d = q.dispatch();
+                let p = d.simulate();
+                if dtype == Dtype::Bf16 {
+                    bf16_tf = p.tflops;
+                }
+                let peak = a.peak_tflops(dtype);
+                let vs_bf16 = p.tflops / bf16_tf;
+                println!(
+                    "{:<8} {:<14} {:<7} {:<18} {:>9.0} {:>9.0} {:>5.0}% {:>8.2}x",
+                    arch.tag(),
+                    op_label,
+                    dtype.tag(),
+                    d.variant,
+                    p.tflops,
+                    peak,
+                    p.tflops / peak * 100.0,
+                    vs_bf16
+                );
+                rows.push(Json::obj(vec![
+                    ("arch", Json::Str(arch.tag().to_string())),
+                    ("op", Json::Str(op_label.to_string())),
+                    ("dtype", Json::Str(dtype.tag().to_string())),
+                    ("variant", Json::Str(d.variant.clone())),
+                    ("time_s", Json::Num(p.time_s)),
+                    ("tflops", Json::Num(p.tflops)),
+                    ("peak_tflops", Json::Num(peak)),
+                    ("flops_frac", Json::Num(p.tflops / peak)),
+                    ("eff_bw_tbps", Json::Num(p.eff_bw_tbps)),
+                    ("bytes_per_elem", Json::Num(dtype.bytes_with_scales_f())),
+                    ("speedup_vs_bf16", Json::Num(vs_bf16)),
+                ]));
+            }
+        }
+    }
+    println!("  (per-dtype MFMA throughput x per-dtype bytes: narrower formats");
+    println!("   raise the roofline AND cut the streamed footprint; MXFP4 rows");
+    println!("   include the 1-byte-per-32 block-scale tensor traffic)");
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("lowprec".into())),
+        ("dtypes", Json::Arr(dtypes.iter().map(|d| Json::Str(d.tag().to_string())).collect())),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out = std::env::var("HK_LOWPREC_OUT")
+        .unwrap_or_else(|_| "BENCH_lowprec.json".to_string());
+    std::fs::write(&out, doc.dump()).expect("write BENCH_lowprec.json");
+    println!("\nwrote {out}");
+}
+
 /// The `profile` roofline grid: one paper-shape query per kernel class,
 /// dispatched through a fresh tune cache so the payload never depends
 /// on tuner state left on disk.
@@ -1581,7 +1656,8 @@ pub fn profile_payload(
 }
 
 /// The counter-golden payload. Every number here is an exact integral
-/// f64 by construction — chain bytes are `reads x rows x d x 2` and the
+/// f64 by construction — chain bytes are `reads x rows x d x elem_bytes`
+/// (2 B bf16, 1 B fp8, 17/32 B mxfp4 with d a multiple of 32) and the
 /// router model is closed-form — so the checked-in golden is derivable
 /// by hand and the CI gate diffs it exactly, with no tolerance.
 pub fn profile_golden_json() -> crate::runtime::json::Json {
@@ -1596,6 +1672,17 @@ pub fn profile_golden_json() -> crate::runtime::json::Json {
         ("silu_mul_4096x4096", FusionChain::silu_mul(4096, 4096)),
         ("qkv_rope_16384x128", FusionChain::qkv_rope_rows(16384, 128)),
         ("gemm_epilogue_4096x4096", FusionChain::gemm_epilogue(4096, 4096)),
+        // low-precision storage paths: chain bytes stay exact integral
+        // f64s (1 B/elem fp8; 17/32 B/elem mxfp4 at d % 32 == 0), so
+        // the no-tolerance diff covers the dtype axis too
+        (
+            "quant_epilogue_fp8_4096x4096",
+            FusionChain::quant_epilogue(4096, 4096, Dtype::Fp8),
+        ),
+        (
+            "dequant_rmsnorm_mxfp4_4096x4096",
+            FusionChain::dequant_rmsnorm(4096, 4096, Dtype::Mxfp4),
+        ),
     ];
     let mut entries: Vec<(String, Json)> = Vec::new();
     for (key, c) in chains {
@@ -1972,6 +2059,7 @@ pub fn all() {
     multi_gpu();
     attn_bwd();
     ablations();
+    lowprec();
     profile(M355);
     calibrate(M355);
 }
@@ -1998,6 +2086,7 @@ pub fn run(name: &str) -> bool {
         "fusion" => fusion(),
         "multi-gpu" | "multi_gpu" => multi_gpu(),
         "attn-bwd" | "attn_bwd" => attn_bwd(),
+        "lowprec" | "low-prec" => lowprec(),
         "profile" => profile(M355),
         "calibrate" => {
             calibrate(M355);

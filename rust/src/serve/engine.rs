@@ -33,7 +33,10 @@ use crate::obs::{KernelCounters, Trace};
 use crate::runtime::json::Json;
 use crate::runtime::Rng;
 use crate::bail;
-use crate::serve::kvcache::{KvCacheConfig, KvCacheManager, KvCacheStats};
+use crate::serve::kvcache::{
+    kv_block_bytes, KvCacheConfig, KvCacheManager, KvCacheStats,
+};
+use crate::sim::arch::Dtype;
 use std::collections::{HashMap, VecDeque};
 
 /// A memoized step price: simulated wall time plus the hardware-style
@@ -70,6 +73,13 @@ pub struct ServeConfig {
     pub heads_q: u32,
     pub heads_kv: u32,
     pub d_head: u32,
+    /// KV-cache storage dtype. Sets the HBM footprint of one KV block
+    /// ([`kv_block_bytes`]) and therefore how many blocks a byte budget
+    /// buys ([`Self::with_kv_budget`]) — FP8 KV halves the bytes per
+    /// block, so the same HBM holds ~2x the effective KV capacity.
+    /// Attention math stays at working precision (the cache is
+    /// dequantized on the fly); only the memory plane narrows.
+    pub kv_dtype: Dtype,
     /// Shared system-prompt tokens prepended to every request (0 =
     /// disabled). Served from one ref-counted prefix, not re-allocated.
     pub shared_prefix_tokens: u32,
@@ -145,11 +155,35 @@ impl Default for ServeConfig {
             heads_q: 64,
             heads_kv: 8,
             d_head: 128,
+            kv_dtype: Dtype::Bf16,
             shared_prefix_tokens: 128,
             moe: None,
             mb_fusion: MbFusion::Off,
             mb_d_model: 2048,
         }
+    }
+}
+
+impl ServeConfig {
+    /// HBM bytes of one KV block at this config's geometry and dtype.
+    pub fn kv_block_bytes(&self) -> f64 {
+        kv_block_bytes(self.kv_dtype, self.block_size, self.heads_kv, self.d_head)
+    }
+
+    /// Derive `num_blocks` from a **per-GPU** HBM byte budget at the
+    /// configured KV dtype and geometry: a narrower `kv_dtype` buys
+    /// proportionally more blocks from the same budget (builder style).
+    pub fn with_kv_budget(mut self, hbm_budget_bytes: f64) -> Self {
+        self.num_blocks = KvCacheConfig::for_hbm_budget(
+            hbm_budget_bytes,
+            self.kv_dtype,
+            self.block_size,
+            self.heads_kv,
+            self.d_head,
+            self.n_gpus,
+        )
+        .num_blocks;
+        self
     }
 }
 
@@ -1296,6 +1330,50 @@ mod tests {
         // and the multi-GPU trace replays bit-identically
         let again = ServeEngine::new(mk(2)).unwrap().run_trace(&trace).unwrap();
         assert_eq!(two.to_json().dump(), again.to_json().dump());
+    }
+
+    #[test]
+    fn fp8_kv_at_equal_budget_relieves_preemption_pressure() {
+        // a per-GPU budget sized to give the bf16 engine a deliberately
+        // tiny pool (96 blocks at the default 8x128x16 geometry)
+        let budget = 96.0 * 65536.0;
+        let mk = |kv_dtype| {
+            ServeConfig {
+                kv_dtype,
+                max_batch: 8,
+                shared_prefix_tokens: 32,
+                ..ServeConfig::default()
+            }
+            .with_kv_budget(budget)
+        };
+        let bf16_cfg = mk(Dtype::Bf16);
+        let fp8_cfg = mk(Dtype::Fp8);
+        // half the bytes per KV block -> exactly 2x the blocks
+        assert_eq!(bf16_cfg.kv_block_bytes(), 65536.0);
+        assert_eq!(fp8_cfg.kv_block_bytes(), 32768.0);
+        assert_eq!(bf16_cfg.num_blocks, 96);
+        assert_eq!(fp8_cfg.num_blocks, 192);
+
+        let trace = serve_trace(24, 500.0, 9);
+        let mut b = ServeEngine::new(bf16_cfg).unwrap();
+        let mut f = ServeEngine::new(fp8_cfg).unwrap();
+        let br = b.run_trace(&trace).unwrap();
+        let fr = f.run_trace(&trace).unwrap();
+        assert_eq!(br.served, 24);
+        assert_eq!(fr.served, 24);
+        // double the blocks from the same HBM: the KV plane can only
+        // get less contended
+        assert!(
+            fr.preemptions <= br.preemptions,
+            "fp8 {} !<= bf16 {}",
+            fr.preemptions,
+            br.preemptions
+        );
+        assert!(fr.kv.failed_admissions <= br.kv.failed_admissions);
+        b.kv().validate().unwrap();
+        f.kv().validate().unwrap();
+        // the default path is unchanged: Bf16 KV is the default dtype
+        assert_eq!(ServeConfig::default().kv_dtype, Dtype::Bf16);
     }
 
     #[test]

@@ -37,7 +37,26 @@
 
 use crate::err;
 use crate::error::Result;
+use crate::sim::arch::Dtype;
 use std::collections::HashMap;
+
+/// HBM bytes one KV block occupies: K and V planes of
+/// `heads_kv x d_head` values per token, `block_size` tokens per block,
+/// at the KV storage dtype. Narrowing the dtype shrinks the block, so a
+/// fixed byte budget holds proportionally more blocks — the FP8-KV
+/// capacity lever (`bytes_f(Fp8)` is half `bytes_f(Bf16)`, so the same
+/// budget holds exactly 2x the blocks).
+pub fn kv_block_bytes(
+    dtype: Dtype,
+    block_size: u32,
+    heads_kv: u32,
+    d_head: u32,
+) -> f64 {
+    2.0 * heads_kv as f64
+        * d_head as f64
+        * block_size as f64
+        * dtype.bytes_f()
+}
 
 /// Cache geometry. `num_blocks` is **per GPU** — the node holds
 /// `n_gpus x num_blocks` physical blocks in disjoint pools.
@@ -54,6 +73,28 @@ pub struct KvCacheConfig {
 impl Default for KvCacheConfig {
     fn default() -> Self {
         KvCacheConfig { num_blocks: 4096, block_size: 16, n_gpus: 1 }
+    }
+}
+
+impl KvCacheConfig {
+    /// Geometry for a **per-GPU** HBM byte budget at a KV storage dtype:
+    /// as many whole blocks as the budget holds ([`kv_block_bytes`]),
+    /// never fewer than one. Pool mechanics (ref-counting, CoW,
+    /// eviction) are dtype-blind — the dtype only sets how many blocks
+    /// the budget buys, which is exactly how a serving stack gains ~2x
+    /// effective KV capacity from an FP8 cache.
+    pub fn for_hbm_budget(
+        hbm_budget_bytes: f64,
+        dtype: Dtype,
+        block_size: u32,
+        heads_kv: u32,
+        d_head: u32,
+        n_gpus: u32,
+    ) -> Self {
+        let per_block =
+            kv_block_bytes(dtype, block_size.max(1), heads_kv, d_head).max(1.0);
+        let num_blocks = (hbm_budget_bytes / per_block).floor().max(1.0) as u32;
+        KvCacheConfig { num_blocks, block_size: block_size.max(1), n_gpus }
     }
 }
 
@@ -784,6 +825,51 @@ mod tests {
         assert!(m.admit(13, 32).is_err());
         assert!(m.has_prefix(1));
         assert_eq!(m.seq_table(10).unwrap().len(), 2);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn fp8_kv_admits_double_the_sequences_at_equal_budget() {
+        // llama-ish KV geometry: 8 kv heads x 128 d_head, 16-token
+        // blocks -> one bf16 block = 2*8*128*16*2 = 65536 B exactly
+        assert_eq!(kv_block_bytes(Dtype::Bf16, 16, 8, 128), 65536.0);
+        assert_eq!(kv_block_bytes(Dtype::Fp8, 16, 8, 128), 32768.0);
+        let budget = (1u64 << 30) as f64; // 1 GiB per GPU
+        let bf16 =
+            KvCacheConfig::for_hbm_budget(budget, Dtype::Bf16, 16, 8, 128, 1);
+        let fp8 =
+            KvCacheConfig::for_hbm_budget(budget, Dtype::Fp8, 16, 8, 128, 1);
+        // half the bytes per block -> exactly 2x the blocks
+        assert_eq!(bf16.num_blocks, 16384);
+        assert_eq!(fp8.num_blocks, 2 * bf16.num_blocks);
+
+        // identical 512-token admissions until each pool rejects: the
+        // FP8 pool takes exactly twice as many
+        let mut mb = KvCacheManager::new(bf16);
+        let mut mf = KvCacheManager::new(fp8);
+        let mut nb = 0u64;
+        while mb.admit(nb, 512).is_ok() {
+            nb += 1;
+        }
+        let mut nf = 0u64;
+        while mf.admit(nf, 512).is_ok() {
+            nf += 1;
+        }
+        assert_eq!(nb, 512);
+        assert_eq!(nf, 2 * nb);
+        mb.validate().unwrap();
+        mf.validate().unwrap();
+
+        // eviction safety is dtype-blind: a shared prefix in the FP8
+        // pool is still never reclaimed from under a live fork
+        let mut m = KvCacheManager::new(KvCacheConfig {
+            num_blocks: 4,
+            ..fp8
+        });
+        m.cache_prefix(1, 32).unwrap(); // 2 of 4 blocks
+        m.fork_from_prefix(1, 10).unwrap();
+        assert!(m.admit(11, 64).is_err()); // would need all 4
+        assert!(m.has_prefix(1));
         m.validate().unwrap();
     }
 

@@ -29,7 +29,14 @@ pub enum Dtype {
     Fp8,
     Fp6,
     Fp4,
+    /// OCP MX FP4: 4-bit elements in blocks of 32 sharing one FP8 scale.
+    /// Runs on the same f8f6f4 matrix pipe as plain FP4; the block scales
+    /// are a separate tensor priced via [`Dtype::scale_bytes_per_elem`].
+    Mxfp4,
 }
+
+/// Elements sharing one FP8 scale in an MX block format (OCP MX spec).
+pub const MX_BLOCK: u32 = 32;
 
 impl Dtype {
     /// Bytes per element as stored in HBM / LDS. FP6 is sub-byte: 6 bits.
@@ -39,12 +46,41 @@ impl Dtype {
             Dtype::Bf16 | Dtype::Fp16 => 16,
             Dtype::Fp8 => 8,
             Dtype::Fp6 => 6,
-            Dtype::Fp4 => 4,
+            Dtype::Fp4 | Dtype::Mxfp4 => 4,
         }
     }
 
     pub fn bytes_f(self) -> f64 {
         self.bits() as f64 / 8.0
+    }
+
+    /// Scale-tensor bytes per element. Block-scaled formats carry one
+    /// FP8 scale per [`MX_BLOCK`] elements as a separate tensor; plain
+    /// formats carry none (per-tensor scales are free at this
+    /// granularity).
+    pub fn scale_bytes_per_elem(self) -> f64 {
+        match self {
+            Dtype::Mxfp4 => 1.0 / MX_BLOCK as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Total HBM bytes per element including the scale tensor.
+    pub fn bytes_with_scales_f(self) -> f64 {
+        self.bytes_f() + self.scale_bytes_per_elem()
+    }
+
+    /// Stable lowercase label used in bench rows and grid keys.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+            Dtype::Fp16 => "fp16",
+            Dtype::Fp8 => "fp8",
+            Dtype::Fp6 => "fp6",
+            Dtype::Fp4 => "fp4",
+            Dtype::Mxfp4 => "mxfp4",
+        }
     }
 }
 
@@ -245,7 +281,9 @@ impl Arch {
                     Dtype::F32 => if cdna4 { 2.0 } else { 1.0 },
                     Dtype::Bf16 | Dtype::Fp16 => if cdna4 { 8.0 } else { 4.0 },
                     Dtype::Fp8 => if cdna4 { 16.0 } else { 8.0 },
-                    Dtype::Fp6 | Dtype::Fp4 => if cdna4 { 32.0 } else { 8.0 },
+                    Dtype::Fp6 | Dtype::Fp4 | Dtype::Mxfp4 => {
+                        if cdna4 { 32.0 } else { 8.0 }
+                    }
                 };
                 let lanes = 64.0;
                 let cyc = (shape.m as f64 * shape.n as f64 * shape.k as f64)
@@ -263,7 +301,7 @@ impl Arch {
                     Dtype::F32 => 0.5,
                     Dtype::Bf16 | Dtype::Fp16 => 1.0,
                     Dtype::Fp8 | Dtype::Fp6 => 2.0,
-                    Dtype::Fp4 => {
+                    Dtype::Fp4 | Dtype::Mxfp4 => {
                         if self.gen == Gen::B200Like {
                             4.0
                         } else {
@@ -293,7 +331,7 @@ impl Arch {
         match self.gen {
             Gen::Cdna3 | Gen::Cdna4 => match dtype {
                 Dtype::Fp8 => MFMA_16X16X64,
-                Dtype::Fp6 | Dtype::Fp4 => MFMA_16X16X128,
+                Dtype::Fp6 | Dtype::Fp4 | Dtype::Mxfp4 => MFMA_16X16X128,
                 _ => MFMA_16X16X32,
             },
             Gen::B200Like | Gen::H100Like => MMA_256X256X16,
@@ -358,5 +396,27 @@ mod tests {
         assert_eq!(Dtype::Bf16.bits(), 16);
         assert_eq!(Dtype::Fp6.bits(), 6);
         assert!((Dtype::Fp6.bytes_f() - 0.75).abs() < 1e-12);
+        assert_eq!(Dtype::Mxfp4.bits(), 4);
+    }
+
+    #[test]
+    fn mxfp4_rides_the_fp4_pipe_and_prices_its_scales() {
+        let a = Arch::mi355x();
+        // same matrix pipe: identical cycle cost and fastest shape
+        assert_eq!(
+            a.mfma_cycles(MFMA_16X16X128, Dtype::Mxfp4),
+            a.mfma_cycles(MFMA_16X16X128, Dtype::Fp4)
+        );
+        assert_eq!(a.fastest_shape(Dtype::Mxfp4), MFMA_16X16X128);
+        // one FP8 scale byte per 32-element block; plain formats pay none
+        assert!((Dtype::Mxfp4.scale_bytes_per_elem() - 1.0 / 32.0).abs() < 1e-12);
+        assert_eq!(Dtype::Fp8.scale_bytes_per_elem(), 0.0);
+        assert_eq!(Dtype::Bf16.scale_bytes_per_elem(), 0.0);
+        assert!((Dtype::Mxfp4.bytes_with_scales_f() - (0.5 + 1.0 / 32.0)).abs() < 1e-12);
+        // narrower dtype never costs more HBM bytes per element
+        let order = [Dtype::F32, Dtype::Bf16, Dtype::Fp8, Dtype::Fp6, Dtype::Mxfp4];
+        for w in order.windows(2) {
+            assert!(w[1].bytes_with_scales_f() <= w[0].bytes_with_scales_f());
+        }
     }
 }

@@ -309,6 +309,62 @@ fn schedule_patterns_preserve_flops_and_bytes() {
 }
 
 #[test]
+fn chain_byte_law_holds_with_quantize_stages_over_all_masks() {
+    // The chain-byte conservation law `split == fused + cut_traffic`
+    // must survive the dtype axis: quantize/dequantize stages change
+    // the per-element storage footprint (including the fractional
+    // MXFP4 block-scale bytes), and every cut mask of every chain has
+    // to balance exactly — the footprints are exact integral f64s, so
+    // equality is bitwise.
+    use hipkittens::kernels::fusion::FusionChain;
+    let a = Arch::mi355x();
+    let chains = [
+        FusionChain::quant_epilogue(1024, 2048, Dtype::Bf16),
+        FusionChain::quant_epilogue(1024, 2048, Dtype::Fp8),
+        FusionChain::quant_epilogue(1024, 2048, Dtype::Mxfp4),
+        FusionChain::dequant_rmsnorm(1024, 2048, Dtype::Fp8),
+        FusionChain::dequant_rmsnorm(1024, 2048, Dtype::Fp6),
+        FusionChain::dequant_rmsnorm(1024, 2048, Dtype::Mxfp4),
+    ];
+    for c in chains {
+        let n = c.stages.len() - 1;
+        let fused = c.evaluate_with_cuts(&a, &vec![false; n]);
+        for mask in 0u32..(1 << n) {
+            let cuts: Vec<bool> =
+                (0..n).map(|i| mask & (1 << i) != 0).collect();
+            let split = c.evaluate_with_cuts(&a, &cuts);
+            assert_eq!(
+                split.counters.hbm_total_bytes(),
+                fused.counters.hbm_total_bytes() + c.cut_traffic_bytes(&cuts),
+                "{} mask {mask:#b}",
+                c.name
+            );
+        }
+    }
+}
+
+#[test]
+fn chain_bytes_monotone_nonincreasing_as_dtype_narrows() {
+    // Narrowing the storage dtype can only shrink a chain's global
+    // traffic — even for MXFP4, whose block-scale tensor rides on top
+    // of the 4-bit elements.
+    use hipkittens::kernels::fusion::FusionChain;
+    let a = Arch::mi355x();
+    let mut prev = f64::INFINITY;
+    for dtype in [Dtype::Bf16, Dtype::Fp8, Dtype::Fp6, Dtype::Mxfp4] {
+        let c = FusionChain::quant_epilogue(2048, 4096, dtype);
+        let n = c.stages.len() - 1;
+        let b = c
+            .evaluate_with_cuts(&a, &vec![false; n])
+            .counters
+            .hbm_total_bytes();
+        assert!(b <= prev, "{dtype:?}: {b} > {prev}");
+        assert!(b > 0.0);
+        prev = b;
+    }
+}
+
+#[test]
 fn loc_ordering_holds_for_any_spec() {
     use hipkittens::hk::schedule::{Cluster, LoopSpec};
     use hipkittens::sim::instr::Instr;

@@ -143,6 +143,41 @@ fn moe_shard_counters_sum_to_node_totals() {
     }
 }
 
+#[test]
+fn lowprec_moe_shard_counters_merge_bit_exactly() {
+    // The dtype axis must not break counter conservation: the grouped
+    // FP8 and MXFP4 paths shard across GPUs like BF16, and the per-GPU
+    // counters (including the MXFP4 block-scale tensor bytes) still sum
+    // bit-exactly to the node totals.
+    use hipkittens::sim::Dtype;
+    let arch = Arch::mi355x();
+    let loads = vec![700u32, 140, 420, 980, 0, 560, 280, 1016];
+    for dtype in [Dtype::Fp8, Dtype::Mxfp4] {
+        for n_gpus in [1u32, 2, 4] {
+            let cfg = MoeGemmConfig {
+                n_gpus,
+                dtype,
+                ..MoeGemmConfig::from_loads(loads.clone(), 2048, 1024)
+            };
+            let eval = simulate_grouped_node(&arch, &cfg);
+            let mut sum = KernelCounters::default();
+            for gc in &eval.per_gpu_counters {
+                sum.merge(gc);
+            }
+            let node = &eval.perf.counters;
+            assert_eq!(sum.hbm_read_bytes, node.hbm_read_bytes, "{dtype:?} g{n_gpus}");
+            assert_eq!(sum.l2_bytes, node.l2_bytes, "{dtype:?} g{n_gpus}");
+            assert_eq!(sum.scale_bytes, node.scale_bytes, "{dtype:?} g{n_gpus}");
+            // only the block-scaled format carries a scale tensor
+            if dtype == Dtype::Mxfp4 {
+                assert!(node.scale_bytes > 0.0);
+            } else {
+                assert_eq!(node.scale_bytes, 0.0);
+            }
+        }
+    }
+}
+
 fn profile_serve_config(n_gpus: u32) -> ServeConfig {
     ServeConfig {
         arch: ArchId::Mi355x,
