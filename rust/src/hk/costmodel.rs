@@ -517,6 +517,38 @@ pub fn spill_penalty_cycles(spilled: u32) -> u64 {
     12 * spilled as u64
 }
 
+/// Scale-tensor bytes of an `m x k @ k x n` GEMM under a given
+/// [`crate::sim::arch::ScaleMode`] — what lands in
+/// `KernelCounters.scale_bytes`.
+///
+/// - `PerTensor`: one scale per tensor, free at this granularity.
+/// - `MxBlock`: one FP8 scale per [`crate::sim::arch::MX_BLOCK`]
+///   elements of A and B — `(m*k + k*n) * scale_bytes_per_elem`, the
+///   element-count-proportional MX footprint.
+/// - `PerTokenRowWise` (A8W8): one f32 scale per activation row plus
+///   one per weight output channel — `4 * (m + n)` bytes, independent
+///   of `k`. Hand-check: an 8192^3 A8W8 GEMM reads exactly
+///   `4 * (8192 + 8192) = 65536` scale bytes (pinned in
+///   `kernels::gemm` tests), 64x less than the MX block footprint
+///   `2 * 8192^2 / 32 = 4194304` on the same shape.
+pub fn scale_traffic_bytes(
+    mode: crate::sim::arch::ScaleMode,
+    dtype: crate::sim::arch::Dtype,
+    m: u32,
+    n: u32,
+    k: u32,
+) -> f64 {
+    use crate::sim::arch::ScaleMode;
+    match mode {
+        ScaleMode::PerTensor => 0.0,
+        ScaleMode::MxBlock => {
+            (m as f64 * k as f64 + k as f64 * n as f64)
+                * dtype.scale_bytes_per_elem()
+        }
+        ScaleMode::PerTokenRowWise => 4.0 * (m as f64 + n as f64),
+    }
+}
+
 /// Contention multiplier on the atomic-dQ read-modify-write stream, as a
 /// function of the kv-stationary blocks concurrently issuing
 /// `global_atomic_add` to the same head's dQ tiles.

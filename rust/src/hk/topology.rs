@@ -204,6 +204,18 @@ impl LinkModel {
             Gen::B200Like => Self::nvlink5(),
         }
     }
+
+    /// Time to move `bytes` point-to-point across this link — the KV
+    /// handoff of disaggregated prefill/decode serving. **Exactly 0.0
+    /// at zero bytes**: a zero-byte handoff collapses to the colocated
+    /// cost, so colocated serving is the zero-byte special case of the
+    /// disaggregated path, not a separate pricing rule.
+    pub fn point_to_point_s(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        bytes / (self.bw_tbps * 1e12) + self.lat_s
+    }
 }
 
 /// The two-level hierarchy: `n_gpus` identical GPUs (each with its own
@@ -265,6 +277,64 @@ impl NodeTopology {
         } else {
             (self.n_gpus as f64 - 1.0) / self.n_gpus as f64
         }
+    }
+
+    /// Histogram-aware crossing fraction of an expert-parallel
+    /// all-to-all: priced from the routed per-item token histogram
+    /// (`loads`) and its shard `placement` instead of the uniform
+    /// `(n-1)/n` assumption.
+    ///
+    /// Sources are uniform (the data-parallel batch is spread evenly
+    /// across GPUs), so for destination GPU `g` holding share `p_g` of
+    /// the routed tokens, the wire traffic is `p_g (n-1)/n` into `g`
+    /// (ingress) and `(1 - p_s)/n` out of each source `s` (egress).
+    /// The exchange is limited by its hottest link, so the effective
+    /// fraction is `n x` that bottleneck share — which
+    /// [`Self::all_to_all_s`] (dividing by `n`) then prices at the
+    /// bottleneck link's wire time.
+    ///
+    /// A **balanced histogram reproduces the uniform number
+    /// bit-for-bit**: when every GPU holds an equal share the method
+    /// returns [`Self::cross_fraction`] itself, not a float
+    /// re-derivation of it. Skew only ever raises the fraction: the
+    /// hottest link carries at least the average share, and with every
+    /// token routed to one GPU the fraction reaches `n - 1` times the
+    /// uniform per-link share (one ingress link serializes the whole
+    /// exchange).
+    pub fn hist_cross_fraction(&self, loads: &[f64], placement: &[u32]) -> f64 {
+        let n = self.n_gpus as usize;
+        if n <= 1 {
+            return 0.0;
+        }
+        assert_eq!(
+            loads.len(),
+            placement.len(),
+            "histogram and placement must cover the same items"
+        );
+        let mut per_gpu = vec![0.0f64; n];
+        let mut total = 0.0f64;
+        for (&l, &p) in loads.iter().zip(placement.iter()) {
+            per_gpu[(p as usize).min(n - 1)] += l;
+            total += l;
+        }
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let max = per_gpu.iter().cloned().fold(0.0f64, f64::max);
+        let min = per_gpu.iter().cloned().fold(f64::INFINITY, f64::min);
+        if max == min {
+            // balanced: collapse to the uniform law exactly
+            return self.cross_fraction();
+        }
+        let nf = n as f64;
+        let mut bottleneck = 0.0f64;
+        for &b in &per_gpu {
+            let share = b / total;
+            let ingress = share * (nf - 1.0) / nf;
+            let egress = (1.0 - share) / nf;
+            bottleneck = bottleneck.max(ingress).max(egress);
+        }
+        nf * bottleneck
     }
 }
 
@@ -402,6 +472,58 @@ mod tests {
             assert!(f < 1.0);
             prev = f;
         }
+    }
+
+    #[test]
+    fn point_to_point_is_zero_at_zero_bytes_and_linear_above() {
+        let l = LinkModel::infinity_fabric();
+        // the zero-byte handoff collapses exactly — no latency charge
+        assert_eq!(l.point_to_point_s(0.0), 0.0);
+        assert_eq!(l.point_to_point_s(-1.0), 0.0);
+        // hand check: 448 GB over a 0.448 TB/s link = 1 s + latency
+        let t = l.point_to_point_s(0.448e12);
+        assert_eq!(t, 1.0 + 1.5e-6);
+        // latency floor dominates tiny transfers
+        assert!(l.point_to_point_s(1.0) > l.lat_s);
+        assert!(l.point_to_point_s(1e9) > l.point_to_point_s(1e6));
+    }
+
+    #[test]
+    fn balanced_histogram_reproduces_the_uniform_fraction_bit_for_bit() {
+        for n in [2u32, 3, 4, 7, 8] {
+            let t = NodeTopology {
+                n_gpus: n,
+                link: LinkModel::infinity_fabric(),
+            };
+            // uniform loads, round-robin placement: every GPU holds an
+            // equal share, so the old number must come back exactly
+            let loads = vec![3.0; (n * 4) as usize];
+            let placement: Vec<u32> = (0..n * 4).map(|i| i % n).collect();
+            let f = t.hist_cross_fraction(&loads, &placement);
+            assert_eq!(f, t.cross_fraction(), "n={n}");
+        }
+        // single GPU: still exactly zero
+        let one = NodeTopology::single();
+        assert_eq!(one.hist_cross_fraction(&[1.0, 2.0], &[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn skewed_histogram_raises_the_crossing_fraction() {
+        let t = NodeTopology { n_gpus: 4, link: LinkModel::infinity_fabric() };
+        let uniform = t.cross_fraction();
+        // all tokens route to experts on GPU 0: its ingress link
+        // serializes the exchange
+        let all_on_one = t.hist_cross_fraction(&[8.0, 0.0, 0.0, 0.0], &[0, 1, 2, 3]);
+        // hand derivation: share 1.0 into one GPU -> bottleneck
+        // (n-1)/n = 0.75 -> fraction n x 0.75 = 3.0 (4x the uniform
+        // 0.75: one link where four used to share the wire)
+        assert_eq!(all_on_one, 3.0);
+        assert!(all_on_one > uniform);
+        // mild skew sits strictly between uniform and fully serialized
+        let mild = t.hist_cross_fraction(&[4.0, 2.0, 1.0, 1.0], &[0, 1, 2, 3]);
+        assert!(mild > uniform && mild < all_on_one, "{mild}");
+        // zero-load histogram prices nothing
+        assert_eq!(t.hist_cross_fraction(&[0.0, 0.0], &[0, 1]), 0.0);
     }
 
     #[test]

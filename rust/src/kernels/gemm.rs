@@ -11,7 +11,7 @@ use crate::hk::costmodel::{evaluate_gemm, KernelPerf};
 use crate::hk::regalloc::{allocate, AllocResult, RegMode, TileDemand};
 use crate::hk::schedule::{BuiltSchedule, Cluster, LoopSpec};
 use crate::hk::{interleave, pingpong, wavespec};
-use crate::sim::arch::{Arch, Dtype, MfmaShape};
+use crate::sim::arch::{Arch, Dtype, MfmaShape, ScaleMode};
 use crate::sim::cache::{row_major_order, GemmGrid};
 use crate::sim::instr::Instr;
 use crate::sim::lds::DsInstr;
@@ -75,6 +75,12 @@ pub struct GemmConfig {
     /// plan loads 12 bytes at a 16-byte stride, wasting 25% of bandwidth
     /// and LDS (App. F) -> 1.0 B/elem moved for a 0.75 B/elem dtype.
     pub traffic_elem_bytes: Option<f64>,
+    /// Scale-tensor layout override. `None` keeps the dtype's implied
+    /// mode ([`ScaleMode::for_dtype`]: MX block scales for block-scaled
+    /// formats, per-tensor otherwise) — the pre-ScaleMode behavior,
+    /// bit-for-bit. `Some(PerTokenRowWise)` prices A8W8 row-wise
+    /// dynamic-quant scale traffic on top of the element traffic.
+    pub scale_mode: Option<ScaleMode>,
 }
 
 impl GemmConfig {
@@ -95,7 +101,21 @@ impl GemmConfig {
             lds_ways: 1,
             shuffle_cycles: 0,
             traffic_elem_bytes: None,
+            scale_mode: None,
         }
+    }
+
+    /// A8W8 GEMM: FP8 elements with per-token row-wise dynamic-quant
+    /// scales (one f32 per activation row + one per weight channel)
+    /// instead of the free per-tensor scale.
+    pub fn a8w8(m: u32, n: u32, k: u32) -> Self {
+        Self::fp8(m, n, k).with_scale_mode(ScaleMode::PerTokenRowWise)
+    }
+
+    /// Pin the scale-tensor layout (builder style).
+    pub fn with_scale_mode(mut self, mode: ScaleMode) -> Self {
+        self.scale_mode = Some(mode);
+        self
     }
 
     /// FP8 GEMM (K step doubles at equal LDS bytes).
@@ -373,13 +393,22 @@ pub fn simulate(arch: &Arch, cfg: &GemmConfig) -> KernelPerf {
             * crate::hk::costmodel::spill_penalty_cycles(alloc.spilled)
                 as f64;
     }
-    // block-scale formats: attribute the compulsory scale-tensor
-    // footprint (A and B scales, read once) — a sub-counter of the HBM
-    // read bytes, exactly 0 for every non-block-scaled dtype
-    let scale_b = cfg.dtype.scale_bytes_per_elem();
-    if scale_b > 0.0 {
-        let elems = cfg.m as f64 * cfg.k as f64 + cfg.k as f64 * cfg.n as f64;
-        perf.counters.scale_bytes = elems * scale_b;
+    // scale-tensor footprint (A and B scales, read once) at the
+    // config's scale mode — a sub-counter of the HBM read bytes,
+    // exactly 0 for per-tensor scaling. MX block scales already ride
+    // the element traffic (`traffic_elem_bytes`); the A8W8 row-wise
+    // stream does not, so it is added to the read counter here.
+    let mode = cfg
+        .scale_mode
+        .unwrap_or_else(|| ScaleMode::for_dtype(cfg.dtype));
+    let sb = crate::hk::costmodel::scale_traffic_bytes(
+        mode, cfg.dtype, cfg.m, cfg.n, cfg.k,
+    );
+    if sb > 0.0 {
+        perf.counters.scale_bytes = sb;
+        if mode == ScaleMode::PerTokenRowWise {
+            perf.counters.hbm_read_bytes += sb;
+        }
     }
     perf
 }
@@ -517,6 +546,30 @@ mod tests {
         let want = 2.0 * (m as f64) * (m as f64) / 32.0;
         assert_eq!(mx.counters.scale_bytes, want);
         assert_eq!(f8.counters.scale_bytes, 0.0);
+    }
+
+    #[test]
+    fn a8w8_row_wise_scales_are_priced_and_distinct_from_mx_block() {
+        // hand-derived: one f32 scale per activation row + one per
+        // weight output channel -> 4 * (8192 + 8192) = 65536 bytes,
+        // independent of K
+        let m = 8192;
+        let a8 = simulate(&a(), &GemmConfig::a8w8(m, m, m));
+        assert_eq!(a8.counters.scale_bytes, 65536.0);
+        let deep = simulate(&a(), &GemmConfig::a8w8(m, m, 2 * m));
+        assert_eq!(deep.counters.scale_bytes, 65536.0);
+        // plain fp8 keeps per-tensor scales: no scale stream, and the
+        // A8W8 read counter is exactly fp8 + the row-wise scales
+        let f8 = simulate(&a(), &GemmConfig::fp8(m, m, m));
+        assert_eq!(f8.counters.scale_bytes, 0.0);
+        assert_eq!(
+            a8.counters.hbm_read_bytes,
+            f8.counters.hbm_read_bytes + 65536.0
+        );
+        // the MX block footprint on the same shape is per *element*:
+        // 2 * 8192^2 / 32 = 4194304 bytes, 64x the row-wise stream
+        let mx = simulate(&a(), &GemmConfig::mxfp4(m, m, m));
+        assert_eq!(mx.counters.scale_bytes, 64.0 * a8.counters.scale_bytes);
     }
 
     #[test]

@@ -134,6 +134,21 @@ impl MoeGemmConfig {
             * self.dtype.bytes_f()
             * topo.cross_fraction()
     }
+
+    /// Histogram-aware all-to-all bytes: prices the dispatch/combine
+    /// legs off the *routed* per-expert token histogram and the expert
+    /// placement, so a hot expert's GPU becomes the bottleneck link
+    /// instead of averaging away. A balanced placement reproduces
+    /// [`Self::cross_bytes`] bit-for-bit (the uniform special case of
+    /// [`NodeTopology::hist_cross_fraction`]).
+    pub fn cross_bytes_hist(&self, topo: &NodeTopology, placement: &[u32]) -> f64 {
+        let tokens: Vec<f64> =
+            self.expert_tokens.iter().map(|&t| t as f64).collect();
+        2.0 * self.total_tokens() as f64
+            * self.d_model as f64
+            * self.dtype.bytes_f()
+            * topo.hist_cross_fraction(&tokens, placement)
+    }
 }
 
 /// Exact-total parametric skew profile: interpolates between a uniform
@@ -249,7 +264,7 @@ pub fn simulate_grouped_node(arch: &Arch, cfg: &MoeGemmConfig) -> GroupedEval {
         built_up.info,
         &stats_up,
         &gpu_shards,
-        cfg.cross_bytes(&topo),
+        cfg.cross_bytes_hist(&topo, &gpu_of),
         cfg.flops(),
         cfg.bytes(),
     );
@@ -586,6 +601,29 @@ mod tests {
         );
         // the breakdown accounts for the whole wall-clock
         assert_eq!(four.perf.time_s, max_gpu + four.comms_s);
+    }
+
+    #[test]
+    fn histogram_all_to_all_collapses_when_balanced_and_rises_when_skewed() {
+        let a = arch();
+        let topo = NodeTopology::for_arch(&a, 4);
+        let base = MoeGemmConfig::balanced(16384, 2048, 1024, 16).with_gpus(4);
+        // balanced tokens, round-robin placement: the histogram path must
+        // reproduce the uniform (n-1)/n pricing bit-for-bit
+        let rr: Vec<u32> = (0..16u32).map(|e| e % 4).collect();
+        assert_eq!(base.cross_bytes_hist(&topo, &rr), base.cross_bytes(&topo));
+        // a hot expert concentrates traffic on one GPU's link: the
+        // routed-histogram price is strictly above the uniform one, and
+        // it is what lands in the node counters
+        let skew =
+            MoeGemmConfig::skewed(16384, 2048, 1024, 16, 0.8).with_gpus(4);
+        let det = simulate_grouped_node(&a, &skew);
+        assert!(
+            det.perf.counters.cross_gpu_bytes > skew.cross_bytes(&topo),
+            "{} !> {}",
+            det.perf.counters.cross_gpu_bytes,
+            skew.cross_bytes(&topo)
+        );
     }
 
     #[test]

@@ -15,6 +15,11 @@
 //!   train [--steps N] [--path kernels|reference]
 //!                         train the transformer through the AOT
 //!                         train_step artifact, logging the loss curve
+//!   serve-trace           production-trace serving: a heavy-tailed
+//!                         multi-tenant trace served by the lock-step,
+//!                         scheduled (chunked prefill + prefix-aware
+//!                         stealing) and disaggregated engines; writes
+//!                         BENCH_serve_trace.json (HK_SERVE_TRACE_OUT)
 //!   moe                   MoE walkthrough: router load-balance table +
 //!                         grouped-GEMM vs dense-FFN sweep; writes
 //!                         BENCH_moe.json (override with HK_MOE_OUT)
@@ -100,10 +105,11 @@ fn main() -> Result<()> {
             let exp = args.get(1).map(String::as_str).unwrap_or("all");
             if !report::run(exp) {
                 bail!(
-                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, moe, fusion, multi-gpu, attn-bwd, lowprec, profile, calibrate, all"
+                    "unknown experiment {exp}; try table1..table5, fig5..fig24, registry, serve, serve-trace, moe, fusion, multi-gpu, attn-bwd, lowprec, profile, calibrate, all"
                 );
             }
         }
+        Some("serve-trace") => report::serve_traced(),
         Some("moe") => report::moe(),
         Some("fusion") => report::fusion(),
         Some("multi-gpu") => report::multi_gpu(),
@@ -288,6 +294,7 @@ fn main() -> Result<()> {
             }
             eprintln!("usage: {exe} report <exp|all>");
             eprintln!("       {exe} serve [--paged|--mixed] [--requests N] [--rate R]");
+            eprintln!("       {exe} serve-trace");
             eprintln!("       {exe} train [--steps N] [--path kernels|reference]");
             eprintln!("       {exe} moe");
             eprintln!("       {exe} fusion");

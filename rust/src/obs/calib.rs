@@ -278,16 +278,24 @@ pub fn run_calibration(
     surrogate_scale: f64,
 ) -> CalibReport {
     let arch = arch_id.arch();
+    // Both models are pure functions of the query (the registry's tune
+    // cache is lock-guarded and keyed per shape), so the grid fans out
+    // on the scoped-thread harness; results merge in grid order and the
+    // profiler records below replay serially, so rows, scopes and the
+    // JSON payload are byte-identical to the serial evaluation.
+    let evals = crate::runtime::par::par_map(calib_grid(arch_id), |(label, q)| {
+        let d = q.dispatch();
+        let perf = d.simulate();
+        let orun = oracle_run(&arch, &d, &perf);
+        (label, d, perf, orun)
+    });
     let mut rows = Vec::new();
     prof.push("calibrate");
-    for (label, q) in calib_grid(arch_id) {
-        let d = q.dispatch();
+    for (label, d, perf, orun) in evals {
         let class = d.key.op.class_tag();
-        let perf = d.simulate();
         prof.push("surrogate");
         prof.record(label, &perf);
         prof.pop();
-        let orun = oracle_run(&arch, &d, &perf);
         prof.push("oracle");
         prof.record_counters(label, &orun.counters, orun.time_s);
         prof.pop();

@@ -568,6 +568,180 @@ pub fn serve() {
     );
 }
 
+/// Production-trace serving: one heavy-tailed multi-tenant trace served
+/// three ways — (A) the legacy lock-step engine with every tenant
+/// prefix re-prefilled as ordinary prompt tokens, (B) the scheduled
+/// engine (chunked prefill, prefix-aware routing, idle-lane stealing,
+/// SLO admission order), and (C) the scheduled engine with
+/// disaggregated prefill/decode, the KV handoff priced on the Infinity
+/// Fabric link. The three runs are independent engines, so they fan
+/// across the parallel harness ([`crate::runtime::par_map`]) and merge
+/// in A/B/C order — the artifact is byte-identical to a serial
+/// evaluation. Writes `BENCH_serve_trace.json` (override the path with
+/// `HK_SERVE_TRACE_OUT`).
+pub fn serve_traced() {
+    use crate::runtime::par::par_map;
+    use crate::serve::{
+        heavy_tailed_trace, DisaggConfig, SchedConfig, ServeConfig,
+        ServeEngine, TraceConfig,
+    };
+
+    let tcfg = TraceConfig::default();
+    let trace = heavy_tailed_trace(&tcfg, 7);
+    let base = ServeConfig {
+        arch: M355,
+        n_gpus: 4,
+        max_batch: 16,
+        shared_prefix_tokens: 0,
+        ..ServeConfig::default()
+    };
+    let sched = ServeConfig {
+        sched: Some(SchedConfig::default()),
+        ..base.clone()
+    };
+    let disagg = ServeConfig {
+        sched: Some(SchedConfig {
+            disagg: Some(DisaggConfig::default()),
+            ..SchedConfig::default()
+        }),
+        ..base.clone()
+    };
+    let runs = par_map(vec![base, sched, disagg], |cfg| {
+        let mut eng =
+            ServeEngine::new(cfg).expect("serve-trace config is valid");
+        eng.run_traced(&trace).expect("serve trace")
+    });
+    let labels = ["lock-step", "scheduled", "disagg"];
+
+    hr(&format!(
+        "Serve T — production trace: {} requests, {} tenants, 4x MI355X",
+        tcfg.n_requests, tcfg.n_tenants
+    ));
+    println!(
+        "{:<10} {:>11} {:>11} {:>10} {:>10} {:>9} {:>7}",
+        "engine", "ttft p50", "ttft p99", "itl p50", "itl p99", "tok/s",
+        "served"
+    );
+    for (label, r) in labels.iter().zip(&runs) {
+        println!(
+            "{:<10} {:>9.0}us {:>9.0}us {:>8.0}us {:>8.0}us {:>9.0} {:>7}",
+            label,
+            r.ttft.p50_us(),
+            r.ttft.p99_us(),
+            r.itl.p50_us(),
+            r.itl.p99_us(),
+            r.throughput_tok_s,
+            r.served
+        );
+    }
+    for (label, r) in labels.iter().zip(&runs).skip(1) {
+        if let Some(s) = &r.sched {
+            println!(
+                "  {label}: {} chunks / {} tokens, prefix {} hit {} miss, \
+                 {} stolen, {} handoffs ({:.1} MB, {:.0}us on link)",
+                s.chunks,
+                s.chunk_tokens,
+                s.prefix_hits,
+                s.prefix_misses,
+                s.stolen,
+                s.handoffs,
+                s.handoff_bytes / 1e6,
+                s.handoff_s * 1e6
+            );
+        }
+    }
+    println!("  per-tenant (scheduled engine):");
+    for t in &runs[1].per_tenant {
+        println!(
+            "    tenant {} [{:<11}] {:>3}/{:<3} ttft p99 {:>8.0}us itl p99 \
+             {:>7.0}us",
+            t.tenant,
+            t.slo,
+            t.served,
+            t.requests,
+            t.ttft.p99_us(),
+            t.itl.p99_us()
+        );
+    }
+    println!(
+        "  (scheduled vs lock-step: ttft p99 {:.2}x, throughput {:.2}x)",
+        runs[0].ttft.p99_us() / runs[1].ttft.p99_us().max(1e-12),
+        runs[1].throughput_tok_s / runs[0].throughput_tok_s.max(1e-12)
+    );
+
+    let doc = serve_trace_bench_json(&tcfg, 7, &labels, &runs);
+    let out = std::env::var("HK_SERVE_TRACE_OUT")
+        .unwrap_or_else(|_| "BENCH_serve_trace.json".to_string());
+    std::fs::write(&out, doc.dump()).expect("write BENCH_serve_trace.json");
+    println!("\nwrote {out}");
+}
+
+/// The `BENCH_serve_trace.json` document: trace shape, the full
+/// [`crate::serve::ServeReport`] payload of every engine, and the
+/// scheduled-vs-lock-step comparison the acceptance gate reads. Every
+/// number is a deterministic cost-model product, so the dump is
+/// byte-stable across runs (asserted by the CI determinism gate).
+pub fn serve_trace_bench_json(
+    tcfg: &crate::serve::TraceConfig,
+    seed: u64,
+    labels: &[&str],
+    runs: &[crate::serve::ServeReport],
+) -> crate::runtime::json::Json {
+    use crate::runtime::json::Json;
+    assert_eq!(labels.len(), runs.len());
+    let mut pairs = vec![
+        ("bench", Json::Str("serve_trace".into())),
+        ("arch", Json::Str(M355.tag().into())),
+        (
+            "trace",
+            Json::obj(vec![
+                ("n_requests", Json::Num(tcfg.n_requests as f64)),
+                ("n_tenants", Json::Num(tcfg.n_tenants as f64)),
+                (
+                    "median_prompt_tokens",
+                    Json::Num(tcfg.median_prompt_tokens as f64),
+                ),
+                (
+                    "max_prompt_tokens",
+                    Json::Num(tcfg.max_prompt_tokens as f64),
+                ),
+                ("prefix_tokens", Json::Num(tcfg.prefix_tokens as f64)),
+                ("seed", Json::Num(seed as f64)),
+            ]),
+        ),
+    ];
+    for (label, r) in labels.iter().zip(runs) {
+        pairs.push((*label, r.to_json()));
+    }
+    let base = &runs[0];
+    let sched = &runs[1];
+    pairs.push((
+        "comparison",
+        Json::obj(vec![
+            (
+                "ttft_p50_speedup",
+                Json::Num(
+                    base.ttft.p50_us() / sched.ttft.p50_us().max(1e-12),
+                ),
+            ),
+            (
+                "ttft_p99_speedup",
+                Json::Num(
+                    base.ttft.p99_us() / sched.ttft.p99_us().max(1e-12),
+                ),
+            ),
+            (
+                "throughput_ratio",
+                Json::Num(
+                    sched.throughput_tok_s
+                        / base.throughput_tok_s.max(1e-12),
+                ),
+            ),
+        ]),
+    ));
+    Json::obj(pairs)
+}
+
 /// MoE: top-k routing + grouped GEMM vs the iso-parameter dense FFN,
 /// across expert counts {8, 16, 64}, top-k {1, 2} and routing skew
 /// {0, 40, 80}% — the serving/training projection of the amd-kernels
@@ -1657,13 +1831,19 @@ pub fn profile_payload(
 
 /// The counter-golden payload. Every number here is an exact integral
 /// f64 by construction — chain bytes are `reads x rows x d x elem_bytes`
-/// (2 B bf16, 1 B fp8, 17/32 B mxfp4 with d a multiple of 32) and the
-/// router model is closed-form — so the checked-in golden is derivable
-/// by hand and the CI gate diffs it exactly, with no tolerance.
+/// (2 B bf16, 1 B fp8, 17/32 B mxfp4 with d a multiple of 32), the
+/// router model is closed-form, and the disaggregated KV handoff is
+/// whole blocks of a power-of-two geometry — so the checked-in golden
+/// is derivable by hand and the CI gate diffs it exactly, with no
+/// tolerance.
 pub fn profile_golden_json() -> crate::runtime::json::Json {
     use crate::kernels::fusion::FusionChain;
     use crate::moe::router::router_softmax_bytes_per_token;
     use crate::runtime::json::Json;
+    use crate::serve::{
+        DisaggConfig, SchedConfig, ServeConfig, ServeEngine, ServeRequest,
+        SloClass, TracedRequest, TENANT_PREFIX_BASE,
+    };
 
     let a = M355.arch();
     let chains = [
@@ -1703,9 +1883,50 @@ pub fn profile_golden_json() -> crate::runtime::json::Json {
         .iter()
         .map(|&k| (format!("k{k:02}"), Json::Num(router_softmax_bytes_per_token(64, k))))
         .collect();
+
+    // disaggregated KV handoff: one 128-token prefill handed from the
+    // prefill GPU to the decode GPU moves exactly blocks_for(128) = 8
+    // blocks of 2 (K+V) x 8 kv-heads x 128 d_head x 16 tokens x 2 B
+    // (bf16) = 524288 B, mirrored into the decode lane's
+    // cross_gpu_bytes — all whole-block integers, so the gate diffs
+    // the scheduled engine's pricing exactly
+    let mut eng = ServeEngine::new(ServeConfig {
+        n_gpus: 2,
+        shared_prefix_tokens: 0,
+        sched: Some(SchedConfig {
+            disagg: Some(DisaggConfig::default()),
+            ..SchedConfig::default()
+        }),
+        ..ServeConfig::default()
+    })
+    .expect("golden disagg engine");
+    let rep = eng
+        .run_traced(&[TracedRequest {
+            req: ServeRequest {
+                id: 0,
+                arrival_s: 0.0,
+                prompt_tokens: 128,
+                output_tokens: 8,
+            },
+            tenant: 0,
+            slo: SloClass::Standard,
+            prefix_id: TENANT_PREFIX_BASE,
+            prefix_tokens: 0,
+        }])
+        .expect("golden disagg run");
+    let s = rep.sched.as_ref().expect("scheduled run reports stats");
+
     Json::obj(vec![
         ("chains", Json::obj(entries)),
         ("router_bytes_per_token_e64", Json::obj(router)),
+        (
+            "serve_disagg",
+            Json::obj(vec![
+                ("cross_gpu_bytes", Json::Num(rep.counters.cross_gpu_bytes)),
+                ("handoff_bytes", Json::Num(s.handoff_bytes)),
+                ("handoffs", Json::Num(s.handoffs as f64)),
+            ]),
+        ),
     ])
 }
 
@@ -2054,6 +2275,7 @@ pub fn all() {
     fig24();
     registry();
     serve();
+    serve_traced();
     moe();
     fusion();
     multi_gpu();
@@ -2082,6 +2304,7 @@ pub fn run(name: &str) -> bool {
         "fig24" | "appf" => fig24(),
         "registry" => registry(),
         "serve" => serve(),
+        "serve-trace" | "serve_trace" => serve_traced(),
         "moe" => moe(),
         "fusion" => fusion(),
         "multi-gpu" | "multi_gpu" => multi_gpu(),

@@ -11,12 +11,16 @@
 //!   ships a validating stub so the crate is dependency-free.
 //! - [`rng`] — a small deterministic PRNG (xoshiro-style) for synthetic
 //!   workloads on the request path.
+//! - [`par`] — scoped-thread parallel map for the bench harness;
+//!   results merge in input order so artifacts stay byte-identical.
 
 pub mod client;
 pub mod json;
 pub mod manifest;
+pub mod par;
 pub mod rng;
 
 pub use client::{Executable, Runtime, Tensor};
 pub use manifest::{Entry, Manifest, TensorSpec};
+pub use par::par_map;
 pub use rng::Rng;

@@ -1,0 +1,101 @@
+//! Zero-dependency parallel map over owned work items.
+//!
+//! The report harness is a pile of independent, CPU-bound cost-model
+//! evaluations — serve-trace A/B/C runs, the calibration grid, sweep
+//! cells. [`par_map`] fans them across a scoped `std::thread` pool and
+//! merges results **in input index order**, so anything serialized from
+//! the merged vector (every `BENCH_*.json`) is byte-identical to the
+//! serial evaluation — parallelism changes wall-clock time only, never
+//! artifact bytes.
+//!
+//! Implementation notes:
+//! - `std::thread::scope` keeps the closure borrow-checked against the
+//!   caller's stack (no `'static` bounds, no `Arc`).
+//! - Work is pulled from a shared `Mutex<VecDeque>` so a slow item
+//!   (one serve run) does not idle the workers holding fast items.
+//! - A worker panic propagates out of the scope, exactly like the
+//!   serial loop would.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Map `f` over `items` on up to `available_parallelism` worker
+/// threads, returning results in input order. Falls back to the plain
+/// serial map for 0 or 1 items (no thread overhead on the trivial
+/// case).
+pub fn par_map<T, R>(items: Vec<T>, f: impl Fn(T) -> R + Sync) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    let n = items.len();
+    if n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n);
+    let work: Mutex<VecDeque<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect());
+    let slots: Mutex<Vec<Option<R>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                // lock only to pull the next item; f runs unlocked
+                let job = work.lock().unwrap_or_else(|e| e.into_inner()).pop_front();
+                match job {
+                    Some((i, item)) => {
+                        let r = f(item);
+                        slots.lock().unwrap_or_else(|e| e.into_inner())[i] =
+                            Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap_or_else(|e| e.into_inner())
+        .into_iter()
+        .map(|r| r.expect("par_map worker dropped an item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_input_order() {
+        // uneven per-item work so completion order differs from input
+        // order; the merge must still be by index
+        let items: Vec<u64> = (0..64).collect();
+        let expect: Vec<u64> = items.iter().map(|&x| x * x).collect();
+        let got = par_map(items, |x| {
+            let spin = (64 - x) * 1000;
+            let mut acc = 0u64;
+            for i in 0..spin {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+            x * x
+        });
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn matches_the_serial_map_exactly() {
+        let items: Vec<i64> = (-100..100).collect();
+        let serial: Vec<i64> = items.iter().map(|&x| x * 3 - 7).collect();
+        assert_eq!(par_map(items, |x| x * 3 - 7), serial);
+    }
+
+    #[test]
+    fn trivial_sizes_take_the_serial_path() {
+        assert_eq!(par_map(Vec::<u32>::new(), |x| x + 1), Vec::<u32>::new());
+        assert_eq!(par_map(vec![41u32], |x| x + 1), vec![42]);
+    }
+}

@@ -36,6 +36,8 @@ use crate::bail;
 use crate::serve::kvcache::{
     kv_block_bytes, KvCacheConfig, KvCacheManager, KvCacheStats,
 };
+use crate::serve::sched::{chunk_len, LaneQueues, SchedConfig};
+use crate::serve::trace::TracedRequest;
 use crate::sim::arch::Dtype;
 use std::collections::{HashMap, VecDeque};
 
@@ -97,6 +99,12 @@ pub struct ServeConfig {
     pub mb_fusion: MbFusion,
     /// Row width of the membound chains (the model dimension).
     pub mb_d_model: u32,
+    /// Production-trace scheduler ([`crate::serve::sched`]): `None`
+    /// keeps the legacy lock-step loop bit-for-bit (the default);
+    /// `Some` turns on chunked prefill, prefix-aware placement,
+    /// cross-lane stealing, SLO admission order, and (optionally)
+    /// disaggregated prefill/decode via [`ServeEngine::run_traced`].
+    pub sched: Option<SchedConfig>,
 }
 
 /// How the engine runs the per-step memory-bound chains.
@@ -160,6 +168,7 @@ impl Default for ServeConfig {
             moe: None,
             mb_fusion: MbFusion::Off,
             mb_d_model: 2048,
+            sched: None,
         }
     }
 }
@@ -246,6 +255,52 @@ pub struct ServeReport {
     pub n_gpus: u32,
     /// Per-GPU lane statistics.
     pub per_gpu: Vec<GpuLaneStats>,
+    /// Per-tenant latency breakdown (empty on the legacy path, so the
+    /// legacy JSON payload is unchanged byte-for-byte).
+    pub per_tenant: Vec<TenantLatencyStats>,
+    /// Scheduler-side accounting (None on the legacy path).
+    pub sched: Option<SchedServeStats>,
+}
+
+/// One tenant's share of a scheduled serving run: its SLO class and
+/// the latency percentiles the SLO is judged against.
+#[derive(Debug, Clone, Default)]
+pub struct TenantLatencyStats {
+    pub tenant: u32,
+    /// SLO class tag ([`crate::serve::trace::SloClass::tag`]).
+    pub slo: &'static str,
+    /// Requests of this tenant in the trace.
+    pub requests: u64,
+    /// Requests finished.
+    pub served: u64,
+    pub ttft: LatencyStats,
+    pub itl: LatencyStats,
+}
+
+/// Accounting of the scheduled serving loop (chunked prefill, prefix
+/// cache, stealing, disaggregated handoff).
+#[derive(Debug, Clone, Default)]
+pub struct SchedServeStats {
+    /// Prefill chunks priced over the run.
+    pub chunks: u64,
+    /// Prompt tokens processed through those chunks — equals the sum
+    /// of every admission's prefill target (chunking never loses or
+    /// double-counts a token; asserted in `tests/serve_sched.rs`).
+    pub chunk_tokens: u64,
+    /// Requests re-routed by idle-lane stealing.
+    pub stolen: u64,
+    /// Admissions that found their tenant prefix resident (CoW fork,
+    /// no prefix recompute).
+    pub prefix_hits: u64,
+    /// Admissions that had to pin + recompute their tenant prefix.
+    pub prefix_misses: u64,
+    /// Disaggregated KV handoffs (prefill pool -> decode pool).
+    pub handoffs: u64,
+    /// Bytes those handoffs moved across the link.
+    pub handoff_bytes: f64,
+    /// Link seconds the handoffs cost
+    /// ([`crate::hk::topology::LinkModel::point_to_point_s`]).
+    pub handoff_s: f64,
 }
 
 /// One GPU lane's share of a serving run.
@@ -391,6 +446,45 @@ impl ServeReport {
                 ]),
             );
         }
+        if !self.per_tenant.is_empty() {
+            let Json::Obj(map) = &mut doc else { unreachable!() };
+            map.insert(
+                "per_tenant".to_string(),
+                Json::Arr(
+                    self.per_tenant
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("tenant", Json::Num(t.tenant as f64)),
+                                ("slo", Json::Str(t.slo.to_string())),
+                                ("requests", Json::Num(t.requests as f64)),
+                                ("served", Json::Num(t.served as f64)),
+                                ("ttft_p50_us", Json::Num(t.ttft.p50_us())),
+                                ("ttft_p99_us", Json::Num(t.ttft.p99_us())),
+                                ("itl_p50_us", Json::Num(t.itl.p50_us())),
+                                ("itl_p99_us", Json::Num(t.itl.p99_us())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        if let Some(s) = &self.sched {
+            let Json::Obj(map) = &mut doc else { unreachable!() };
+            map.insert(
+                "sched".to_string(),
+                Json::obj(vec![
+                    ("chunks", Json::Num(s.chunks as f64)),
+                    ("chunk_tokens", Json::Num(s.chunk_tokens as f64)),
+                    ("stolen", Json::Num(s.stolen as f64)),
+                    ("prefix_hits", Json::Num(s.prefix_hits as f64)),
+                    ("prefix_misses", Json::Num(s.prefix_misses as f64)),
+                    ("handoffs", Json::Num(s.handoffs as f64)),
+                    ("handoff_bytes", Json::Num(s.handoff_bytes)),
+                    ("handoff_s", Json::Num(s.handoff_s)),
+                ]),
+            );
+        }
         doc
     }
 }
@@ -400,6 +494,47 @@ struct Running {
     decoded: u32,
     /// The GPU lane whose KV pool holds this sequence.
     gpu: u32,
+}
+
+/// A request mid-chunked-prefill on one lane.
+struct Prefilling {
+    idx: usize,
+    gpu: u32,
+    /// Prompt tokens already computed through chunks.
+    done: u32,
+    /// Prompt tokens this admission must compute (excludes a resident
+    /// tenant prefix — a CoW hit skips the prefix recompute entirely).
+    target: u32,
+    /// KV context already resident when the first chunk runs (the
+    /// forked prefix on a hit, 0 on a cold admission) — chunk costs
+    /// attend over it without recomputing it.
+    base: u32,
+}
+
+/// Per-field difference of two cumulative counter records, used to
+/// price one prefill chunk as `cum(end) - cum(start)`. Floats clamp at
+/// zero and tallies saturate (the cost model's cumulative curves are
+/// monotone, but bucketless dispatch gives no hard guarantee);
+/// `reg_demand` is a peak, not a tally, so the chunk keeps the larger
+/// record's demand; `kernels` is pinned to 1 — one chunk is one launch.
+fn counters_delta(hi: &KernelCounters, lo: &KernelCounters) -> KernelCounters {
+    let d = |a: f64, b: f64| (a - b).max(0.0);
+    KernelCounters {
+        hbm_read_bytes: d(hi.hbm_read_bytes, lo.hbm_read_bytes),
+        hbm_write_bytes: d(hi.hbm_write_bytes, lo.hbm_write_bytes),
+        l2_bytes: d(hi.l2_bytes, lo.l2_bytes),
+        lds_bytes: d(hi.lds_bytes, lo.lds_bytes),
+        mfma_flops: d(hi.mfma_flops, lo.mfma_flops),
+        issued_waves: d(hi.issued_waves, lo.issued_waves),
+        reg_demand: hi.reg_demand.max(lo.reg_demand),
+        spill_cycles: d(hi.spill_cycles, lo.spill_cycles),
+        atomic_rmw_bytes: d(hi.atomic_rmw_bytes, lo.atomic_rmw_bytes),
+        cross_gpu_bytes: d(hi.cross_gpu_bytes, lo.cross_gpu_bytes),
+        scale_bytes: d(hi.scale_bytes, lo.scale_bytes),
+        fused_passes: hi.fused_passes.saturating_sub(lo.fused_passes),
+        forced_splits: hi.forced_splits.saturating_sub(lo.forced_splits),
+        kernels: 1,
+    }
 }
 
 /// Emit KV-plane instants for whatever changed between two stats
@@ -440,6 +575,10 @@ pub struct ServeEngine {
     /// (chain name, cost) entry per chain so the timeline can render
     /// the sub-spans individually.
     mb_memo: HashMap<u32, Vec<(&'static str, StepCost)>>,
+    /// Cumulative whole-prefill cost memo at *exact* (unbucketed)
+    /// context length — the curve chunked prefill differences, so
+    /// chunk costs telescope exactly to the whole-prompt prefill.
+    chunk_memo: HashMap<u32, StepCost>,
     /// Timeline under construction when tracing is enabled
     /// ([`Self::enable_trace`]); taken by [`Self::take_trace`].
     timeline: Option<Trace>,
@@ -466,6 +605,7 @@ impl ServeEngine {
             decode_memo: HashMap::new(),
             moe_memo: HashMap::new(),
             mb_memo: HashMap::new(),
+            chunk_memo: HashMap::new(),
             timeline: None,
         })
     }
@@ -534,6 +674,46 @@ impl ServeEngine {
     /// KV context a request occupies once prefilled + `decoded` tokens.
     fn context_of(&self, req: &ServeRequest, decoded: u32) -> u32 {
         self.cfg.shared_prefix_tokens + req.prompt_tokens + decoded
+    }
+
+    /// Cumulative whole-prefill cost at exact context `tokens` (batch
+    /// 1, causal). Unbucketed on purpose: chunk costs are differences
+    /// of this curve, and bucketing would collapse neighboring chunk
+    /// boundaries onto the same point.
+    fn cum_prefill(&mut self, tokens: u32) -> StepCost {
+        if tokens == 0 {
+            return StepCost::default();
+        }
+        if let Some(&c) = self.chunk_memo.get(&tokens) {
+            return c;
+        }
+        let q = Query::attn(
+            self.cfg.arch,
+            1,
+            self.cfg.heads_q,
+            self.cfg.heads_kv,
+            tokens,
+            self.cfg.d_head,
+            true,
+        );
+        let perf = q.dispatch_with(&mut self.cache).simulate();
+        let c = StepCost { time_s: perf.time_s, counters: perf.counters };
+        self.chunk_memo.insert(tokens, c);
+        c
+    }
+
+    /// Price one prefill chunk covering context `[start, end)` as the
+    /// cumulative-cost difference `cum(end) - cum(start)`: summed over
+    /// a request's chunks this telescopes *exactly* to the whole-prompt
+    /// prefill cost, whatever the chunking (asserted in
+    /// `tests/serve_sched.rs`).
+    fn chunk_cost(&mut self, start: u32, end: u32) -> StepCost {
+        let hi = self.cum_prefill(end);
+        let lo = self.cum_prefill(start);
+        StepCost {
+            time_s: (hi.time_s - lo.time_s).max(0.0),
+            counters: counters_delta(&hi.counters, &lo.counters),
+        }
     }
 
     /// Simulated cost of the MoE FFN over `tokens` step tokens (zero
@@ -1172,7 +1352,773 @@ impl ServeEngine {
                 .then_some(mb_stats),
             n_gpus: self.cfg.n_gpus,
             per_gpu: lanes,
+            per_tenant: Vec::new(),
+            sched: None,
         })
+    }
+
+    /// Serve a multi-tenant trace. With `cfg.sched = None` this *is*
+    /// the legacy lock-step engine on the folded requests (each
+    /// tenant's prefix re-prefilled as ordinary prompt tokens on every
+    /// admission) — bit-identical to [`Self::run_trace`], asserted in
+    /// `tests/serve_sched.rs`. With a scheduler configured it runs the
+    /// chunked-prefill, prefix-aware, SLO-ordered scheduled loop.
+    pub fn run_traced(
+        &mut self,
+        trace: &[TracedRequest],
+    ) -> Result<ServeReport> {
+        match self.cfg.sched {
+            None => {
+                let folded: Vec<ServeRequest> =
+                    trace.iter().map(|t| t.folded()).collect();
+                self.run_trace(&folded)
+            }
+            Some(sc) => self.run_scheduled(trace, &sc),
+        }
+    }
+
+    /// The scheduled serving loop: chunked prefill against a per-lane
+    /// token budget, prefix-aware routing, idle-lane stealing, SLO
+    /// admission order, and (optionally) disaggregated prefill/decode
+    /// with the KV handoff priced on the configured link.
+    fn run_scheduled(
+        &mut self,
+        trace: &[TracedRequest],
+        sc: &SchedConfig,
+    ) -> Result<ServeReport> {
+        if trace.is_empty() {
+            bail!("empty trace");
+        }
+        for w in trace.windows(2) {
+            if w[1].req.arrival_s < w[0].req.arrival_s {
+                bail!("trace arrivals must be sorted");
+            }
+        }
+        if self.cfg.shared_prefix_tokens > 0 {
+            bail!(
+                "scheduled serving uses per-tenant trace prefixes; set \
+                 shared_prefix_tokens = 0"
+            );
+        }
+        if sc.step_tokens == 0 || sc.chunk_tokens == 0 {
+            bail!("scheduler needs nonzero step_tokens/chunk_tokens");
+        }
+        let n_gpus = self.cfg.n_gpus.max(1) as usize;
+        if (sc.step_tokens as usize) < self.cfg.max_batch {
+            bail!("step_tokens must cover the decode batch width");
+        }
+        if let Some(d) = sc.disagg {
+            if d.prefill_gpus == 0 || d.prefill_gpus as usize >= n_gpus {
+                bail!(
+                    "disaggregation needs 1..n_gpus-1 prefill GPUs, got {} \
+                     of {}",
+                    d.prefill_gpus,
+                    n_gpus
+                );
+            }
+        }
+        let is_prefill_lane = |g: usize| match sc.disagg {
+            None => true,
+            Some(d) => g < d.prefill_gpus as usize,
+        };
+        let is_decode_lane = |g: usize| match sc.disagg {
+            None => true,
+            Some(d) => g >= d.prefill_gpus as usize,
+        };
+        let kv_base = self.kv.stats();
+
+        let mut queues = LaneQueues::new(n_gpus);
+        let mut prefilling: Vec<Prefilling> = Vec::new();
+        // disagg only: prefilled sequences awaiting their KV handoff
+        let mut ready: VecDeque<(usize, u32)> = VecDeque::new();
+        let mut running: Vec<Running> = Vec::new();
+        let mut reached: Vec<u32> = vec![0; trace.len()];
+        let mut last_emit: Vec<f64> = vec![0.0; trace.len()];
+        let mut flow_started: Vec<bool> = vec![false; trace.len()];
+        let mut next = 0usize;
+        let mut now = 0.0f64;
+        let mut finished = 0usize;
+        let mut ttft = LatencyStats::default();
+        let mut itl = LatencyStats::default();
+        let mut e2e = LatencyStats::default();
+        let mut prefill_steps = 0u64;
+        let mut decode_steps = 0u64;
+        let mut preemptions = 0u64;
+        let mut peak_occ = 0.0f64;
+        let mut delivered_tokens = 0u64;
+        let mut moe_stats = MoeServeStats::default();
+        let mut mb_stats = MbServeStats::default();
+        let mut sched_stats = SchedServeStats::default();
+        let mut lanes: Vec<GpuLaneStats> =
+            (0..n_gpus).map(|_| GpuLaneStats::default()).collect();
+        let n_tenants =
+            trace.iter().map(|t| t.tenant).max().unwrap_or(0) as usize + 1;
+        let mut tenants: Vec<TenantLatencyStats> = (0..n_tenants)
+            .map(|t| TenantLatencyStats {
+                tenant: t as u32,
+                ..TenantLatencyStats::default()
+            })
+            .collect();
+        for t in trace {
+            let acc = &mut tenants[t.tenant as usize];
+            acc.slo = t.slo.tag();
+            acc.requests += 1;
+        }
+
+        let mut tl = self.timeline.take();
+        let kv_pid = n_gpus as u32;
+        if let Some(t) = tl.as_mut() {
+            for g in 0..n_gpus {
+                let role = match (is_prefill_lane(g), is_decode_lane(g)) {
+                    (true, true) => "gpu",
+                    (true, false) => "prefill-gpu",
+                    _ => "decode-gpu",
+                };
+                t.meta_process(g as u32, &format!("{role}{g}"));
+                t.meta_thread(g as u32, 0, "attn");
+                t.meta_thread(g as u32, 1, "ffn+membound");
+            }
+            t.meta_process(kv_pid, "kv");
+            t.meta_thread(kv_pid, 1, "handoff");
+        }
+        let mut kv_prev = self.kv.stats();
+
+        // KV residents per lane (prefilling + awaiting-handoff +
+        // running), the batch-slot currency of admission and handoff
+        let resident_of = |prefilling: &[Prefilling],
+                           ready: &VecDeque<(usize, u32)>,
+                           running: &[Running]| {
+            let mut res = vec![0usize; n_gpus];
+            for p in prefilling {
+                res[p.gpu as usize] += 1;
+            }
+            for &(_, src) in ready {
+                res[src as usize] += 1;
+            }
+            for r in running {
+                res[r.gpu as usize] += 1;
+            }
+            res
+        };
+
+        while finished < trace.len() {
+            let mut resident = resident_of(&prefilling, &ready, &running);
+            // fold in everything that has arrived by `now`, routing each
+            // request to a prefill lane: the lane already pinning its
+            // tenant prefix when prefix-aware, else the least-loaded
+            while next < trace.len() && trace[next].req.arrival_s <= now {
+                let t = &trace[next];
+                if t.req.prompt_tokens == 0 {
+                    bail!("request {} has an empty prompt", t.req.id);
+                }
+                let total = t.prefix_tokens
+                    + t.req.prompt_tokens
+                    + t.req.output_tokens.max(1);
+                if self.kv.blocks_for(total) + 1 > self.cfg.num_blocks {
+                    bail!(
+                        "request {} needs {} KV blocks (+1 CoW) but each \
+                         GPU's pool holds {}",
+                        t.req.id,
+                        self.kv.blocks_for(total),
+                        self.cfg.num_blocks,
+                    );
+                }
+                let lane =
+                    self.route_lane(t, sc, &queues, &resident, &is_prefill_lane);
+                queues.push(lane, next);
+                next += 1;
+            }
+            if queues.is_empty()
+                && prefilling.is_empty()
+                && ready.is_empty()
+                && running.is_empty()
+            {
+                if next < trace.len() {
+                    now = now.max(trace[next].req.arrival_s);
+                    continue;
+                }
+                bail!("serving stalled with requests unfinished");
+            }
+
+            // idle prefill lanes steal the head of the longest queue
+            if sc.stealing {
+                for g in 0..n_gpus {
+                    if is_prefill_lane(g)
+                        && queues.len(g) == 0
+                        && resident[g] < self.cfg.max_batch
+                        && !prefilling.iter().any(|p| p.gpu as usize == g)
+                    {
+                        queues.steal_into(g);
+                    }
+                }
+            }
+            // SLO admission order within each lane's queue
+            if sc.slo_priority {
+                for g in 0..n_gpus {
+                    if queues.len(g) > 1 {
+                        queues.order_by(g, |i| {
+                            (
+                                std::cmp::Reverse(trace[i].slo.priority()),
+                                i,
+                            )
+                        });
+                    }
+                }
+            }
+
+            // admission: each prefill lane drains its queue while KV
+            // headroom and batch slots last
+            let mut admitted_any = false;
+            for g in 0..n_gpus {
+                if !is_prefill_lane(g) {
+                    continue;
+                }
+                let gq = g as u32;
+                while let Some(idx) = queues.front(g) {
+                    if resident[g] >= self.cfg.max_batch {
+                        break;
+                    }
+                    let t = &trace[idx];
+                    let use_prefix = sc.prefix_aware && t.prefix_tokens > 0;
+                    let (target, base) = if use_prefix {
+                        let hit = self.kv.has_prefix_on(gq, t.prefix_id);
+                        let mut need =
+                            t.req.prompt_tokens + 2 * self.cfg.block_size;
+                        if !hit {
+                            need += t.prefix_tokens;
+                        }
+                        if !self.kv.can_admit_on(gq, need) {
+                            break;
+                        }
+                        if !hit
+                            && self
+                                .kv
+                                .cache_prefix_on(
+                                    gq,
+                                    t.prefix_id,
+                                    t.prefix_tokens,
+                                )
+                                .is_err()
+                        {
+                            break;
+                        }
+                        if self
+                            .kv
+                            .fork_from_prefix_on(gq, t.prefix_id, t.req.id)
+                            .is_err()
+                        {
+                            break;
+                        }
+                        let mut ok = true;
+                        for _ in 0..t.req.prompt_tokens {
+                            if self.kv.append_token(t.req.id).is_err() {
+                                self.kv.free_seq(t.req.id)?;
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if !ok {
+                            break;
+                        }
+                        if hit {
+                            sched_stats.prefix_hits += 1;
+                            // the prefix KV is resident: compute only
+                            // the request's own prompt
+                            (t.req.prompt_tokens, t.prefix_tokens)
+                        } else {
+                            sched_stats.prefix_misses += 1;
+                            (t.cold_prompt_tokens(), 0)
+                        }
+                    } else {
+                        let need = t.cold_prompt_tokens()
+                            + 2 * self.cfg.block_size;
+                        if !self.kv.can_admit_on(gq, need) {
+                            break;
+                        }
+                        if self
+                            .kv
+                            .admit_on(gq, t.req.id, t.cold_prompt_tokens())
+                            .is_err()
+                        {
+                            break;
+                        }
+                        (t.cold_prompt_tokens(), 0)
+                    };
+                    queues.pop(g);
+                    resident[g] += 1;
+                    lanes[g].admitted += 1;
+                    admitted_any = true;
+                    sched_stats.chunk_tokens += u64::from(target);
+                    prefilling.push(Prefilling {
+                        idx,
+                        gpu: gq,
+                        done: 0,
+                        target,
+                        base,
+                    });
+                    if let Some(tr) = tl.as_mut() {
+                        tr.instant(gq, 0, "serve", "admit", now, vec![(
+                            "req".to_string(),
+                            Json::Num(t.req.id as f64),
+                        )]);
+                        if flow_started[idx] {
+                            tr.flow_step(gq, 0, "serve", "req", now, t.req.id);
+                        } else {
+                            flow_started[idx] = true;
+                            tr.flow_start(gq, 0, "serve", "req", now, t.req.id);
+                        }
+                    }
+                }
+            }
+            if let Some(t) = tl.as_mut() {
+                let ks = self.kv.stats();
+                kv_delta_instants(t, kv_pid, now, &kv_prev, &ks);
+                kv_prev = ks;
+            }
+            peak_occ = peak_occ.max(self.kv.occupancy());
+            for (g, lane) in lanes.iter_mut().enumerate() {
+                lane.peak_occupancy =
+                    lane.peak_occupancy.max(self.kv.occupancy_on(g as u32));
+            }
+
+            // one scheduled step: every lane decodes its running batch
+            // and spends its leftover token budget on prefill chunks,
+            // in parallel across lanes (the step costs the slowest)
+            let mut dt = 0.0f64;
+            let mut any_decode = false;
+            let mut any_chunk = false;
+            for g in 0..n_gpus {
+                let gq = g as u32;
+                let mut dt_g = 0.0f64;
+                let mut lane_tokens = 0u32;
+                // decode half
+                let lane: Vec<(usize, u32)> = running
+                    .iter()
+                    .filter(|r| r.gpu == gq)
+                    .map(|r| (r.idx, r.decoded))
+                    .collect();
+                if !lane.is_empty() {
+                    let batch = lane.len() as u32;
+                    let ctx = lane
+                        .iter()
+                        .map(|&(idx, d)| {
+                            let t = &trace[idx];
+                            t.prefix_tokens + t.req.prompt_tokens + d
+                        })
+                        .max()
+                        .expect("non-empty lane");
+                    let attn = self.decode_step(batch, ctx);
+                    lanes[g].counters.merge(&attn.counters);
+                    if let Some(t) = tl.as_mut() {
+                        t.span(gq, 0, "serve", "decode", now, attn.time_s, vec![
+                            ("batch".to_string(), Json::Num(batch as f64)),
+                            ("ctx".to_string(), Json::Num(ctx as f64)),
+                        ]);
+                    }
+                    dt_g += attn.time_s;
+                    lane_tokens += batch;
+                    any_decode = true;
+                }
+                // prefill chunks with the leftover budget
+                let mut budget = sc.step_tokens.saturating_sub(lane_tokens);
+                let mut chunk_time = 0.0f64;
+                let mut chunk_tokens = 0u32;
+                let mut chunked = 0u64;
+                let mut progress = true;
+                while budget > 0 && progress {
+                    progress = false;
+                    for p in prefilling.iter_mut() {
+                        if p.gpu != gq || p.done >= p.target {
+                            continue;
+                        }
+                        let c =
+                            chunk_len(p.target - p.done, sc.chunk_tokens, budget);
+                        if c == 0 {
+                            continue;
+                        }
+                        let cost =
+                            self.chunk_cost(p.base + p.done, p.base + p.done + c);
+                        lanes[g].counters.merge(&cost.counters);
+                        chunk_time += cost.time_s;
+                        chunk_tokens += c;
+                        chunked += 1;
+                        budget -= c;
+                        p.done += c;
+                        progress = true;
+                        if budget == 0 {
+                            break;
+                        }
+                    }
+                }
+                if chunked > 0 {
+                    sched_stats.chunks += chunked;
+                    any_chunk = true;
+                    if let Some(t) = tl.as_mut() {
+                        t.span(
+                            gq,
+                            0,
+                            "serve",
+                            "prefill-chunks",
+                            now + dt_g,
+                            chunk_time,
+                            vec![
+                                (
+                                    "chunks".to_string(),
+                                    Json::Num(chunked as f64),
+                                ),
+                                (
+                                    "tokens".to_string(),
+                                    Json::Num(chunk_tokens as f64),
+                                ),
+                            ],
+                        );
+                    }
+                    dt_g += chunk_time;
+                    lane_tokens += chunk_tokens;
+                }
+                // MoE FFN + membound chains over the lane's step tokens
+                let ffn = self.moe_ffn_step(lane_tokens);
+                if ffn.time_s > 0.0 {
+                    let ordinal = moe_stats.steps;
+                    let overflow = self.moe_route_step(
+                        lane_tokens,
+                        ordinal,
+                        &mut moe_stats,
+                    );
+                    moe_stats.ffn_time_s += ffn.time_s;
+                    lanes[g].counters.merge(&ffn.counters);
+                    if let Some(t) = tl.as_mut() {
+                        t.span(gq, 1, "moe", "moe-ffn", now + dt_g, ffn.time_s, vec![
+                            (
+                                "tokens".to_string(),
+                                Json::Num(lane_tokens as f64),
+                            ),
+                        ]);
+                        if overflow > 0 {
+                            t.instant(
+                                gq,
+                                1,
+                                "moe",
+                                "router-overflow",
+                                now + dt_g,
+                                vec![(
+                                    "rerouted".to_string(),
+                                    Json::Num(overflow as f64),
+                                )],
+                            );
+                        }
+                    }
+                    dt_g += ffn.time_s;
+                }
+                let mb = self.mb_step(lane_tokens);
+                if !mb.is_empty() {
+                    let mb_total: f64 = mb.iter().map(|(_, c)| c.time_s).sum();
+                    mb_stats.steps += 1;
+                    mb_stats.time_s += mb_total;
+                    let mut cursor = now + dt_g;
+                    for (name, c) in &mb {
+                        lanes[g].counters.merge(&c.counters);
+                        if let Some(t) = tl.as_mut() {
+                            t.span(gq, 1, "membound", name, cursor, c.time_s, vec![]);
+                        }
+                        cursor += c.time_s;
+                    }
+                    dt_g += mb_total;
+                }
+                dt = dt.max(dt_g);
+            }
+            now += dt;
+            if any_chunk {
+                prefill_steps += 1;
+            }
+            if any_decode {
+                decode_steps += 1;
+            }
+
+            // decode bookkeeping: emitted tokens, finishes, preemptions
+            let mut still = Vec::with_capacity(running.len());
+            let mut finished_any = false;
+            for mut r in running.drain(..) {
+                let t = &trace[r.idx];
+                let req = &t.req;
+                r.decoded += 1;
+                lanes[r.gpu as usize].decode_tokens += 1;
+                if r.decoded > reached[r.idx] {
+                    // a newly delivered token: recomputed tokens after
+                    // a preemption never re-enter the latency stats
+                    itl.record_s(now - last_emit[r.idx]);
+                    tenants[t.tenant as usize]
+                        .itl
+                        .record_s(now - last_emit[r.idx]);
+                    reached[r.idx] = r.decoded;
+                    last_emit[r.idx] = now;
+                }
+                if r.decoded == 2 {
+                    if let Some(tr) = tl.as_mut() {
+                        tr.flow_step(r.gpu, 0, "serve", "req", now, req.id);
+                    }
+                }
+                if r.decoded >= req.output_tokens.max(1) {
+                    self.kv.free_seq(req.id)?;
+                    e2e.record_s(now - req.arrival_s);
+                    delivered_tokens += u64::from(req.output_tokens.max(1));
+                    finished += 1;
+                    finished_any = true;
+                    tenants[t.tenant as usize].served += 1;
+                    if let Some(tr) = tl.as_mut() {
+                        tr.flow_end(r.gpu, 0, "serve", "req", now, req.id);
+                    }
+                    continue;
+                }
+                match self.kv.append_token(req.id) {
+                    Ok(()) => still.push(r),
+                    Err(_) => {
+                        // pool exhausted: preempt, re-route, recompute
+                        self.kv.free_seq(req.id)?;
+                        preemptions += 1;
+                        if let Some(tr) = tl.as_mut() {
+                            tr.instant(r.gpu, 0, "serve", "preempt", now, vec![
+                                ("req".to_string(), Json::Num(req.id as f64)),
+                            ]);
+                        }
+                        let res = resident_of(&prefilling, &ready, &still);
+                        let lane = self.route_lane(
+                            t,
+                            sc,
+                            &queues,
+                            &res,
+                            &is_prefill_lane,
+                        );
+                        queues.push_front(lane, r.idx);
+                    }
+                }
+            }
+            running = still;
+
+            // prefill completions: TTFT on the first completion, then
+            // decode (colocated) or the handoff queue (disaggregated)
+            let mut keep = Vec::with_capacity(prefilling.len());
+            for p in prefilling.drain(..) {
+                if p.done < p.target {
+                    keep.push(p);
+                    continue;
+                }
+                let t = &trace[p.idx];
+                let req = &t.req;
+                if reached[p.idx] == 0 {
+                    ttft.record_s(now - req.arrival_s);
+                    tenants[t.tenant as usize]
+                        .ttft
+                        .record_s(now - req.arrival_s);
+                    reached[p.idx] = 1;
+                    last_emit[p.idx] = now;
+                }
+                if let Some(tr) = tl.as_mut() {
+                    tr.flow_step(p.gpu, 0, "serve", "req", now, req.id);
+                }
+                if req.output_tokens <= 1 {
+                    self.kv.free_seq(req.id)?;
+                    e2e.record_s(now - req.arrival_s);
+                    delivered_tokens += u64::from(req.output_tokens.max(1));
+                    finished += 1;
+                    finished_any = true;
+                    tenants[t.tenant as usize].served += 1;
+                    if let Some(tr) = tl.as_mut() {
+                        tr.flow_end(p.gpu, 0, "serve", "req", now, req.id);
+                    }
+                } else if sc.disagg.is_some() {
+                    ready.push_back((p.idx, p.gpu));
+                } else {
+                    running.push(Running {
+                        idx: p.idx,
+                        decoded: 1,
+                        gpu: p.gpu,
+                    });
+                }
+            }
+            prefilling = keep;
+
+            // disaggregated handoffs: move each ready sequence's KV to
+            // a decode pool, serialized on the link and priced by it
+            let mut handed_any = false;
+            if let Some(d) = sc.disagg {
+                let mut deferred: VecDeque<(usize, u32)> = VecDeque::new();
+                let mut cursor = now;
+                while let Some((idx, src)) = ready.pop_front() {
+                    let res = resident_of(&prefilling, &ready, &running);
+                    let t = &trace[idx];
+                    let ctx_tokens = t.prefix_tokens + t.req.prompt_tokens;
+                    let need = ctx_tokens + 2 * self.cfg.block_size;
+                    let dst = (0..n_gpus)
+                        .filter(|&g| {
+                            is_decode_lane(g)
+                                && res[g] < self.cfg.max_batch
+                                && self.kv.can_admit_on(g as u32, need)
+                        })
+                        .min_by_key(|&g| (res[g], g));
+                    let Some(dg) = dst else {
+                        // no decode slot yet: retry after the next step
+                        deferred.push_back((idx, src));
+                        continue;
+                    };
+                    let bytes = self.kv.blocks_for(ctx_tokens) as f64
+                        * self.cfg.kv_block_bytes();
+                    let t_h = d.link.point_to_point_s(bytes);
+                    self.kv.free_seq(t.req.id)?;
+                    self.kv.admit_on(dg as u32, t.req.id, ctx_tokens)?;
+                    sched_stats.handoffs += 1;
+                    sched_stats.handoff_bytes += bytes;
+                    sched_stats.handoff_s += t_h;
+                    lanes[dg].counters.merge(&KernelCounters {
+                        cross_gpu_bytes: bytes,
+                        ..KernelCounters::default()
+                    });
+                    if let Some(tr) = tl.as_mut() {
+                        tr.flow_step(src, 0, "serve", "req", cursor, t.req.id);
+                        tr.span(
+                            kv_pid,
+                            1,
+                            "kv",
+                            "kv-handoff",
+                            cursor,
+                            t_h,
+                            vec![
+                                (
+                                    "req".to_string(),
+                                    Json::Num(t.req.id as f64),
+                                ),
+                                ("bytes".to_string(), Json::Num(bytes)),
+                                (
+                                    "src".to_string(),
+                                    Json::Num(src as f64),
+                                ),
+                                ("dst".to_string(), Json::Num(dg as f64)),
+                            ],
+                        );
+                        tr.flow_step(
+                            dg as u32,
+                            0,
+                            "serve",
+                            "req",
+                            cursor + t_h,
+                            t.req.id,
+                        );
+                    }
+                    cursor += t_h;
+                    handed_any = true;
+                    running.push(Running {
+                        idx,
+                        decoded: 1,
+                        gpu: dg as u32,
+                    });
+                }
+                ready = deferred;
+                now = cursor;
+            }
+
+            if let Some(t) = tl.as_mut() {
+                let ks = self.kv.stats();
+                kv_delta_instants(t, kv_pid, now, &kv_prev, &ks);
+                kv_prev = ks;
+            }
+            peak_occ = peak_occ.max(self.kv.occupancy());
+            for (g, lane) in lanes.iter_mut().enumerate() {
+                lane.peak_occupancy =
+                    lane.peak_occupancy.max(self.kv.occupancy_on(g as u32));
+            }
+
+            // progress guard: a step that admitted nothing, computed
+            // nothing, handed nothing off and finished nothing can only
+            // be waiting on future arrivals
+            if !admitted_any
+                && !any_decode
+                && !any_chunk
+                && !handed_any
+                && !finished_any
+            {
+                // only a future arrival can unblock an idle step; if the
+                // next arrival is already due, nothing ever will
+                if next < trace.len() && trace[next].req.arrival_s > now {
+                    now = trace[next].req.arrival_s;
+                    continue;
+                }
+                bail!("serving stalled with requests unfinished");
+            }
+        }
+
+        self.timeline = tl;
+        sched_stats.stolen = queues.stolen;
+        let mut run_counters = KernelCounters::default();
+        for lane in &lanes {
+            run_counters.merge(&lane.counters);
+        }
+        let makespan = now - trace[0].req.arrival_s;
+        tenants.retain(|t| t.requests > 0);
+        Ok(ServeReport {
+            served: trace.len() as u64,
+            preemptions,
+            prefill_steps,
+            decode_steps,
+            makespan_s: makespan,
+            throughput_tok_s: delivered_tokens as f64 / makespan.max(1e-9),
+            ttft,
+            itl,
+            e2e,
+            peak_occupancy: peak_occ,
+            counters: run_counters,
+            kv: self.kv.stats().since(&kv_base),
+            moe: self.cfg.moe.map(|_| {
+                let mut m = moe_stats;
+                if m.steps > 0 {
+                    m.mean_imbalance /= m.steps as f64;
+                }
+                m
+            }),
+            membound: (self.cfg.mb_fusion != MbFusion::Off)
+                .then_some(mb_stats),
+            n_gpus: self.cfg.n_gpus,
+            per_gpu: lanes,
+            per_tenant: tenants,
+            sched: Some(sched_stats),
+        })
+    }
+
+    /// The routing policy: among prefill lanes, prefer one already
+    /// pinning the request's tenant prefix (prefix-aware mode); break
+    /// ties — and fall back — to the least-loaded lane by (queued +
+    /// resident sequences, used KV blocks, lane id). Deterministic, so
+    /// scheduled traces replay bit-identically.
+    fn route_lane(
+        &self,
+        t: &TracedRequest,
+        sc: &SchedConfig,
+        queues: &LaneQueues,
+        resident: &[usize],
+        is_prefill_lane: &dyn Fn(usize) -> bool,
+    ) -> usize {
+        let n_gpus = resident.len();
+        let load = |g: usize| {
+            (
+                queues.len(g) + resident[g],
+                self.kv.pool(g as u32).used_blocks(),
+                g,
+            )
+        };
+        if sc.prefix_aware && t.prefix_tokens > 0 {
+            if let Some(g) = (0..n_gpus)
+                .filter(|&g| {
+                    is_prefill_lane(g)
+                        && self.kv.has_prefix_on(g as u32, t.prefix_id)
+                })
+                .min_by_key(|&g| load(g))
+            {
+                return g;
+            }
+        }
+        (0..n_gpus)
+            .filter(|&g| is_prefill_lane(g))
+            .min_by_key(|&g| load(g))
+            .expect("at least one prefill lane")
     }
 }
 

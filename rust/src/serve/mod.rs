@@ -13,9 +13,17 @@
 
 pub mod engine;
 pub mod kvcache;
+pub mod sched;
+pub mod trace;
 
 pub use engine::{
     serve_trace, GpuLaneStats, MbFusion, MbServeStats, MoeServeConfig,
-    MoeServeStats, ServeConfig, ServeEngine, ServeReport, ServeRequest,
+    MoeServeStats, SchedServeStats, ServeConfig, ServeEngine, ServeReport,
+    ServeRequest, TenantLatencyStats,
 };
 pub use kvcache::{KvCacheConfig, KvCacheManager, KvCacheStats, KvPool};
+pub use sched::{DisaggConfig, LaneQueues, SchedConfig};
+pub use trace::{
+    heavy_tailed_trace, SloClass, TraceConfig, TracedRequest,
+    TENANT_PREFIX_BASE,
+};

@@ -1,0 +1,304 @@
+//! Deterministic heavy-tailed multi-tenant trace generator.
+//!
+//! Replaces the flat Poisson replay of [`crate::serve::serve_trace`]
+//! for production-shaped load: tenants open *sessions* whose
+//! inter-arrival gaps are log-normal (bursty, heavy-tailed), each
+//! session fires a geometric burst of requests spaced by short
+//! think-times, prompt lengths are log-normal so a small fraction of
+//! prompts is 10-50x the median, and every request of a tenant shares
+//! that tenant's pinned system-prompt prefix (the prefix-cache target
+//! of [`crate::serve::sched`]). Each tenant carries an SLO class that
+//! drives admission priority and per-tenant percentile reporting.
+//!
+//! Everything is driven by [`crate::runtime::Rng`], so a `(config,
+//! seed)` pair replays bit-identically — the serve-trace CI gate
+//! `cmp`s two runs of the whole pipeline.
+
+use crate::runtime::Rng;
+use crate::serve::engine::ServeRequest;
+
+/// Service-level objective class of a tenant. Priority is strict at
+/// admission: a queued Interactive request is always admitted before a
+/// queued Batch request on the same lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloClass {
+    /// Chat-style traffic: tight TTFT target, short outputs.
+    Interactive,
+    /// Default API traffic.
+    Standard,
+    /// Offline/bulk traffic: throughput only, lowest priority.
+    Batch,
+}
+
+impl SloClass {
+    /// Admission priority (higher admits first).
+    pub fn priority(self) -> u32 {
+        match self {
+            SloClass::Interactive => 2,
+            SloClass::Standard => 1,
+            SloClass::Batch => 0,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+}
+
+/// One request of the multi-tenant trace: the base request plus its
+/// tenant identity, shared-prefix binding, and SLO class.
+#[derive(Debug, Clone, Copy)]
+pub struct TracedRequest {
+    pub req: ServeRequest,
+    pub tenant: u32,
+    pub slo: SloClass,
+    /// Prefix-cache id of the tenant's shared system prompt (distinct
+    /// per tenant; disjoint from sequence ids by construction).
+    pub prefix_id: u64,
+    /// Tokens of that shared prefix (0 = tenant has no system prompt).
+    pub prefix_tokens: u32,
+}
+
+impl TracedRequest {
+    /// Tokens the request must prefill when the lane does *not*
+    /// already hold its tenant prefix (prefix + own prompt).
+    pub fn cold_prompt_tokens(&self) -> u32 {
+        self.prefix_tokens + self.req.prompt_tokens
+    }
+
+    /// The lock-step-baseline view of this request: the tenant prefix
+    /// folded into the prompt (no sharing, no scheduler) — exactly
+    /// what the legacy engine prefills per admission.
+    pub fn folded(&self) -> ServeRequest {
+        ServeRequest {
+            prompt_tokens: self.cold_prompt_tokens(),
+            ..self.req
+        }
+    }
+}
+
+/// Prefix-id namespace base: far above any sequence id a trace can
+/// produce, and below the engine-reserved `u64::MAX` system prefix.
+pub const TENANT_PREFIX_BASE: u64 = 1 << 60;
+
+/// Generator knobs. Defaults model a small production cell: a handful
+/// of tenants with very different prompt distributions, bursty session
+/// arrivals, and a heavy prompt-length tail.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Total requests across all tenants.
+    pub n_requests: u64,
+    pub n_tenants: u32,
+    /// Mean session inter-arrival time per tenant (seconds); actual
+    /// gaps are log-normal with `burstiness` sigma, so the arrival
+    /// process is bursty rather than Poisson.
+    pub mean_session_gap_s: f64,
+    /// Sigma of the log-normal session-gap/burst distributions. 0 =
+    /// deterministic gaps; ~1.0 = realistic heavy-tailed bursts.
+    pub burstiness: f64,
+    /// Mean requests per session burst (geometric).
+    pub mean_burst: f64,
+    /// Median prompt length (tokens); lengths are log-normal around
+    /// it with `prompt_sigma`, clamped to [16, max_prompt_tokens].
+    pub median_prompt_tokens: u32,
+    /// Log-normal sigma of prompt lengths (1.2 gives a p99/p50 ratio
+    /// of ~16x — the production heavy tail).
+    pub prompt_sigma: f64,
+    pub max_prompt_tokens: u32,
+    /// Largest per-tenant shared prefix (tenant prefixes are spread
+    /// over [prefix/4, prefix] deterministically by tenant id).
+    pub prefix_tokens: u32,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_requests: 256,
+            n_tenants: 6,
+            mean_session_gap_s: 0.05,
+            burstiness: 1.0,
+            mean_burst: 4.0,
+            median_prompt_tokens: 160,
+            prompt_sigma: 1.2,
+            max_prompt_tokens: 4096,
+            prefix_tokens: 512,
+        }
+    }
+}
+
+/// One log-normal sample: `exp(mu + sigma * N(0,1))`.
+fn log_normal(rng: &mut Rng, mu: f64, sigma: f64) -> f64 {
+    (mu + sigma * rng.normal() as f64).exp()
+}
+
+/// Generate the heavy-tailed multi-tenant trace. Deterministic in
+/// `(cfg, seed)`; requests come back sorted by arrival with ids
+/// re-assigned in arrival order (the engine uses ids as KV sequence
+/// ids, so they must be unique).
+pub fn heavy_tailed_trace(cfg: &TraceConfig, seed: u64) -> Vec<TracedRequest> {
+    let n_tenants = cfg.n_tenants.max(1);
+    let mut rng = Rng::new(seed);
+    let mut out: Vec<TracedRequest> = Vec::with_capacity(cfg.n_requests as usize);
+    // round-robin the request budget across tenants so every tenant
+    // shows up even in short traces
+    let mut budget: Vec<u64> = (0..n_tenants)
+        .map(|t| {
+            let base = cfg.n_requests / n_tenants as u64;
+            let extra = u64::from((t as u64) < cfg.n_requests % n_tenants as u64);
+            base + extra
+        })
+        .collect();
+    for tenant in 0..n_tenants {
+        let slo = match tenant % 3 {
+            0 => SloClass::Interactive,
+            1 => SloClass::Standard,
+            _ => SloClass::Batch,
+        };
+        // tenants get distinct prefix lengths spread over a 4x range,
+        // so prefix-cache wins differ per tenant
+        let prefix_tokens = if cfg.prefix_tokens == 0 {
+            0
+        } else {
+            let lo = (cfg.prefix_tokens / 4).max(1);
+            lo + (cfg.prefix_tokens - lo) * tenant / n_tenants.max(1)
+        };
+        // interactive tenants skew short prompts / short outputs;
+        // batch tenants skew long both ways
+        let mu_scale = match slo {
+            SloClass::Interactive => 0.75,
+            SloClass::Standard => 1.0,
+            SloClass::Batch => 1.5,
+        };
+        let mu = (cfg.median_prompt_tokens.max(16) as f64 * mu_scale).ln();
+        let gap_mu = cfg.mean_session_gap_s.max(1e-6).ln()
+            - 0.5 * cfg.burstiness * cfg.burstiness;
+        let mut t = 0.0f64;
+        while budget[tenant as usize] > 0 {
+            // next session opens after a bursty (log-normal) gap
+            t += log_normal(&mut rng, gap_mu, cfg.burstiness);
+            // geometric burst size with the configured mean
+            let p = 1.0 / cfg.mean_burst.max(1.0);
+            let mut burst = 1u64;
+            while rng.f64() > p && burst < 64 {
+                burst += 1;
+            }
+            let mut bt = t;
+            for _ in 0..burst.min(budget[tenant as usize]) {
+                let prompt = log_normal(&mut rng, mu, cfg.prompt_sigma)
+                    .round()
+                    .clamp(16.0, cfg.max_prompt_tokens.max(16) as f64)
+                    as u32;
+                let output = match slo {
+                    SloClass::Interactive => 16 + rng.below(113) as u32,
+                    SloClass::Standard => 32 + rng.below(225) as u32,
+                    SloClass::Batch => 64 + rng.below(449) as u32,
+                };
+                out.push(TracedRequest {
+                    req: ServeRequest {
+                        id: 0, // assigned after the arrival sort
+                        arrival_s: bt,
+                        prompt_tokens: prompt,
+                        output_tokens: output,
+                    },
+                    tenant,
+                    slo,
+                    prefix_id: TENANT_PREFIX_BASE + tenant as u64,
+                    prefix_tokens,
+                });
+                budget[tenant as usize] -= 1;
+                // short think-time between requests of one burst
+                bt += rng.exp(50.0);
+            }
+        }
+    }
+    // merge tenants on the arrival clock; ties broken by (tenant,
+    // prompt) so the order is total and replay-stable
+    out.sort_by(|a, b| {
+        a.req
+            .arrival_s
+            .total_cmp(&b.req.arrival_s)
+            .then(a.tenant.cmp(&b.tenant))
+            .then(a.req.prompt_tokens.cmp(&b.req.prompt_tokens))
+    });
+    for (id, r) in out.iter_mut().enumerate() {
+        r.req.id = id as u64;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_sorted() {
+        let cfg = TraceConfig::default();
+        let a = heavy_tailed_trace(&cfg, 11);
+        let b = heavy_tailed_trace(&cfg, 11);
+        let c = heavy_tailed_trace(&cfg, 12);
+        assert_eq!(a.len(), cfg.n_requests as usize);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.req.id, y.req.id);
+            assert_eq!(x.req.arrival_s, y.req.arrival_s);
+            assert_eq!(x.req.prompt_tokens, y.req.prompt_tokens);
+            assert_eq!(x.req.output_tokens, y.req.output_tokens);
+            assert_eq!(x.tenant, y.tenant);
+        }
+        assert!(a
+            .iter()
+            .zip(c.iter())
+            .any(|(x, y)| x.req.prompt_tokens != y.req.prompt_tokens));
+        for w in a.windows(2) {
+            assert!(w[1].req.arrival_s >= w[0].req.arrival_s);
+        }
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.req.id, i as u64);
+            assert!(r.req.prompt_tokens >= 16);
+            assert!(r.req.prompt_tokens <= cfg.max_prompt_tokens);
+            assert!(r.req.output_tokens > 0);
+            assert!(r.prefix_id >= TENANT_PREFIX_BASE);
+        }
+    }
+
+    #[test]
+    fn prompt_lengths_are_heavy_tailed() {
+        let cfg = TraceConfig { n_requests: 2048, ..TraceConfig::default() };
+        let tr = heavy_tailed_trace(&cfg, 7);
+        let mut lens: Vec<u32> = tr.iter().map(|r| r.req.prompt_tokens).collect();
+        lens.sort_unstable();
+        let p50 = lens[lens.len() / 2];
+        let p99 = lens[lens.len() * 99 / 100];
+        // log-normal sigma 1.2 puts p99 ~16x the median; demand at
+        // least 6x so a regression to a flat mix trips the test
+        assert!(p99 >= 6 * p50, "p99 {p99} not heavy-tailed vs p50 {p50}");
+        // and the tail really exercises chunked prefill
+        assert!(*lens.last().unwrap() > 1024);
+    }
+
+    #[test]
+    fn tenants_share_prefixes_and_slos_cycle() {
+        let tr = heavy_tailed_trace(&TraceConfig::default(), 3);
+        for r in &tr {
+            assert_eq!(r.prefix_id, TENANT_PREFIX_BASE + r.tenant as u64);
+            assert!(r.prefix_tokens > 0);
+            assert_eq!(r.folded().prompt_tokens, r.prefix_tokens + r.req.prompt_tokens);
+        }
+        let interactive = tr.iter().filter(|r| r.slo == SloClass::Interactive);
+        let batch = tr.iter().filter(|r| r.slo == SloClass::Batch);
+        assert!(interactive.count() > 0);
+        assert!(batch.count() > 0);
+        // all requests of one tenant carry the same prefix length
+        for t in 0..TraceConfig::default().n_tenants {
+            let lens: Vec<u32> = tr
+                .iter()
+                .filter(|r| r.tenant == t)
+                .map(|r| r.prefix_tokens)
+                .collect();
+            assert!(lens.windows(2).all(|w| w[0] == w[1]));
+        }
+    }
+}

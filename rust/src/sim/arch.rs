@@ -84,6 +84,46 @@ impl Dtype {
     }
 }
 
+/// How a quantized kernel's scale tensors are laid out. Orthogonal to
+/// [`Dtype`]: the dtype fixes the payload width, the scale mode fixes
+/// how much *extra* scale traffic rides along. MX block scales scale
+/// with the element count; A8W8 row-wise scales with the row/column
+/// counts — three orders of magnitude apart on a paper-sized GEMM, so
+/// conflating them misprices the quantization epilogue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScaleMode {
+    /// One scale per tensor: free at the granularity this model prices.
+    PerTensor,
+    /// OCP MX block scales — one FP8 scale per [`MX_BLOCK`] elements
+    /// (what [`Dtype::scale_bytes_per_elem`] prices).
+    MxBlock,
+    /// A8W8 row-wise dynamic quantization: one f32 scale per activation
+    /// row (per token) and one f32 scale per weight output channel,
+    /// dequantized in the epilogue.
+    PerTokenRowWise,
+}
+
+impl ScaleMode {
+    /// The mode a dtype implies when the caller does not pick one:
+    /// block-scaled formats carry MX scales, everything else per-tensor.
+    pub fn for_dtype(d: Dtype) -> Self {
+        if d.scale_bytes_per_elem() > 0.0 {
+            ScaleMode::MxBlock
+        } else {
+            ScaleMode::PerTensor
+        }
+    }
+
+    /// Stable lowercase label used in bench rows and grid keys.
+    pub fn tag(self) -> &'static str {
+        match self {
+            ScaleMode::PerTensor => "per-tensor",
+            ScaleMode::MxBlock => "mx-block",
+            ScaleMode::PerTokenRowWise => "per-token",
+        }
+    }
+}
+
 /// A matrix-core (MFMA) instruction shape `M x N x K`.
 ///
 /// AMD shapes lack the compositional 16x16 core-matrix structure of NVIDIA

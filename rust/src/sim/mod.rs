@@ -24,7 +24,7 @@ pub mod engine;
 pub mod instr;
 pub mod lds;
 
-pub use arch::{Arch, Dtype, MfmaShape};
+pub use arch::{Arch, Dtype, MfmaShape, ScaleMode};
 pub use cache::{
     simulate_gemm_hierarchy, simulate_stream_hierarchy, HierStats,
 };

@@ -1,0 +1,300 @@
+//! Scheduled-serving contracts (referenced from the engine docs):
+//! `sched = None` replays the legacy lock-step engine bit-identically,
+//! chunked prefill telescopes exactly to the whole-prompt cost, the
+//! scheduler strictly improves p99 TTFT at equal-or-better throughput,
+//! TTFT/ITL semantics survive preemption and re-admission, stolen work
+//! is admitted exactly once, and disaggregated KV handoffs are priced
+//! on the configured link and land in `cross_gpu_bytes`.
+
+use hipkittens::hk::topology::LinkModel;
+use hipkittens::obs::trace::validate_chrome_trace;
+use hipkittens::serve::{
+    heavy_tailed_trace, DisaggConfig, SchedConfig, ServeConfig, ServeEngine,
+    ServeRequest, SloClass, TraceConfig, TracedRequest, TENANT_PREFIX_BASE,
+};
+
+/// Hand-built traced request: exact arrival/prompt/output/prefix, no
+/// generator in the way of the arithmetic the tests pin down.
+fn traced(
+    id: u64,
+    arrival_s: f64,
+    prompt: u32,
+    output: u32,
+    tenant: u32,
+    prefix_tokens: u32,
+) -> TracedRequest {
+    TracedRequest {
+        req: ServeRequest {
+            id,
+            arrival_s,
+            prompt_tokens: prompt,
+            output_tokens: output,
+        },
+        tenant,
+        slo: SloClass::Standard,
+        prefix_id: TENANT_PREFIX_BASE + tenant as u64,
+        prefix_tokens,
+    }
+}
+
+/// The scheduled path forbids the engine-level shared prefix (tenant
+/// prefixes come from the trace), so every test starts from this base.
+fn base_cfg(n_gpus: u32) -> ServeConfig {
+    ServeConfig { n_gpus, shared_prefix_tokens: 0, ..ServeConfig::default() }
+}
+
+#[test]
+fn sched_none_is_bit_identical_to_the_legacy_engine() {
+    let tcfg = TraceConfig { n_requests: 64, ..TraceConfig::default() };
+    let trace = heavy_tailed_trace(&tcfg, 5);
+    let folded: Vec<ServeRequest> = trace.iter().map(|t| t.folded()).collect();
+
+    let mut legacy = ServeEngine::new(base_cfg(2)).unwrap();
+    let a = legacy.run_trace(&folded).unwrap();
+    let mut disabled = ServeEngine::new(base_cfg(2)).unwrap();
+    let b = disabled.run_traced(&trace).unwrap();
+
+    // the whole JSON payload (what BENCH_serve.json serializes) is
+    // byte-identical, and the legacy shape carries no scheduler fields
+    assert_eq!(a.to_json().dump(), b.to_json().dump());
+    assert!(b.sched.is_none());
+    assert!(b.per_tenant.is_empty());
+}
+
+#[test]
+fn chunked_prefill_telescopes_to_the_whole_prompt_cost() {
+    let run = |chunk_tokens: u32| {
+        let cfg = ServeConfig {
+            sched: Some(SchedConfig { chunk_tokens, ..SchedConfig::default() }),
+            ..base_cfg(1)
+        };
+        let mut eng = ServeEngine::new(cfg).unwrap();
+        eng.run_traced(&[traced(0, 0.0, 1000, 4, 0, 0)]).unwrap()
+    };
+    let chunked = run(256);
+    let whole = run(1000);
+    let cs = chunked.sched.as_ref().unwrap();
+    let ws = whole.sched.as_ref().unwrap();
+
+    // 1000 prompt tokens = chunks of 256+256+256+232 vs one of 1000;
+    // either way every prompt token is prefilled exactly once
+    assert_eq!(cs.chunks, 4);
+    assert_eq!(ws.chunks, 1);
+    assert_eq!(cs.chunk_tokens, 1000);
+    assert_eq!(ws.chunk_tokens, 1000);
+
+    // chunk costs are cum-curve differences, so their sum telescopes
+    // to the whole-prompt cost up to float rounding only
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-300);
+    assert!(
+        rel(chunked.makespan_s, whole.makespan_s) < 1e-9,
+        "chunking changed the makespan: {} vs {}",
+        chunked.makespan_s,
+        whole.makespan_s
+    );
+    assert!(
+        rel(chunked.ttft.p50_us(), whole.ttft.p50_us()) < 1e-9,
+        "chunking changed TTFT: {} vs {}",
+        chunked.ttft.p50_us(),
+        whole.ttft.p50_us()
+    );
+    assert_eq!(chunked.decode_steps, whole.decode_steps);
+    assert_eq!(chunked.served, 1);
+}
+
+#[test]
+fn scheduler_improves_p99_ttft_at_equal_or_better_throughput() {
+    // the report's exact configuration (`hipkittens serve-trace`)
+    let trace = heavy_tailed_trace(&TraceConfig::default(), 7);
+    let cfg = ServeConfig { max_batch: 16, ..base_cfg(4) };
+    let mut base = ServeEngine::new(cfg.clone()).unwrap();
+    let a = base.run_traced(&trace).unwrap();
+    let mut sched = ServeEngine::new(ServeConfig {
+        sched: Some(SchedConfig::default()),
+        ..cfg
+    })
+    .unwrap();
+    let b = sched.run_traced(&trace).unwrap();
+
+    assert_eq!(a.served, trace.len() as u64);
+    assert_eq!(b.served, trace.len() as u64);
+    assert!(
+        b.ttft.p99_us() < a.ttft.p99_us(),
+        "scheduled p99 TTFT {}us must beat lock-step {}us",
+        b.ttft.p99_us(),
+        a.ttft.p99_us()
+    );
+    assert!(
+        b.throughput_tok_s >= a.throughput_tok_s,
+        "scheduled throughput {} tok/s fell below lock-step {}",
+        b.throughput_tok_s,
+        a.throughput_tok_s
+    );
+    let s = b.sched.as_ref().unwrap();
+    assert!(s.chunks > 0, "heavy-tailed prompts must chunk");
+    assert!(s.prefix_hits > 0, "shared tenant prefixes must hit");
+    // per-tenant percentiles cover every tenant and every request
+    assert_eq!(b.per_tenant.len(), TraceConfig::default().n_tenants as usize);
+    let per_tenant_reqs: u64 = b.per_tenant.iter().map(|t| t.requests).sum();
+    assert_eq!(per_tenant_reqs, b.served);
+}
+
+#[test]
+fn ttft_and_itl_semantics_survive_preemption() {
+    // two 288-token sequences cannot both finish in a 24-block pool
+    // (2 x 18 blocks at block_size 16): one is preempted mid-decode,
+    // re-admitted, and its prefix of tokens recomputed
+    let cfg = ServeConfig {
+        num_blocks: 24,
+        max_batch: 4,
+        sched: Some(SchedConfig::default()),
+        ..base_cfg(1)
+    };
+    let trace = [
+        traced(0, 0.0, 128, 160, 0, 0),
+        traced(1, 0.0, 128, 160, 0, 0),
+    ];
+    let mut eng = ServeEngine::new(cfg).unwrap();
+    let rep = eng.run_traced(&trace).unwrap();
+
+    assert!(rep.preemptions > 0, "the pool was sized to force preemption");
+    assert_eq!(rep.served, 2);
+    // TTFT: exactly one sample per request — the span from arrival to
+    // the first delivered token covers any preempt/re-admit in between
+    assert_eq!(rep.ttft.count(), 2);
+    // ITL: one sample per token delivered after the first; recomputed
+    // tokens from the re-admissions never re-enter the stats
+    assert_eq!(rep.itl.count(), 2 * (160 - 1));
+    assert_eq!(rep.e2e.count(), 2);
+    // a re-admission is an extra admission, never an extra serve
+    let admitted: u64 = rep.per_gpu.iter().map(|l| l.admitted).sum();
+    assert_eq!(admitted, rep.served + rep.preemptions);
+    let tenant_served: u64 = rep.per_tenant.iter().map(|t| t.served).sum();
+    assert_eq!(tenant_served, rep.served);
+}
+
+#[test]
+fn stolen_work_is_admitted_once_and_never_double_counted() {
+    // one tenant whose prefix gets pinned on lane 0 by the first
+    // admission: prefix-aware routing piles the burst onto lane 0 and
+    // the idle lane 1 must steal from the queue
+    let cfg = ServeConfig {
+        max_batch: 2,
+        sched: Some(SchedConfig::default()),
+        ..base_cfg(2)
+    };
+    let mut trace = vec![traced(0, 0.0, 64, 4, 0, 64)];
+    for id in 1..7 {
+        trace.push(traced(id, 0.01, 64, 4, 0, 64));
+    }
+    let mut eng = ServeEngine::new(cfg).unwrap();
+    let rep = eng.run_traced(&trace).unwrap();
+    let s = rep.sched.as_ref().unwrap();
+
+    assert!(s.stolen > 0, "the idle lane must steal from the pile-up");
+    assert_eq!(rep.served, 7);
+    assert_eq!(rep.preemptions, 0);
+    // every request is admitted exactly once, on exactly one lane —
+    // stealing re-routes a queue entry, it never duplicates it
+    let admitted: u64 = rep.per_gpu.iter().map(|l| l.admitted).sum();
+    assert_eq!(admitted, 7);
+    assert!(
+        rep.per_gpu.iter().all(|l| l.admitted > 0),
+        "stealing must spread the burst across both lanes"
+    );
+    assert_eq!(rep.ttft.count(), 7);
+    assert_eq!(rep.per_tenant.len(), 1);
+    assert_eq!(rep.per_tenant[0].requests, 7);
+    assert_eq!(rep.per_tenant[0].served, 7);
+    // prefix accounting covers every admission: the first admission on
+    // each lane misses (and pins), the rest hit
+    assert_eq!(s.prefix_hits + s.prefix_misses, 7);
+    assert!(s.prefix_hits > 0);
+}
+
+#[test]
+fn disagg_handoff_is_priced_on_the_link_and_counted_cross_gpu() {
+    let link = LinkModel::infinity_fabric();
+    let cfg = ServeConfig {
+        sched: Some(SchedConfig {
+            disagg: Some(DisaggConfig { prefill_gpus: 1, link }),
+            ..SchedConfig::default()
+        }),
+        ..base_cfg(2)
+    };
+    let trace = [traced(0, 0.0, 128, 8, 0, 0)];
+    let mut eng = ServeEngine::new(cfg).unwrap();
+    let rep = eng.run_traced(&trace).unwrap();
+    let s = rep.sched.as_ref().unwrap();
+
+    // hand-derived: 128 context tokens fill 8 blocks of 16, and one
+    // bf16 block is 2 (K+V) * 8 kv-heads * 128 d_head * 16 tok * 2 B
+    let block_bytes = 2.0 * 8.0 * 128.0 * 16.0 * 2.0;
+    let bytes = 8.0 * block_bytes;
+    assert_eq!(s.handoffs, 1);
+    assert_eq!(s.handoff_bytes, bytes);
+    assert_eq!(s.handoff_s, link.point_to_point_s(bytes));
+    // the handoff lands on the decode lane's counters and the rollup
+    assert_eq!(rep.per_gpu[0].counters.cross_gpu_bytes, 0.0);
+    assert_eq!(rep.per_gpu[1].counters.cross_gpu_bytes, bytes);
+    assert_eq!(rep.counters.cross_gpu_bytes, bytes);
+    // the roles really are disjoint: gpu0 prefills, gpu1 decodes
+    assert_eq!(rep.per_gpu[0].admitted, 1);
+    assert_eq!(rep.per_gpu[0].decode_tokens, 0);
+    assert!(rep.per_gpu[1].decode_tokens > 0);
+
+    // colocated is the zero-byte special case: no handoffs, no
+    // cross-GPU traffic, and zero bytes price to exactly zero seconds
+    let colo = ServeConfig {
+        sched: Some(SchedConfig::default()),
+        ..base_cfg(2)
+    };
+    let mut eng2 = ServeEngine::new(colo).unwrap();
+    let rep2 = eng2.run_traced(&trace).unwrap();
+    let s2 = rep2.sched.as_ref().unwrap();
+    assert_eq!(s2.handoffs, 0);
+    assert_eq!(s2.handoff_bytes, 0.0);
+    assert_eq!(s2.handoff_s, 0.0);
+    assert_eq!(rep2.counters.cross_gpu_bytes, 0.0);
+    assert_eq!(link.point_to_point_s(0.0), 0.0);
+}
+
+#[test]
+fn scheduled_disagg_timeline_is_schema_valid_and_deterministic() {
+    let tcfg = TraceConfig { n_requests: 24, ..TraceConfig::default() };
+    let trace = heavy_tailed_trace(&tcfg, 3);
+    let run = || {
+        let cfg = ServeConfig {
+            sched: Some(SchedConfig {
+                disagg: Some(DisaggConfig::default()),
+                ..SchedConfig::default()
+            }),
+            ..base_cfg(2)
+        };
+        let mut eng = ServeEngine::new(cfg).unwrap();
+        eng.enable_trace();
+        eng.run_traced(&trace).unwrap();
+        eng.take_trace().expect("trace was enabled")
+    };
+    let t1 = run();
+    assert_eq!(
+        t1.dump(),
+        run().dump(),
+        "two identical scheduled runs must dump byte-identically"
+    );
+    validate_chrome_trace(&t1.to_json()).expect("chrome-trace schema");
+    let d = t1.dump();
+    for needle in [
+        "prefill-chunks",
+        "decode",
+        "kv-handoff",
+        "prefill-gpu0",
+        "decode-gpu1",
+        // request flow arrows survive the handoff across processes
+        "\"ph\":\"s\"",
+        "\"ph\":\"t\"",
+        "\"ph\":\"f\"",
+    ] {
+        assert!(d.contains(needle), "timeline lost its {needle} events");
+    }
+}
